@@ -1,0 +1,55 @@
+//! Attention-variant sweep (paper Fig. 12 workloads): FlatAttention with the
+//! Fig. 10 tiling strategy across MHA / GQA / MLA, prefill and decode, vs
+//! the GH200 SoA kernel baselines.
+//!
+//! Run: `cargo run --release --example attention_variants`
+
+use flatattention::arch::config::{ChipConfig, SimFidelity};
+use flatattention::baseline::gh200::{self, Bound, Gh200};
+use flatattention::coordinator::experiments::fig12_shapes;
+use flatattention::coordinator::report::fmt_time;
+use flatattention::dataflow::{choose_tiling, simulate_attention, AttentionDataflow};
+use flatattention::metrics::fmt_pct;
+
+fn main() {
+    let cfg = ChipConfig::table1_gh200_match();
+    let gh = Gh200::new();
+    println!("# FlatAttention across attention variants — {} vs GH200\n", cfg.name);
+    println!(
+        "{:<28} {:>12} {:>9} {:>12} {:>14} {:>9}",
+        "shape", "ours", "ours-label", "GH200", "GH200 kernel", "speedup"
+    );
+
+    let mut speedups: Vec<f64> = Vec::new();
+    for shape in fig12_shapes(false) {
+        let tiling = choose_tiling(&cfg, &shape, true);
+        let m = simulate_attention(&cfg, &shape, AttentionDataflow::auto_flat(&cfg, &shape), SimFidelity::Full);
+        let g = gh200::attention(&gh, &shape);
+        let sp = g.seconds / m.seconds;
+        speedups.push(sp);
+        let ours_label = if shape.is_compute_bound(&cfg) {
+            format!("C:{}", fmt_pct(m.compute_utilization))
+        } else {
+            format!("M:{}", fmt_pct(m.hbm_bw_utilization))
+        };
+        let gh_label = match g.bound {
+            Bound::Compute => format!("{} C:{}", g.kernel, fmt_pct(g.efficiency)),
+            Bound::Memory => format!("{} M:{}", g.kernel, fmt_pct(g.efficiency)),
+        };
+        println!(
+            "{:<28} {:>12} {:>9} {:>12} {:>14} {:>8.1}x   (group {}x{}, slice {}x{})",
+            shape.label(),
+            fmt_time(m.seconds),
+            ours_label,
+            fmt_time(g.seconds),
+            gh_label,
+            sp,
+            tiling.gx,
+            tiling.gy,
+            tiling.slice_r,
+            tiling.slice_c
+        );
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("\naverage speedup over GH200: {avg:.1}x (paper: 1.9x)");
+}

@@ -1,0 +1,72 @@
+//! Architecture–dataflow co-exploration (paper Appendix D): sweep the tile
+//! array geometry, L1 capacity, NoC link width and HBM bandwidth around the
+//! Table I design point and report FlatAttention's utilization at each —
+//! the feedback loop the paper uses to select the accelerator configuration.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
+use flatattention::dataflow::{simulate_attention, AttentionDataflow};
+use flatattention::metrics::fmt_pct;
+use flatattention::workload::attention::AttentionShape;
+
+fn eval(cfg: &ChipConfig) -> (f64, f64, f64) {
+    let shape = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+    let m = simulate_attention(cfg, &shape, AttentionDataflow::auto_flat(cfg, &shape), SimFidelity::Full);
+    (m.seconds * 1e3, m.compute_utilization, m.hbm_bw_utilization)
+}
+
+fn main() {
+    println!("# Architecture co-exploration around Table I (MHA prefill D=128 S=4096)\n");
+    println!(
+        "{:<34} {:>10} {:>8} {:>8} {:>10}",
+        "configuration", "runtime", "util", "HBM BW", "peak TF"
+    );
+
+    let base = ChipConfig::table1();
+    let mut rows: Vec<(String, ChipConfig)> = vec![("table1 (32x32, 384KiB, 128B/cyc)".into(), base.clone())];
+
+    // Mesh geometry sweep at iso-peak-ish FLOPS.
+    for mesh in [16u32, 24, 32] {
+        let mut c = base.clone();
+        c.name = format!("mesh-{mesh}x{mesh}");
+        c.mesh_x = mesh;
+        c.mesh_y = mesh;
+        c.hbm.channels_per_stack = mesh.min(32);
+        rows.push((format!("mesh {mesh}x{mesh} (same tile)"), c));
+    }
+    // L1 capacity sweep (tiling strategy reacts via slice selection).
+    for l1 in [192u64, 384, 768] {
+        let mut c = base.clone();
+        c.name = format!("l1-{l1}");
+        c.tile.l1_kib = l1;
+        rows.push((format!("L1 {l1} KiB"), c));
+    }
+    // NoC link width (collective bandwidth).
+    for link in [64u64, 128, 256] {
+        let mut c = base.clone();
+        c.name = format!("link-{link}");
+        c.noc.link_bytes_per_cycle = link;
+        rows.push((format!("NoC link {link} B/cyc"), c));
+    }
+    // HBM bandwidth.
+    for bw in [1.0e12, 2.0e12, 4.0e12] {
+        let mut c = base.clone();
+        c.name = format!("hbm-{}", bw as u64 / 1_000_000_000);
+        c.hbm.total_bandwidth_bytes_per_s = bw;
+        rows.push((format!("HBM {:.0} TB/s", bw / 1e12), c));
+    }
+
+    for (label, cfg) in rows {
+        let (ms, util, bw) = eval(&cfg);
+        println!(
+            "{:<34} {:>8.2}ms {:>8} {:>8} {:>9.0}",
+            label,
+            ms,
+            fmt_pct(util),
+            fmt_pct(bw),
+            cfg.peak_flops() / 1e12
+        );
+    }
+    println!("\ntakeaway: the Table I point sits where larger groups stop paying (over-flattening)\nand HBM stops being the bottleneck — the co-design balance of paper Appendix D.");
+}

@@ -1,0 +1,47 @@
+"""AOT export: lower every L2 entry point to HLO **text** artifacts.
+
+Interchange is HLO text, not `.serialize()`: jax ≥ 0.5 emits HloModuleProto
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: `python -m compile.aot --out-dir ../artifacts` (from `python/`), or
+just `make artifacts` at the repo root. Python never runs after this.
+"""
+
+import argparse
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="export a single entry point")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = [args.only] if args.only else list(model.ENTRY_POINTS)
+    for name in names:
+        lowered = model.lower_entry(name)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

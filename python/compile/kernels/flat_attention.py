@@ -1,0 +1,100 @@
+"""L1 — Pallas FlatAttention kernel (build-time only).
+
+The per-tile compute of the paper's Algorithm 2, expressed as a Pallas
+kernel: a grid over output row blocks, an inner `fori_loop` over KV column
+blocks, online-softmax rescaling of the running (m, l, O) statistics.
+
+TPU hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's tile
+group becomes the BlockSpec HBM↔VMEM schedule — each grid step holds one
+(block_q × D) Q slice and streams (block_k × D) K/V slices through VMEM,
+the exact slice shape the Fig. 10/11 strategy selects (128×128 by default).
+The MXU plays RedMulE (f32-accumulated matmuls), the VPU plays Spatz
+(rowmax / exp / rowsum). Group-level fabric collectives have no single-
+kernel TPU analogue; they live in the L3 coordinator (and in the Rust
+functional executor, which this kernel is verified against through the
+AOT artifacts).
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU lowering is compile-only (see DESIGN.md §Perf for
+the VMEM/MXU estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, kv_len: int, scale: float):
+    """One Q row-block against the full KV, online softmax over K blocks."""
+    q = q_ref[...].astype(jnp.float32) * scale  # (bq, d)
+    bq = q.shape[0]
+    dv = v_ref.shape[-1]
+    num_k = pl.cdiv(kv_len, block_k)
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        # Mask K rows beyond kv_len (when block_k does not divide kv_len).
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        s = q @ k_blk.T  # (bq, block_k)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))  # row-wise max (line 15)
+        p = jnp.exp(s - m_new[:, None])  # (line 17)
+        corr = jnp.exp(m_i - m_new)  # tracking-stat rescale (line 22)
+        l_new = corr * l_i + jnp.sum(p, axis=-1)  # (lines 18, 22)
+        acc = acc * corr[:, None] + p @ v_blk  # (lines 23–24)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dv), dtype=jnp.float32)
+    _, l_f, acc = jax.lax.fori_loop(0, num_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l_f[:, None]).astype(o_ref.dtype)  # (line 28)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flat_attention(q, k, v, block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K):
+    """softmax(q·kᵀ/√d)·v via the Pallas FlatAttention kernel.
+
+    q: (sq, d); k: (skv, d); v: (skv, dv). Returns (sq, dv).
+    """
+    sq, d = q.shape
+    kv_len, dv = v.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, kv_len)
+    # Pad KV to a block multiple: dynamic_slice clamps out-of-bounds starts,
+    # which would silently misalign the tail block against its mask.
+    pad = (-kv_len) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    kv_padded = kv_len + pad
+    scale = 1.0 / (d**0.5)
+    grid = (pl.cdiv(sq, block_q),)
+    kernel = functools.partial(_attention_kernel, block_k=block_k, kv_len=kv_len, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((kv_padded, d), lambda i: (0, 0)),
+            pl.BlockSpec((kv_padded, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def flat_attention_batched(q, k, v, block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K):
+    """vmap over leading (batch·heads) dimension: q (u, sq, d), k/v (u, skv, ·)."""
+    fn = functools.partial(flat_attention, block_q=block_q, block_k=block_k)
+    return jax.vmap(fn)(q, k, v)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles the Pallas kernel and JAX models are verified against.
+
+These are the dense textbook formulations (paper §II-B): MHA, GQA, and MLA
+in both the explicit and weight-absorbed (Eq. 7–8) forms.
+"""
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, causal: bool = False):
+    """softmax(q·kᵀ/√d)·v. q: (sq, d); k: (skv, d); v: (skv, dv)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    if causal:
+        sq, skv = s.shape
+        off = skv - sq
+        mask = jnp.arange(skv)[None, :] <= (jnp.arange(sq)[:, None] + off)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha(q, k, v, causal: bool = False):
+    """Multi-head: q/k (h, s, d), v (h, s, dv) → (h, sq, dv)."""
+    return jnp.stack([attention(q[i], k[i], v[i], causal) for i in range(q.shape[0])])
+
+
+def gqa(q, k, v, group: int, causal: bool = False):
+    """Grouped-query attention: q (h, sq, d); k/v (h//group, skv, ·).
+
+    Queries of a group are concatenated against their shared KV head
+    (paper §III-D / Fig. 3d).
+    """
+    h, sq, _ = q.shape
+    kv_heads = k.shape[0]
+    assert h == kv_heads * group
+    outs = []
+    for g in range(kv_heads):
+        for j in range(group):
+            outs.append(attention(q[g * group + j], k[g], v[g], causal))
+    return jnp.stack(outs)
+
+
+def mla_explicit(x, w_dq, w_uq, w_dkv, w_uk, w_uv, causal: bool = False):
+    """MLA, explicit form (Eq. 5–6): per-head Q/K/V decompressed from the
+    latents. x: (s, d_model); returns (h, s, dv)."""
+    c_q = x @ w_dq  # (s, q_lora)
+    c_kv = x @ w_dkv  # (s, d_c)
+    outs = []
+    for i in range(w_uq.shape[0]):
+        qi = c_q @ w_uq[i]  # (s, d)
+        ki = c_kv @ w_uk[i]
+        vi = c_kv @ w_uv[i]
+        outs.append(attention(qi, ki, vi, causal))
+    return jnp.stack(outs)
+
+
+def mla_absorbed(x, w_dq, w_uq, w_dkv, w_uk, w_uv, causal: bool = False):
+    """MLA after weight absorption (Eq. 7–8): scores computed in the latent
+    space, shared c_kv as K and V; W^UV applied to the latent output.
+
+    Numerically equal to `mla_explicit` up to fp error — the identity the
+    paper's MQA-mode generalization rests on.
+    """
+    c_q = x @ w_dq
+    c_kv = x @ w_dkv  # (s, d_c) — the only cached tensor
+    d = w_uq.shape[-1]  # per-head dim (for the 1/√d scale)
+    outs = []
+    for i in range(w_uq.shape[0]):
+        w_uqk = w_uq[i] @ w_uk[i].T  # (q_lora, d_c), Eq. 8
+        q_abs = c_q @ w_uqk  # (s, d_c)
+        s = (q_abs @ c_kv.T) / jnp.sqrt(jnp.asarray(d, dtype=x.dtype))
+        if causal:
+            sq, skv = s.shape
+            off = skv - sq
+            mask = jnp.arange(skv)[None, :] <= (jnp.arange(sq)[:, None] + off)
+            s = jnp.where(mask, s, -jnp.inf)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        o_latent = p @ c_kv  # (s, d_c)
+        outs.append(o_latent @ w_uv[i])  # decompress
+    return jnp.stack(outs)

@@ -1,0 +1,88 @@
+"""L2 — JAX attention models (build-time only).
+
+Forward graphs for the attention variants, calling the L1 Pallas kernel so
+they lower into a single HLO module per variant. `aot.py` exports each entry
+point as HLO text; the Rust runtime loads and executes them as the golden
+reference for the functional dataflow executor.
+
+Entry-point shapes are fixed at AOT time (see ENTRY_POINTS) and mirrored by
+`rust/src/runtime/artifacts.rs`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.flat_attention import flat_attention
+
+# Artifact shapes (keep in sync with rust/src/runtime/artifacts.rs).
+MHA_SEQ = 256
+MHA_DIM = 64
+GQA_GROUP = 8
+GQA_SP = 2
+GQA_KV = 256
+MLA_ROWS = 16
+MLA_DC = 64
+MLA_DR = 16
+MLA_KV = 256
+
+
+def mha_prefill(q, k, v):
+    """Single-head MHA prefill block via the Pallas kernel.
+
+    q/k/v: (MHA_SEQ, MHA_DIM) f32 → (MHA_SEQ, MHA_DIM).
+    """
+    return (flat_attention(q, k, v, block_q=64, block_k=64),)
+
+
+def mha_reference(q, k, v):
+    """Dense reference attention (no Pallas) — an independently lowered
+    graph used to cross-check the kernel artifact."""
+    return (ref.attention(q, k, v),)
+
+
+def gqa_decode(q, k, v):
+    """GQA decode for one KV group: the group's queries are concatenated
+    into the effective sequence (paper §III-D).
+
+    q: (GQA_GROUP·GQA_SP, MHA_DIM); k/v: (GQA_KV, MHA_DIM).
+    """
+    return (flat_attention(q, k, v, block_q=GQA_GROUP * GQA_SP, block_k=64),)
+
+
+def mla_decode(q_abs, c_kv):
+    """MLA weight-absorbed decode core (paper Eq. 7–8): all heads share the
+    latent cache; V is the latent's first MLA_DC columns.
+
+    q_abs: (MLA_ROWS, MLA_DC+MLA_DR); c_kv: (MLA_KV, MLA_DC+MLA_DR)
+    → (MLA_ROWS, MLA_DC).
+    """
+    v = c_kv[:, :MLA_DC]
+    return (flat_attention(q_abs, c_kv, v, block_q=MLA_ROWS, block_k=64),)
+
+
+ENTRY_POINTS = {
+    "mha_prefill": (
+        mha_prefill,
+        [(MHA_SEQ, MHA_DIM), (MHA_SEQ, MHA_DIM), (MHA_SEQ, MHA_DIM)],
+    ),
+    "mha_reference": (
+        mha_reference,
+        [(MHA_SEQ, MHA_DIM), (MHA_SEQ, MHA_DIM), (MHA_SEQ, MHA_DIM)],
+    ),
+    "gqa_decode": (
+        gqa_decode,
+        [(GQA_GROUP * GQA_SP, MHA_DIM), (GQA_KV, MHA_DIM), (GQA_KV, MHA_DIM)],
+    ),
+    "mla_decode": (
+        mla_decode,
+        [(MLA_ROWS, MLA_DC + MLA_DR), (MLA_KV, MLA_DC + MLA_DR)],
+    ),
+}
+
+
+def lower_entry(name: str):
+    """jit-lower an entry point with its fixed f32 shapes."""
+    fn, shapes = ENTRY_POINTS[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*specs)

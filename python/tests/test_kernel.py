@@ -1,0 +1,111 @@
+"""L1 correctness: the Pallas FlatAttention kernel against the pure-jnp
+oracle, with hypothesis sweeping shapes/dtypes (the repo's core numeric
+signal — everything downstream trusts this kernel)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flat_attention import flat_attention, flat_attention_batched
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@pytest.mark.parametrize("sq,skv,d", [(64, 64, 32), (128, 256, 64), (256, 128, 64)])
+def test_kernel_matches_ref_basic(sq, skv, d):
+    kq, kk, kv = keys(0, 3)
+    q, k, v = rand(kq, (sq, d)), rand(kk, (skv, d)), rand(kv, (skv, d))
+    out = flat_attention(q, k, v, block_q=32, block_k=32)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_unaligned_kv():
+    # kv_len not a multiple of block_k exercises the in-kernel masking.
+    kq, kk, kv = keys(1, 3)
+    q, k, v = rand(kq, (48, 32)), rand(kk, (100, 32)), rand(kv, (100, 32))
+    out = flat_attention(q, k, v, block_q=16, block_k=32)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_block_size_invariance():
+    kq, kk, kv = keys(2, 3)
+    q, k, v = rand(kq, (64, 16)), rand(kk, (128, 16)), rand(kv, (128, 16))
+    outs = [
+        flat_attention(q, k, v, block_q=bq, block_k=bk)
+        for bq, bk in [(16, 16), (32, 64), (64, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_bf16_inputs():
+    kq, kk, kv = keys(3, 3)
+    q = rand(kq, (32, 32), jnp.bfloat16)
+    k = rand(kk, (64, 32), jnp.bfloat16)
+    v = rand(kv, (64, 32), jnp.bfloat16)
+    out = flat_attention(q, k, v, block_q=16, block_k=16).astype(jnp.float32)
+    expect = ref.attention(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(out, expect, atol=3e-2, rtol=3e-2)
+
+
+def test_batched_kernel():
+    kq, kk, kv = keys(4, 3)
+    q, k, v = rand(kq, (4, 32, 16)), rand(kk, (4, 48, 16)), rand(kv, (4, 48, 16))
+    out = flat_attention_batched(q, k, v, block_q=16, block_k=16)
+    for i in range(4):
+        np.testing.assert_allclose(out[i], ref.attention(q[i], k[i], v[i]), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sq=st.sampled_from([8, 17, 32, 64, 96]),
+    skv=st.sampled_from([8, 24, 64, 100, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    dv=st.sampled_from([8, 16, 32, 64]),
+    block_q=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_kernel_matches_ref_hypothesis(sq, skv, d, dv, block_q, block_k, seed):
+    kq, kk, kv = keys(seed, 3)
+    q, k, v = rand(kq, (sq, d)), rand(kk, (skv, d)), rand(kv, (skv, dv))
+    out = flat_attention(q, k, v, block_q=block_q, block_k=block_k)
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([0.1, 1.0, 10.0, 100.0]), seed=st.integers(0, 999))
+def test_kernel_numerically_stable_at_large_logits(scale, seed):
+    # Online softmax must not overflow for large score magnitudes.
+    kq, kk, kv = keys(seed, 3)
+    q = rand(kq, (16, 16)) * scale
+    k = rand(kk, (64, 16)) * scale
+    v = rand(kv, (64, 16))
+    out = flat_attention(q, k, v, block_q=16, block_k=16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    expect = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-3)
+
+
+def test_rows_sum_property():
+    # With v = identity-ish columns, output rows are convex combinations:
+    # each output element must lie within [min(v), max(v)].
+    kq, kk, kv = keys(5, 3)
+    q, k, v = rand(kq, (32, 16)), rand(kk, (64, 16)), rand(kv, (64, 16))
+    out = np.asarray(flat_attention(q, k, v, block_q=16, block_k=16))
+    vmin, vmax = np.asarray(v).min(axis=0), np.asarray(v).max(axis=0)
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()

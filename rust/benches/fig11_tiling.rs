@@ -1,0 +1,11 @@
+//! Bench harness regenerating the paper's Fig. 11 per-tile tiling utilization and L1 occupancy.
+//! Runs the experiment at full parameter scale and reports wall time.
+//! (criterion is unavailable in the offline build; this is a plain
+//! `harness = false` driver with std timing.)
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rep = flatattention::coordinator::experiments::run("fig11", false).expect("experiment");
+    rep.print();
+    println!("\n[bench {}] regenerated in {:.2?}", "fig11", t0.elapsed());
+}

@@ -1,0 +1,11 @@
+//! Bench harness regenerating the paper's Fig. 12 tile-accelerator vs GH200 comparison.
+//! Runs the experiment at full parameter scale and reports wall time.
+//! (criterion is unavailable in the offline build; this is a plain
+//! `harness = false` driver with std timing.)
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rep = flatattention::coordinator::experiments::run("fig12", false).expect("experiment");
+    rep.print();
+    println!("\n[bench {}] regenerated in {:.2?}", "fig12", t0.elapsed());
+}

@@ -1,0 +1,13 @@
+//! Bench harness regenerating the paper's Fig. 13 (a–d): DeepSeek-v3-671B
+//! decoding on the wafer-scale system.
+//! (criterion is unavailable in the offline build; this is a plain
+//! `harness = false` driver with std timing.)
+
+fn main() {
+    for id in ["fig13a", "fig13b", "fig13c", "fig13d"] {
+        let t0 = std::time::Instant::now();
+        let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
+        rep.print();
+        println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+    }
+}

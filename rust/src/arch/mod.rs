@@ -1,0 +1,12 @@
+//! Tile-based many-PE architecture template (paper Fig. 2a) and its cost
+//! models: tile engines (RedMulE matrix engine, Spatz vector engine, DMA),
+//! the 2D-mesh NoC with fabric collectives, and HBM.
+
+pub mod config;
+pub mod tile;
+pub mod noc;
+pub mod hbm;
+pub mod collective;
+
+pub use config::{ChipConfig, HbmConfig, NocConfig, TileConfig};
+pub use collective::CollectiveImpl;

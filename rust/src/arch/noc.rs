@@ -1,0 +1,167 @@
+//! 2D-mesh NoC geometry and per-chip resource allocation.
+//!
+//! The NoC is modeled at the granularity the dataflows exercise it: row-wise
+//! and column-wise collective *paths*. Collectives of the same mesh row
+//! contend (serialize) on that row's path server; different rows/columns
+//! proceed in parallel — matching the link-disjointness of FlooNoC-style
+//! XY-routed row/column collectives.
+
+use crate::arch::config::ChipConfig;
+use crate::sim::{ResourceId, ResourceKind, ResourceTable};
+
+/// Tile coordinate in the mesh. `x` is the column, `y` the row; HBM sits on
+/// the south edge (y = mesh_y − 1 side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileCoord {
+    pub x: u32,
+    pub y: u32,
+}
+
+impl TileCoord {
+    pub fn flat(self, cfg: &ChipConfig) -> u32 {
+        self.y * cfg.mesh_x + self.x
+    }
+    /// Manhattan distance (XY routing hop count).
+    pub fn hops_to(self, other: TileCoord) -> u64 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u64
+    }
+    /// Hop count from this tile to the south-edge HBM controller serving
+    /// its column.
+    pub fn hops_to_hbm(self, cfg: &ChipConfig) -> u64 {
+        (cfg.mesh_y - self.y) as u64
+    }
+}
+
+/// All DES resources of one chip, pre-allocated so dataflow generators can
+/// address engines by tile coordinate.
+#[derive(Debug, Clone)]
+pub struct ChipResources {
+    pub table: ResourceTable,
+    matrix: Vec<ResourceId>,
+    vector: Vec<ResourceId>,
+    dma: Vec<ResourceId>,
+    hbm_ch: Vec<ResourceId>,
+    row_path: Vec<ResourceId>,
+    col_path: Vec<ResourceId>,
+    mesh_x: u32,
+    mesh_y: u32,
+    channels: u32,
+}
+
+impl ChipResources {
+    pub fn new(cfg: &ChipConfig) -> Self {
+        let mut table = ResourceTable::new();
+        let tiles = cfg.tiles();
+        let matrix = (0..tiles).map(|i| table.add(ResourceKind::MatrixEngine(i))).collect();
+        let vector = (0..tiles).map(|i| table.add(ResourceKind::VectorEngine(i))).collect();
+        let dma = (0..tiles).map(|i| table.add(ResourceKind::Dma(i))).collect();
+        let channels = cfg.hbm.channels();
+        let hbm_ch = (0..channels).map(|i| table.add(ResourceKind::HbmChannel(i))).collect();
+        let row_path = (0..cfg.mesh_y).map(|i| table.add(ResourceKind::NocRow(i))).collect();
+        let col_path = (0..cfg.mesh_x).map(|i| table.add(ResourceKind::NocCol(i))).collect();
+        ChipResources {
+            table,
+            matrix,
+            vector,
+            dma,
+            hbm_ch,
+            row_path,
+            col_path,
+            mesh_x: cfg.mesh_x,
+            mesh_y: cfg.mesh_y,
+            channels,
+        }
+    }
+
+    pub fn matrix(&self, t: TileCoord) -> ResourceId {
+        self.matrix[(t.y * self.mesh_x + t.x) as usize]
+    }
+    pub fn vector(&self, t: TileCoord) -> ResourceId {
+        self.vector[(t.y * self.mesh_x + t.x) as usize]
+    }
+    pub fn dma(&self, t: TileCoord) -> ResourceId {
+        self.dma[(t.y * self.mesh_x + t.x) as usize]
+    }
+    pub fn row_path(&self, row: u32) -> ResourceId {
+        self.row_path[row as usize]
+    }
+    pub fn col_path(&self, col: u32) -> ResourceId {
+        self.col_path[col as usize]
+    }
+
+    /// HBM channel serving tile `t` (channels striped across mesh columns;
+    /// multiple channels per column are interleaved over rows with a
+    /// multiplicative hash — a plain `y % per_col` aliases with the group
+    /// stride of the dataflows' diagonal loaders, silently idling half the
+    /// channels).
+    pub fn hbm_channel(&self, t: TileCoord) -> ResourceId {
+        let per_col = (self.channels / self.mesh_x).max(1);
+        let base = (t.x * self.channels / self.mesh_x).min(self.channels - 1);
+        let h = (t.y as u64).wrapping_mul(0x9E3779B1) >> 13;
+        let ch = (base + (h % per_col as u64) as u32).min(self.channels - 1);
+        self.hbm_ch[ch as usize]
+    }
+
+    pub fn mesh_x(&self) -> u32 {
+        self.mesh_x
+    }
+    pub fn mesh_y(&self) -> u32 {
+        self.mesh_y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_and_hops() {
+        let cfg = ChipConfig::tiny(4);
+        let a = TileCoord { x: 0, y: 0 };
+        let b = TileCoord { x: 3, y: 2 };
+        assert_eq!(a.hops_to(b), 5);
+        assert_eq!(b.hops_to(a), 5);
+        assert_eq!(a.flat(&cfg), 0);
+        assert_eq!(b.flat(&cfg), 11);
+        assert_eq!(a.hops_to_hbm(&cfg), 4);
+        assert_eq!(b.hops_to_hbm(&cfg), 2);
+    }
+
+    #[test]
+    fn resources_unique_per_tile() {
+        let cfg = ChipConfig::tiny(4);
+        let r = ChipResources::new(&cfg);
+        let a = r.matrix(TileCoord { x: 1, y: 2 });
+        let b = r.matrix(TileCoord { x: 2, y: 1 });
+        assert_ne!(a, b);
+        assert_ne!(r.vector(TileCoord { x: 1, y: 2 }), a);
+    }
+
+    #[test]
+    fn hbm_channels_spread_over_columns() {
+        let cfg = ChipConfig::table1();
+        let r = ChipResources::new(&cfg);
+        // 32 channels over 32 columns: one channel per column.
+        let c0 = r.hbm_channel(TileCoord { x: 0, y: 5 });
+        let c1 = r.hbm_channel(TileCoord { x: 1, y: 5 });
+        assert_ne!(c0, c1);
+        // Same column, different row → same channel (1 per column here).
+        let c0b = r.hbm_channel(TileCoord { x: 0, y: 9 });
+        assert_eq!(c0, c0b);
+    }
+
+    #[test]
+    fn hbm_two_stacks_spread_over_both_channels() {
+        // With 2 channels per column, the rows of a column must use both —
+        // including rows at stride 4 (the diagonal-loader pattern of a
+        // gy = 4 group, which a naive y%2 map would alias onto one channel).
+        let cfg = ChipConfig::table1_gh200_match();
+        let r = ChipResources::new(&cfg);
+        let all: std::collections::HashSet<_> =
+            (0..cfg.mesh_y).map(|y| r.hbm_channel(TileCoord { x: 0, y })).collect();
+        assert_eq!(all.len(), 2, "both channels of column 0 must be used");
+        let strided: std::collections::HashSet<_> =
+            (0..cfg.mesh_y).step_by(4).map(|y| r.hbm_channel(TileCoord { x: 0, y: y + 1 })).collect();
+        assert_eq!(strided.len(), 2, "stride-4 rows must still hit both channels");
+    }
+}

@@ -1,0 +1,3 @@
+//! GH200 and SoA-system baselines.
+pub mod gh200;
+pub mod soa;

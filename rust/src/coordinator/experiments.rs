@@ -1,0 +1,637 @@
+//! The experiment registry: one entry per paper figure/table. Each
+//! experiment regenerates the corresponding rows/series (workloads,
+//! baselines, sweeps) and returns a printable [`Report`].
+//!
+//! `fast` mode shrinks sweeps (used by tests); benches and the CLI default
+//! to the paper's full parameter sets.
+
+use anyhow::{bail, Result};
+
+use crate::arch::collective::{multicast_latency_cycles, reduce_latency_cycles, CollectiveImpl};
+use crate::arch::config::{ChipConfig, Dtype, SimFidelity};
+use crate::arch::noc::ChipResources;
+use crate::arch::tile::{gemm_cycles, gemm_utilization};
+use crate::arch::collective;
+use crate::baseline::gh200::{self, Bound, Gh200};
+use crate::baseline::soa::SoaSystem;
+use crate::coordinator::report::{fmt_time, stacked_bar, Report};
+use crate::dataflow::tiling::{l1_working_set, slice_utilization, Concurrency, FlatTiling};
+use crate::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
+use crate::metrics::{fmt_pct, KernelMetrics};
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
+use crate::multichip::wafer::{batch_sweep, best_under_tpot, ep_plans};
+use crate::sim::Graph;
+use crate::workload::attention::{AttentionShape, Phase};
+use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
+
+/// All experiment ids with one-line descriptions.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig1a", "FLOP breakdown: attention vs rest (Qw7B, DS16B, DS671B; prefill+decode)"),
+        ("fig1b", "GH200 roofline: FA-3 prefill / FlashMLA decode efficiency envelope"),
+        ("fig6", "Cost-model calibration: RedMulE GEMM cycles; 4x4-mesh collectives"),
+        ("fig7", "Collective latency: HW vs SW.Tree vs SW.Seq on 32x32 mesh"),
+        ("fig8", "Prefill MHA: FA-2/FA-3/FlatSC/FlatTC/FlatHC/FlatAsync runtime breakdown"),
+        ("fig9", "FlatAttention group-scale trade-off (over-flattening)"),
+        ("fig11", "Per-tile tiling: RedMulE utilization and L1 occupancy"),
+        ("fig12", "FlatAttention (tile accel) vs GH200 across attention variants"),
+        ("fig13a", "DeepSeek-v3 decode: throughput vs TPOT, Flat vs FlashMLA"),
+        ("fig13b", "DeepSeek-v3 decode-layer runtime breakdown @ b=256"),
+        ("fig13c", "Expert-parallelism degree sweep"),
+        ("fig13d", "D2D communication overhead vs EP degree @ b=256"),
+        ("tab2", "SoA comparison: per-chip throughput + TPOT vs CM384/DS-Prof"),
+        ("tab3", "Related-work feature matrix"),
+    ]
+}
+
+/// Run an experiment by id.
+pub fn run(id: &str, fast: bool) -> Result<Report> {
+    Ok(match id {
+        "fig1a" => fig1a(),
+        "fig1b" => fig1b(),
+        "fig6" => fig6(),
+        "fig7" => fig7(fast),
+        "fig8" => fig8(fast),
+        "fig9" => fig9(fast),
+        "fig11" => fig11(),
+        "fig12" => fig12(fast),
+        "fig13a" => fig13a(fast),
+        "fig13b" => fig13b(fast),
+        "fig13c" => fig13c(fast),
+        "fig13d" => fig13d(fast),
+        "tab2" => tab2(fast),
+        "tab3" => tab3(),
+        _ => bail!("unknown experiment '{id}'; see `flatattention list`"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+
+fn fig1a() -> Report {
+    let mut r = Report::new("Fig. 1a — FLOP breakdown: attention vs other kernels");
+    r.header(&["model", "phase", "len", "attention %", "other %"]);
+    let qw = DenseModelConfig::qwen7b();
+    let ds16 = DeepSeekConfig::v3_16b();
+    let ds671 = DeepSeekConfig::v3_671b();
+    for (phase, lens) in [(Phase::Prefill, [4096u32, 16384, 65536]), (Phase::Decode, [4096, 16384, 65536])] {
+        let pname = if phase == Phase::Prefill { "prefill" } else { "decode" };
+        for len in lens {
+            let (a, o) = qw.flop_breakdown_per_token(phase, len);
+            r.row(vec![
+                qw.name.clone(),
+                pname.into(),
+                len.to_string(),
+                fmt_pct(a / (a + o)),
+                fmt_pct(o / (a + o)),
+            ]);
+            for ds in [&ds16, &ds671] {
+                let (a, o) = flop_breakdown_per_token(ds, phase, len, Dtype::Fp8);
+                r.row(vec![
+                    ds.name.clone(),
+                    pname.into(),
+                    len.to_string(),
+                    fmt_pct(a / (a + o)),
+                    fmt_pct(o / (a + o)),
+                ]);
+            }
+        }
+    }
+    r.note("paper: Qw7B attention ≈19% of FLOPs; DS671B decode reaches ≈71% at long context");
+    r
+}
+
+fn fig1b() -> Report {
+    let gh = Gh200::new();
+    let mut r = Report::new("Fig. 1b — GH200 roofline: SoA attention kernels");
+    r.preamble(format!(
+        "GH200: {:.0} TFLOPS FP16, {:.1} TB/s, ridge {:.0} FLOP/B",
+        gh.peak_fp16_flops / 1e12,
+        gh.hbm_bytes_per_s / 1e12,
+        gh.ridge_flops_per_byte()
+    ));
+    r.header(&["kernel", "shape", "intensity (FLOP/B)", "achieved TFLOPS", "roofline TFLOPS", "gap"]);
+    let mut shapes: Vec<AttentionShape> = Vec::new();
+    for d in [64u32, 128] {
+        for s in [2048u32, 4096, 8192] {
+            shapes.push(AttentionShape::mha_prefill(2, 32, d, s, Dtype::Fp16));
+        }
+    }
+    for kv in [4096u32, 8192, 16384] {
+        for sp in [1u32, 2] {
+            shapes.push(AttentionShape::mla_absorbed_decode(64, 128, 512, 64, kv, sp, Dtype::Fp16));
+        }
+    }
+    for s in shapes {
+        let a = gh200::attention(&gh, &s);
+        let flops = s.flops() as f64;
+        let roof = flops / s.roofline_seconds(&ChipConfig::table1_gh200_match());
+        let ach = flops / a.seconds;
+        r.row(vec![
+            a.kernel.into(),
+            s.label(),
+            format!("{:.0}", s.ideal_intensity()),
+            format!("{:.0}", ach / 1e12),
+            format!("{:.0}", roof / 1e12),
+            fmt_pct(1.0 - ach / roof),
+        ]);
+    }
+    r.note("paper: 26%–64% gap to the roofline across these kernels");
+    r
+}
+
+fn fig6() -> Report {
+    let cfg = ChipConfig::calib_4x4();
+    let mut r = Report::new("Fig. 6 — cost-model calibration (substitutes RTL calibration)");
+    r.header(&["model", "point", "cycles", "reference", "deviation"]);
+    // RedMulE: the analytic model vs the systolic-array first-principles
+    // count tiles_m*tiles_n*k + setup; deviation is 0 by construction, the
+    // table documents the operating points the paper's Fig. 6a covers.
+    for (m, k, n) in [(32u64, 32u64, 32u64), (64, 64, 64), (96, 96, 96), (128, 128, 128), (192, 192, 192)] {
+        let c = gemm_cycles(&cfg.tile, m, k, n);
+        let ref_c = m.div_ceil(32) * n.div_ceil(16) * k + cfg.tile.gemm_setup_cycles;
+        r.row(vec![
+            "RedMulE".into(),
+            format!("GEMM {m}x{k}x{n}"),
+            c.to_string(),
+            ref_c.to_string(),
+            fmt_pct((c as f64 - ref_c as f64).abs() / ref_c as f64),
+        ]);
+    }
+    // NoC: DES vs closed form for the two calibration patterns.
+    let res = ChipResources::new(&cfg);
+    for bytes in [4096u64, 65536, 1 << 20] {
+        let mut g = Graph::new(res.table.clone());
+        collective::multicast(&mut g, &res, &cfg, CollectiveImpl::SwSeq, collective::Axis::Row, 0, 4, bytes, &[]);
+        let des = g.simulate().makespan;
+        let ana = multicast_latency_cycles(&cfg, CollectiveImpl::SwSeq, 4, bytes);
+        r.row(vec![
+            "NoC".into(),
+            format!("SW.Seq row mcast {bytes}B"),
+            des.to_string(),
+            ana.to_string(),
+            fmt_pct((des as f64 - ana as f64).abs() / des as f64),
+        ]);
+        let mut g = Graph::new(res.table.clone());
+        collective::reduce(
+            &mut g,
+            &res,
+            &cfg,
+            CollectiveImpl::Hw,
+            collective::Axis::Row,
+            0,
+            4,
+            crate::arch::noc::TileCoord { x: 0, y: 0 },
+            bytes,
+            Dtype::Fp16,
+            &[],
+        );
+        let des = g.simulate().makespan;
+        let ana = reduce_latency_cycles(&cfg, CollectiveImpl::Hw, 4, bytes, Dtype::Fp16);
+        r.row(vec![
+            "NoC".into(),
+            format!("HW row reduce {bytes}B"),
+            des.to_string(),
+            ana.to_string(),
+            fmt_pct((des as f64 - ana as f64).abs() / des as f64),
+        ]);
+    }
+    r.note("paper calibration: RedMulE 0.17%, NoC 6–12% average cycle deviation vs RTL");
+    r
+}
+
+fn fig7(fast: bool) -> Report {
+    let cfg = ChipConfig::table1();
+    let res = ChipResources::new(&cfg);
+    let mut r = Report::new("Fig. 7 — collective primitives on a 32x32 mesh (row of 32 tiles)");
+    r.header(&["pattern", "size", "HW (cyc)", "SW.Tree (cyc)", "SW.Seq (cyc)", "HW vs Tree", "HW vs Seq"]);
+    let sizes: &[u64] = if fast { &[1 << 12, 1 << 20] } else { &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22] };
+    for &bytes in sizes {
+        let lat = |imp: CollectiveImpl| {
+            let mut g = Graph::new(res.table.clone());
+            collective::multicast(&mut g, &res, &cfg, imp, collective::Axis::Row, 0, 32, bytes, &[]);
+            g.simulate().makespan
+        };
+        let (hw, tree, seq) = (lat(CollectiveImpl::Hw), lat(CollectiveImpl::SwTree), lat(CollectiveImpl::SwSeq));
+        r.row(vec![
+            "row multicast".into(),
+            crate::util::fmt_bytes(bytes),
+            hw.to_string(),
+            tree.to_string(),
+            seq.to_string(),
+            format!("{:.1}x", tree as f64 / hw as f64),
+            format!("{:.1}x", seq as f64 / hw as f64),
+        ]);
+    }
+    for &bytes in sizes {
+        let lat = |imp: CollectiveImpl| {
+            let mut g = Graph::new(res.table.clone());
+            collective::reduce(
+                &mut g,
+                &res,
+                &cfg,
+                imp,
+                collective::Axis::Row,
+                0,
+                32,
+                crate::arch::noc::TileCoord { x: 0, y: 0 },
+                bytes,
+                Dtype::Fp16,
+                &[],
+            );
+            g.simulate().makespan
+        };
+        let (hw, tree, seq) = (lat(CollectiveImpl::Hw), lat(CollectiveImpl::SwTree), lat(CollectiveImpl::SwSeq));
+        r.row(vec![
+            "row sum-reduce".into(),
+            crate::util::fmt_bytes(bytes),
+            hw.to_string(),
+            tree.to_string(),
+            seq.to_string(),
+            format!("{:.1}x", tree as f64 / hw as f64),
+            format!("{:.1}x", seq as f64 / hw as f64),
+        ]);
+    }
+    r.note("paper: HW multicast 5.1x / 30.7x over SW.Tree / SW.Seq; HW reduce 10.9x / 67.3x");
+    r
+}
+
+/// The six dataflows of Fig. 8 for one MHA layer shape.
+pub fn fig8_dataflows(cfg: &ChipConfig, shape: &AttentionShape) -> Vec<(String, AttentionDataflow)> {
+    let full = FlatTiling {
+        gx: cfg.mesh_x,
+        gy: cfg.mesh_y,
+        slice_r: ((shape.effective_q_rows() as u32).div_ceil(cfg.mesh_y)).max(1),
+        slice_c: (shape.seq_kv.div_ceil(cfg.mesh_x)).max(1),
+    };
+    // Cap slices at the L1-feasible 128.
+    let full = FlatTiling { slice_r: full.slice_r.min(128), slice_c: full.slice_c.min(128), ..full };
+    vec![
+        ("FA-2".into(), AttentionDataflow::Fa2),
+        ("FA-3".into(), AttentionDataflow::Fa3),
+        ("FlatSC".into(), AttentionDataflow::Flat(FlatParams::flat_sc(full))),
+        ("FlatTC".into(), AttentionDataflow::Flat(FlatParams::flat_tc(full))),
+        ("FlatHC".into(), AttentionDataflow::Flat(FlatParams::flat_hc(full))),
+        ("FlatAsync".into(), AttentionDataflow::Flat(FlatParams::flat_async(full))),
+    ]
+}
+
+fn breakdown_row(name: &str, label: &str, cfg: &ChipConfig, m: &KernelMetrics) -> Vec<String> {
+    let total = m.cycles.max(1) as f64;
+    let bar = stacked_bar(
+        &[
+            ('M', m.exposed[0] as f64),
+            ('V', m.exposed[1] as f64),
+            ('H', m.exposed[2] as f64),
+            ('N', m.exposed[3] as f64),
+            ('.', total - m.exposed.iter().sum::<u64>() as f64),
+        ],
+        24,
+    );
+    let _ = cfg;
+    vec![
+        label.to_string(),
+        name.to_string(),
+        fmt_time(m.seconds),
+        bar,
+        fmt_pct(m.compute_utilization),
+        fmt_pct(m.hbm_bw_utilization),
+        crate::util::fmt_bytes(m.hbm_bytes),
+        format!("{:.0} TFLOPS", m.tflops),
+    ]
+}
+
+fn fig8(fast: bool) -> Report {
+    let cfg = ChipConfig::table1();
+    let mut r = Report::new("Fig. 8 — prefill MHA: runtime breakdown and HBM BW utilization");
+    r.preamble(format!("chip: {} (2 TB/s HBM), B=2, H=32", cfg.name));
+    r.preamble("bar: M=matmul V=softmax(exposed) H=HBM(exposed) N=NoC(exposed) .=other");
+    r.header(&["layer", "impl", "runtime", "breakdown", "util", "HBM BW", "HBM traffic", "achieved"]);
+    let configs: Vec<(u32, u32)> = if fast {
+        vec![(64, 1024)]
+    } else {
+        vec![(64, 1024), (64, 2048), (64, 4096), (128, 1024), (128, 2048), (128, 4096)]
+    };
+    let mut fa3_at: Option<f64> = None;
+    let mut best_at: Option<(String, f64, u64)> = None;
+    let mut fa3_traffic = 0u64;
+    for (d, s) in configs {
+        let shape = AttentionShape::mha_prefill(2, 32, d, s, Dtype::Fp16);
+        let label = format!("D{d} S{s}");
+        for (name, df) in fig8_dataflows(&cfg, &shape) {
+            let m = simulate_attention(&cfg, &shape, df, SimFidelity::Full);
+            if (d, s) == (128, 4096) {
+                if name == "FA-3" {
+                    fa3_at = Some(m.seconds);
+                    fa3_traffic = m.hbm_bytes;
+                }
+                if name == "FlatAsync" {
+                    best_at = Some((name.clone(), m.seconds, m.hbm_bytes));
+                }
+            }
+            r.row(breakdown_row(&name, &label, &cfg, &m));
+        }
+    }
+    if let (Some(fa3), Some((_, flat, traffic))) = (fa3_at, best_at) {
+        r.note(format!(
+            "D128 S4096: FlatAsync speedup over FA-3 = {:.1}x, HBM traffic reduction = {:.1}x (paper: 4.1x, 16x)",
+            fa3 / flat,
+            fa3_traffic as f64 / traffic as f64
+        ));
+    }
+    r.note("paper: FlashAttention memory-bound (≤80% HBM BW); FlatAsync up to 92.3% utilization");
+    r
+}
+
+fn fig9(fast: bool) -> Report {
+    let cfg = ChipConfig::table1();
+    let mut r = Report::new("Fig. 9 — group-scale trade-off (FlatAsync), D=128, H=32, B=4");
+    r.header(&["S", "group", "slice", "runtime", "breakdown", "util(active)", "HBM BW"]);
+    let seqs: &[u32] = if fast { &[512, 2048] } else { &[512, 1024, 2048, 4096] };
+    let groups: &[u32] = if fast { &[8, 32] } else { &[4, 8, 16, 32] };
+    for &s in seqs {
+        for &g in groups {
+            let shape = AttentionShape::mha_prefill(4, 32, 128, s, Dtype::Fp16);
+            let slice = (s / g).min(128).max(1);
+            let t = FlatTiling { gx: g, gy: g, slice_r: slice, slice_c: slice };
+            let m = simulate_attention(&cfg, &shape, AttentionDataflow::Flat(FlatParams::flat_async(t)), SimFidelity::Full);
+            let total = m.cycles.max(1) as f64;
+            let bar = stacked_bar(
+                &[
+                    ('M', m.exposed[0] as f64),
+                    ('V', m.exposed[1] as f64),
+                    ('H', m.exposed[2] as f64),
+                    ('N', m.exposed[3] as f64),
+                    ('.', total - m.exposed.iter().sum::<u64>() as f64),
+                ],
+                20,
+            );
+            r.row(vec![
+                s.to_string(),
+                format!("{g}x{g}"),
+                slice.to_string(),
+                fmt_time(m.seconds),
+                bar,
+                fmt_pct(m.matrix_efficiency_active),
+                fmt_pct(m.hbm_bw_utilization),
+            ]);
+        }
+    }
+    r.note("paper: S=4096 → 92.7% (16x16) / 92.3% (32x32); S=512 + 32x32 over-flattens to ~20% active util");
+    r
+}
+
+fn fig11() -> Report {
+    let cfg = ChipConfig::table1();
+    let mut r = Report::new("Fig. 11 — per-tile tiling: RedMulE utilization and L1 occupancy (D=128, FP16)");
+    r.header(&["slice", "score-GEMM util", "combined util", "L1 (KiB)", "fits 384 KiB"]);
+    for s in [16u64, 32, 64, 128, 256] {
+        let u_score = gemm_utilization(&cfg.tile, s, 128, s);
+        let u = slice_utilization(&cfg, s, s, 128, 128);
+        let ws = l1_working_set(s, s, 128, 128, Dtype::Fp16, true, Concurrency::TwoRowBlocks);
+        r.row(vec![
+            format!("{s}x{s}"),
+            fmt_pct(u_score),
+            fmt_pct(u),
+            format!("{:.0}", ws.total_kib()),
+            if ws.fits(&cfg.tile) { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    r.note("paper: 128x128 chosen — ≥95% utilization within the 384 KiB budget (up to 98% at 256)");
+    r
+}
+
+/// The Fig. 12 shape set.
+pub fn fig12_shapes(fast: bool) -> Vec<AttentionShape> {
+    let mut v = Vec::new();
+    // Prefill MHA: hd × sq.
+    for d in [64u32, 128] {
+        for s in if fast { vec![4096u32] } else { vec![2048u32, 4096, 8192] } {
+            v.push(AttentionShape::mha_prefill(2, 32, d, s, Dtype::Fp16));
+        }
+    }
+    // Decode MHA (sp × kv), GQA, MLA.
+    let kvs: Vec<u32> = if fast { vec![4096] } else { vec![4096, 8192] };
+    for &kv in &kvs {
+        for sp in [1u32, 4] {
+            v.push(AttentionShape::mha_decode(64, 32, 128, kv, sp, Dtype::Fp16));
+        }
+        v.push(AttentionShape::gqa_decode(64, 32, 8, 128, kv, 1, Dtype::Fp16));
+        v.push(AttentionShape::gqa_decode(64, 32, 8, 128, kv, 4, Dtype::Fp16));
+        v.push(AttentionShape::mla_absorbed_decode(64, 128, 512, 64, kv, 2, Dtype::Fp16));
+    }
+    v
+}
+
+fn fig12(fast: bool) -> Report {
+    let cfg = ChipConfig::table1_gh200_match();
+    let gh = Gh200::new();
+    let mut r = Report::new("Fig. 12 — FlatAttention (tile accel, 4 TB/s) vs GH200 SoA kernels");
+    r.header(&["shape", "ours", "ours label", "GH200", "GH200 kernel", "speedup"]);
+    let mut speedups = Vec::new();
+    for shape in fig12_shapes(fast) {
+        let df = AttentionDataflow::auto_flat(&cfg, &shape);
+        let m = simulate_attention(&cfg, &shape, df, SimFidelity::Full);
+        let g = gh200::attention(&gh, &shape);
+        let sp = g.seconds / m.seconds;
+        speedups.push(sp);
+        let ours_label = if shape.is_compute_bound(&cfg) {
+            format!("C:{}", fmt_pct(m.compute_utilization))
+        } else {
+            format!("M:{}", fmt_pct(m.hbm_bw_utilization))
+        };
+        let gh_label = match g.bound {
+            Bound::Compute => format!("C:{}", fmt_pct(g.efficiency)),
+            Bound::Memory => format!("M:{}", fmt_pct(g.efficiency)),
+        };
+        r.row(vec![
+            shape.label(),
+            fmt_time(m.seconds),
+            ours_label,
+            fmt_time(g.seconds),
+            format!("{} {gh_label}", g.kernel),
+            format!("{sp:.1}x"),
+        ]);
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    r.note(format!("average speedup {avg:.1}x (paper: 1.9x; 86% util compute-bound, 78% BW memory-bound)"));
+    r
+}
+
+fn fig13a(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let fidelity = SimFidelity::Analytic;
+    let mut r = Report::new("Fig. 13a — DeepSeek-v3-671B decode: throughput vs TPOT (EP32-PP2, 64 chips)");
+    r.header(&["dataflow", "batch/chip", "TPOT (ms)", "system tok/s", "per-chip tok/s", "attn util"]);
+    let plan = ParallelismPlan::new(32, 2);
+    for choice in [AttentionChoice::Flat, AttentionChoice::FlashMla] {
+        let sweep = batch_sweep(&sys, &ds, plan, 4096, choice, fidelity);
+        let sweep = if fast { sweep.into_iter().step_by(3).collect::<Vec<_>>() } else { sweep };
+        for o in sweep {
+            r.row(vec![
+                choice.label().into(),
+                o.batch_per_chip.to_string(),
+                format!("{:.1}", o.tpot_ms),
+                format!("{:.0}", o.system_tokens_per_s),
+                format!("{:.0}", o.per_chip_tokens_per_s),
+                fmt_pct(o.attention_utilization),
+            ]);
+        }
+    }
+    r.note("paper: FlatAttention up to 2.1x system throughput over FlashMLA at high batch, with lower TPOT");
+    r
+}
+
+fn fig13b(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ev = DecodeEvaluator::new(if fast { SimFidelity::Analytic } else { SimFidelity::Analytic });
+    let plan = ParallelismPlan::new(32, 2);
+    let mut r = Report::new("Fig. 13b — decode-layer runtime breakdown @ 256 batch/chip");
+    r.header(&["dataflow", "attention", "GEMMs", "vector", "C2C", "attention %", "e2e layer"]);
+    let mut flat_total = 0.0;
+    let mut flat_attn = 0.0;
+    for choice in [AttentionChoice::Flat, AttentionChoice::FlashMla] {
+        let o = ev.evaluate(&sys, &ds, plan, 256, 4096, choice);
+        if choice == AttentionChoice::Flat {
+            flat_total = o.layer.total();
+            flat_attn = o.layer.attention_s;
+        } else {
+            let sp_attn = o.layer.attention_s / flat_attn;
+            let sp_e2e = o.layer.total() / flat_total;
+            r.note(format!(
+                "FlatAttention speedup: attention {sp_attn:.1}x, end-to-end layer {sp_e2e:.1}x (paper: 4.5x, 2.1x)"
+            ));
+        }
+        r.row(vec![
+            choice.label().into(),
+            fmt_time(o.layer.attention_s),
+            fmt_time(o.layer.gemm_s),
+            fmt_time(o.layer.vector_s),
+            fmt_time(o.layer.c2c_s),
+            fmt_pct(o.layer.attention_s / o.layer.total()),
+            fmt_time(o.layer.total()),
+        ]);
+    }
+    r.note("paper: attention is 42% of runtime with FlatAttention vs 71% with FlashMLA");
+    r
+}
+
+fn fig13c(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut r = Report::new("Fig. 13c — expert-parallelism sweep (FlatAttention)");
+    r.header(&["plan", "batch/chip", "TPOT (ms)", "system tok/s"]);
+    for plan in ep_plans() {
+        let sweep = batch_sweep(&sys, &ds, plan, 4096, AttentionChoice::Flat, SimFidelity::Analytic);
+        let sweep: Vec<_> = if fast { sweep.into_iter().step_by(3).collect() } else { sweep };
+        for o in sweep {
+            r.row(vec![
+                plan.label(),
+                o.batch_per_chip.to_string(),
+                format!("{:.1}", o.tpot_ms),
+                format!("{:.0}", o.system_tokens_per_s),
+            ]);
+        }
+    }
+    r.note("paper: EP improves throughput+TPOT at low/mid batch; C2C overhead grows with EP degree at high batch");
+    r
+}
+
+fn fig13d(_fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+    let mut r = Report::new("Fig. 13d — D2D communication overhead @ 256 batch/chip");
+    r.header(&["plan", "C2C per layer", "share of layer", "mean hops"]);
+    for plan in ep_plans().into_iter().filter(|p| p.ep > 1) {
+        let o = ev.evaluate(&sys, &ds, plan, 256, 4096, AttentionChoice::Flat);
+        let (gx, gy) = sys.d2d.group_dims(plan.ep);
+        r.row(vec![
+            plan.label(),
+            fmt_time(o.layer.c2c_s),
+            fmt_pct(o.layer.c2c_s / o.layer.total()),
+            format!("{:.2}", crate::multichip::d2d::D2dConfig::mean_hops(gx, gy)),
+        ]);
+    }
+    r.note("paper: multi-hop mesh communication amplifies D2D overhead as EP degree grows");
+    r
+}
+
+fn tab2(fast: bool) -> Report {
+    let mut r = Report::new("Table II — DeepSeek-v3-671B decoding vs SoA systems (TPOT ≤ 50 ms)");
+    r.header(&["system", "chips", "HBM", "TFLOPS", "batch", "kv", "tok/s/chip", "TPOT (ms)"]);
+    for s in [SoaSystem::cm384(), SoaSystem::ds_prof()] {
+        r.row(vec![
+            s.name.into(),
+            format!("{} {}", s.chips, s.chip_desc),
+            format!("{:.1} TB/s", s.hbm_tb_s),
+            format!("{:.0}@{}", s.tflops, s.tflops_desc),
+            s.batch_per_chip.to_string(),
+            s.kv_len.to_string(),
+            format!("{:.0}", s.tokens_per_s_per_chip),
+            format!("{:.1}", s.tpot_ms),
+        ]);
+    }
+    let fidelity = SimFidelity::Analytic;
+    let _ = fast;
+    for (name, sweep) in [
+        ("Ours1 (1 TB/s D2D)", crate::multichip::wafer::ours1(fidelity)),
+        ("Ours2 (160 GB/s D2D)", crate::multichip::wafer::ours2(fidelity)),
+    ] {
+        if let Some(o) = best_under_tpot(&sweep, 50.0) {
+            r.row(vec![
+                name.into(),
+                "64 Tile Accel.".into(),
+                "4.0 TB/s".into(),
+                "1976@FP8".into(),
+                o.batch_per_chip.to_string(),
+                "4096".into(),
+                format!("{:.0}", o.per_chip_tokens_per_s),
+                format!("{:.1}", o.tpot_ms),
+            ]);
+        }
+    }
+    r.note("paper: Ours1 6940 tok/s/chip @35.8 ms; Ours2 3773 @33.1; DS-Prof 2325 @50.2");
+    r
+}
+
+fn tab3() -> Report {
+    let mut r = Report::new("Table III — related-work feature matrix");
+    r.header(&["work", "layer fusion", "attention", "multi-tile", "scope", "collectives", "HW mcast/redu"]);
+    for row in [
+        ["single-tile dataflows [37-40]", "yes", "yes", "no", "-", "no", "no"],
+        ["FlashAttention-2", "yes", "yes", "yes", "gpu", "no", "no"],
+        ["FlashFuser", "yes", "no", "yes", "gpu", "yes", "no"],
+        ["Zen-Attention", "yes", "yes", "yes", "mesh", "yes", "no"],
+        ["COMET", "yes", "yes", "yes", "noc", "yes", "no"],
+        ["ClusterFusion", "yes", "yes", "yes", "gpu", "yes", "no"],
+        ["WaferLLM", "no*", "yes", "yes", "mesh", "yes", "partial"],
+        ["FlatAttention (ours)", "yes", "yes", "yes", "mesh", "yes", "yes"],
+    ] {
+        r.row(row.iter().map(|s| s.to_string()).collect());
+    }
+    r.note("* wafer-scale assumption: models fit on-chip, so no fused-layer dataflow needed");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_all() {
+        let ids = list();
+        assert!(ids.len() >= 14);
+        for (id, _) in ids {
+            let rep = run(id, true).unwrap_or_else(|e| panic!("experiment {id} failed: {e}"));
+            assert!(!rep.render().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("nope", true).is_err());
+    }
+}

@@ -1,0 +1,3 @@
+//! Experiment coordinator: registry, sweeps, reports.
+pub mod experiments;
+pub mod report;

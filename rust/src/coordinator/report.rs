@@ -1,0 +1,159 @@
+//! Plain-text report emitters: aligned tables and ASCII stacked bars, so
+//! every experiment prints the same rows/series as the paper's figures.
+
+/// A printable experiment report.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub preamble: Vec<String>,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), ..Default::default() }
+    }
+
+    pub fn preamble(&mut self, line: impl Into<String>) -> &mut Self {
+        self.preamble.push(line.into());
+        self
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn note(&mut self, line: impl Into<String>) -> &mut Self {
+        self.notes.push(line.into());
+        self
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        for p in &self.preamble {
+            out.push_str(p);
+            out.push('\n');
+        }
+        if !self.header.is_empty() || !self.rows.is_empty() {
+            let ncols = self.header.len().max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+            let mut widths = vec![0usize; ncols];
+            for (i, h) in self.header.iter().enumerate() {
+                widths[i] = widths[i].max(h.len());
+            }
+            for r in &self.rows {
+                for (i, c) in r.iter().enumerate() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+            let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+                let mut s = String::new();
+                for (i, c) in cells.iter().enumerate() {
+                    if i > 0 {
+                        s.push_str("  ");
+                    }
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                }
+                s
+            };
+            if !self.header.is_empty() {
+                out.push_str(&fmt_row(&self.header, &widths));
+                out.push('\n');
+                out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+                out.push('\n');
+            }
+            for r in &self.rows {
+                out.push_str(&fmt_row(r, &widths));
+                out.push('\n');
+            }
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render a stacked breakdown as an ASCII bar of width `width`.
+/// `parts` are (label-char, value) pairs; the bar is annotated with a
+/// percentage legend.
+pub fn stacked_bar(parts: &[(char, f64)], width: usize) -> String {
+    let total: f64 = parts.iter().map(|(_, v)| v.max(0.0)).sum();
+    if total <= 0.0 {
+        return " ".repeat(width);
+    }
+    let mut bar = String::new();
+    let mut used = 0usize;
+    for (i, (ch, v)) in parts.iter().enumerate() {
+        let w = if i + 1 == parts.len() {
+            width - used
+        } else {
+            ((v / total) * width as f64).round() as usize
+        };
+        let w = w.min(width - used);
+        bar.extend(std::iter::repeat(*ch).take(w));
+        used += w;
+    }
+    bar
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut r = Report::new("t");
+        r.header(&["a", "bbbb"]).row(vec!["xxx".into(), "y".into()]);
+        let s = r.render();
+        assert!(s.contains("== t =="));
+        assert!(s.contains("a    bbbb"));
+        assert!(s.contains("xxx  y"));
+    }
+
+    #[test]
+    fn stacked_bar_fills_width() {
+        let b = stacked_bar(&[('#', 3.0), ('.', 1.0)], 8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.matches('#').count(), 6);
+        assert_eq!(b.matches('.').count(), 2);
+    }
+
+    #[test]
+    fn stacked_bar_zero_total() {
+        assert_eq!(stacked_bar(&[('#', 0.0)], 4), "    ");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.00 s");
+        assert_eq!(fmt_time(0.0025), "2.50 ms");
+        assert_eq!(fmt_time(3.2e-6), "3.20 µs");
+    }
+}

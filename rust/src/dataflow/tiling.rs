@@ -1,0 +1,322 @@
+//! The general tiling and group-scaling strategy for FlatAttention
+//! (paper Fig. 10): *prioritize per-tile RedMulE utilization before
+//! aggressive flattening*.
+//!
+//! 1. Pick the per-tile slice (Br/Gy × Bc/Gx) that maximizes matrix-engine
+//!    efficiency subject to the L1 budget (→ 128×128 on the Table I tile,
+//!    Fig. 11).
+//! 2. Grow the group (Gx, Gy) as far as the attention-score matrix shape and
+//!    the mesh topology allow, dividing the KV re-read factor (§III-A)
+//!    without shrinking slices below the compute-efficient size
+//!    (over-flattening, Fig. 9).
+
+use crate::arch::config::{ChipConfig, Dtype};
+use crate::arch::tile::{gemm_utilization, L1Budget};
+use crate::workload::attention::AttentionShape;
+
+/// A chosen FlatAttention tiling: group shape and per-tile slice sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlatTiling {
+    /// Group width (KV axis).
+    pub gx: u32,
+    /// Group height (Q-row axis).
+    pub gy: u32,
+    /// Per-tile Q rows (Br / Gy).
+    pub slice_r: u32,
+    /// Per-tile KV rows (Bc / Gx).
+    pub slice_c: u32,
+}
+
+impl FlatTiling {
+    pub fn block_r(&self) -> u64 {
+        self.gy as u64 * self.slice_r as u64
+    }
+    pub fn block_c(&self) -> u64 {
+        self.gx as u64 * self.slice_c as u64
+    }
+    pub fn tiles(&self) -> u32 {
+        self.gx * self.gy
+    }
+}
+
+/// How many op streams a tile keeps resident concurrently (§III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Concurrency {
+    /// One block in flight (FA-2, FlatSC/TC/HC).
+    Single,
+    /// Two *heads* interleaved (FA-3 style): everything duplicated,
+    /// including K/V (different heads attend to different KV).
+    TwoHeads,
+    /// Two *output row blocks* interleaved (the FlatAsync footnote variant):
+    /// Q/O/score duplicated, K/V shared between the two blocks.
+    TwoRowBlocks,
+}
+
+/// L1 working set of one tile under the flash/flat dataflows.
+///
+/// `double_buffer` doubles the K/V slices (prefetch of the next inner
+/// iteration). The O accumulator is held at engine-native precision (RedMulE
+/// accumulates in the input format; fp32 row statistics are carried
+/// separately), and P overwrites S in place.
+pub fn l1_working_set(
+    slice_r: u64,
+    slice_c: u64,
+    d: u64,
+    dv: u64,
+    dtype: Dtype,
+    double_buffer: bool,
+    conc: Concurrency,
+) -> L1Budget {
+    l1_working_set_kv(slice_r, slice_c, d, dv, d + dv, dtype, double_buffer, conc)
+}
+
+/// As [`l1_working_set`] but with an explicit stored-KV row width:
+/// MLA's V is a subview of the cached latent, so its K/V buffer holds
+/// `kv_cols = d` columns, not `d + dv`.
+#[allow(clippy::too_many_arguments)]
+pub fn l1_working_set_kv(
+    slice_r: u64,
+    slice_c: u64,
+    d: u64,
+    dv: u64,
+    kv_cols: u64,
+    dtype: Dtype,
+    double_buffer: bool,
+    conc: Concurrency,
+) -> L1Budget {
+    let e = dtype.bytes();
+    let kv_db = if double_buffer { 2 } else { 1 };
+    let (dup, kv_dup) = match conc {
+        Concurrency::Single => (1u64, 1u64),
+        Concurrency::TwoHeads => (2, 2),
+        Concurrency::TwoRowBlocks => (2, 1),
+    };
+    let mut b = L1Budget::new();
+    b.add("Q", dup * slice_r * d * e)
+        .add("K/V", kv_dup * kv_db * slice_c * kv_cols * e)
+        .add("O_acc", dup * slice_r * dv * e)
+        .add("S/P", dup * slice_r * slice_c * e)
+        .add("stats(m,l)", dup * 2 * slice_r * 4);
+    b
+}
+
+/// Mean matrix-engine utilization of one inner iteration's two GEMMs
+/// (score `r×D×c` and output `r×c×Dv`) — the per-tile efficiency the
+/// strategy maximizes (Fig. 11a).
+pub fn slice_utilization(cfg: &ChipConfig, slice_r: u64, slice_c: u64, d: u64, dv: u64) -> f64 {
+    let score = gemm_utilization(&cfg.tile, slice_r, d, slice_c);
+    let out = gemm_utilization(&cfg.tile, slice_r, slice_c, dv);
+    // Weight by FLOPs of each GEMM.
+    let fs = (d * slice_r * slice_c) as f64;
+    let fo = (dv * slice_r * slice_c) as f64;
+    (score * fs + out * fo) / (fs + fo)
+}
+
+/// Largest power of two ≤ `x` (≥ 1).
+fn pow2_floor(x: u32) -> u32 {
+    if x == 0 {
+        1
+    } else {
+        1 << (31 - x.leading_zeros())
+    }
+}
+
+/// Find the compute-optimal per-tile slice for head dims (D, Dv): the
+/// smallest square slice reaching ≥95% of the best achievable utilization
+/// within the L1 budget (Fig. 11's 128×128 operating point on Table I).
+pub fn optimal_slice(cfg: &ChipConfig, d: u32, dv: u32, dtype: Dtype, async_two_blocks: bool) -> (u32, u32) {
+    optimal_slice_kv(cfg, d, dv, d + dv, dtype, async_two_blocks)
+}
+
+/// As [`optimal_slice`] with an explicit stored-KV row width (see
+/// [`l1_working_set_kv`]).
+pub fn optimal_slice_kv(cfg: &ChipConfig, d: u32, dv: u32, kv_cols: u32, dtype: Dtype, async_two_blocks: bool) -> (u32, u32) {
+    let candidates = [16u32, 32, 64, 128, 256, 512];
+    let conc = if async_two_blocks { Concurrency::TwoRowBlocks } else { Concurrency::Single };
+    let mut feasible: Vec<(u32, f64)> = Vec::new();
+    for &s in &candidates {
+        let ws = l1_working_set_kv(s as u64, s as u64, d as u64, dv as u64, kv_cols as u64, dtype, true, conc);
+        if ws.fits(&cfg.tile) {
+            feasible.push((s, slice_utilization(cfg, s as u64, s as u64, d as u64, dv as u64)));
+        }
+    }
+    if feasible.is_empty() {
+        return (16, 16);
+    }
+    let best = feasible.iter().map(|&(_, u)| u).fold(0.0f64, f64::max);
+    for &(s, u) in &feasible {
+        if u >= 0.95 * best {
+            return (s, s);
+        }
+    }
+    let last = feasible.last().unwrap();
+    (last.0, last.0)
+}
+
+/// Apply the Fig. 10 strategy to an attention shape on a chip: slice first,
+/// then flatten the group along each axis up to the score-matrix shape and
+/// the mesh.
+pub fn choose_tiling(cfg: &ChipConfig, shape: &AttentionShape, async_two_heads: bool) -> FlatTiling {
+    let rows = shape.effective_q_rows().max(1);
+    let kv = shape.seq_kv.max(1) as u64;
+    let kv_cols = (shape.kv_row_bytes() / shape.dtype.bytes()) as u32;
+    let (sr0, sc0) = optimal_slice_kv(cfg, shape.head_dim, shape.v_head_dim, kv_cols, shape.dtype, async_two_heads);
+
+    // Per-tile slices never exceed the problem itself.
+    let slice_r = (sr0 as u64).min(rows) as u32;
+    let slice_c = (sc0 as u64).min(kv) as u32;
+
+    // Flatten: as many tiles along each axis as there are slices, capped by
+    // the mesh, in powers of two so groups tile the mesh.
+    let want_gy = rows.div_ceil(slice_r as u64).min(cfg.mesh_y as u64) as u32;
+    let want_gx = kv.div_ceil(slice_c as u64).min(cfg.mesh_x as u64) as u32;
+    let mut gy = pow2_floor(want_gy);
+    let mut gx = pow2_floor(want_gx);
+
+    // Keep enough groups to cover independent units when the workload has
+    // plenty of parallelism and flattening no longer reduces IO (Tc == 1
+    // already): shrinking the group would only idle tiles, so prefer the
+    // larger group. But if there are more units than groups *and* the group
+    // is larger than needed to hold the whole KV, shrink along X.
+    let units = shape.independent_units();
+    loop {
+        let groups = (cfg.mesh_x / gx) as u64 * (cfg.mesh_y / gy) as u64;
+        if groups >= units || (gx == 1 && gy == 1) {
+            break;
+        }
+        // Group already covers all KV columns with slack → shrink X first.
+        let covered_kv = gx as u64 * slice_c as u64;
+        let covered_r = gy as u64 * slice_r as u64;
+        if gx > 1 && covered_kv >= 2 * kv {
+            gx /= 2;
+        } else if gy > 1 && covered_r >= 2 * rows {
+            gy /= 2;
+        } else {
+            break;
+        }
+    }
+
+    // Rectangular refinement: decode-style shapes (few Q rows) leave most
+    // of L1 free, so grow the KV slice to amortize per-iteration fixed
+    // costs (HBM latency, collective hops, GEMM setup) while inner
+    // iterations remain (§V-B: "Bc can be increased to maximize reuse of
+    // the KV cache by leveraging the aggregated L1 capacity").
+    let conc = if async_two_heads { Concurrency::TwoRowBlocks } else { Concurrency::Single };
+    let mut slice_c = slice_c;
+    while (slice_c as u64) < kv.div_ceil(gx as u64) {
+        let cand = slice_c * 2;
+        let ws = l1_working_set_kv(
+            slice_r as u64,
+            cand as u64,
+            shape.head_dim as u64,
+            shape.v_head_dim as u64,
+            kv_cols as u64,
+            shape.dtype,
+            true,
+            conc,
+        );
+        if ws.fits(&cfg.tile) {
+            slice_c = cand;
+        } else {
+            break;
+        }
+    }
+
+    FlatTiling { gx, gy, slice_r, slice_c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::attention::AttentionShape;
+
+    #[test]
+    fn optimal_slice_is_128_on_table1() {
+        // Paper Fig. 11: 128×128 is the selected operating point at D=128.
+        let cfg = ChipConfig::table1();
+        let (r, c) = optimal_slice(&cfg, 128, 128, Dtype::Fp16, false);
+        assert_eq!((r, c), (128, 128));
+        // Still 128 with the async two-row-block working set (K/V shared).
+        let (r, c) = optimal_slice(&cfg, 128, 128, Dtype::Fp16, true);
+        assert_eq!((r, c), (128, 128));
+    }
+
+    #[test]
+    fn slice_utilization_anchors() {
+        let cfg = ChipConfig::table1();
+        let u128 = slice_utilization(&cfg, 128, 128, 128, 128);
+        assert!(u128 > 0.95, "{u128}");
+        let u16 = slice_utilization(&cfg, 16, 16, 128, 128);
+        assert!((u16 - 0.20).abs() < 0.05, "{u16}");
+    }
+
+    #[test]
+    fn prefill_4096_flattens_to_full_mesh() {
+        let cfg = ChipConfig::table1();
+        let s = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+        let t = choose_tiling(&cfg, &s, true);
+        assert_eq!(t.slice_r, 128);
+        assert_eq!(t.slice_c, 128);
+        assert_eq!(t.gx, 32);
+        assert_eq!(t.gy, 32);
+    }
+
+    #[test]
+    fn short_prefill_avoids_overflattening() {
+        let cfg = ChipConfig::table1();
+        let s = AttentionShape::mha_prefill(4, 32, 128, 512, Dtype::Fp16);
+        let t = choose_tiling(&cfg, &s, true);
+        // 512 rows / 128 slice = 4 tiles per axis, not 32.
+        assert_eq!(t.slice_r, 128);
+        assert_eq!(t.gy, 4);
+        assert_eq!(t.gx, 4);
+    }
+
+    #[test]
+    fn mha_decode_group_spans_one_row() {
+        // §III-D: decode (Br = 1) uses a single-row group.
+        let cfg = ChipConfig::table1();
+        let s = AttentionShape::mha_decode(4, 32, 128, 4096, 1, Dtype::Fp16);
+        let t = choose_tiling(&cfg, &s, false);
+        assert_eq!(t.gy, 1);
+        assert_eq!(t.slice_r, 1);
+        assert!(t.gx >= 16, "gx {}", t.gx);
+    }
+
+    #[test]
+    fn mla_decode_uses_wide_group() {
+        let cfg = ChipConfig::wafer_fp8();
+        let s = AttentionShape::mla_absorbed_decode(256, 128, 512, 64, 4096, 2, Dtype::Fp8);
+        let t = choose_tiling(&cfg, &s, true);
+        // MLA's wide head dims (576/512) shrink the L1-feasible slice; the
+        // 256 effective rows flatten over a few group rows and the KV axis
+        // flattens to the full mesh width.
+        assert!(t.gy >= 2 && t.gy <= 8, "gy {}", t.gy);
+        assert_eq!(t.gx, 32);
+        // Per-tile GEMMs stay compute-efficient (≥90%).
+        let u = slice_utilization(&cfg, t.slice_r as u64, t.slice_c as u64, 576, 512);
+        assert!(u > 0.90, "slice util {u}");
+    }
+
+    #[test]
+    fn working_set_fits_is_monotone() {
+        let cfg = ChipConfig::table1();
+        let c = Concurrency::TwoRowBlocks;
+        let ok = l1_working_set(128, 128, 128, 128, Dtype::Fp16, true, c).fits(&cfg.tile);
+        let too_big = l1_working_set(256, 256, 128, 128, Dtype::Fp16, true, c).fits(&cfg.tile);
+        assert!(ok);
+        assert!(!too_big);
+        // FA-3's two-head variant duplicates K/V and no longer fits at 128.
+        let fa3 = l1_working_set(128, 128, 128, 128, Dtype::Fp16, true, Concurrency::TwoHeads).fits(&cfg.tile);
+        assert!(!fa3);
+    }
+
+    #[test]
+    fn pow2_floor_works() {
+        assert_eq!(pow2_floor(0), 1);
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(32), 32);
+        assert_eq!(pow2_floor(33), 32);
+    }
+}

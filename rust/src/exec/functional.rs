@@ -1,0 +1,306 @@
+//! Functional (numerics-carrying) executors for the attention dataflows.
+//!
+//! These mirror, slice-for-slice, the tiled online-softmax math of
+//! FlashAttention-2 (Algorithm 1) and FlatAttention (Algorithm 2, including
+//! the group-level row-wise max/sum/O reductions), so that the *dataflow
+//! algebra* — not just the performance model — is verified against a dense
+//! reference and, through [`crate::runtime`], against the PJRT-executed JAX
+//! golden produced by the Pallas kernel.
+
+use crate::dataflow::tiling::FlatTiling;
+use crate::exec::tensor::Mat;
+
+/// Dense reference: softmax(Q·Kᵀ/√D)·V, optionally causal.
+pub fn reference_attention(q: &Mat, k: &Mat, v: &Mat, causal: bool) -> Mat {
+    let d = q.cols as f32;
+    let mut s = q.matmul_t(k).scale(1.0 / d.sqrt());
+    if causal {
+        // Standard causal mask for square S; for rectangular (decode with
+        // queries at the sequence end) offset so the last query sees all.
+        let off = k.rows as isize - q.rows as isize;
+        for r in 0..s.rows {
+            for c in 0..s.cols {
+                if (c as isize) > r as isize + off {
+                    *s.at_mut(r, c) = f32::NEG_INFINITY;
+                }
+            }
+        }
+    }
+    s.softmax_rows().matmul(v)
+}
+
+/// FlashAttention-2 (Algorithm 1): single-tile online softmax over
+/// (Br, Bc) blocks. Numerically equivalent to the reference.
+pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, br: usize, bc: usize) -> Mat {
+    let s_q = q.rows;
+    let s_kv = k.rows;
+    let d = q.cols;
+    let dv = v.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(s_q, dv);
+
+    let t_r = s_q.div_ceil(br);
+    let t_c = s_kv.div_ceil(bc);
+    for i in 0..t_r {
+        let r0 = i * br;
+        let r1 = (r0 + br).min(s_q);
+        let qi = q.rows_slice(r0, r1);
+        let mut m = vec![f32::NEG_INFINITY; r1 - r0];
+        let mut l = vec![0.0f32; r1 - r0];
+        let mut o = Mat::zeros(r1 - r0, dv);
+        for j in 0..t_c {
+            let c0 = j * bc;
+            let c1 = (c0 + bc).min(s_kv);
+            let kj = k.rows_slice(c0, c1);
+            let vj = v.rows_slice(c0, c1);
+            let s = qi.matmul_t(&kj).scale(scale);
+            for r in 0..s.rows {
+                let row_max = s.row(r).iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let m_new = m[r].max(row_max);
+                let corr = (m[r] - m_new).exp();
+                let mut row_sum = 0.0f32;
+                let mut p = vec![0.0f32; s.cols];
+                for c in 0..s.cols {
+                    p[c] = (s.at(r, c) - m_new).exp();
+                    row_sum += p[c];
+                }
+                l[r] = corr * l[r] + row_sum;
+                for c in 0..dv {
+                    let mut acc = o.at(r, c) * corr;
+                    for (kk, &pv) in p.iter().enumerate() {
+                        acc += pv * vj.at(kk, c);
+                    }
+                    *o.at_mut(r, c) = acc;
+                }
+                m[r] = m_new;
+            }
+        }
+        for r in 0..(r1 - r0) {
+            for c in 0..dv {
+                *out.at_mut(r0 + r, c) = o.at(r, c) / l[r];
+            }
+        }
+    }
+    out
+}
+
+/// FlatAttention (Algorithm 2): the group-distributed version. Each group
+/// tile (x, y) owns Q slice `iy` and K/V slice `jx`; row-wise *collective*
+/// reductions produce the global row max, the global denominator and the
+/// summed O slices. Exactly mirrors the per-tile slicing of the dataflow.
+pub fn flat_attention(q: &Mat, k: &Mat, v: &Mat, t: &FlatTiling) -> Mat {
+    let s_q = q.rows;
+    let s_kv = k.rows;
+    let d = q.cols;
+    let dv = v.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let gx = t.gx as usize;
+    let gy = t.gy as usize;
+    let br_blk = (t.block_r() as usize).min(s_q.max(1));
+    let bc_blk = (t.block_c() as usize).min(s_kv.max(1));
+    let mut out = Mat::zeros(s_q, dv);
+
+    let t_r = s_q.div_ceil(br_blk);
+    let t_c = s_kv.div_ceil(bc_blk);
+    for i in 0..t_r {
+        let r0 = i * br_blk;
+        let r1 = (r0 + br_blk).min(s_q);
+        // Row-slice boundaries per group row y.
+        let rows_here = r1 - r0;
+        let sl_r = rows_here.div_ceil(gy);
+        let y_bounds: Vec<(usize, usize)> =
+            (0..gy).map(|y| (r0 + (y * sl_r).min(rows_here), r0 + ((y + 1) * sl_r).min(rows_here))).collect();
+
+        // Per-tile state: O accumulator, m, l per group row.
+        let mut o: Vec<Vec<Mat>> = (0..gy)
+            .map(|y| {
+                let (a, b) = y_bounds[y];
+                (0..gx).map(|_| Mat::zeros(b - a, dv)).collect()
+            })
+            .collect();
+        let mut m: Vec<Vec<f32>> = y_bounds.iter().map(|&(a, b)| vec![f32::NEG_INFINITY; b - a]).collect();
+        let mut l: Vec<Vec<f32>> = y_bounds.iter().map(|&(a, b)| vec![0.0f32; b - a]).collect();
+
+        for j in 0..t_c {
+            let c0 = j * bc_blk;
+            let c1 = (c0 + bc_blk).min(s_kv);
+            let cols_here = c1 - c0;
+            let sl_c = cols_here.div_ceil(gx);
+            let x_bounds: Vec<(usize, usize)> =
+                (0..gx).map(|x| (c0 + (x * sl_c).min(cols_here), c0 + ((x + 1) * sl_c).min(cols_here))).collect();
+
+            for y in 0..gy {
+                let (a, b) = y_bounds[y];
+                if a == b {
+                    continue;
+                }
+                let qy = q.rows_slice(a, b);
+                // Per-tile local scores and rowmax (lines 10–13).
+                let s_tiles: Vec<Mat> = (0..gx)
+                    .map(|x| {
+                        let (ca, cb) = x_bounds[x];
+                        if ca == cb {
+                            Mat::zeros(b - a, 0)
+                        } else {
+                            qy.matmul_t(&k.rows_slice(ca, cb)).scale(scale)
+                        }
+                    })
+                    .collect();
+                // Row-wise max REDUCTION across the group row (line 15) and
+                // multicast back (line 16).
+                let mut m_new = m[y].clone();
+                for s_t in &s_tiles {
+                    for r in 0..s_t.rows {
+                        for c in 0..s_t.cols {
+                            m_new[r] = m_new[r].max(s_t.at(r, c));
+                        }
+                    }
+                }
+                // exp + local rowsum (17–18), sum REDUCTION (19–20).
+                let mut p_tiles: Vec<Mat> = Vec::with_capacity(gx);
+                let mut lsum = vec![0.0f32; b - a];
+                for s_t in &s_tiles {
+                    let mut p = s_t.clone();
+                    for r in 0..p.rows {
+                        for c in 0..p.cols {
+                            *p.at_mut(r, c) = (p.at(r, c) - m_new[r]).exp();
+                            lsum[r] += p.at(r, c);
+                        }
+                    }
+                    p_tiles.push(p);
+                }
+                // Tracking-stat update (22) and O rescale + accumulate (23–25).
+                for r in 0..(b - a) {
+                    let corr = if m[y][r] == f32::NEG_INFINITY { 0.0 } else { (m[y][r] - m_new[r]).exp() };
+                    l[y][r] = corr * l[y][r] + lsum[r];
+                    m[y][r] = m_new[r];
+                    for x in 0..gx {
+                        for c in 0..dv {
+                            *o[y][x].at_mut(r, c) *= corr;
+                        }
+                    }
+                }
+                for x in 0..gx {
+                    let (ca, cb) = x_bounds[x];
+                    if ca == cb {
+                        continue;
+                    }
+                    let vx = v.rows_slice(ca, cb);
+                    let pv = p_tiles[x].matmul(&vx);
+                    o[y][x] = o[y][x].add(&pv);
+                }
+            }
+        }
+
+        // Epilogue: normalize (line 28), row-wise O REDUCTION (29), store (30).
+        for y in 0..gy {
+            let (a, b) = y_bounds[y];
+            for r in 0..(b - a) {
+                let inv = 1.0 / l[y][r];
+                for c in 0..dv {
+                    let sum: f32 = (0..gx).map(|x| o[y][x].at(r, c)).sum();
+                    *out.at_mut(a + r, c) = sum * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// MLA weight-absorbed attention (paper Eq. 7–8 / Appendix A), functional:
+/// given per-head absorbed queries `q_abs[h] ∈ (sq, d_c+d_rope)` and the
+/// shared latent cache `c_kv ∈ (kv, d_c+d_rope)` with value part
+/// `c_kv[:, :d_c]`, compute per-head outputs in the latent space.
+pub fn mla_absorbed_attention(q_abs: &[Mat], c_kv: &Mat, d_c: usize, causal: bool) -> Vec<Mat> {
+    let v_latent = c_kv.cols_slice(0, d_c);
+    q_abs.iter().map(|qh| reference_attention(qh, c_kv, &v_latent, causal)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn qkv(sq: usize, skv: usize, d: usize, dv: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = SplitMix64::new(seed);
+        (Mat::random(sq, d, &mut rng), Mat::random(skv, d, &mut rng), Mat::random(skv, dv, &mut rng))
+    }
+
+    #[test]
+    fn flash_matches_reference() {
+        let (q, k, v) = qkv(64, 96, 32, 32, 3);
+        let r = reference_attention(&q, &k, &v, false);
+        let f = flash_attention(&q, &k, &v, 16, 24);
+        assert!(f.max_abs_diff(&r) < 1e-4, "diff {}", f.max_abs_diff(&r));
+    }
+
+    #[test]
+    fn flash_uneven_blocks() {
+        let (q, k, v) = qkv(50, 70, 16, 24, 4);
+        let r = reference_attention(&q, &k, &v, false);
+        let f = flash_attention(&q, &k, &v, 16, 32);
+        assert!(f.max_abs_diff(&r) < 1e-4);
+    }
+
+    #[test]
+    fn flat_matches_reference_full_group() {
+        let (q, k, v) = qkv(64, 64, 32, 32, 5);
+        let r = reference_attention(&q, &k, &v, false);
+        let t = FlatTiling { gx: 4, gy: 4, slice_r: 16, slice_c: 16 };
+        let f = flat_attention(&q, &k, &v, &t);
+        assert!(f.max_abs_diff(&r) < 1e-4, "diff {}", f.max_abs_diff(&r));
+    }
+
+    #[test]
+    fn flat_matches_reference_multi_block() {
+        // Group covers only part of the problem → multiple outer/inner
+        // blocks exercise the online rescaling across iterations.
+        let (q, k, v) = qkv(96, 128, 16, 16, 6);
+        let t = FlatTiling { gx: 2, gy: 2, slice_r: 16, slice_c: 16 };
+        let r = reference_attention(&q, &k, &v, false);
+        let f = flat_attention(&q, &k, &v, &t);
+        assert!(f.max_abs_diff(&r) < 1e-4, "diff {}", f.max_abs_diff(&r));
+    }
+
+    #[test]
+    fn flat_single_row_group_decode() {
+        // Decode: one query row, single-row group (paper §III-D).
+        let (q, k, v) = qkv(1, 256, 64, 64, 7);
+        let t = FlatTiling { gx: 8, gy: 1, slice_r: 1, slice_c: 16 };
+        let r = reference_attention(&q, &k, &v, false);
+        let f = flat_attention(&q, &k, &v, &t);
+        assert!(f.max_abs_diff(&r) < 1e-4);
+    }
+
+    #[test]
+    fn flat_equals_flash() {
+        let (q, k, v) = qkv(64, 80, 24, 24, 8);
+        let fl = flash_attention(&q, &k, &v, 16, 16);
+        let t = FlatTiling { gx: 4, gy: 4, slice_r: 8, slice_c: 8 };
+        let ft = flat_attention(&q, &k, &v, &t);
+        assert!(ft.max_abs_diff(&fl) < 1e-4);
+    }
+
+    #[test]
+    fn mla_absorbed_runs() {
+        let mut rng = SplitMix64::new(9);
+        let d_c = 16;
+        let d_rope = 4;
+        let c_kv = Mat::random(32, d_c + d_rope, &mut rng);
+        let q_abs: Vec<Mat> = (0..4).map(|_| Mat::random(2, d_c + d_rope, &mut rng)).collect();
+        let outs = mla_absorbed_attention(&q_abs, &c_kv, d_c, false);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(outs[0].cols, d_c);
+    }
+
+    #[test]
+    fn causal_mask_reference() {
+        let (q, k, v) = qkv(8, 8, 8, 8, 10);
+        let r = reference_attention(&q, &k, &v, true);
+        // First row attends only to first key → equals v[0] after softmax of
+        // a single element.
+        for c in 0..8 {
+            assert!((r.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+}

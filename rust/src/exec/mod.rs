@@ -1,0 +1,3 @@
+//! Functional (numerics-carrying) executors — verify the dataflow math.
+pub mod tensor;
+pub mod functional;

@@ -1,0 +1,48 @@
+//! # FlatAttention — reproduction library
+//!
+//! Full-system reproduction of *FlatAttention: Dataflow and Fabric
+//! Collectives Co-Optimization for Large Attention-Based Model Inference on
+//! Tile-Based Accelerators* (Zhang, Colagrande, Andri, Benini).
+//!
+//! The crate provides, in dependency order:
+//!
+//! - [`sim`] — a deterministic discrete-event simulator (op DAGs over FIFO
+//!   resource servers) with busy-interval accounting for the paper's runtime
+//!   breakdowns.
+//! - [`arch`] — the tile-based many-PE architecture template: tile engines
+//!   (RedMulE matrix engine, Spatz vector engine, DMA), 2D-mesh NoC, HBM
+//!   channels, and fabric collectives in three flavours (`HW`, `SW.Tree`,
+//!   `SW.Seq`).
+//! - [`dataflow`] — dataflow schedulers that lower attention / GEMM kernels
+//!   onto the architecture: FlashAttention-2/-3, FlatAttention
+//!   (SC/TC/HC/Async, Algorithm 2 of the paper), SUMMA, and the general
+//!   tiling + group-scaling strategy (paper Fig. 10).
+//! - [`workload`] — attention-variant workloads (MHA/MQA/GQA/MLA ×
+//!   prefill/decode/speculative) and the DeepSeek-v3 decoder kernel flow.
+//! - [`exec`] — a functional (numerics-carrying) executor used to verify the
+//!   dataflow math against the PJRT-executed JAX golden.
+//! - [`runtime`] — PJRT CPU client wrapper that loads `artifacts/*.hlo.txt`
+//!   produced by the build-time Python layer.
+//! - [`multichip`] — the wafer-scale multi-die system model: D2D mesh,
+//!   PP / EP / hybrid parallelism, throughput + TPOT estimation.
+//! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
+//! - [`coordinator`] — the experiment registry (one entry per paper
+//!   figure/table), sweep runner and report emitters.
+//!
+//! Python (JAX + Pallas) is build-time only: `make artifacts` lowers the
+//! attention models to HLO text once; the Rust binary then runs standalone.
+
+pub mod sim;
+pub mod arch;
+pub mod dataflow;
+pub mod workload;
+pub mod exec;
+pub mod runtime;
+pub mod multichip;
+pub mod baseline;
+pub mod coordinator;
+pub mod metrics;
+pub mod util;
+
+pub use arch::config::{ChipConfig, SimFidelity};
+pub use workload::attention::{AttentionShape, AttentionVariant, Phase};

@@ -1,0 +1,120 @@
+//! Cross-cutting performance metrics derived from simulation results.
+
+use crate::arch::config::ChipConfig;
+use crate::sim::SimResult;
+
+/// Metrics of one kernel execution on one chip, in chip-relative terms.
+#[derive(Debug, Clone)]
+pub struct KernelMetrics {
+    pub cycles: u64,
+    pub seconds: f64,
+    /// Achieved FLOP/s over the whole kernel.
+    pub tflops: f64,
+    /// Achieved fraction of the chip's peak FLOP/s.
+    pub compute_utilization: f64,
+    /// Average HBM bandwidth utilization over the kernel runtime.
+    pub hbm_bw_utilization: f64,
+    pub hbm_bytes: u64,
+    pub noc_bytes: u64,
+    /// Matrix-engine utilization counting only engines with work.
+    pub matrix_utilization_active: f64,
+    /// FLOP efficiency of the matrix engines *while busy* (the paper's
+    /// "utilization of the matrix engine when active" labels in Fig. 9):
+    /// achieved FLOPs over busy-cycles × peak rate.
+    pub matrix_efficiency_active: f64,
+    /// Exposed-time breakdown (cycles): [gemm, vector, hbm, noc, other].
+    pub exposed: [u64; 5],
+}
+
+impl KernelMetrics {
+    pub fn from_sim(cfg: &ChipConfig, r: &SimResult) -> Self {
+        let seconds = cfg.cycles_to_seconds(r.makespan);
+        let tflops = if seconds > 0.0 { r.flops as f64 / seconds / 1e12 } else { 0.0 };
+        let hbm_bw = if r.makespan > 0 {
+            r.hbm_bytes() as f64 / (r.makespan as f64 * cfg.hbm_bytes_per_cycle())
+        } else {
+            0.0
+        };
+        let matrix_efficiency_active = if r.matrix_busy > 0 {
+            r.flops as f64 / (r.matrix_busy as f64 * cfg.tile.matrix_flops_per_cycle() as f64)
+        } else {
+            0.0
+        };
+        KernelMetrics {
+            cycles: r.makespan,
+            seconds,
+            tflops,
+            compute_utilization: if seconds > 0.0 { tflops * 1e12 / cfg.peak_flops() } else { 0.0 },
+            hbm_bw_utilization: hbm_bw,
+            hbm_bytes: r.hbm_bytes(),
+            noc_bytes: r.noc_bytes,
+            matrix_utilization_active: r.matrix_utilization_active(),
+            matrix_efficiency_active: matrix_efficiency_active.min(1.0),
+            exposed: [
+                r.exposed.get(crate::sim::Category::Gemm),
+                r.exposed.get(crate::sim::Category::Vector),
+                r.exposed.hbm_exposed(),
+                r.exposed.noc_exposed(),
+                r.exposed.other_exposed(),
+            ],
+        }
+    }
+
+    /// Speedup of `self` over `other` (runtime ratio).
+    pub fn speedup_over(&self, other: &KernelMetrics) -> f64 {
+        if self.seconds == 0.0 {
+            return f64::INFINITY;
+        }
+        other.seconds / self.seconds
+    }
+}
+
+/// Pretty-print a ratio as `x.x×`.
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.1}×")
+}
+
+/// Pretty-print a fraction as a percentage.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Category, Graph, Op, ResourceKind, ResourceTable};
+
+    #[test]
+    fn metrics_from_trivial_sim() {
+        let cfg = ChipConfig::table1();
+        let mut t = ResourceTable::new();
+        let m = t.add(ResourceKind::MatrixEngine(0));
+        let mut g = Graph::new(t);
+        g.push(Op::new(Some(m), 1000, Category::Gemm).flops(1000 * 1024), &[]);
+        let r = g.simulate();
+        let k = KernelMetrics::from_sim(&cfg, &r);
+        assert_eq!(k.cycles, 1000);
+        // One tile at full rate = 1/1024 of chip peak.
+        assert!((k.compute_utilization - 1.0 / 1024.0).abs() < 1e-6);
+        assert!((k.matrix_utilization_active - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let a = KernelMetrics {
+            cycles: 100,
+            seconds: 1.0,
+            tflops: 0.0,
+            compute_utilization: 0.0,
+            hbm_bw_utilization: 0.0,
+            hbm_bytes: 0,
+            noc_bytes: 0,
+            matrix_utilization_active: 0.0,
+            matrix_efficiency_active: 0.0,
+            exposed: [0; 5],
+        };
+        let mut b = a.clone();
+        b.seconds = 2.0;
+        assert!((a.speedup_over(&b) - 2.0).abs() < 1e-12);
+    }
+}

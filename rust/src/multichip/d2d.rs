@@ -1,0 +1,185 @@
+//! Wafer-scale D2D interconnect model (paper Fig. 2c, §IV).
+//!
+//! The paper's C2C model abstracts each chip as a traffic generator over
+//! explicit D2D links with credit-based flow control; ours does the same in
+//! closed form: a 2D mesh of chips, XY routing, uniform-destination traffic
+//! within a parallelism group, with per-link serialization as the capacity
+//! limit and hop-proportional latency.
+
+use crate::arch::config::ChipConfig;
+
+/// D2D interconnect configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct D2dConfig {
+    /// Chip mesh dimensions.
+    pub mesh_x: u32,
+    pub mesh_y: u32,
+    /// Per-direction link bandwidth, bytes/second (paper: 1 TB/s; the
+    /// "NVLink-class" ablation uses 160 GB/s).
+    pub link_bandwidth_bytes_per_s: f64,
+    /// Per-hop latency, seconds (paper: 256 ns).
+    pub hop_latency_s: f64,
+}
+
+impl D2dConfig {
+    /// The paper's wafer-scale system: 8×8 mesh, 1 TB/s, 256 ns.
+    pub fn wafer_8x8() -> Self {
+        D2dConfig { mesh_x: 8, mesh_y: 8, link_bandwidth_bytes_per_s: 1.0e12, hop_latency_s: 256e-9 }
+    }
+
+    /// Table II "Ours2": D2D bandwidth reduced to NVLink-class 160 GB/s.
+    pub fn wafer_8x8_nvlink_class() -> Self {
+        let mut c = Self::wafer_8x8();
+        c.link_bandwidth_bytes_per_s = 160.0e9;
+        c
+    }
+
+    pub fn chips(&self) -> u32 {
+        self.mesh_x * self.mesh_y
+    }
+
+    /// Sub-mesh dimensions of a parallelism group of `n` chips (groups are
+    /// laid out as contiguous rectangles; `n` must divide the mesh).
+    pub fn group_dims(&self, n: u32) -> (u32, u32) {
+        assert!(n >= 1 && n <= self.chips(), "group size {n} out of range");
+        // Most-square factorization that fits the mesh.
+        let mut best = (n.min(self.mesh_x), n.div_ceil(self.mesh_x.min(n)));
+        let mut best_ratio = f64::INFINITY;
+        for gx in 1..=n.min(self.mesh_x) {
+            if n % gx != 0 {
+                continue;
+            }
+            let gy = n / gx;
+            if gy > self.mesh_y {
+                continue;
+            }
+            let ratio = (gx.max(gy) as f64) / (gx.min(gy) as f64);
+            if ratio < best_ratio {
+                best_ratio = ratio;
+                best = (gx, gy);
+            }
+        }
+        best
+    }
+
+    /// Mean XY hop count for uniform traffic within a gx×gy sub-mesh.
+    pub fn mean_hops(gx: u32, gy: u32) -> f64 {
+        // E|x1−x2| over uniform pairs on n points = (n²−1)/(3n).
+        let ex = |n: u32| {
+            let n = n as f64;
+            (n * n - 1.0) / (3.0 * n)
+        };
+        ex(gx) + ex(gy)
+    }
+
+    /// Time for an all-to-all-style exchange within a group of `n` chips
+    /// where every chip injects `bytes_per_chip` spread uniformly over the
+    /// group (the EP dispatch/combine pattern).
+    ///
+    /// Capacity limit: total byte·hops divided over the group's directed
+    /// links; injection limit: a chip's own links; plus hop latency.
+    pub fn all_to_all_seconds(&self, n: u32, bytes_per_chip: f64) -> f64 {
+        if n <= 1 || bytes_per_chip <= 0.0 {
+            return 0.0;
+        }
+        let (gx, gy) = self.group_dims(n);
+        let hbar = Self::mean_hops(gx, gy);
+        // Directed internal links of a gx×gy mesh: 2·(gx−1)·gy + 2·gx·(gy−1).
+        let links = (2 * (gx - 1) * gy + 2 * gx * (gy - 1)) as f64;
+        let total_byte_hops = n as f64 * bytes_per_chip * hbar;
+        let t_links = total_byte_hops / (links * self.link_bandwidth_bytes_per_s);
+        // Injection: a chip has up to 4 outgoing links, but sustained
+        // injection is bounded by its boundary capacity.
+        let inj_links = 4.0f64.min((gx.max(gy)) as f64);
+        let t_inject = bytes_per_chip / (inj_links * self.link_bandwidth_bytes_per_s);
+        t_links.max(t_inject) + hbar * self.hop_latency_s
+    }
+
+    /// Time to forward `bytes` between adjacent pipeline stages (neighbor
+    /// chips, one hop, all boundary links usable in parallel across the
+    /// stage's chips — here per-chip bytes over one link).
+    pub fn neighbor_transfer_seconds(&self, bytes_per_chip: f64) -> f64 {
+        bytes_per_chip / self.link_bandwidth_bytes_per_s + self.hop_latency_s
+    }
+}
+
+/// Aggregate compute+bandwidth description of the wafer system (Table II).
+#[derive(Debug, Clone)]
+pub struct WaferSystem {
+    pub chip: ChipConfig,
+    pub d2d: D2dConfig,
+}
+
+impl WaferSystem {
+    pub fn paper() -> Self {
+        WaferSystem { chip: ChipConfig::wafer_fp8(), d2d: D2dConfig::wafer_8x8() }
+    }
+
+    pub fn paper_nvlink_class() -> Self {
+        WaferSystem { chip: ChipConfig::wafer_fp8(), d2d: D2dConfig::wafer_8x8_nvlink_class() }
+    }
+
+    pub fn chips(&self) -> u32 {
+        self.d2d.chips()
+    }
+
+    pub fn system_peak_tflops(&self) -> f64 {
+        self.chips() as f64 * self.chip.peak_flops() / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_dims_rectangular() {
+        let d = D2dConfig::wafer_8x8();
+        assert_eq!(d.group_dims(64), (8, 8));
+        assert_eq!(d.group_dims(32), (4, 8)); // most-square tie → 4×8
+        assert_eq!(d.group_dims(16), (4, 4));
+        assert_eq!(d.group_dims(8), (2, 4));
+        assert_eq!(d.group_dims(1), (1, 1));
+    }
+
+    #[test]
+    fn mean_hops_grows_with_group() {
+        let h16 = D2dConfig::mean_hops(4, 4);
+        let h32 = D2dConfig::mean_hops(8, 4);
+        let h64 = D2dConfig::mean_hops(8, 8);
+        assert!(h16 < h32 && h32 < h64);
+        assert!((h64 - 5.25).abs() < 0.01, "h64 {h64}");
+    }
+
+    #[test]
+    fn all_to_all_overhead_grows_with_ep_degree() {
+        // Paper Fig. 13d: D2D overhead grows with expert parallelism.
+        let d = D2dConfig::wafer_8x8();
+        let bytes = 30.0e6;
+        let t16 = d.all_to_all_seconds(16, bytes);
+        let t32 = d.all_to_all_seconds(32, bytes);
+        let t64 = d.all_to_all_seconds(64, bytes);
+        assert!(t16 < t32 && t32 < t64, "{t16} {t32} {t64}");
+    }
+
+    #[test]
+    fn nvlink_class_is_slower() {
+        let fast = D2dConfig::wafer_8x8();
+        let slow = D2dConfig::wafer_8x8_nvlink_class();
+        let b = 10.0e6;
+        assert!(slow.all_to_all_seconds(32, b) > 4.0 * fast.all_to_all_seconds(32, b));
+    }
+
+    #[test]
+    fn wafer_peak_1976_tflops_per_chip() {
+        let w = WaferSystem::paper();
+        let per_chip = w.system_peak_tflops() / w.chips() as f64;
+        assert!((per_chip - 1990.0).abs() < 25.0, "{per_chip}");
+    }
+
+    #[test]
+    fn single_chip_no_traffic() {
+        let d = D2dConfig::wafer_8x8();
+        assert_eq!(d.all_to_all_seconds(1, 1e9), 0.0);
+    }
+}

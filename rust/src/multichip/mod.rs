@@ -1,0 +1,4 @@
+//! Wafer-scale multi-die system model.
+pub mod d2d;
+pub mod parallelism;
+pub mod wafer;

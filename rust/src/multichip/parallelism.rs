@@ -1,0 +1,294 @@
+//! Parallelism planning and decode evaluation for the wafer-scale system
+//! (paper §III-F, §V-C): pipeline parallelism (PP), expert parallelism (EP)
+//! and EP-PP hybrids under the barrier-separated naive execution model of
+//! Fig. 5e.
+
+use std::collections::HashMap;
+
+use crate::arch::config::{ChipConfig, Dtype, SimFidelity};
+use crate::dataflow::{simulate_kernel, AttentionDataflow};
+use crate::metrics::KernelMetrics;
+use crate::multichip::d2d::WaferSystem;
+use crate::workload::deepseek::{decode_layer_kernels, DeepSeekConfig, KernelClass, MoePlacement};
+
+/// An EP×PP plan over the wafer's chips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismPlan {
+    pub ep: u32,
+    pub pp: u32,
+}
+
+impl ParallelismPlan {
+    pub fn new(ep: u32, pp: u32) -> Self {
+        ParallelismPlan { ep, pp }
+    }
+    pub fn chips(&self) -> u32 {
+        self.ep * self.pp
+    }
+    pub fn label(&self) -> String {
+        match (self.ep, self.pp) {
+            (1, p) => format!("PP{p}"),
+            (e, 1) => format!("EP{e}"),
+            (e, p) => format!("EP{e}-PP{p}"),
+        }
+    }
+}
+
+/// Which attention dataflow the decoder uses (the Fig. 13a comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionChoice {
+    /// FlatAttention with the Fig. 10 tiling strategy (this paper).
+    Flat,
+    /// FlashMLA-style per-tile dataflow (no grouping, no collectives).
+    FlashMla,
+}
+
+impl AttentionChoice {
+    pub fn label(self) -> &'static str {
+        match self {
+            AttentionChoice::Flat => "FlatAttention",
+            AttentionChoice::FlashMla => "FlashMLA",
+        }
+    }
+}
+
+/// Runtime breakdown of one decoder layer (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerBreakdown {
+    pub attention_s: f64,
+    pub gemm_s: f64,
+    pub vector_s: f64,
+    pub c2c_s: f64,
+}
+
+impl LayerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.attention_s + self.gemm_s + self.vector_s + self.c2c_s
+    }
+}
+
+/// Decode operating-point outcome.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    pub plan: ParallelismPlan,
+    pub batch_per_chip: u32,
+    /// Time one pipeline stage takes for one decoding iteration.
+    pub stage_seconds: f64,
+    /// Per-user time per output token (ms).
+    pub tpot_ms: f64,
+    pub system_tokens_per_s: f64,
+    pub per_chip_tokens_per_s: f64,
+    /// Average per-MoE-layer breakdown.
+    pub layer: LayerBreakdown,
+    /// Matrix utilization achieved by the attention kernel.
+    pub attention_utilization: f64,
+}
+
+/// Decode evaluator with kernel-simulation memoization (identical kernel
+/// shapes across layers/batches hit the cache).
+pub struct DecodeEvaluator {
+    cache: HashMap<String, KernelMetrics>,
+    pub fidelity: SimFidelity,
+}
+
+impl DecodeEvaluator {
+    pub fn new(fidelity: SimFidelity) -> Self {
+        DecodeEvaluator { cache: HashMap::new(), fidelity }
+    }
+
+    fn kernel(&mut self, cfg: &ChipConfig, class: &KernelClass, choice: AttentionChoice) -> KernelMetrics {
+        let key = format!("{}|{:?}|{:?}|{:?}", cfg.name, self.fidelity, choice, class);
+        if let Some(m) = self.cache.get(&key) {
+            return m.clone();
+        }
+        let m = simulate_kernel(
+            cfg,
+            class,
+            |s| match choice {
+                AttentionChoice::Flat => AttentionDataflow::auto_flat(cfg, s),
+                AttentionChoice::FlashMla => AttentionDataflow::Fa2,
+            },
+            self.fidelity,
+        );
+        self.cache.insert(key, m.clone());
+        m
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Evaluate one decode operating point.
+    pub fn evaluate(
+        &mut self,
+        sys: &WaferSystem,
+        ds: &DeepSeekConfig,
+        plan: ParallelismPlan,
+        batch_per_chip: u32,
+        kv_len: u32,
+        choice: AttentionChoice,
+    ) -> DecodeOutcome {
+        assert_eq!(plan.chips(), sys.chips(), "plan must cover the wafer");
+        let cfg = &sys.chip;
+        let dtype = Dtype::Fp8;
+        let sp = ds.mtp_spec_len.max(1) as u64;
+        let rows = batch_per_chip as u64 * sp;
+
+        // MoE routing statistics across the EP group.
+        let group_tokens = rows * plan.ep as u64;
+        let total_pairs = group_tokens * ds.experts_per_token as u64;
+        let active_total = total_pairs.min(ds.n_experts as u64).max(1);
+        let rows_per_expert = total_pairs.div_ceil(active_total);
+        let active_per_chip = (active_total.div_ceil(plan.ep as u64)).min((ds.n_experts / plan.ep).max(1) as u64);
+        let moe = MoePlacement { experts_on_chip: active_per_chip as u32, rows_per_expert };
+
+        // Per-layer kernel times.
+        let kernels = decode_layer_kernels(ds, batch_per_chip, kv_len, dtype, moe);
+        let mut br = LayerBreakdown::default();
+        let mut attn_util = 0.0;
+        for k in &kernels {
+            let m = self.kernel(cfg, &k.class, choice);
+            match &k.class {
+                KernelClass::Attention(_) => {
+                    br.attention_s += m.seconds;
+                    attn_util = m.matrix_utilization_active.max(m.compute_utilization);
+                }
+                KernelClass::Gemm { .. } => br.gemm_s += m.seconds,
+                KernelClass::Vector { .. } => br.vector_s += m.seconds,
+            }
+        }
+
+        // C2C dispatch + combine per MoE layer (within the EP group).
+        let dispatch_bytes = rows as f64 * ds.experts_per_token as f64 * ds.d_model as f64 * dtype.bytes() as f64;
+        br.c2c_s = 2.0 * sys.d2d.all_to_all_seconds(plan.ep, dispatch_bytes);
+
+        // Dense leading layers: replace MoE kernels with the dense FFN.
+        let dense_ffn_s = {
+            let d = ds.d_model as u64;
+            let di = ds.dense_inter as u64;
+            let up = self.kernel(cfg, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 }, choice);
+            let down = self.kernel(cfg, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 }, choice);
+            up.seconds + down.seconds
+        };
+        let moe_s = {
+            // MoE-specific kernel seconds (routed + shared + gate).
+            let mut s = 0.0;
+            for k in &kernels {
+                if k.name.starts_with("moe.") {
+                    s += self.kernel(cfg, &k.class, choice).seconds;
+                }
+            }
+            s
+        };
+        let moe_layer_s = br.total();
+        let dense_layer_s = moe_layer_s - br.c2c_s - moe_s + dense_ffn_s;
+
+        // Stage time: layers split over pipeline stages + PP boundary xfer.
+        let moe_layers = (ds.layers - ds.dense_layers) as f64;
+        let dense_layers = ds.dense_layers as f64;
+        let per_stage_moe = moe_layers / plan.pp as f64;
+        let per_stage_dense = dense_layers / plan.pp as f64;
+        let boundary = if plan.pp > 1 {
+            sys.d2d.neighbor_transfer_seconds(rows as f64 * ds.d_model as f64 * dtype.bytes() as f64)
+        } else {
+            0.0
+        };
+        let stage_seconds = per_stage_moe * moe_layer_s + per_stage_dense * dense_layer_s + boundary;
+
+        // Throughput / latency under wave pipelining (see DESIGN.md):
+        // a wave = the EP group's users at one stage; `pp` waves in flight.
+        let tokens_per_iter = ds.tokens_per_iteration();
+        let wave_users = batch_per_chip as f64 * plan.ep as f64;
+        let system_tokens_per_s = wave_users * tokens_per_iter / stage_seconds;
+        let tpot_ms = plan.pp as f64 * stage_seconds / tokens_per_iter * 1e3;
+
+        DecodeOutcome {
+            plan,
+            batch_per_chip,
+            stage_seconds,
+            tpot_ms,
+            system_tokens_per_s,
+            per_chip_tokens_per_s: system_tokens_per_s / sys.chips() as f64,
+            layer: br,
+            attention_utilization: attn_util,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(choice: AttentionChoice, ep: u32, pp: u32, b: u32) -> DecodeOutcome {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+        ev.evaluate(&sys, &ds, ParallelismPlan::new(ep, pp), b, 4096, choice)
+    }
+
+    #[test]
+    fn flat_beats_flashmla_at_high_batch() {
+        // Paper Fig. 13a: up to ~2.1× system throughput at high batch.
+        let flat = eval(AttentionChoice::Flat, 32, 2, 256);
+        let mla = eval(AttentionChoice::FlashMla, 32, 2, 256);
+        let speedup = flat.system_tokens_per_s / mla.system_tokens_per_s;
+        // Paper: up to 2.1×. Our FlashMLA baseline inherits the K-split
+        // GEMM dataflow + fair channel interleaving, so the measured gap is
+        // smaller but the ordering and regime match.
+        assert!(speedup > 1.3 && speedup < 3.0, "speedup {speedup}");
+        // And TPOT is simultaneously lower.
+        assert!(flat.tpot_ms < mla.tpot_ms);
+    }
+
+    #[test]
+    fn attention_dominates_flashmla_runtime() {
+        // Paper Fig. 13b: attention ≈71% of runtime with FlashMLA, ≈42%
+        // with FlatAttention.
+        let mla = eval(AttentionChoice::FlashMla, 32, 2, 256);
+        let frac_mla = mla.layer.attention_s / mla.layer.total();
+        // Paper: ≈71%; ours ≈54% (see the note in flat_beats_flashmla).
+        assert!(frac_mla > 0.50, "flashmla attention fraction {frac_mla}");
+        let flat = eval(AttentionChoice::Flat, 32, 2, 256);
+        let frac_flat = flat.layer.attention_s / flat.layer.total();
+        assert!(frac_flat < frac_mla - 0.1, "flat fraction {frac_flat}");
+    }
+
+    #[test]
+    fn throughput_grows_with_batch() {
+        let a = eval(AttentionChoice::Flat, 32, 2, 64);
+        let b = eval(AttentionChoice::Flat, 32, 2, 256);
+        assert!(b.system_tokens_per_s > a.system_tokens_per_s);
+        // But TPOT degrades.
+        assert!(b.tpot_ms > a.tpot_ms);
+    }
+
+    #[test]
+    fn tpot_meets_50ms_at_paper_operating_point() {
+        // Table II Ours1: b=256, kv=4096, EP32-PP2, TPOT within 50 ms.
+        let o = eval(AttentionChoice::Flat, 32, 2, 256);
+        assert!(o.tpot_ms < 50.0, "tpot {}", o.tpot_ms);
+        // Per-chip throughput in the thousands (paper: 6940 tok/s).
+        assert!(o.per_chip_tokens_per_s > 3000.0, "{}", o.per_chip_tokens_per_s);
+    }
+
+    #[test]
+    fn pp_only_low_batch_underactivates_experts() {
+        // Fig. 13c: under PP-only, low batch leaves experts idle; raising
+        // batch at first barely moves throughput (weight streaming bound).
+        let a = eval(AttentionChoice::Flat, 1, 64, 2);
+        let b = eval(AttentionChoice::Flat, 1, 64, 8);
+        let gain = b.system_tokens_per_s / a.system_tokens_per_s;
+        assert!(gain < 3.0, "gain {gain} should be sublinear (4× batch)");
+    }
+
+    #[test]
+    fn cache_hits_across_layers() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+        ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        let n1 = ev.cache_len();
+        ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        assert_eq!(ev.cache_len(), n1, "second evaluation should be fully cached");
+    }
+}

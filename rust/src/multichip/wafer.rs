@@ -1,0 +1,110 @@
+//! Wafer-scale sweep drivers: the batch sweeps and EP-degree comparisons of
+//! paper Fig. 13 and the Table II operating points.
+
+use crate::arch::config::SimFidelity;
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, DecodeOutcome, ParallelismPlan};
+use crate::workload::deepseek::DeepSeekConfig;
+
+/// The batch-per-chip sweep of Fig. 13a/13c.
+pub const BATCH_SWEEP: [u32; 7] = [8, 16, 32, 64, 128, 256, 512];
+
+/// The EP-degree plans of Fig. 13c on a 64-chip wafer.
+pub fn ep_plans() -> Vec<ParallelismPlan> {
+    vec![
+        ParallelismPlan::new(1, 64),
+        ParallelismPlan::new(8, 8),
+        ParallelismPlan::new(16, 4),
+        ParallelismPlan::new(32, 2),
+        ParallelismPlan::new(64, 1),
+    ]
+}
+
+/// Sweep batch sizes for one plan/dataflow (Fig. 13a series).
+pub fn batch_sweep(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    plan: ParallelismPlan,
+    kv_len: u32,
+    choice: AttentionChoice,
+    fidelity: SimFidelity,
+) -> Vec<DecodeOutcome> {
+    let mut ev = DecodeEvaluator::new(fidelity);
+    BATCH_SWEEP.iter().map(|&b| ev.evaluate(sys, ds, plan, b, kv_len, choice)).collect()
+}
+
+/// Best outcome under a TPOT constraint (the Table II operating point rule:
+/// the highest-throughput point with TPOT ≤ limit).
+pub fn best_under_tpot(outcomes: &[DecodeOutcome], tpot_limit_ms: f64) -> Option<&DecodeOutcome> {
+    outcomes
+        .iter()
+        .filter(|o| o.tpot_ms <= tpot_limit_ms)
+        .max_by(|a, b| a.system_tokens_per_s.partial_cmp(&b.system_tokens_per_s).unwrap())
+}
+
+/// The paper's Table II "Ours1" row: 1 TB/s D2D wafer, EP32-PP2.
+pub fn ours1(fidelity: SimFidelity) -> Vec<DecodeOutcome> {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    batch_sweep(&sys, &ds, ParallelismPlan::new(32, 2), 4096, AttentionChoice::Flat, fidelity)
+}
+
+/// Table II "Ours2": D2D reduced to NVLink-class 160 GB/s.
+pub fn ours2(fidelity: SimFidelity) -> Vec<DecodeOutcome> {
+    let sys = WaferSystem::paper_nvlink_class();
+    let ds = DeepSeekConfig::v3_671b();
+    batch_sweep(&sys, &ds, ParallelismPlan::new(32, 2), 4096, AttentionChoice::Flat, fidelity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_monotone_in_tpot() {
+        let out = ours1(SimFidelity::Analytic);
+        for w in out.windows(2) {
+            assert!(w[1].tpot_ms >= w[0].tpot_ms, "TPOT must grow with batch");
+        }
+    }
+
+    #[test]
+    fn ours1_beats_ds_prof_per_chip() {
+        // Table II: Ours1 ≥ 2.9× DS-Prof per-chip throughput under 50 ms.
+        let out = ours1(SimFidelity::Analytic);
+        let best = best_under_tpot(&out, 50.0).expect("some point under 50ms");
+        let ds_prof = crate::baseline::soa::SoaSystem::ds_prof();
+        let ratio = best.per_chip_tokens_per_s / ds_prof.tokens_per_s_per_chip;
+        assert!(ratio > 2.0, "per-chip speedup {ratio}");
+        assert!(best.tpot_ms < 50.0);
+    }
+
+    #[test]
+    fn ours2_still_beats_ds_prof() {
+        // Table II: even at 160 GB/s D2D, ≥1.6× decoding throughput.
+        let out = ours2(SimFidelity::Analytic);
+        let best = best_under_tpot(&out, 50.0).expect("some point under 50ms");
+        let ds_prof = crate::baseline::soa::SoaSystem::ds_prof();
+        let ratio = best.per_chip_tokens_per_s / ds_prof.tokens_per_s_per_chip;
+        assert!(ratio > 1.2, "per-chip speedup {ratio}");
+    }
+
+    #[test]
+    fn ep_plans_cover_wafer() {
+        for p in ep_plans() {
+            assert_eq!(p.chips(), 64);
+        }
+    }
+
+    #[test]
+    fn higher_ep_helps_mid_batch() {
+        // Fig. 13c: EP32 beats PP-only at medium batch.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+        let pp = ev.evaluate(&sys, &ds, ParallelismPlan::new(1, 64), 64, 4096, AttentionChoice::Flat);
+        let ep = ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 64, 4096, AttentionChoice::Flat);
+        assert!(ep.system_tokens_per_s > pp.system_tokens_per_s);
+        assert!(ep.tpot_ms < pp.tpot_ms);
+    }
+}

@@ -1,0 +1,102 @@
+//! Artifact registry: locates the HLO text files produced by
+//! `make artifacts` (`python/compile/aot.py`). The Rust binary never runs
+//! Python; if an artifact is missing the caller gets a clear error telling
+//! it to run `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// Known artifacts and their entry-point metadata (must stay in sync with
+/// `python/compile/aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Artifact {
+    /// MHA forward via the Pallas FlatAttention kernel.
+    /// Inputs: q (S×D), k (S×D), v (S×D); output (S×D). S=256, D=64.
+    MhaPrefill,
+    /// GQA decode: q (G·sp × D), k/v (KV×D); output (G·sp × D).
+    GqaDecode,
+    /// MLA weight-absorbed decode core: q_abs (R×(dc+dr)), c_kv (KV×(dc+dr));
+    /// output (R×dc).
+    MlaDecode,
+    /// Dense reference attention (pure jnp, no Pallas) — used to check the
+    /// kernel artifact against an independently lowered graph.
+    MhaReference,
+}
+
+impl Artifact {
+    pub fn all() -> [Artifact; 4] {
+        [Artifact::MhaPrefill, Artifact::GqaDecode, Artifact::MlaDecode, Artifact::MhaReference]
+    }
+
+    pub fn file_name(self) -> &'static str {
+        match self {
+            Artifact::MhaPrefill => "mha_prefill.hlo.txt",
+            Artifact::GqaDecode => "gqa_decode.hlo.txt",
+            Artifact::MlaDecode => "mla_decode.hlo.txt",
+            Artifact::MhaReference => "mha_reference.hlo.txt",
+        }
+    }
+}
+
+/// Directory containing artifacts: `$FLATATTENTION_ARTIFACTS` or
+/// `<repo>/artifacts` (relative to the current directory, walking up).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FLATATTENTION_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Full path of an artifact, verifying it exists.
+pub fn artifact_path(a: Artifact) -> Result<PathBuf> {
+    let p = artifacts_dir().join(a.file_name());
+    anyhow::ensure!(
+        p.is_file(),
+        "artifact {} not found at {} — run `make artifacts` first",
+        a.file_name(),
+        p.display()
+    );
+    Ok(p)
+}
+
+/// True if every artifact is present.
+pub fn artifacts_ready() -> bool {
+    Artifact::all().iter().all(|a| artifacts_dir().join(a.file_name()).is_file())
+}
+
+/// Check a path exists (test helper for non-registry artifacts).
+pub fn ensure_file(p: &Path) -> Result<()> {
+    anyhow::ensure!(p.is_file(), "missing file {}", p.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_names_unique() {
+        let names: Vec<_> = Artifact::all().iter().map(|a| a.file_name()).collect();
+        let mut d = names.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), names.len());
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("FLATATTENTION_ARTIFACTS", "/tmp/fa-test-artifacts");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/fa-test-artifacts"));
+        std::env::remove_var("FLATATTENTION_ARTIFACTS");
+    }
+}

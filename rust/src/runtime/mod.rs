@@ -1,0 +1,3 @@
+//! PJRT runtime: load and execute AOT artifacts (HLO text).
+pub mod pjrt;
+pub mod artifacts;

@@ -1,0 +1,89 @@
+//! PJRT runtime: load AOT-compiled HLO **text** artifacts (produced once by
+//! `python/compile/aot.py`) and execute them on the PJRT CPU client.
+//!
+//! Interchange is HLO text, not serialized `HloModuleProto`: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::exec::tensor::Mat;
+
+/// A compiled HLO executable on the PJRT CPU client.
+pub struct HloExecutable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl HloExecutable {
+    /// Load an HLO text file and compile it for CPU.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(HloExecutable {
+            client,
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with f32 matrix inputs; the artifact was lowered with
+    /// `return_tuple=True`, so the single output is a 1-tuple whose element
+    /// is returned reshaped as (rows, cols).
+    pub fn run_f32(&self, inputs: &[&Mat], out_rows: usize, out_cols: usize) -> Result<Mat> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                let lit = xla::Literal::vec1(&m.data);
+                lit.reshape(&[m.rows as i64, m.cols as i64]).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        let values = out.to_vec::<f32>().context("reading f32 output")?;
+        anyhow::ensure!(
+            values.len() == out_rows * out_cols,
+            "output size {} != {}x{}",
+            values.len(),
+            out_rows,
+            out_cols
+        );
+        Ok(Mat::from_vec(out_rows, out_cols, values))
+    }
+
+    /// Execute with 3-D f32 inputs flattened row-major as (dim0·rows, cols)
+    /// matrices; shape bookkeeping is the caller's.
+    pub fn run_f32_raw(&self, inputs: &[(&[f32], Vec<i64>)]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>().context("reading f32 output")?)
+    }
+}

@@ -1,0 +1,530 @@
+//! The discrete-event engine: op DAGs over FIFO resource servers.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::timeline::{ExposedBreakdown, Timeline};
+use super::Cycles;
+
+/// Index of an op in its [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OpId(pub u32);
+
+/// Index of a resource in the [`ResourceTable`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ResourceId(pub u32);
+
+/// What a resource physically is. Used for utilization reporting only; the
+/// engine itself treats every resource as an exclusive FIFO server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    /// A tile's matrix engine (RedMulE). `0` = flat tile index.
+    MatrixEngine(u32),
+    /// A tile's vector engine (Spatz cluster).
+    VectorEngine(u32),
+    /// A tile's DMA command queue (issue side).
+    Dma(u32),
+    /// One HBM channel (index within the chip).
+    HbmChannel(u32),
+    /// NoC path used by row-wise collectives of mesh row `r`.
+    NocRow(u32),
+    /// NoC path used by column-wise collectives of mesh column `c`.
+    NocCol(u32),
+    /// A D2D link or generic chip-level resource (multichip model).
+    D2dLink(u32),
+    /// Anything else (barriers placed on a resource, test fixtures, …).
+    Generic(u32),
+}
+
+/// Behavioural category of an op; drives the runtime-breakdown accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    /// Matrix-engine GEMM work.
+    Gemm,
+    /// Vector-engine work (softmax pieces: rowmax, exp, rowsum, rescale).
+    Vector,
+    /// HBM read occupancy.
+    HbmRead,
+    /// HBM write occupancy.
+    HbmWrite,
+    /// On-chip collective transfer (multicast / reduction) occupancy.
+    NocCollective,
+    /// On-chip point-to-point transfer occupancy (SW collectives lower here).
+    NocUnicast,
+    /// DMA issue / descriptor setup.
+    DmaIssue,
+    /// Synchronization / barrier / control overhead.
+    Sync,
+    /// D2D chip-to-chip transfer (multichip model).
+    D2d,
+}
+
+impl Category {
+    /// All categories, in the priority order used for exposed-time masking
+    /// (earlier = higher priority; the paper's breakdown bars mask lower
+    /// categories by "not overlapped with matrix engine" etc.).
+    pub const PRIORITY: [Category; 9] = [
+        Category::Gemm,
+        Category::Vector,
+        Category::HbmRead,
+        Category::HbmWrite,
+        Category::NocCollective,
+        Category::NocUnicast,
+        Category::DmaIssue,
+        Category::Sync,
+        Category::D2d,
+    ];
+
+    /// Stable dense index (for array-backed accounting).
+    pub fn index(self) -> usize {
+        Self::PRIORITY.iter().position(|c| *c == self).unwrap()
+    }
+
+    pub const COUNT: usize = 9;
+}
+
+/// A single block-level operation.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Resource this op occupies exclusively for `duration` cycles.
+    /// `None` = no contention (barriers, joins): starts as soon as ready.
+    pub resource: Option<ResourceId>,
+    /// Service time in cycles (fixed; queueing adds on top).
+    pub duration: Cycles,
+    pub category: Category,
+    /// FLOPs performed (GEMM / vector ops) — for utilization metrics.
+    pub flops: u64,
+    /// Bytes moved (DMA / NoC / HBM ops) — for traffic metrics.
+    pub bytes: u64,
+}
+
+impl Op {
+    pub fn new(resource: Option<ResourceId>, duration: Cycles, category: Category) -> Self {
+        Op { resource, duration, category, flops: 0, bytes: 0 }
+    }
+    pub fn flops(mut self, f: u64) -> Self {
+        self.flops = f;
+        self
+    }
+    pub fn bytes(mut self, b: u64) -> Self {
+        self.bytes = b;
+        self
+    }
+}
+
+/// Resource declarations for a graph.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceTable {
+    kinds: Vec<ResourceKind>,
+}
+
+impl ResourceTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&mut self, kind: ResourceKind) -> ResourceId {
+        self.kinds.push(kind);
+        ResourceId((self.kinds.len() - 1) as u32)
+    }
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+    pub fn kind(&self, id: ResourceId) -> ResourceKind {
+        self.kinds[id.0 as usize]
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceId, ResourceKind)> + '_ {
+        self.kinds.iter().enumerate().map(|(i, k)| (ResourceId(i as u32), *k))
+    }
+}
+
+/// An op DAG under construction.
+pub struct Graph {
+    pub resources: ResourceTable,
+    ops: Vec<Op>,
+    /// Flattened dependency lists: `deps[dep_ranges[i].0..dep_ranges[i].1]`.
+    deps: Vec<OpId>,
+    dep_ranges: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    pub fn new(resources: ResourceTable) -> Self {
+        Graph { resources, ops: Vec::new(), deps: Vec::new(), dep_ranges: Vec::new() }
+    }
+
+    /// Add an op depending on `deps`; returns its id.
+    pub fn push(&mut self, op: Op, deps: &[OpId]) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        debug_assert!(deps.iter().all(|d| d.0 < id.0), "deps must precede op (DAG by construction)");
+        let start = self.deps.len() as u32;
+        self.deps.extend_from_slice(deps);
+        self.dep_ranges.push((start, self.deps.len() as u32));
+        self.ops.push(op);
+        id
+    }
+
+    /// Zero-duration join of `deps` (no resource).
+    pub fn join(&mut self, deps: &[OpId]) -> OpId {
+        self.push(Op::new(None, 0, Category::Sync), deps)
+    }
+
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    fn deps_of(&self, id: OpId) -> &[OpId] {
+        let (s, e) = self.dep_ranges[id.0 as usize];
+        &self.deps[s as usize..e as usize]
+    }
+
+    /// Run the graph to completion; deterministic.
+    pub fn simulate(self) -> SimResult {
+        let n = self.ops.len();
+        let mut indegree: Vec<u32> = vec![0; n];
+        let mut dependents: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let id = OpId(i as u32);
+            for &d in self.deps_of(id) {
+                indegree[i] += 1;
+                dependents[d.0 as usize].push(id);
+            }
+        }
+
+        let nres = self.resources.len();
+        // Per-resource waiting queue (min-heap by op id for determinism) and
+        // busy flag.
+        let mut waiting: Vec<BinaryHeap<Reverse<OpId>>> = (0..nres).map(|_| BinaryHeap::new()).collect();
+        let mut busy: Vec<bool> = vec![false; nres];
+
+        // Completion event heap: (finish_time, op_id).
+        let mut events: BinaryHeap<Reverse<(Cycles, OpId)>> = BinaryHeap::new();
+
+        let mut timeline = Timeline::new();
+        let mut busy_by_cat = [0u64; Category::COUNT];
+        let mut busy_by_res: Vec<Cycles> = vec![0; nres];
+        let mut flops_total: u64 = 0;
+        let mut hbm_read_bytes: u64 = 0;
+        let mut hbm_write_bytes: u64 = 0;
+        let mut noc_bytes: u64 = 0;
+        let mut d2d_bytes: u64 = 0;
+
+        let start_op = |op_id: OpId,
+                            now: Cycles,
+                            ops: &[Op],
+                            busy: &mut [bool],
+                            events: &mut BinaryHeap<Reverse<(Cycles, OpId)>>,
+                            timeline: &mut Timeline,
+                            busy_by_cat: &mut [u64; Category::COUNT],
+                            busy_by_res: &mut [Cycles]| {
+            let op = &ops[op_id.0 as usize];
+            let finish = now + op.duration;
+            if let Some(r) = op.resource {
+                busy[r.0 as usize] = true;
+                busy_by_res[r.0 as usize] += op.duration;
+            }
+            if op.duration > 0 {
+                timeline.record(now, finish, op.category);
+                busy_by_cat[op.category.index()] += op.duration;
+            }
+            events.push(Reverse((finish, op_id)));
+        };
+
+        // Seed: ops with indegree 0.
+        let mut completed = 0usize;
+        for i in 0..n {
+            if indegree[i] == 0 {
+                let id = OpId(i as u32);
+                let op = &self.ops[i];
+                flops_total += op.flops;
+                match op.category {
+                    Category::HbmRead => hbm_read_bytes += op.bytes,
+                    Category::HbmWrite => hbm_write_bytes += op.bytes,
+                    Category::NocCollective | Category::NocUnicast => noc_bytes += op.bytes,
+                    Category::D2d => d2d_bytes += op.bytes,
+                    _ => {}
+                }
+                match op.resource {
+                    None => start_op(id, 0, &self.ops, &mut busy, &mut events, &mut timeline, &mut busy_by_cat, &mut busy_by_res),
+                    Some(r) => waiting[r.0 as usize].push(Reverse(id)),
+                }
+            } else {
+                let op = &self.ops[i];
+                flops_total += op.flops;
+                match op.category {
+                    Category::HbmRead => hbm_read_bytes += op.bytes,
+                    Category::HbmWrite => hbm_write_bytes += op.bytes,
+                    Category::NocCollective | Category::NocUnicast => noc_bytes += op.bytes,
+                    Category::D2d => d2d_bytes += op.bytes,
+                    _ => {}
+                }
+            }
+        }
+        // Kick idle resources.
+        for r in 0..nres {
+            if !busy[r] {
+                if let Some(Reverse(id)) = waiting[r].pop() {
+                    start_op(id, 0, &self.ops, &mut busy, &mut events, &mut timeline, &mut busy_by_cat, &mut busy_by_res);
+                }
+            }
+        }
+
+        let mut makespan: Cycles = 0;
+        while let Some(Reverse((t, id))) = events.pop() {
+            makespan = makespan.max(t);
+            completed += 1;
+            let op = &self.ops[id.0 as usize];
+            // Free the resource and start the next waiter.
+            if let Some(r) = op.resource {
+                busy[r.0 as usize] = false;
+                if let Some(Reverse(next)) = waiting[r.0 as usize].pop() {
+                    start_op(next, t, &self.ops, &mut busy, &mut events, &mut timeline, &mut busy_by_cat, &mut busy_by_res);
+                }
+            }
+            // Release dependents.
+            for &dep in &dependents[id.0 as usize] {
+                let di = dep.0 as usize;
+                indegree[di] -= 1;
+                if indegree[di] == 0 {
+                    match self.ops[di].resource {
+                        None => start_op(dep, t, &self.ops, &mut busy, &mut events, &mut timeline, &mut busy_by_cat, &mut busy_by_res),
+                        Some(r) => {
+                            waiting[r.0 as usize].push(Reverse(dep));
+                            if !busy[r.0 as usize] {
+                                let Reverse(next) = waiting[r.0 as usize].pop().unwrap();
+                                start_op(next, t, &self.ops, &mut busy, &mut events, &mut timeline, &mut busy_by_cat, &mut busy_by_res);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        assert_eq!(completed, n, "deadlock or dangling dependency: {completed}/{n} ops completed");
+
+        // Matrix-engine aggregate utilization (only over engines that did work:
+        // the paper reports utilization of the *active* engines for groups
+        // smaller than the mesh).
+        let mut matrix_engines = 0u64;
+        let mut matrix_busy: Cycles = 0;
+        let mut active_matrix_engines = 0u64;
+        for (id, kind) in self.resources.iter() {
+            if let ResourceKind::MatrixEngine(_) = kind {
+                matrix_engines += 1;
+                let b = busy_by_res[id.0 as usize];
+                matrix_busy += b;
+                if b > 0 {
+                    active_matrix_engines += 1;
+                }
+            }
+        }
+
+        let exposed = timeline.exposed_breakdown();
+
+        SimResult {
+            makespan,
+            busy_by_cat,
+            exposed,
+            busy_by_res,
+            flops: flops_total,
+            hbm_read_bytes,
+            hbm_write_bytes,
+            noc_bytes,
+            d2d_bytes,
+            matrix_engines,
+            active_matrix_engines,
+            matrix_busy,
+            op_count: n as u64,
+        }
+    }
+}
+
+/// Everything the engine measured for one graph execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total runtime in cycles.
+    pub makespan: Cycles,
+    /// Summed service time per category (overlap *not* removed).
+    pub busy_by_cat: [u64; Category::COUNT],
+    /// Priority-masked exposed time per category (overlap removed; sums to
+    /// ≤ makespan). This is what the paper's stacked bars show.
+    pub exposed: ExposedBreakdown,
+    /// Busy cycles per resource.
+    pub busy_by_res: Vec<Cycles>,
+    /// Total FLOPs annotated on ops.
+    pub flops: u64,
+    pub hbm_read_bytes: u64,
+    pub hbm_write_bytes: u64,
+    pub noc_bytes: u64,
+    pub d2d_bytes: u64,
+    pub matrix_engines: u64,
+    pub active_matrix_engines: u64,
+    pub matrix_busy: Cycles,
+    pub op_count: u64,
+}
+
+impl SimResult {
+    /// Fraction of the makespan during which at least one matrix engine was
+    /// busy — the "matrix engine active" share.
+    pub fn matrix_active_fraction(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.exposed.per_cat[Category::Gemm.index()] as f64 / self.makespan as f64
+    }
+
+    /// Average utilization of matrix engines over the whole run
+    /// (busy / (engines × makespan)).
+    pub fn matrix_utilization(&self) -> f64 {
+        if self.makespan == 0 || self.matrix_engines == 0 {
+            return 0.0;
+        }
+        self.matrix_busy as f64 / (self.matrix_engines as f64 * self.makespan as f64)
+    }
+
+    /// Utilization counting only engines that were assigned work (the
+    /// paper's "utilization of the matrix engine when active" labels).
+    pub fn matrix_utilization_active(&self) -> f64 {
+        if self.makespan == 0 || self.active_matrix_engines == 0 {
+            return 0.0;
+        }
+        self.matrix_busy as f64 / (self.active_matrix_engines as f64 * self.makespan as f64)
+    }
+
+    pub fn hbm_bytes(&self) -> u64 {
+        self.hbm_read_bytes + self.hbm_write_bytes
+    }
+
+    /// Achieved FLOP/cycle.
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.makespan as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_res() -> (ResourceTable, ResourceId) {
+        let mut t = ResourceTable::new();
+        let r = t.add(ResourceKind::Generic(0));
+        (t, r)
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::new(ResourceTable::new());
+        let r = g.simulate();
+        assert_eq!(r.makespan, 0);
+        assert_eq!(r.op_count, 0);
+    }
+
+    #[test]
+    fn serial_chain_adds_durations() {
+        let (t, r) = one_res();
+        let mut g = Graph::new(t);
+        let a = g.push(Op::new(Some(r), 10, Category::Gemm), &[]);
+        let b = g.push(Op::new(Some(r), 20, Category::Gemm), &[a]);
+        let _c = g.push(Op::new(Some(r), 30, Category::Gemm), &[b]);
+        let res = g.simulate();
+        assert_eq!(res.makespan, 60);
+        assert_eq!(res.busy_by_cat[Category::Gemm.index()], 60);
+    }
+
+    #[test]
+    fn independent_ops_on_same_resource_serialize() {
+        let (t, r) = one_res();
+        let mut g = Graph::new(t);
+        for _ in 0..5 {
+            g.push(Op::new(Some(r), 7, Category::Vector), &[]);
+        }
+        assert_eq!(g.simulate().makespan, 35);
+    }
+
+    #[test]
+    fn independent_ops_on_distinct_resources_parallelize() {
+        let mut t = ResourceTable::new();
+        let rs: Vec<_> = (0..5).map(|i| t.add(ResourceKind::Generic(i))).collect();
+        let mut g = Graph::new(t);
+        for r in rs {
+            g.push(Op::new(Some(r), 7, Category::Vector), &[]);
+        }
+        assert_eq!(g.simulate().makespan, 7);
+    }
+
+    #[test]
+    fn diamond_dependency() {
+        let mut t = ResourceTable::new();
+        let r1 = t.add(ResourceKind::Generic(0));
+        let r2 = t.add(ResourceKind::Generic(1));
+        let mut g = Graph::new(t);
+        let a = g.push(Op::new(Some(r1), 5, Category::Gemm), &[]);
+        let b = g.push(Op::new(Some(r1), 10, Category::Gemm), &[a]);
+        let c = g.push(Op::new(Some(r2), 3, Category::Vector), &[a]);
+        let d = g.push(Op::new(Some(r1), 2, Category::Gemm), &[b, c]);
+        let _ = d;
+        let res = g.simulate();
+        // a:0-5, b:5-15, c:5-8 (parallel), d:15-17
+        assert_eq!(res.makespan, 17);
+    }
+
+    #[test]
+    fn join_is_free() {
+        let (t, r) = one_res();
+        let mut g = Graph::new(t);
+        let a = g.push(Op::new(Some(r), 5, Category::Gemm), &[]);
+        let b = g.push(Op::new(Some(r), 5, Category::Gemm), &[]);
+        let j = g.join(&[a, b]);
+        let _k = g.push(Op::new(Some(r), 1, Category::Vector), &[j]);
+        assert_eq!(g.simulate().makespan, 11);
+    }
+
+    #[test]
+    fn fifo_order_is_deterministic_by_op_id() {
+        // Two ops become ready at the same instant; lower id must run first.
+        let mut t = ResourceTable::new();
+        let r = t.add(ResourceKind::Generic(0));
+        let r2 = t.add(ResourceKind::Generic(1));
+        let mut g = Graph::new(t);
+        let gate = g.push(Op::new(Some(r2), 5, Category::Sync), &[]);
+        let a = g.push(Op::new(Some(r), 10, Category::Gemm), &[gate]);
+        let b = g.push(Op::new(Some(r), 1, Category::Gemm), &[gate]);
+        let _ = (a, b);
+        let res = g.simulate();
+        // a (id smaller) runs 5-15, b 15-16.
+        assert_eq!(res.makespan, 16);
+    }
+
+    #[test]
+    fn flops_and_bytes_accumulate() {
+        let (t, r) = one_res();
+        let mut g = Graph::new(t);
+        g.push(Op::new(Some(r), 1, Category::Gemm).flops(100), &[]);
+        g.push(Op::new(Some(r), 1, Category::HbmRead).bytes(64), &[]);
+        g.push(Op::new(Some(r), 1, Category::HbmWrite).bytes(32), &[]);
+        let res = g.simulate();
+        assert_eq!(res.flops, 100);
+        assert_eq!(res.hbm_read_bytes, 64);
+        assert_eq!(res.hbm_write_bytes, 32);
+        assert_eq!(res.hbm_bytes(), 96);
+    }
+
+    #[test]
+    fn matrix_utilization_counts_engines() {
+        let mut t = ResourceTable::new();
+        let m0 = t.add(ResourceKind::MatrixEngine(0));
+        let _m1 = t.add(ResourceKind::MatrixEngine(1));
+        let mut g = Graph::new(t);
+        g.push(Op::new(Some(m0), 10, Category::Gemm), &[]);
+        let res = g.simulate();
+        assert_eq!(res.makespan, 10);
+        assert_eq!(res.matrix_engines, 2);
+        assert_eq!(res.active_matrix_engines, 1);
+        assert!((res.matrix_utilization() - 0.5).abs() < 1e-12);
+        assert!((res.matrix_utilization_active() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Busy-interval accounting for runtime breakdowns.
+//!
+//! The paper's Fig. 8 / Fig. 9 stacked bars report, per category, the time
+//! *not overlapped* with higher-priority categories ("runtime not overlapped
+//! with matrix engine", "… with either vector or matrix engine"). We record
+//! +1/−1 deltas per category at op start/finish and compute the masked
+//! exposure in one sweep over the sorted deltas.
+
+use super::engine::Category;
+use super::Cycles;
+
+/// Raw activity deltas collected during simulation.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    /// (time, category index, delta ±1)
+    deltas: Vec<(Cycles, u8, i8)>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, start: Cycles, finish: Cycles, cat: Category) {
+        debug_assert!(finish >= start);
+        if finish == start {
+            return;
+        }
+        let c = cat.index() as u8;
+        self.deltas.push((start, c, 1));
+        self.deltas.push((finish, c, -1));
+    }
+
+    /// Number of recorded interval endpoints (2 per nonzero-length op).
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Compute the priority-masked exposed time per category.
+    pub fn exposed_breakdown(&self) -> ExposedBreakdown {
+        let mut deltas = self.deltas.clone();
+        // Sort by time; at equal time apply −1 before +1 so that
+        // back-to-back intervals do not create spurious overlap, except that
+        // masking is insensitive to this for exposure sums (we process whole
+        // segments between distinct timestamps).
+        deltas.sort_unstable_by_key(|&(t, c, d)| (t, c, d));
+
+        let mut active = [0i64; Category::COUNT];
+        let mut exposed = [0u64; Category::COUNT];
+        let mut union_busy: Cycles = 0;
+        let mut i = 0;
+        let mut last_t: Cycles = 0;
+        let n = deltas.len();
+        while i < n {
+            let t = deltas[i].0;
+            if t > last_t {
+                let span = t - last_t;
+                // Highest-priority active category claims the span.
+                let mut any = false;
+                for (pi, cat) in Category::PRIORITY.iter().enumerate() {
+                    let _ = cat;
+                    if active[pi] > 0 {
+                        exposed[pi] += span;
+                        any = true;
+                        break;
+                    }
+                }
+                if any {
+                    union_busy += span;
+                }
+            }
+            last_t = t;
+            while i < n && deltas[i].0 == t {
+                let (_, c, d) = deltas[i];
+                active[c as usize] += d as i64;
+                i += 1;
+            }
+        }
+        ExposedBreakdown { per_cat: exposed, union_busy }
+    }
+}
+
+/// Priority-masked exposure per category.
+#[derive(Debug, Clone, Default)]
+pub struct ExposedBreakdown {
+    /// Exposed cycles per [`Category::PRIORITY`] index. `per_cat[Gemm]` is
+    /// the total time at least one matrix engine was active; `per_cat[Vector]`
+    /// is vector-active time *not* overlapped with any matrix engine; etc.
+    pub per_cat: [u64; Category::COUNT],
+    /// Time at least one op of any category was active.
+    pub union_busy: Cycles,
+}
+
+impl ExposedBreakdown {
+    pub fn get(&self, cat: Category) -> u64 {
+        self.per_cat[cat.index()]
+    }
+
+    /// Exposed HBM time (read + write, not overlapped with compute).
+    pub fn hbm_exposed(&self) -> u64 {
+        self.get(Category::HbmRead) + self.get(Category::HbmWrite)
+    }
+
+    /// Exposed NoC time (collective + unicast).
+    pub fn noc_exposed(&self) -> u64 {
+        self.get(Category::NocCollective) + self.get(Category::NocUnicast)
+    }
+
+    /// Remaining control/sync exposure.
+    pub fn other_exposed(&self) -> u64 {
+        self.get(Category::DmaIssue) + self.get(Category::Sync) + self.get(Category::D2d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_timeline() {
+        let t = Timeline::new();
+        let e = t.exposed_breakdown();
+        assert_eq!(e.union_busy, 0);
+        assert!(e.per_cat.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn non_overlapping_intervals() {
+        let mut t = Timeline::new();
+        t.record(0, 10, Category::Gemm);
+        t.record(10, 15, Category::Vector);
+        let e = t.exposed_breakdown();
+        assert_eq!(e.get(Category::Gemm), 10);
+        assert_eq!(e.get(Category::Vector), 5);
+        assert_eq!(e.union_busy, 15);
+    }
+
+    #[test]
+    fn lower_priority_is_masked() {
+        let mut t = Timeline::new();
+        t.record(0, 10, Category::Gemm);
+        t.record(5, 20, Category::HbmRead); // 5 cycles overlap
+        let e = t.exposed_breakdown();
+        assert_eq!(e.get(Category::Gemm), 10);
+        assert_eq!(e.get(Category::HbmRead), 10); // 10..20 exposed
+        assert_eq!(e.union_busy, 20);
+    }
+
+    #[test]
+    fn vector_masks_hbm_but_not_gemm() {
+        let mut t = Timeline::new();
+        t.record(0, 4, Category::Vector);
+        t.record(2, 8, Category::HbmRead);
+        t.record(6, 10, Category::Gemm);
+        let e = t.exposed_breakdown();
+        assert_eq!(e.get(Category::Gemm), 4); // 6..10
+        assert_eq!(e.get(Category::Vector), 4); // 0..4
+        assert_eq!(e.get(Category::HbmRead), 2); // 4..6 only
+        assert_eq!(e.union_busy, 10);
+    }
+
+    #[test]
+    fn overlapping_same_category_counts_once() {
+        let mut t = Timeline::new();
+        t.record(0, 10, Category::Gemm);
+        t.record(5, 15, Category::Gemm);
+        let e = t.exposed_breakdown();
+        assert_eq!(e.get(Category::Gemm), 15);
+        assert_eq!(e.union_busy, 15);
+    }
+
+    #[test]
+    fn zero_length_records_ignored() {
+        let mut t = Timeline::new();
+        t.record(5, 5, Category::Gemm);
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,338 @@
+//! Attention workload shapes and analytic complexity (paper §II-B, §III-A).
+//!
+//! Every modern attention variant is normalized to a unified MHA-style
+//! formulation (paper §III-D): the variants differ in the number of distinct
+//! KV heads, the effective query rows attending to each KV group, and the
+//! query/value head dimensions (MLA's weight-absorbed MQA mode has
+//! `head_dim = d_c + d_rope`, `v_head_dim = d_c`).
+
+
+
+use crate::arch::config::{ChipConfig, Dtype};
+
+/// Attention mechanism family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttentionVariant {
+    /// Classic multi-head attention: one KV head per query head.
+    Mha,
+    /// Multi-query attention: all query heads share one KV head.
+    Mqa,
+    /// Grouped-query attention with `group` query heads per KV head.
+    Gqa { group: u32 },
+    /// Multi-head latent attention in weight-absorbed MQA mode
+    /// (DeepSeek-v2/v3): all heads share the compressed KV `c^KV`.
+    MlaAbsorbed,
+}
+
+impl AttentionVariant {
+    pub fn label(self) -> String {
+        match self {
+            AttentionVariant::Mha => "MHA".into(),
+            AttentionVariant::Mqa => "MQA".into(),
+            AttentionVariant::Gqa { group } => format!("GQA{group}"),
+            AttentionVariant::MlaAbsorbed => "MLA".into(),
+        }
+    }
+}
+
+/// Inference phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Prompt processing: `seq_q == seq_kv == S`.
+    Prefill,
+    /// Auto-regressive decoding: `seq_q == 1`, `seq_kv` = KV-cache length.
+    Decode,
+    /// Speculative decoding with draft length `sp` (MTP: sp = 2).
+    SpecDecode { sp: u32 },
+}
+
+/// One attention-layer invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionShape {
+    pub variant: AttentionVariant,
+    pub phase: Phase,
+    pub batch: u32,
+    /// Query heads H.
+    pub heads: u32,
+    /// Distinct KV heads (H for MHA, H/G for GQA, 1 for MQA/MLA-absorbed).
+    pub kv_heads: u32,
+    /// Q/K head dimension D (MLA-absorbed: d_c + d_rope).
+    pub head_dim: u32,
+    /// V head dimension (usually D; MLA-absorbed: d_c).
+    pub v_head_dim: u32,
+    /// Query rows per head.
+    pub seq_q: u32,
+    /// KV rows (context length).
+    pub seq_kv: u32,
+    pub dtype: Dtype,
+    pub causal: bool,
+}
+
+impl AttentionShape {
+    pub fn mha_prefill(batch: u32, heads: u32, head_dim: u32, seq: u32, dtype: Dtype) -> Self {
+        AttentionShape {
+            variant: AttentionVariant::Mha,
+            phase: Phase::Prefill,
+            batch,
+            heads,
+            kv_heads: heads,
+            head_dim,
+            v_head_dim: head_dim,
+            seq_q: seq,
+            seq_kv: seq,
+            dtype,
+            causal: true,
+        }
+    }
+
+    pub fn mha_decode(batch: u32, heads: u32, head_dim: u32, kv_len: u32, sp: u32, dtype: Dtype) -> Self {
+        AttentionShape {
+            variant: AttentionVariant::Mha,
+            phase: if sp <= 1 { Phase::Decode } else { Phase::SpecDecode { sp } },
+            batch,
+            heads,
+            kv_heads: heads,
+            head_dim,
+            v_head_dim: head_dim,
+            seq_q: sp.max(1),
+            seq_kv: kv_len,
+            dtype,
+            causal: sp > 1,
+        }
+    }
+
+    pub fn gqa_decode(batch: u32, heads: u32, group: u32, head_dim: u32, kv_len: u32, sp: u32, dtype: Dtype) -> Self {
+        assert!(heads % group == 0, "heads must divide into groups");
+        AttentionShape {
+            variant: AttentionVariant::Gqa { group },
+            phase: if sp <= 1 { Phase::Decode } else { Phase::SpecDecode { sp } },
+            batch,
+            heads,
+            kv_heads: heads / group,
+            head_dim,
+            v_head_dim: head_dim,
+            seq_q: sp.max(1),
+            seq_kv: kv_len,
+            dtype,
+            causal: sp > 1,
+        }
+    }
+
+    /// DeepSeek-style MLA in weight-absorbed MQA mode: `heads` query heads
+    /// over one latent KV of width `d_c` (+ shared rope dim on the score).
+    pub fn mla_absorbed_decode(batch: u32, heads: u32, d_c: u32, d_rope: u32, kv_len: u32, sp: u32, dtype: Dtype) -> Self {
+        AttentionShape {
+            variant: AttentionVariant::MlaAbsorbed,
+            phase: if sp <= 1 { Phase::Decode } else { Phase::SpecDecode { sp } },
+            batch,
+            heads,
+            kv_heads: 1,
+            head_dim: d_c + d_rope,
+            v_head_dim: d_c,
+            seq_q: sp.max(1),
+            seq_kv: kv_len,
+            dtype,
+            causal: sp > 1,
+        }
+    }
+
+    /// Query heads sharing one KV head.
+    pub fn heads_per_kv(&self) -> u32 {
+        self.heads / self.kv_heads
+    }
+
+    /// Effective rows of the score matrix per KV head: the paper's
+    /// generalization (§III-D) concatenates the grouped queries, turning
+    /// GEMV back into GEMM — `G · seq_q` rows attend to one KV.
+    pub fn effective_q_rows(&self) -> u64 {
+        self.heads_per_kv() as u64 * self.seq_q as u64
+    }
+
+    /// Number of independent attention computations (batch × KV heads).
+    pub fn independent_units(&self) -> u64 {
+        self.batch as u64 * self.kv_heads as u64
+    }
+
+    /// Exact FLOPs: score GEMM (2·rows·kv·D) + output GEMM (2·rows·kv·Dv)
+    /// per unit (softmax vector work excluded, consistent with the paper's
+    /// matrix-engine utilization metric). Causal masks in prefill halve the
+    /// score/output work.
+    pub fn flops(&self) -> u64 {
+        let rows = self.effective_q_rows();
+        let kv = self.seq_kv as u64;
+        let per_unit = 2 * rows * kv * (self.head_dim as u64 + self.v_head_dim as u64);
+        let full = self.independent_units() * per_unit;
+        if self.causal && self.phase == Phase::Prefill {
+            full / 2
+        } else {
+            full
+        }
+    }
+
+    /// Bytes of Q (+ output O) per unit and of the KV cache per unit.
+    pub fn q_bytes_per_unit(&self) -> u64 {
+        self.effective_q_rows() * self.head_dim as u64 * self.dtype.bytes()
+    }
+    pub fn o_bytes_per_unit(&self) -> u64 {
+        self.effective_q_rows() * self.v_head_dim as u64 * self.dtype.bytes()
+    }
+    /// Bytes per KV row as stored (MLA caches the shared latent once:
+    /// V is a subview of the K latent, so only `head_dim` columns exist).
+    pub fn kv_row_bytes(&self) -> u64 {
+        match self.variant {
+            AttentionVariant::MlaAbsorbed => self.head_dim as u64 * self.dtype.bytes(),
+            _ => (self.head_dim + self.v_head_dim) as u64 * self.dtype.bytes(),
+        }
+    }
+
+    pub fn kv_bytes_per_unit(&self) -> u64 {
+        // K is head_dim wide, V is v_head_dim wide; MLA stores the shared
+        // compressed c^KV once (head_dim already includes the rope part).
+        match self.variant {
+            AttentionVariant::MlaAbsorbed => self.seq_kv as u64 * self.head_dim as u64 * self.dtype.bytes(),
+            _ => self.seq_kv as u64 * (self.head_dim + self.v_head_dim) as u64 * self.dtype.bytes(),
+        }
+    }
+
+    /// Compulsory (ideal) HBM traffic: read Q and KV once, write O once.
+    pub fn ideal_io_bytes(&self) -> u64 {
+        self.independent_units() * (self.q_bytes_per_unit() + self.kv_bytes_per_unit() + self.o_bytes_per_unit())
+    }
+
+    /// FlashAttention HBM I/O (paper §III-A): each of the `N_outer` row
+    /// blocks re-reads the whole KV. `m` is the per-tile block size.
+    pub fn flash_io_bytes(&self, m: u32) -> u64 {
+        self.io_bytes_with_flattening(m, 1)
+    }
+
+    /// FlatAttention HBM I/O with an `n`-wide tile group (paper §III-A):
+    /// the group collectively holds an (N·Br, N·Bc) block, dividing the KV
+    /// re-read factor by `n`.
+    pub fn io_bytes_with_flattening(&self, m: u32, n: u32) -> u64 {
+        let rows = self.effective_q_rows();
+        let block = (m as u64 * n as u64).min(rows.max(1));
+        let n_outer = rows.div_ceil(block.max(1));
+        self.independent_units()
+            * (rows * self.head_dim as u64 * self.dtype.bytes()
+                + rows * self.v_head_dim as u64 * self.dtype.bytes()
+                + n_outer * self.kv_bytes_per_unit())
+    }
+
+    /// Arithmetic intensity against compulsory traffic (FLOP/byte).
+    pub fn ideal_intensity(&self) -> f64 {
+        self.flops() as f64 / self.ideal_io_bytes() as f64
+    }
+
+    /// True if the kernel is compute-bound on `cfg` at ideal traffic.
+    pub fn is_compute_bound(&self, cfg: &ChipConfig) -> bool {
+        self.ideal_intensity() >= cfg.ridge_flops_per_byte()
+    }
+
+    /// Roofline-limited runtime (seconds) on `cfg` at ideal traffic.
+    pub fn roofline_seconds(&self, cfg: &ChipConfig) -> f64 {
+        let compute = self.flops() as f64 / cfg.peak_flops();
+        let memory = self.ideal_io_bytes() as f64 / cfg.hbm.total_bandwidth_bytes_per_s;
+        compute.max(memory)
+    }
+
+    /// Short label, e.g. `MHA-prefill hd128 sq4096`.
+    pub fn label(&self) -> String {
+        match self.phase {
+            Phase::Prefill => format!("{}-prefill hd{} sq{}", self.variant.label(), self.head_dim, self.seq_q),
+            Phase::Decode => format!("{}-decode hd{} kv{}", self.variant.label(), self.head_dim, self.seq_kv),
+            Phase::SpecDecode { sp } => {
+                format!("{}-decode hd{} sp{} kv{}", self.variant.label(), self.head_dim, sp, self.seq_kv)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mha_prefill_flops() {
+        let s = AttentionShape::mha_prefill(1, 1, 64, 128, Dtype::Fp16);
+        // causal prefill: 2·S²·(D+Dv)/2 = S²·2D
+        assert_eq!(s.flops(), 128 * 128 * 2 * 64);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_prefill_long_is_compute_bound() {
+        let cfg = ChipConfig::table1();
+        let dec = AttentionShape::mha_decode(2, 32, 128, 4096, 1, Dtype::Fp16);
+        assert!(!dec.is_compute_bound(&cfg));
+        let pre = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+        assert!(pre.is_compute_bound(&cfg));
+    }
+
+    #[test]
+    fn flash_vs_flat_io_ratio_matches_paper() {
+        // §III-A: S=4096, M=128, N=8 → 6.6× theoretical HBM reduction.
+        let s = AttentionShape::mha_prefill(1, 1, 128, 4096, Dtype::Fp16);
+        let flash = s.flash_io_bytes(128) as f64;
+        let flat = s.io_bytes_with_flattening(128, 8) as f64;
+        let ratio = flash / flat;
+        assert!((ratio - 6.6).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn flat_full_flattening_16x_reduction() {
+        // §V-A headline: 16× lower HBM traffic at D=128, S=4096, N=32.
+        let s = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+        let flash = s.flash_io_bytes(128) as f64;
+        let flat = s.io_bytes_with_flattening(128, 32) as f64;
+        let ratio = flash / flat;
+        assert!((ratio - 16.5).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gqa_groups_queries() {
+        let s = AttentionShape::gqa_decode(1, 32, 8, 128, 4096, 1, Dtype::Fp16);
+        assert_eq!(s.kv_heads, 4);
+        assert_eq!(s.effective_q_rows(), 8);
+        assert_eq!(s.independent_units(), 4);
+    }
+
+    #[test]
+    fn mla_absorbed_dimensions() {
+        let s = AttentionShape::mla_absorbed_decode(1, 128, 512, 64, 4096, 2, Dtype::Fp8);
+        assert_eq!(s.head_dim, 576);
+        assert_eq!(s.v_head_dim, 512);
+        assert_eq!(s.kv_heads, 1);
+        assert_eq!(s.effective_q_rows(), 256);
+        // KV cache stores the compressed latent once, not per head.
+        assert_eq!(s.kv_bytes_per_unit(), 4096 * 576);
+    }
+
+    #[test]
+    fn mla_has_high_intensity() {
+        // Weight absorption turns MLA decode into a GEMM-rich MQA: its
+        // arithmetic intensity is far higher than MHA decode (the reason
+        // FlashMLA still underuses GH200 but FlatAttention does not).
+        let mla = AttentionShape::mla_absorbed_decode(64, 128, 512, 64, 4096, 2, Dtype::Fp8);
+        let mha = AttentionShape::mha_decode(64, 32, 128, 4096, 1, Dtype::Fp16);
+        assert!(mla.ideal_intensity() > 20.0 * mha.ideal_intensity());
+    }
+
+    #[test]
+    fn spec_decode_multiplies_rows() {
+        let s1 = AttentionShape::mha_decode(1, 32, 128, 4096, 1, Dtype::Fp16);
+        let s2 = AttentionShape::mha_decode(1, 32, 128, 4096, 4, Dtype::Fp16);
+        assert_eq!(s2.flops(), 4 * s1.flops());
+    }
+
+    #[test]
+    fn io_monotone_in_flattening() {
+        let s = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+        let mut last = u64::MAX;
+        for n in [1u32, 2, 4, 8, 16, 32] {
+            let io = s.io_bytes_with_flattening(128, n);
+            assert!(io <= last);
+            last = io;
+        }
+        // And never below compulsory traffic.
+        assert!(last >= s.ideal_io_bytes());
+    }
+}

@@ -1,0 +1,414 @@
+//! DeepSeek-v3 decoder workload (paper §III-E, Appendix B) plus the model
+//! configurations used in Fig. 1a (Qwen-chat-7B, DeepSeek-v3-16B/671B).
+//!
+//! Performance depends only on tensor shapes, precision and routing
+//! statistics, all public in the DeepSeek-v3 technical report; weights are
+//! synthetic (see DESIGN.md §Substitutions).
+
+
+
+use crate::arch::config::Dtype;
+use crate::workload::attention::{AttentionShape, Phase};
+
+/// DeepSeek-style MLA + MoE decoder configuration.
+#[derive(Debug, Clone)]
+pub struct DeepSeekConfig {
+    pub name: String,
+    pub layers: u32,
+    /// Leading dense-FFN layers (DeepSeek-v3: 3).
+    pub dense_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// Per-head no-rope Q/K dim.
+    pub qk_nope_dim: u32,
+    /// Shared rope dim.
+    pub qk_rope_dim: u32,
+    pub v_head_dim: u32,
+    /// KV low-rank (latent) dim d_c.
+    pub kv_lora_rank: u32,
+    /// Q low-rank dim (0 = no Q compression).
+    pub q_lora_rank: u32,
+    /// Routed experts.
+    pub n_experts: u32,
+    pub experts_per_token: u32,
+    pub shared_experts: u32,
+    /// Routed/shared expert intermediate dim.
+    pub expert_inter: u32,
+    /// Dense-layer FFN intermediate dim.
+    pub dense_inter: u32,
+    /// Multi-token prediction: speculative length (1 = disabled).
+    pub mtp_spec_len: u32,
+    /// MTP draft acceptance rate.
+    pub mtp_acceptance: f64,
+}
+
+impl DeepSeekConfig {
+    /// DeepSeek-v3-671B (the paper's end-to-end case study).
+    pub fn v3_671b() -> Self {
+        DeepSeekConfig {
+            name: "DeepSeek-v3-671B".into(),
+            layers: 61,
+            dense_layers: 3,
+            d_model: 7168,
+            n_heads: 128,
+            qk_nope_dim: 128,
+            qk_rope_dim: 64,
+            v_head_dim: 128,
+            kv_lora_rank: 512,
+            q_lora_rank: 1536,
+            n_experts: 256,
+            experts_per_token: 8,
+            shared_experts: 1,
+            expert_inter: 2048,
+            dense_inter: 18432,
+            mtp_spec_len: 2,
+            mtp_acceptance: 0.7,
+        }
+    }
+
+    /// DeepSeek-v3-16B (Fig. 1a's DS16B; DeepSeek-v2-Lite-scale MLA+MoE).
+    pub fn v3_16b() -> Self {
+        DeepSeekConfig {
+            name: "DeepSeek-v3-16B".into(),
+            layers: 27,
+            dense_layers: 1,
+            d_model: 2048,
+            n_heads: 16,
+            qk_nope_dim: 128,
+            qk_rope_dim: 64,
+            v_head_dim: 128,
+            kv_lora_rank: 512,
+            q_lora_rank: 0,
+            n_experts: 64,
+            experts_per_token: 6,
+            shared_experts: 2,
+            expert_inter: 1408,
+            dense_inter: 10944,
+            mtp_spec_len: 1,
+            mtp_acceptance: 1.0,
+        }
+    }
+
+    /// Tokens produced per decoding iteration with MTP speculative decoding
+    /// (1 committed + accepted drafts).
+    pub fn tokens_per_iteration(&self) -> f64 {
+        1.0 + (self.mtp_spec_len.saturating_sub(1)) as f64 * self.mtp_acceptance
+    }
+
+    /// The attention core shape of one decode iteration for `batch` users.
+    pub fn mla_decode_shape(&self, batch: u32, kv_len: u32, dtype: Dtype) -> AttentionShape {
+        AttentionShape::mla_absorbed_decode(
+            batch,
+            self.n_heads,
+            self.kv_lora_rank,
+            self.qk_rope_dim,
+            kv_len,
+            self.mtp_spec_len,
+            dtype,
+        )
+    }
+
+    /// Per-layer KV-cache bytes per user at `kv_len` (compressed latent +
+    /// rope, the MLA cache layout).
+    pub fn kv_cache_bytes_per_user_layer(&self, kv_len: u32, dtype: Dtype) -> u64 {
+        kv_len as u64 * (self.kv_lora_rank + self.qk_rope_dim) as u64 * dtype.bytes()
+    }
+
+    /// Routed-expert weight bytes per layer (all experts).
+    pub fn expert_weight_bytes_per_layer(&self, dtype: Dtype) -> u64 {
+        self.n_experts as u64 * 3 * self.d_model as u64 * self.expert_inter as u64 * dtype.bytes()
+    }
+
+    /// Total parameter count (sanity anchor: v3_671b ≈ 671e9).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let h = self.n_heads as u64;
+        let qk = (self.qk_nope_dim + self.qk_rope_dim) as u64;
+        let dc = self.kv_lora_rank as u64;
+        let attn_per_layer = if self.q_lora_rank > 0 {
+            let ql = self.q_lora_rank as u64;
+            d * ql + ql * h * qk
+        } else {
+            d * h * qk
+        } + d * (dc + self.qk_rope_dim as u64)
+            + dc * h * (self.qk_nope_dim + self.v_head_dim) as u64
+            + h * self.v_head_dim as u64 * d;
+        let moe_layers = (self.layers - self.dense_layers) as u64;
+        let moe_per_layer = (self.n_experts + self.shared_experts) as u64 * 3 * d * self.expert_inter as u64
+            + d * self.n_experts as u64;
+        let dense_per_layer = 3 * d * self.dense_inter as u64;
+        self.layers as u64 * attn_per_layer
+            + moe_layers * moe_per_layer
+            + self.dense_layers as u64 * dense_per_layer
+    }
+}
+
+/// The compute class of one decoder kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KernelClass {
+    /// `batch` independent m×k×n GEMMs (batch>1 for per-head / per-expert).
+    Gemm { m: u64, k: u64, n: u64, batch: u64 },
+    /// An attention core invocation.
+    Attention(AttentionShape),
+    /// Vector-engine work: norms, rope, activations, routing (`elems` total).
+    Vector { elems: u64 },
+}
+
+impl KernelClass {
+    pub fn flops(&self) -> u64 {
+        match self {
+            KernelClass::Gemm { m, k, n, batch } => 2 * m * k * n * batch,
+            KernelClass::Attention(a) => a.flops(),
+            KernelClass::Vector { elems } => *elems,
+        }
+    }
+
+    /// Weight bytes that must stream from HBM (activations excluded).
+    pub fn weight_bytes(&self, dtype: Dtype) -> u64 {
+        match self {
+            KernelClass::Gemm { k, n, batch, .. } => k * n * batch * dtype.bytes(),
+            KernelClass::Attention(a) => a.independent_units() * a.kv_bytes_per_unit(),
+            KernelClass::Vector { .. } => 0,
+        }
+    }
+}
+
+/// One kernel in the decoder flow.
+#[derive(Debug, Clone)]
+pub struct DecoderKernel {
+    pub name: String,
+    pub class: KernelClass,
+}
+
+impl DecoderKernel {
+    fn gemm(name: &str, m: u64, k: u64, n: u64) -> Self {
+        DecoderKernel { name: name.into(), class: KernelClass::Gemm { m, k, n, batch: 1 } }
+    }
+    fn gemm_b(name: &str, m: u64, k: u64, n: u64, batch: u64) -> Self {
+        DecoderKernel { name: name.into(), class: KernelClass::Gemm { m, k, n, batch } }
+    }
+    fn vec(name: &str, elems: u64) -> Self {
+        DecoderKernel { name: name.into(), class: KernelClass::Vector { elems } }
+    }
+
+    pub fn is_attention(&self) -> bool {
+        matches!(self.class, KernelClass::Attention(_))
+    }
+}
+
+/// Per-chip MoE placement for one decode iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct MoePlacement {
+    /// Routed experts resident on this chip (E / EP degree).
+    pub experts_on_chip: u32,
+    /// Average token rows processed per resident expert this iteration
+    /// (global tokens × top-k / E).
+    pub rows_per_expert: u64,
+}
+
+/// Build the kernel flow of one MoE decoder layer for one decode iteration
+/// (paper §III-E / Appendix B). `rows` = batch × speculative length on this
+/// chip; attention runs data-parallel over the chip's own users.
+pub fn decode_layer_kernels(
+    ds: &DeepSeekConfig,
+    batch: u32,
+    kv_len: u32,
+    dtype: Dtype,
+    moe: MoePlacement,
+) -> Vec<DecoderKernel> {
+    let rows = batch as u64 * ds.mtp_spec_len as u64;
+    let d = ds.d_model as u64;
+    let h = ds.n_heads as u64;
+    let qk = (ds.qk_nope_dim + ds.qk_rope_dim) as u64;
+    let dc = ds.kv_lora_rank as u64;
+    let mut v = Vec::new();
+
+    v.push(DecoderKernel::vec("attn.rmsnorm", rows * d));
+    if ds.q_lora_rank > 0 {
+        let ql = ds.q_lora_rank as u64;
+        v.push(DecoderKernel::gemm("attn.q_down (W^DQ)", rows, d, ql));
+        v.push(DecoderKernel::vec("attn.q_norm", rows * ql));
+        v.push(DecoderKernel::gemm("attn.q_up (W^UQ)", rows, ql, h * qk));
+    } else {
+        v.push(DecoderKernel::gemm("attn.q_proj (W^Q)", rows, d, h * qk));
+    }
+    // Weight absorption (Eq. 7/8): project q_nope into the latent space.
+    v.push(DecoderKernel::gemm_b("attn.q_absorb (W^UQK)", rows, ds.qk_nope_dim as u64, dc, h));
+    v.push(DecoderKernel::gemm("attn.kv_down (W^DKV)", rows, d, dc + ds.qk_rope_dim as u64));
+    v.push(DecoderKernel::vec("attn.kv_norm+rope", rows * (dc + 2 * ds.qk_rope_dim as u64)));
+    v.push(DecoderKernel {
+        name: "attn.mla_core".into(),
+        class: KernelClass::Attention(ds.mla_decode_shape(batch, kv_len, dtype)),
+    });
+    // Un-absorb values: latent output back to per-head v dim.
+    v.push(DecoderKernel::gemm_b("attn.v_unabsorb (W^UV)", rows, dc, ds.v_head_dim as u64, h));
+    v.push(DecoderKernel::gemm("attn.o_proj (W^O)", rows, h * ds.v_head_dim as u64, d));
+    v.push(DecoderKernel::vec("ffn.rmsnorm", rows * d));
+    v.push(DecoderKernel::gemm("moe.gate", rows, d, ds.n_experts as u64));
+    v.push(DecoderKernel::vec("moe.routing(top-k)", rows * ds.n_experts as u64));
+    let ei = ds.expert_inter as u64;
+    for s in 0..ds.shared_experts {
+        v.push(DecoderKernel::gemm(&format!("moe.shared{s}.gate_up"), rows, d, 2 * ei));
+        v.push(DecoderKernel::vec(&format!("moe.shared{s}.silu"), rows * ei));
+        v.push(DecoderKernel::gemm(&format!("moe.shared{s}.down"), rows, ei, d));
+    }
+    if moe.experts_on_chip > 0 && moe.rows_per_expert > 0 {
+        v.push(DecoderKernel::gemm_b(
+            "moe.routed.gate_up",
+            moe.rows_per_expert,
+            d,
+            2 * ei,
+            moe.experts_on_chip as u64,
+        ));
+        v.push(DecoderKernel::vec(
+            "moe.routed.silu",
+            moe.rows_per_expert * ei * moe.experts_on_chip as u64,
+        ));
+        v.push(DecoderKernel::gemm_b(
+            "moe.routed.down",
+            moe.rows_per_expert,
+            ei,
+            d,
+            moe.experts_on_chip as u64,
+        ));
+    }
+    v.push(DecoderKernel::vec("residual.add", 2 * rows * d));
+    v
+}
+
+/// FLOP breakdown of a whole model forward, per generated token:
+/// (attention-core FLOPs, all other FLOPs). Fig. 1a.
+pub fn flop_breakdown_per_token(ds: &DeepSeekConfig, phase: Phase, len: u32, dtype: Dtype) -> (f64, f64) {
+    let kv_len = match phase {
+        Phase::Prefill => len / 2, // causal average context
+        _ => len,
+    };
+    let moe = MoePlacement {
+        experts_on_chip: ds.n_experts,
+        rows_per_expert: ((ds.mtp_spec_len as u64) * ds.experts_per_token as u64).div_ceil(ds.n_experts as u64).max(1),
+    };
+    // Per-iteration kernels for batch=1; normalize to per generated token.
+    let kernels = decode_layer_kernels(ds, 1, kv_len, dtype, moe);
+    let mut attn = 0.0;
+    let mut other = 0.0;
+    for k in &kernels {
+        let f = k.class.flops() as f64;
+        if k.is_attention() {
+            attn += f;
+        } else {
+            other += f;
+        }
+    }
+    // Routed expert flops: exactly top-k experts per token (the placement
+    // above over-counts granularity; recompute exactly).
+    let d = ds.d_model as u64 as f64;
+    let ei = ds.expert_inter as f64;
+    let rows = ds.mtp_spec_len as f64;
+    let routed_exact = rows * ds.experts_per_token as f64 * 3.0 * 2.0 * d * ei;
+    let routed_modeled = (2.0 * moe.rows_per_expert as f64 * d * 2.0 * ei + 2.0 * moe.rows_per_expert as f64 * ei * d)
+        * moe.experts_on_chip as f64;
+    other += routed_exact - routed_modeled;
+    let per_tok = ds.tokens_per_iteration();
+    (
+        attn * ds.layers as f64 / per_tok,
+        other * ds.layers as f64 / per_tok,
+    )
+}
+
+/// A classic dense MHA+MLP model (Fig. 1a's Qwen-chat-7B).
+#[derive(Debug, Clone)]
+pub struct DenseModelConfig {
+    pub name: String,
+    pub layers: u32,
+    pub d_model: u32,
+    pub heads: u32,
+    pub head_dim: u32,
+    pub ffn_inter: u32,
+}
+
+impl DenseModelConfig {
+    pub fn qwen7b() -> Self {
+        DenseModelConfig { name: "Qwen-chat-7B".into(), layers: 32, d_model: 4096, heads: 32, head_dim: 128, ffn_inter: 11008 }
+    }
+
+    /// (attention-core FLOPs, other FLOPs) per token.
+    pub fn flop_breakdown_per_token(&self, phase: Phase, len: u32) -> (f64, f64) {
+        let d = self.d_model as f64;
+        let hd = self.head_dim as f64;
+        let h = self.heads as f64;
+        let kv = match phase {
+            Phase::Prefill => (len / 2) as f64,
+            _ => len as f64,
+        };
+        let attn_core = 2.0 * h * kv * (hd + hd);
+        let proj = 2.0 * d * (3.0 * h * hd) + 2.0 * (h * hd) * d;
+        let ffn = 3.0 * 2.0 * d * self.ffn_inter as f64;
+        (attn_core * self.layers as f64, (proj + ffn) * self.layers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_671b() {
+        let ds = DeepSeekConfig::v3_671b();
+        let p = ds.param_count() as f64 / 1e9;
+        assert!((p - 671.0).abs() < 45.0, "params {p}B");
+    }
+
+    #[test]
+    fn mtp_tokens_per_iteration() {
+        let ds = DeepSeekConfig::v3_671b();
+        assert!((ds.tokens_per_iteration() - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_attention_dominates_at_long_context() {
+        // Paper Fig. 1a: DS671B attention reaches ~71% of decode FLOPs at
+        // long context.
+        let ds = DeepSeekConfig::v3_671b();
+        let (attn, other) = flop_breakdown_per_token(&ds, Phase::Decode, 10_000, Dtype::Fp8);
+        let frac = attn / (attn + other);
+        assert!(frac > 0.60 && frac < 0.80, "fraction {frac}");
+        // And much lower for the dense Qwen-7B.
+        let q = DenseModelConfig::qwen7b();
+        let (qa, qo) = q.flop_breakdown_per_token(Phase::Decode, 10_000);
+        let qfrac = qa / (qa + qo);
+        assert!(qfrac < frac / 1.5, "qwen fraction {qfrac}");
+    }
+
+    #[test]
+    fn kernel_flow_has_expected_structure() {
+        let ds = DeepSeekConfig::v3_671b();
+        let moe = MoePlacement { experts_on_chip: 8, rows_per_expert: 16 };
+        let ks = decode_layer_kernels(&ds, 64, 4096, Dtype::Fp8, moe);
+        assert_eq!(ks.iter().filter(|k| k.is_attention()).count(), 1);
+        assert!(ks.iter().any(|k| k.name.contains("q_absorb")));
+        assert!(ks.iter().any(|k| k.name.contains("moe.routed.gate_up")));
+        // Attention core FLOPs must use the absorbed MQA shape.
+        let a = ks.iter().find(|k| k.is_attention()).unwrap();
+        if let KernelClass::Attention(s) = &a.class {
+            assert_eq!(s.head_dim, 576);
+            assert_eq!(s.kv_heads, 1);
+        }
+    }
+
+    #[test]
+    fn kv_cache_fits_wafer_hbm() {
+        // §V-C: b=256 users, kv 4096, 61 layers + weights under 128 GiB.
+        let ds = DeepSeekConfig::v3_671b();
+        let kv = 256 * ds.kv_cache_bytes_per_user_layer(4096, Dtype::Fp8) * ds.layers as u64;
+        let weights_ep32 = ds.param_count() / 32; // EP32 shards experts
+        assert!(kv + weights_ep32 < 128 * (1 << 30), "kv {} GiB", kv >> 30);
+    }
+
+    #[test]
+    fn expert_weights_dominate_params() {
+        let ds = DeepSeekConfig::v3_671b();
+        let moe_layers = (ds.layers - ds.dense_layers) as u64;
+        let experts = ds.expert_weight_bytes_per_layer(Dtype::Fp8) * moe_layers;
+        assert!(experts > ds.param_count() * 9 / 10 * 85 / 100);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload definitions: attention variants (MHA/MQA/GQA/MLA across
+//! prefill / decode / speculative decode) and the DeepSeek-v3 decoder
+//! kernel flow used in the end-to-end evaluation.
+
+pub mod attention;
+pub mod deepseek;
+
+pub use attention::{AttentionShape, AttentionVariant, Phase};
+pub use deepseek::{DecoderKernel, DeepSeekConfig, KernelClass};

@@ -1,0 +1,83 @@
+//! The experiment registry end-to-end: every paper figure/table regenerates
+//! in fast mode and carries its expected structure.
+
+use flatattention::coordinator::experiments;
+
+#[test]
+fn every_experiment_runs_fast() {
+    for (id, _) in experiments::list() {
+        let rep = experiments::run(id, true).unwrap_or_else(|e| panic!("{id}: {e}"));
+        let text = rep.render();
+        assert!(text.len() > 100, "{id}: suspiciously short report");
+        assert!(!rep.rows.is_empty() || id == "tab3", "{id}: no rows");
+    }
+}
+
+#[test]
+fn fig7_reports_hw_advantage() {
+    let rep = experiments::run("fig7", true).unwrap();
+    let text = rep.render();
+    // Large-transfer rows must show double-digit HW-vs-Seq speedups.
+    assert!(text.contains("row multicast"));
+    assert!(text.contains("row sum-reduce"));
+    let has_big_speedup = rep.rows.iter().any(|r| {
+        r.last()
+            .and_then(|s| s.trim_end_matches('x').parse::<f64>().ok())
+            .map(|v| v > 20.0)
+            .unwrap_or(false)
+    });
+    assert!(has_big_speedup, "expected >20x HW-vs-SW.Seq rows:\n{text}");
+}
+
+#[test]
+fn fig8_reports_flat_speedup_note() {
+    let rep = experiments::run("fig8", true).unwrap();
+    assert!(rep.rows.iter().any(|r| r.iter().any(|c| c == "FlatAsync")));
+    assert!(rep.rows.iter().any(|r| r.iter().any(|c| c == "FA-2")));
+}
+
+#[test]
+fn fig12_average_speedup_in_paper_range() {
+    let rep = experiments::run("fig12", true).unwrap();
+    let note = rep.notes.iter().find(|n| n.contains("average speedup")).expect("note");
+    // Parse "average speedup X.Yx".
+    let v: f64 = note
+        .split("average speedup ")
+        .nth(1)
+        .and_then(|s| s.split('x').next())
+        .and_then(|s| s.trim().parse().ok())
+        .expect("parse");
+    assert!(v > 1.2 && v < 3.5, "average speedup {v} (paper: 1.9x)");
+}
+
+#[test]
+fn tab2_contains_all_four_systems() {
+    let rep = experiments::run("tab2", true).unwrap();
+    let text = rep.render();
+    for name in ["CM384", "DS-Prof", "Ours1", "Ours2"] {
+        assert!(text.contains(name), "missing {name}");
+    }
+}
+
+#[test]
+fn fig1a_attention_share_grows_with_context() {
+    let rep = experiments::run("fig1a", true).unwrap();
+    // DS671B decode rows: attention % must increase with len.
+    let ds_rows: Vec<&Vec<String>> = rep
+        .rows
+        .iter()
+        .filter(|r| r[0].contains("671B") && r[1] == "decode")
+        .collect();
+    assert!(ds_rows.len() >= 2);
+    let pct = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+    assert!(pct(&ds_rows.last().unwrap()[3]) > pct(&ds_rows[0][3]));
+}
+
+#[test]
+fn fig11_selects_128_slice() {
+    let rep = experiments::run("fig11", true).unwrap();
+    let row128 = rep.rows.iter().find(|r| r[0] == "128x128").unwrap();
+    assert_eq!(row128.last().unwrap(), "yes");
+    let row256 = rep.rows.iter().find(|r| r[0] == "256x256").unwrap();
+    assert_eq!(row256.last().unwrap(), "NO");
+}

@@ -1,0 +1,114 @@
+//! Wafer-scale end-to-end integration: the paper's §V-C claims as
+//! qualitative invariants of the multichip model.
+
+use flatattention::arch::config::SimFidelity;
+use flatattention::baseline::soa::SoaSystem;
+use flatattention::multichip::d2d::{D2dConfig, WaferSystem};
+use flatattention::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
+use flatattention::multichip::wafer::{batch_sweep, best_under_tpot, ep_plans, ours1, ours2};
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+#[test]
+fn table2_reproduction_shape() {
+    // Ours1 beats DS-Prof on per-chip throughput AND TPOT under the 50 ms
+    // constraint despite 1.5× lower peak system FLOPS.
+    let ds_prof = SoaSystem::ds_prof();
+    let sweep = ours1(SimFidelity::Analytic);
+    let best = best_under_tpot(&sweep, 50.0).expect("operating point");
+    assert!(best.per_chip_tokens_per_s > 2.0 * ds_prof.tokens_per_s_per_chip);
+    assert!(best.tpot_ms < ds_prof.tpot_ms);
+    // System-level: ≥1.5× throughput over the 96-chip DS-Prof system.
+    let sys_speedup = best.system_tokens_per_s / ds_prof.system_tokens_per_s();
+    assert!(sys_speedup > 1.5, "system speedup {sys_speedup}");
+}
+
+#[test]
+fn table2_nvlink_class_still_wins() {
+    let ds_prof = SoaSystem::ds_prof();
+    let sweep = ours2(SimFidelity::Analytic);
+    let best = best_under_tpot(&sweep, 50.0).expect("operating point");
+    assert!(best.per_chip_tokens_per_s > 1.3 * ds_prof.tokens_per_s_per_chip);
+}
+
+#[test]
+fn fig13a_flat_dominates_at_high_batch_not_low() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let plan = ParallelismPlan::new(32, 2);
+    let flat = batch_sweep(&sys, &ds, plan, 4096, AttentionChoice::Flat, SimFidelity::Analytic);
+    let mla = batch_sweep(&sys, &ds, plan, 4096, AttentionChoice::FlashMla, SimFidelity::Analytic);
+    // FlatAttention dominates at every operating point. (The paper shows
+    // parity at low batch because its FlashMLA baseline includes split-KV
+    // latency optimization, which our FA-2-style mapping omits — see
+    // EXPERIMENTS.md §fig13a.)
+    let low = flat[0].system_tokens_per_s / mla[0].system_tokens_per_s;
+    assert!(low > 1.0, "low-batch ratio {low}");
+    // Paper operating point (b=256): a clear throughput win with lower TPOT.
+    let f256 = flat.iter().find(|o| o.batch_per_chip == 256).unwrap();
+    let m256 = mla.iter().find(|o| o.batch_per_chip == 256).unwrap();
+    let hi = f256.system_tokens_per_s / m256.system_tokens_per_s;
+    assert!(hi > 1.25, "b=256 speedup {hi}");
+    assert!(f256.tpot_ms < m256.tpot_ms);
+}
+
+#[test]
+fn fig13c_ep_dominates_pp_at_moderate_batch() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+    let mut best_tput = 0.0;
+    let mut best_plan = String::new();
+    for plan in ep_plans() {
+        let o = ev.evaluate(&sys, &ds, plan, 128, 4096, AttentionChoice::Flat);
+        if o.system_tokens_per_s > best_tput {
+            best_tput = o.system_tokens_per_s;
+            best_plan = plan.label();
+        }
+    }
+    assert!(best_plan.starts_with("EP"), "best plan {best_plan} should use expert parallelism");
+}
+
+#[test]
+fn fig13d_c2c_grows_with_ep_degree() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+    let mut last = 0.0;
+    for plan in [ParallelismPlan::new(8, 8), ParallelismPlan::new(16, 4), ParallelismPlan::new(32, 2), ParallelismPlan::new(64, 1)] {
+        let o = ev.evaluate(&sys, &ds, plan, 256, 4096, AttentionChoice::Flat);
+        assert!(o.layer.c2c_s >= last, "{}: c2c {} < previous {last}", plan.label(), o.layer.c2c_s);
+        last = o.layer.c2c_s;
+    }
+}
+
+#[test]
+fn pp_deepens_tpot_but_keeps_throughput() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+    let ep64 = ev.evaluate(&sys, &ds, ParallelismPlan::new(64, 1), 128, 4096, AttentionChoice::Flat);
+    let ep32pp2 = ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+    // PP halves per-stage layer count: stage time roughly halves, TPOT is
+    // similar (pp× the stage), and throughput is in the same ballpark.
+    let r = ep32pp2.system_tokens_per_s / ep64.system_tokens_per_s;
+    assert!(r > 0.4 && r < 2.5, "throughput ratio {r}");
+}
+
+#[test]
+fn kv_cache_and_weights_fit_hbm_at_b256() {
+    let ds = DeepSeekConfig::v3_671b();
+    let kv = 256 * ds.kv_cache_bytes_per_user_layer(4096, flatattention::arch::config::Dtype::Fp8)
+        * ds.layers as u64;
+    let weights_ep32 = ds.param_count() / 32 + ds.param_count() / 10; // experts sharded + replicated rest
+    assert!(kv + weights_ep32 < 128 * (1 << 30));
+}
+
+#[test]
+fn d2d_group_dims_consistent_with_mesh() {
+    let d = D2dConfig::wafer_8x8();
+    for n in [1u32, 2, 4, 8, 16, 32, 64] {
+        let (gx, gy) = d.group_dims(n);
+        assert_eq!(gx * gy, n);
+        assert!(gx <= d.mesh_x && gy <= d.mesh_y);
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration tests for the DES core: determinism, bound sanity on random
+//! DAGs, and accounting consistency.
+
+use flatattention::sim::{Category, Graph, Op, OpId, ResourceKind, ResourceTable};
+use flatattention::util::SplitMix64;
+
+/// Build a random layered DAG over a few resources.
+fn random_graph(seed: u64, n_ops: usize, n_res: usize) -> (Graph, u64, u64) {
+    let mut rng = SplitMix64::new(seed);
+    let mut table = ResourceTable::new();
+    let res: Vec<_> = (0..n_res).map(|i| table.add(ResourceKind::Generic(i as u32))).collect();
+    let mut g = Graph::new(table);
+    let mut ids: Vec<OpId> = Vec::new();
+    let mut total: u64 = 0;
+    let mut critical: Vec<u64> = Vec::new();
+    for i in 0..n_ops {
+        let dur = 1 + rng.next_range(100);
+        total += dur;
+        let ndeps = if i == 0 { 0 } else { rng.next_range(3.min(i as u64) + 1) as usize };
+        let mut deps = Vec::new();
+        let mut cp = 0u64;
+        for _ in 0..ndeps {
+            let d = rng.next_range(i as u64) as usize;
+            deps.push(ids[d]);
+            cp = cp.max(critical[d]);
+        }
+        let r = res[rng.next_range(n_res as u64) as usize];
+        let cat = if rng.next_f64() < 0.5 { Category::Gemm } else { Category::Vector };
+        let id = g.push(Op::new(Some(r), dur, cat).flops(dur), &deps);
+        ids.push(id);
+        critical.push(cp + dur);
+    }
+    (g, total, critical.into_iter().max().unwrap_or(0))
+}
+
+#[test]
+fn deterministic_across_runs() {
+    for seed in 0..5 {
+        let (g1, _, _) = random_graph(seed, 500, 7);
+        let (g2, _, _) = random_graph(seed, 500, 7);
+        let r1 = g1.simulate();
+        let r2 = g2.simulate();
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.busy_by_cat, r2.busy_by_cat);
+        assert_eq!(r1.exposed.per_cat, r2.exposed.per_cat);
+    }
+}
+
+#[test]
+fn makespan_bounded_by_critical_path_and_serial_sum() {
+    for seed in 10..30 {
+        let (g, total, critical) = random_graph(seed, 300, 5);
+        let r = g.simulate();
+        assert!(r.makespan >= critical, "makespan {} < critical path {critical}", r.makespan);
+        assert!(r.makespan <= total, "makespan {} > serial sum {total}", r.makespan);
+    }
+}
+
+#[test]
+fn single_resource_serializes_to_total() {
+    let (g, total, _) = random_graph(99, 200, 1);
+    let r = g.simulate();
+    assert_eq!(r.makespan, total);
+}
+
+#[test]
+fn exposed_sums_to_at_most_makespan() {
+    for seed in 40..50 {
+        let (g, _, _) = random_graph(seed, 400, 4);
+        let r = g.simulate();
+        let exposed_sum: u64 = r.exposed.per_cat.iter().sum();
+        assert!(exposed_sum <= r.makespan);
+        assert_eq!(exposed_sum, r.exposed.union_busy);
+    }
+}
+
+#[test]
+fn busy_by_cat_ge_exposed() {
+    for seed in 60..70 {
+        let (g, _, _) = random_graph(seed, 400, 4);
+        let r = g.simulate();
+        for (i, &b) in r.busy_by_cat.iter().enumerate() {
+            assert!(b >= r.exposed.per_cat[i], "cat {i}: busy {b} < exposed {}", r.exposed.per_cat[i]);
+        }
+    }
+}
+
+#[test]
+fn flops_accounting_is_exact() {
+    let (g, total, _) = random_graph(7, 250, 3);
+    let r = g.simulate();
+    // random_graph sets flops == duration per op.
+    assert_eq!(r.flops, total);
+}
+
+#[test]
+fn more_resources_never_slower() {
+    for seed in 80..85 {
+        let (g_few, _, _) = random_graph(seed, 300, 2);
+        let (g_many, _, _) = random_graph(seed, 300, 2);
+        let few = g_few.simulate().makespan;
+        let many = g_many.simulate().makespan;
+        assert_eq!(few, many); // identical construction is a smoke check
+        // Rebuild with more resources but the same op/dep structure is not
+        // directly comparable (resource assignment differs); instead check
+        // the degenerate bound: 1 resource ≥ N resources for the same seed
+        // and op count via serial sum property (covered above).
+    }
+}

@@ -1,0 +1,174 @@
+//! Property-based tests (hand-rolled generator over SplitMix64 — proptest is
+//! unavailable in the offline build): randomized invariants on the routing/
+//! tiling/scheduling layers and the functional executors.
+
+use flatattention::arch::collective::{multicast_latency_cycles, reduce_latency_cycles, CollectiveImpl};
+use flatattention::arch::config::{ChipConfig, Dtype};
+use flatattention::dataflow::tiling::{choose_tiling, l1_working_set_kv, Concurrency};
+use flatattention::dataflow::FlatTiling;
+use flatattention::exec::functional;
+use flatattention::exec::tensor::Mat;
+use flatattention::util::SplitMix64;
+use flatattention::workload::attention::AttentionShape;
+
+const CASES: u64 = 60;
+
+#[test]
+fn prop_flat_functional_always_matches_reference() {
+    // For arbitrary shapes and group tilings, Algorithm 2's distributed
+    // online softmax must equal dense attention.
+    let mut rng = SplitMix64::new(2026);
+    for case in 0..CASES {
+        let sq = 1 + rng.next_range(96) as usize;
+        let skv = 1 + rng.next_range(160) as usize;
+        let d = [4usize, 8, 16, 32][rng.next_range(4) as usize];
+        let dv = [4usize, 8, 16, 32][rng.next_range(4) as usize];
+        let gx = 1 + rng.next_range(6) as u32;
+        let gy = 1 + rng.next_range(4) as u32;
+        let slice_r = 1 + rng.next_range(24) as u32;
+        let slice_c = 1 + rng.next_range(24) as u32;
+        let q = Mat::random(sq, d, &mut rng);
+        let k = Mat::random(skv, d, &mut rng);
+        let v = Mat::random(skv, dv, &mut rng);
+        let t = FlatTiling { gx, gy, slice_r, slice_c };
+        let flat = functional::flat_attention(&q, &k, &v, &t);
+        let reference = functional::reference_attention(&q, &k, &v, false);
+        let err = flat.max_abs_diff(&reference);
+        assert!(
+            err < 2e-4,
+            "case {case}: sq={sq} skv={skv} d={d} dv={dv} tiling={t:?}: err {err}"
+        );
+    }
+}
+
+#[test]
+fn prop_flash_functional_matches_reference() {
+    let mut rng = SplitMix64::new(99);
+    for _ in 0..CASES {
+        let sq = 1 + rng.next_range(80) as usize;
+        let skv = 1 + rng.next_range(120) as usize;
+        let d = [4usize, 8, 16][rng.next_range(3) as usize];
+        let br = 1 + rng.next_range(32) as usize;
+        let bc = 1 + rng.next_range(32) as usize;
+        let q = Mat::random(sq, d, &mut rng);
+        let k = Mat::random(skv, d, &mut rng);
+        let v = Mat::random(skv, d, &mut rng);
+        let f = functional::flash_attention(&q, &k, &v, br, bc);
+        let r = functional::reference_attention(&q, &k, &v, false);
+        assert!(f.max_abs_diff(&r) < 2e-4);
+    }
+}
+
+#[test]
+fn prop_tiling_strategy_invariants() {
+    // For any attention shape: the chosen group tiles the mesh, slices cover
+    // the problem, and the working set fits L1.
+    let cfg = ChipConfig::table1();
+    let mut rng = SplitMix64::new(7);
+    for case in 0..CASES {
+        let batch = 1 + rng.next_range(8) as u32;
+        let heads = [8u32, 16, 32, 64][rng.next_range(4) as usize];
+        let d = [64u32, 128][rng.next_range(2) as usize];
+        let shape = match rng.next_range(4) {
+            0 => AttentionShape::mha_prefill(batch, heads, d, 256 << rng.next_range(5), Dtype::Fp16),
+            1 => AttentionShape::mha_decode(batch, heads, d, 1024 << rng.next_range(4), 1 + rng.next_range(4) as u32, Dtype::Fp16),
+            2 => AttentionShape::gqa_decode(batch, heads, [2u32, 4, 8][rng.next_range(3) as usize].min(heads), d, 4096, 2, Dtype::Fp16),
+            _ => AttentionShape::mla_absorbed_decode(batch * 16, 128, 512, 64, 4096, 2, Dtype::Fp8),
+        };
+        let t = choose_tiling(&cfg, &shape, true);
+        assert!(cfg.mesh_x % t.gx == 0, "case {case}: gx {} does not tile mesh", t.gx);
+        assert!(cfg.mesh_y % t.gy == 0, "case {case}: gy {} does not tile mesh", t.gy);
+        assert!(t.slice_r >= 1 && t.slice_c >= 1);
+        let kv_cols = shape.kv_row_bytes() / shape.dtype.bytes();
+        let ws = l1_working_set_kv(
+            t.slice_r as u64,
+            t.slice_c as u64,
+            shape.head_dim as u64,
+            shape.v_head_dim as u64,
+            kv_cols,
+            shape.dtype,
+            true,
+            Concurrency::TwoRowBlocks,
+        );
+        assert!(ws.fits(&cfg.tile), "case {case}: {t:?} working set {} KiB", ws.total_kib());
+        // Slices never exceed the problem.
+        assert!(t.slice_r as u64 <= shape.effective_q_rows().max(1));
+        assert!(t.slice_c as u64 <= shape.seq_kv.max(1) as u64);
+    }
+}
+
+#[test]
+fn prop_io_model_monotonicity() {
+    // Flattening never increases modeled HBM traffic; traffic never drops
+    // below the compulsory minimum.
+    let mut rng = SplitMix64::new(13);
+    for _ in 0..CASES {
+        let shape = AttentionShape::mha_prefill(
+            1 + rng.next_range(4) as u32,
+            8 << rng.next_range(3),
+            [64u32, 128][rng.next_range(2) as usize],
+            256 << rng.next_range(6),
+            Dtype::Fp16,
+        );
+        let m = [32u32, 64, 128][rng.next_range(3) as usize];
+        let mut last = u64::MAX;
+        for n in [1u32, 2, 4, 8, 16, 32] {
+            let io = shape.io_bytes_with_flattening(m, n);
+            assert!(io <= last);
+            assert!(io >= shape.ideal_io_bytes());
+            last = io;
+        }
+    }
+}
+
+#[test]
+fn prop_collective_latency_monotonicity() {
+    // Latency grows with width and payload for every implementation, and
+    // HW ≤ SW.Tree ≤ SW.Seq at equal parameters (large payloads).
+    let cfg = ChipConfig::table1();
+    let mut rng = SplitMix64::new(17);
+    for _ in 0..CASES {
+        let w1 = 2 + rng.next_range(15) as u32;
+        let w2 = w1 + 1 + rng.next_range(16) as u32;
+        let b1 = 1024 << rng.next_range(8);
+        let b2 = b1 * 2;
+        for imp in [CollectiveImpl::Hw, CollectiveImpl::SwTree, CollectiveImpl::SwSeq] {
+            assert!(multicast_latency_cycles(&cfg, imp, w1, b1) <= multicast_latency_cycles(&cfg, imp, w2, b1));
+            assert!(multicast_latency_cycles(&cfg, imp, w1, b1) <= multicast_latency_cycles(&cfg, imp, w1, b2));
+            assert!(reduce_latency_cycles(&cfg, imp, w1, b1, Dtype::Fp16) <= reduce_latency_cycles(&cfg, imp, w2, b1, Dtype::Fp16));
+        }
+        let big = 1 << 20;
+        let hw = multicast_latency_cycles(&cfg, CollectiveImpl::Hw, w2, big);
+        let tree = multicast_latency_cycles(&cfg, CollectiveImpl::SwTree, w2, big);
+        let seq = multicast_latency_cycles(&cfg, CollectiveImpl::SwSeq, w2, big);
+        assert!(hw <= tree && tree <= seq, "w={w2}: hw {hw} tree {tree} seq {seq}");
+    }
+}
+
+#[test]
+fn prop_attention_flops_scaling() {
+    // FLOPs scale linearly in batch, heads and kv length for decode shapes.
+    let mut rng = SplitMix64::new(23);
+    for _ in 0..CASES {
+        let b = 1 + rng.next_range(16) as u32;
+        let h = 4 << rng.next_range(4);
+        let kv = 512 << rng.next_range(5);
+        let base = AttentionShape::mha_decode(b, h, 128, kv, 1, Dtype::Fp16);
+        let b2 = AttentionShape::mha_decode(2 * b, h, 128, kv, 1, Dtype::Fp16);
+        let kv2 = AttentionShape::mha_decode(b, h, 128, 2 * kv, 1, Dtype::Fp16);
+        assert_eq!(b2.flops(), 2 * base.flops());
+        assert_eq!(kv2.flops(), 2 * base.flops());
+    }
+}
+
+#[test]
+fn prop_causal_flops_half_of_full() {
+    let mut rng = SplitMix64::new(29);
+    for _ in 0..CASES {
+        let s = 128 << rng.next_range(5);
+        let mut shape = AttentionShape::mha_prefill(2, 8, 64, s, Dtype::Fp16);
+        let causal = shape.flops();
+        shape.causal = false;
+        assert_eq!(causal * 2, shape.flops());
+    }
+}
