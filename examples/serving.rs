@@ -1,0 +1,100 @@
+//! Request-level serving on the wafer-scale system: continuous batching,
+//! KV-cache admission and offered-load sweeps on top of the steady-state
+//! decode model of `examples/deepseek_wafer.rs`.
+//!
+//! 1. Synthesizes three seeded traffic patterns (Poisson, bursty, diurnal).
+//! 2. Sweeps offered load on the Table II EP32-PP2 configuration and prints
+//!    the goodput / TTFT / TPOT curves with the saturation knee.
+//! 3. Compares KV admission policies on a memory-constrained wafer.
+//!
+//! Run: `cargo run --release --example serving`
+
+use anyhow::Result;
+
+use flatattention::metrics::fmt_pct;
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::serve::request::{generate_trace, TraceConfig, TrafficPattern};
+use flatattention::serve::scheduler::{AdmissionPolicy, SchedulerConfig};
+use flatattention::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
+use flatattention::serve::KvCacheModel;
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+fn main() -> Result<()> {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let kv = KvCacheModel::new(&sys, &ds, cfg.plan, cfg.dtype);
+    println!("# Serving DeepSeek-v3-671B on the 64-chip wafer (EP32-PP2)\n");
+    println!(
+        "per chip: {} GiB HBM − {:.1} GiB weights → {:.2} M KV tokens/column ({} columns)",
+        sys.chip.hbm.capacity_bytes() >> 30,
+        kv.weight_bytes_per_chip as f64 / (1u64 << 30) as f64,
+        kv.column_capacity_tokens as f64 / 1e6,
+        kv.columns
+    );
+
+    // --- 1+2. Offered-load sweep per traffic pattern -----------------------
+    let horizon = 20.0;
+    let rates = [250.0, 500.0, 1000.0, 2000.0, 4000.0];
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    // Periods divide the horizon so realized load matches the offered rps.
+    for pattern in [
+        TrafficPattern::Poisson,
+        TrafficPattern::Bursty { period_s: horizon / 4.0, duty: 0.3, burst_factor: 4.0 },
+        TrafficPattern::Diurnal { period_s: horizon, trough_factor: 0.25 },
+    ] {
+        println!("\n## {} traffic, horizon {horizon} s", pattern.label());
+        println!(
+            "{:>6} {:>7} {:>8} {:>10} {:>10} {:>10} {:>11} {:>9} {:>8}",
+            "rps", "done", "backlog", "TTFT p99", "TPOT p50", "TPOT p99", "tok/s", "goodput", "KV peak"
+        );
+        let outcomes = load_sweep(&sys, &ds, &cfg, pattern, &rates, 2026, horizon, &kernels, &stages);
+        for o in &outcomes {
+            println!(
+                "{:>6.0} {:>7} {:>8} {:>8.0}ms {:>8.1}ms {:>8.1}ms {:>11.0} {:>9.0} {:>8}",
+                o.offered_rps,
+                o.completed,
+                o.in_flight + o.queued,
+                o.ttft_ms.p99,
+                o.tpot_ms.p50,
+                o.tpot_ms.p99,
+                o.system_tokens_per_s,
+                o.goodput_rps,
+                fmt_pct(o.peak_kv_occupancy)
+            );
+        }
+        match saturation_knee(&outcomes, cfg.slo_tpot_ms) {
+            Some(rate) => println!("→ saturation knee at {rate:.0} rps (p99 TPOT crosses the {} ms SLO)", cfg.slo_tpot_ms),
+            None => println!("→ no saturation inside the sweep"),
+        }
+    }
+
+    // --- 3. Admission policies under memory pressure -----------------------
+    println!("\n## KV admission policies on a 24 GiB-HBM wafer, poisson 1200 rps");
+    let mut small = WaferSystem::paper();
+    small.chip.hbm.capacity_gib_per_stack = 12;
+    let trace = generate_trace(&TraceConfig::new(77, TrafficPattern::Poisson, 1200.0, 10.0));
+    for (name, policy) in [
+        ("reserve-full", AdmissionPolicy::ReserveFull),
+        ("on-demand+preempt", AdmissionPolicy::OnDemandPreempt),
+    ] {
+        let pcfg = ServeConfig {
+            scheduler: SchedulerConfig { policy, ..Default::default() },
+            ..Default::default()
+        };
+        let (o, _) = simulate(&small, &ds, &trace, &pcfg, 10.0, name, 1200.0, &kernels, &stages);
+        println!(
+            "  {:<18} done {:>5}  preempt {:>5}  TPOT p99 {:>6.1} ms  goodput {:>5.0} rps  KV peak {}",
+            name,
+            o.completed,
+            o.preemptions,
+            o.tpot_ms.p99,
+            o.goodput_rps,
+            fmt_pct(o.peak_kv_occupancy)
+        );
+    }
+    println!("\nserving example OK");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Bench harness for the serving simulator: the full offered-load sweep
+//! (3 traffic patterns × 6 load points) plus the KV-policy comparison.
+//! (criterion is unavailable in the offline build; this is a plain
+//! `harness = false` driver with std timing.)
+
+fn main() {
+    for id in ["serve_load", "serve_policies"] {
+        let t0 = std::time::Instant::now();
+        let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
+        rep.print();
+        println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+    }
+}

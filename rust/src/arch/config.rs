@@ -77,11 +77,19 @@ pub struct HbmConfig {
     pub total_bandwidth_bytes_per_s: f64,
     /// Access latency in cycles (paper §V-B: ≈200 cycles).
     pub latency_cycles: u64,
+    /// Capacity per stack in GiB (HBM4: 64 GiB → the §V-C chip's two
+    /// stacks give the 128 GiB used for weights + KV cache).
+    pub capacity_gib_per_stack: u64,
 }
 
 impl HbmConfig {
     pub fn channels(&self) -> u32 {
         self.stacks * self.channels_per_stack
+    }
+
+    /// Total HBM capacity in bytes across all stacks.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.stacks as u64 * self.capacity_gib_per_stack * (1 << 30)
     }
 }
 
@@ -140,6 +148,34 @@ impl ChipConfig {
         cycles as f64 / (self.freq_ghz * 1e9)
     }
 
+    /// Identity string for memoization keys. Unlike `name`, this tracks the
+    /// performance-relevant fields, so a preset mutated in place (e.g. a
+    /// bandwidth ablation) cannot alias a cache entry of the original.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}:{}x{}@{:.4}GHz:ce{}x{}+{}:v{}+{}:l1-{}x{}:dma{}:noc{}+{}+{}:hbm{:.4e}x{}ch+{}cyc+{}GiB",
+            self.name,
+            self.mesh_x,
+            self.mesh_y,
+            self.freq_ghz,
+            self.tile.ce_rows,
+            self.tile.ce_cols,
+            self.tile.gemm_setup_cycles,
+            self.tile.vector_flops_per_cycle,
+            self.tile.vector_startup_cycles,
+            self.tile.l1_kib,
+            self.tile.l1_bytes_per_cycle,
+            self.tile.dma_issue_cycles,
+            self.noc.link_bytes_per_cycle,
+            self.noc.router_latency_cycles,
+            self.noc.sw_sync_cycles,
+            self.hbm.total_bandwidth_bytes_per_s,
+            self.hbm.channels(),
+            self.hbm.latency_cycles,
+            self.hbm.capacity_gib_per_stack * self.hbm.stacks as u64,
+        )
+    }
+
     /// Ridge point (FLOP/byte) of the chip roofline.
     pub fn ridge_flops_per_byte(&self) -> f64 {
         self.peak_flops() / self.hbm.total_bandwidth_bytes_per_s
@@ -175,6 +211,7 @@ impl ChipConfig {
                 channels_per_stack: 32,
                 total_bandwidth_bytes_per_s: 2.0e12,
                 latency_cycles: 200,
+                capacity_gib_per_stack: 64,
             },
         }
     }
@@ -263,6 +300,14 @@ mod tests {
         // ~1011 TFLOPS / 2 TB/s ≈ 506 FLOP/byte.
         let r = c.ridge_flops_per_byte();
         assert!(r > 400.0 && r < 600.0, "ridge {r}");
+    }
+
+    #[test]
+    fn wafer_hbm_capacity_128_gib() {
+        // §V-C: two HBM4 stacks per chip, 128 GiB total for weights + KV.
+        let c = ChipConfig::wafer_fp8();
+        assert_eq!(c.hbm.capacity_bytes(), 128 * (1u64 << 30));
+        assert_eq!(ChipConfig::table1().hbm.capacity_bytes(), 64 * (1u64 << 30));
     }
 
     #[test]

@@ -25,9 +25,15 @@
 //!   produced by the build-time Python layer.
 //! - [`multichip`] — the wafer-scale multi-die system model: D2D mesh,
 //!   PP / EP / hybrid parallelism, throughput + TPOT estimation.
+//! - [`serve`] — the request-level serving simulator layered on the decode
+//!   model: synthetic arrival traces (Poisson/bursty/diurnal), KV-cache
+//!   admission from the MLA cache layout, continuous batching with chunked
+//!   prefill and preemption, and offered-load sweeps reporting TTFT/TPOT
+//!   percentiles and SLO goodput.
 //! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
 //! - [`coordinator`] — the experiment registry (one entry per paper
-//!   figure/table), sweep runner and report emitters.
+//!   figure/table, plus the `serve_*` serving experiments), sweep runner and
+//!   report emitters.
 //!
 //! Python (JAX + Pallas) is build-time only: `make artifacts` lowers the
 //! attention models to HLO text once; the Rust binary then runs standalone.
@@ -39,6 +45,7 @@ pub mod workload;
 pub mod exec;
 pub mod runtime;
 pub mod multichip;
+pub mod serve;
 pub mod baseline;
 pub mod coordinator;
 pub mod metrics;

@@ -7,8 +7,14 @@
 //! flatattention experiment <id> [--fast]     # regenerate a paper figure/table
 //! flatattention all [--fast]                 # run every experiment
 //! flatattention simulate [options]           # simulate one attention kernel
+//! flatattention serve [--fast] [--policies]  # request-level serving simulation
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
+//!
+//! `serve` drives the continuous-batching serving simulator (experiment ids
+//! `serve_load` / `serve_policies`): deterministic goodput-vs-offered-load
+//! curves with TTFT/TPOT p50/p95/p99 for Poisson, bursty and diurnal
+//! traffic on the Table II EP32-PP2 wafer configuration.
 
 use anyhow::{bail, Context, Result};
 
@@ -51,6 +57,7 @@ fn run() -> Result<()> {
             println!("  flatattention simulate [--dataflow fa2|fa3|flat] [--phase prefill|decode]");
             println!("                         [--seq N] [--kv N] [--heads N] [--dim N] [--batch N]");
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
+            println!("  flatattention serve [--fast] [--policies]");
             println!("  flatattention verify");
             Ok(())
         }
@@ -122,6 +129,17 @@ fn run() -> Result<()> {
                 100.0 * m.hbm_bw_utilization
             );
             println!("NoC        : {}", flatattention::util::fmt_bytes(m.noc_bytes));
+            Ok(())
+        }
+        "serve" => {
+            // Shorthand for the serving experiments: the load sweep, plus
+            // the KV-policy comparison when --policies is given.
+            let rep = experiments::run("serve_load", flag("--fast"))?;
+            rep.print();
+            if flag("--policies") {
+                println!();
+                experiments::run("serve_policies", flag("--fast"))?.print();
+            }
             Ok(())
         }
         "verify" => verify(),

@@ -69,6 +69,42 @@ impl KernelMetrics {
     }
 }
 
+/// Latency-distribution summary (milliseconds or any unit the caller used):
+/// the serving layer's TTFT/TPOT headline numbers.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    /// Nearest-rank percentiles over `values` (order irrelevant; empty input
+    /// yields all-zero summary).
+    pub fn from_values(values: &[f64]) -> Self {
+        if values.is_empty() {
+            return Percentiles::default();
+        }
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("non-finite latency sample"));
+        let pick = |q: f64| -> f64 {
+            let rank = (q * v.len() as f64).ceil() as usize;
+            v[rank.clamp(1, v.len()) - 1]
+        };
+        Percentiles {
+            n: v.len(),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
 /// Pretty-print a ratio as `x.x×`.
 pub fn fmt_speedup(x: f64) -> String {
     format!("{x:.1}×")
@@ -97,6 +133,29 @@ mod tests {
         // One tile at full rate = 1/1024 of chip peak.
         assert!((k.compute_utilization - 1.0 / 1024.0).abs() < 1e-6);
         assert!((k.matrix_utilization_active - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let vals: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::from_values(&vals);
+        assert_eq!(p.n, 100);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert!((p.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_small_and_empty() {
+        assert_eq!(Percentiles::from_values(&[]), Percentiles::default());
+        let p = Percentiles::from_values(&[7.0]);
+        assert_eq!((p.p50, p.p95, p.p99, p.max), (7.0, 7.0, 7.0, 7.0));
+        // Unsorted input is handled.
+        let p = Percentiles::from_values(&[3.0, 1.0, 2.0]);
+        assert_eq!(p.p50, 2.0);
+        assert_eq!(p.p99, 3.0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Fig. 5e.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::config::{ChipConfig, Dtype, SimFidelity};
 use crate::dataflow::{simulate_kernel, AttentionDataflow};
@@ -84,34 +85,75 @@ pub struct DecodeOutcome {
     pub attention_utilization: f64,
 }
 
+/// Thread-safe memoization of kernel simulations, shareable across
+/// [`DecodeEvaluator`] instances and `std::thread` sweep workers: identical
+/// (chip, fidelity, dataflow, kernel-shape) keys hit the cache no matter
+/// which sweep point or serving iteration asked first.
+#[derive(Clone, Default)]
+pub struct KernelCache {
+    inner: Arc<Mutex<HashMap<String, KernelMetrics>>>,
+}
+
+impl KernelCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `key`, simulating outside the lock on a miss so concurrent
+    /// workers overlap their kernel simulations instead of serializing.
+    fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> KernelMetrics) -> KernelMetrics {
+        if let Some(m) = self.inner.lock().unwrap().get(&key) {
+            return m.clone();
+        }
+        let m = f();
+        self.inner.lock().unwrap().entry(key).or_insert(m).clone()
+    }
+}
+
 /// Decode evaluator with kernel-simulation memoization (identical kernel
-/// shapes across layers/batches hit the cache).
+/// shapes across layers/batches/sweep points hit the cache).
 pub struct DecodeEvaluator {
-    cache: HashMap<String, KernelMetrics>,
+    cache: KernelCache,
     pub fidelity: SimFidelity,
 }
 
 impl DecodeEvaluator {
     pub fn new(fidelity: SimFidelity) -> Self {
-        DecodeEvaluator { cache: HashMap::new(), fidelity }
+        Self::with_cache(fidelity, KernelCache::new())
     }
 
-    fn kernel(&mut self, cfg: &ChipConfig, class: &KernelClass, choice: AttentionChoice) -> KernelMetrics {
-        let key = format!("{}|{:?}|{:?}|{:?}", cfg.name, self.fidelity, choice, class);
-        if let Some(m) = self.cache.get(&key) {
-            return m.clone();
-        }
-        let m = simulate_kernel(
-            cfg,
-            class,
-            |s| match choice {
-                AttentionChoice::Flat => AttentionDataflow::auto_flat(cfg, s),
-                AttentionChoice::FlashMla => AttentionDataflow::Fa2,
-            },
-            self.fidelity,
-        );
-        self.cache.insert(key, m.clone());
-        m
+    /// Evaluator backed by a shared (possibly cross-thread) cache.
+    pub fn with_cache(fidelity: SimFidelity, cache: KernelCache) -> Self {
+        DecodeEvaluator { cache, fidelity }
+    }
+
+    fn kernel(&mut self, cfg: &ChipConfig, chip_fp: &str, class: &KernelClass, choice: AttentionChoice) -> KernelMetrics {
+        // Keyed on the full chip fingerprint, not `cfg.name`: presets are
+        // routinely mutated in place (bandwidth/capacity ablations), and a
+        // name-keyed cache would silently serve the original's results.
+        // The fingerprint is built once per `evaluate` and passed in — the
+        // per-kernel format only appends the cheap varying parts.
+        let key = format!("{chip_fp}|{:?}|{:?}|{:?}", self.fidelity, choice, class);
+        let fidelity = self.fidelity;
+        self.cache.get_or_insert_with(key, || {
+            simulate_kernel(
+                cfg,
+                class,
+                |s| match choice {
+                    AttentionChoice::Flat => AttentionDataflow::auto_flat(cfg, s),
+                    AttentionChoice::FlashMla => AttentionDataflow::Fa2,
+                },
+                fidelity,
+            )
+        })
     }
 
     pub fn cache_len(&self) -> usize {
@@ -130,6 +172,7 @@ impl DecodeEvaluator {
     ) -> DecodeOutcome {
         assert_eq!(plan.chips(), sys.chips(), "plan must cover the wafer");
         let cfg = &sys.chip;
+        let chip_fp = cfg.fingerprint();
         let dtype = Dtype::Fp8;
         let sp = ds.mtp_spec_len.max(1) as u64;
         let rows = batch_per_chip as u64 * sp;
@@ -147,7 +190,7 @@ impl DecodeEvaluator {
         let mut br = LayerBreakdown::default();
         let mut attn_util = 0.0;
         for k in &kernels {
-            let m = self.kernel(cfg, &k.class, choice);
+            let m = self.kernel(cfg, &chip_fp, &k.class, choice);
             match &k.class {
                 KernelClass::Attention(_) => {
                     br.attention_s += m.seconds;
@@ -166,8 +209,8 @@ impl DecodeEvaluator {
         let dense_ffn_s = {
             let d = ds.d_model as u64;
             let di = ds.dense_inter as u64;
-            let up = self.kernel(cfg, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 }, choice);
-            let down = self.kernel(cfg, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 }, choice);
+            let up = self.kernel(cfg, &chip_fp, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 }, choice);
+            let down = self.kernel(cfg, &chip_fp, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 }, choice);
             up.seconds + down.seconds
         };
         let moe_s = {
@@ -175,7 +218,7 @@ impl DecodeEvaluator {
             let mut s = 0.0;
             for k in &kernels {
                 if k.name.starts_with("moe.") {
-                    s += self.kernel(cfg, &k.class, choice).seconds;
+                    s += self.kernel(cfg, &chip_fp, &k.class, choice).seconds;
                 }
             }
             s
@@ -290,5 +333,22 @@ mod tests {
         let n1 = ev.cache_len();
         ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
         assert_eq!(ev.cache_len(), n1, "second evaluation should be fully cached");
+    }
+
+    #[test]
+    fn shared_cache_across_evaluators() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cache = KernelCache::new();
+        let mut a = DecodeEvaluator::with_cache(SimFidelity::Analytic, cache.clone());
+        a.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        let n1 = cache.len();
+        assert!(n1 > 0);
+        // A second evaluator over the same shared cache adds nothing new for
+        // the identical operating point.
+        let mut b = DecodeEvaluator::with_cache(SimFidelity::Analytic, cache.clone());
+        b.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        assert_eq!(cache.len(), n1);
+        assert_eq!(b.cache_len(), n1);
     }
 }

@@ -3,7 +3,9 @@
 
 use crate::arch::config::SimFidelity;
 use crate::multichip::d2d::WaferSystem;
-use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, DecodeOutcome, ParallelismPlan};
+use crate::multichip::parallelism::{
+    AttentionChoice, DecodeEvaluator, DecodeOutcome, KernelCache, ParallelismPlan,
+};
 use crate::workload::deepseek::DeepSeekConfig;
 
 /// The batch-per-chip sweep of Fig. 13a/13c.
@@ -29,8 +31,49 @@ pub fn batch_sweep(
     choice: AttentionChoice,
     fidelity: SimFidelity,
 ) -> Vec<DecodeOutcome> {
-    let mut ev = DecodeEvaluator::new(fidelity);
+    batch_sweep_cached(sys, ds, plan, kv_len, choice, fidelity, KernelCache::new())
+}
+
+/// [`batch_sweep`] backed by a caller-supplied kernel cache, so repeated or
+/// overlapping sweeps (Fig. 13a's two series, Fig. 13c's five plans, the
+/// serving simulator's stage-time probes) never re-simulate an identical
+/// (plan, batch, kv_len) kernel.
+pub fn batch_sweep_cached(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    plan: ParallelismPlan,
+    kv_len: u32,
+    choice: AttentionChoice,
+    fidelity: SimFidelity,
+    cache: KernelCache,
+) -> Vec<DecodeOutcome> {
+    let mut ev = DecodeEvaluator::with_cache(fidelity, cache);
     BATCH_SWEEP.iter().map(|&b| ev.evaluate(sys, ds, plan, b, kv_len, choice)).collect()
+}
+
+/// Run several independent sweep series concurrently on `std::thread`
+/// workers sharing one kernel cache. Results come back in `specs` order, and
+/// each series is identical to what a sequential [`batch_sweep`] produces
+/// (the cache stores deterministic simulation results, so completion order
+/// cannot change any value).
+pub fn parallel_batch_sweeps(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    specs: &[(ParallelismPlan, AttentionChoice)],
+    kv_len: u32,
+    fidelity: SimFidelity,
+    cache: &KernelCache,
+) -> Vec<Vec<DecodeOutcome>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|&(plan, choice)| {
+                let cache = cache.clone();
+                scope.spawn(move || batch_sweep_cached(sys, ds, plan, kv_len, choice, fidelity, cache))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+    })
 }
 
 /// Best outcome under a TPOT constraint (the Table II operating point rule:
@@ -87,6 +130,32 @@ mod tests {
         let ds_prof = crate::baseline::soa::SoaSystem::ds_prof();
         let ratio = best.per_chip_tokens_per_s / ds_prof.tokens_per_s_per_chip;
         assert!(ratio > 1.2, "per-chip speedup {ratio}");
+    }
+
+    #[test]
+    fn parallel_sweeps_match_sequential() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let specs = [
+            (ParallelismPlan::new(32, 2), AttentionChoice::Flat),
+            (ParallelismPlan::new(32, 2), AttentionChoice::FlashMla),
+        ];
+        let cache = KernelCache::new();
+        let par = parallel_batch_sweeps(&sys, &ds, &specs, 4096, SimFidelity::Analytic, &cache);
+        assert!(!cache.is_empty(), "shared cache should be populated");
+        for (i, &(plan, choice)) in specs.iter().enumerate() {
+            let seq = batch_sweep(&sys, &ds, plan, 4096, choice, SimFidelity::Analytic);
+            assert_eq!(par[i].len(), seq.len());
+            for (a, b) in par[i].iter().zip(&seq) {
+                assert_eq!(a.batch_per_chip, b.batch_per_chip);
+                assert!((a.stage_seconds - b.stage_seconds).abs() < 1e-15, "thread workers must not perturb results");
+                assert!((a.system_tokens_per_s - b.system_tokens_per_s).abs() < 1e-9);
+            }
+        }
+        // Re-running over the same cache adds no new kernel entries.
+        let n = cache.len();
+        parallel_batch_sweeps(&sys, &ds, &specs, 4096, SimFidelity::Analytic, &cache);
+        assert_eq!(cache.len(), n);
     }
 
     #[test]

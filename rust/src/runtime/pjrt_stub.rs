@@ -1,0 +1,56 @@
+//! Stub PJRT runtime used when the `pjrt` feature (and with it the external
+//! `xla` bindings) is disabled. API-compatible with the real
+//! `runtime::pjrt`; every entry point fails with an actionable message, and
+//! callers that probe artifacts first never reach these paths.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::exec::tensor::Mat;
+
+/// Placeholder for the compiled-HLO executable of the real runtime.
+pub struct HloExecutable {
+    name: String,
+}
+
+impl HloExecutable {
+    /// Always fails: the offline build carries no PJRT client.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature (artifact {}); \
+             rebuild with `--features pjrt` and the xla_extension bindings",
+            path.as_ref().display()
+        )
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn run_f32(&self, _inputs: &[&Mat], _out_rows: usize, _out_cols: usize) -> Result<Mat> {
+        bail!("PJRT runtime unavailable (stub build)")
+    }
+
+    pub fn run_f32_raw(&self, _inputs: &[(&[f32], Vec<i64>)]) -> Result<Vec<f32>> {
+        bail!("PJRT runtime unavailable (stub build)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_feature_hint() {
+        let e = match HloExecutable::load("artifacts/mha_prefill.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("stub must refuse to load"),
+        };
+        assert!(format!("{e:#}").contains("pjrt"));
+    }
+}

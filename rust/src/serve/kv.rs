@@ -1,0 +1,178 @@
+//! Per-chip KV-cache capacity model for the wafer-scale serving simulator.
+//!
+//! Budget = HBM capacity − resident weights, spent on MLA latent KV. Under
+//! an EP×PP plan the wafer decomposes into `ep` *columns* (one chip per
+//! pipeline stage); a user's KV lives on all `pp` chips of its column, each
+//! chip holding the `layers/pp` layers of its stage. Because stages hold
+//! equal layer counts, any chip of the column saturates at the same user
+//! token count — so admission tracks one token budget per column.
+//!
+//! Weights per chip: routed experts are sharded EP-ways within each stage's
+//! layers; everything else (attention, shared experts, gates, dense FFN) is
+//! replicated across the EP group but split across pipeline stages.
+
+use crate::arch::config::Dtype;
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::ParallelismPlan;
+use crate::workload::deepseek::DeepSeekConfig;
+
+/// Static KV capacity figures for one (system, model, plan) combination.
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheModel {
+    /// Bytes one cached token occupies on one chip (its stage's layer share
+    /// of the MLA latent + rope cache).
+    pub bytes_per_token_per_chip: u64,
+    /// Weight bytes resident per chip.
+    pub weight_bytes_per_chip: u64,
+    /// HBM bytes per chip.
+    pub hbm_capacity_bytes: u64,
+    /// KV token capacity of one EP column (== one chip's budget divided by
+    /// its per-token share).
+    pub column_capacity_tokens: u64,
+    /// Number of EP columns.
+    pub columns: u32,
+}
+
+impl KvCacheModel {
+    pub fn new(sys: &WaferSystem, ds: &DeepSeekConfig, plan: ParallelismPlan, dtype: Dtype) -> Self {
+        let layers_per_stage = (ds.layers as u64).div_ceil(plan.pp as u64);
+        let bytes_per_token_per_chip =
+            (ds.kv_lora_rank + ds.qk_rope_dim) as u64 * dtype.bytes() * layers_per_stage;
+
+        let moe_layers = (ds.layers - ds.dense_layers) as u64;
+        let expert_bytes_total = ds.expert_weight_bytes_per_layer(dtype) * moe_layers;
+        let all_bytes = ds.param_count() * dtype.bytes();
+        let rest_bytes = all_bytes.saturating_sub(expert_bytes_total);
+        let weight_bytes_per_chip = expert_bytes_total / (plan.ep as u64 * plan.pp as u64)
+            + rest_bytes / plan.pp as u64;
+
+        let hbm_capacity_bytes = sys.chip.hbm.capacity_bytes();
+        let kv_budget = hbm_capacity_bytes.saturating_sub(weight_bytes_per_chip);
+        KvCacheModel {
+            bytes_per_token_per_chip,
+            weight_bytes_per_chip,
+            hbm_capacity_bytes,
+            column_capacity_tokens: kv_budget / bytes_per_token_per_chip.max(1),
+            columns: plan.ep,
+        }
+    }
+
+    /// Maximum concurrently resident users per column, if each held
+    /// `tokens_per_user` KV tokens.
+    pub fn users_per_column_at(&self, tokens_per_user: u64) -> u64 {
+        self.column_capacity_tokens / tokens_per_user.max(1)
+    }
+}
+
+/// Mutable KV occupancy of one EP column during simulation. Token counts
+/// are `f64` because MTP speculative decode grows context by a fractional
+/// expected amount (`tokens_per_iteration`) per iteration.
+#[derive(Debug, Clone)]
+pub struct KvColumn {
+    pub capacity_tokens: f64,
+    pub held_tokens: f64,
+    /// High-water mark of `held_tokens` over the run.
+    pub peak_tokens: f64,
+}
+
+impl KvColumn {
+    pub fn new(capacity_tokens: u64) -> Self {
+        KvColumn { capacity_tokens: capacity_tokens as f64, held_tokens: 0.0, peak_tokens: 0.0 }
+    }
+
+    pub fn free_tokens(&self) -> f64 {
+        (self.capacity_tokens - self.held_tokens).max(0.0)
+    }
+
+    pub fn fits(&self, tokens: f64) -> bool {
+        self.held_tokens + tokens <= self.capacity_tokens
+    }
+
+    /// Reserve `tokens`; returns false (and reserves nothing) on overflow.
+    pub fn reserve(&mut self, tokens: f64) -> bool {
+        if !self.fits(tokens) {
+            return false;
+        }
+        self.held_tokens += tokens;
+        self.peak_tokens = self.peak_tokens.max(self.held_tokens);
+        true
+    }
+
+    pub fn release(&mut self, tokens: f64) {
+        self.held_tokens = (self.held_tokens - tokens).max(0.0);
+    }
+
+    pub fn occupancy_frac(&self) -> f64 {
+        if self.capacity_tokens <= 0.0 {
+            0.0
+        } else {
+            self.held_tokens / self.capacity_tokens
+        }
+    }
+
+    pub fn peak_frac(&self) -> f64 {
+        if self.capacity_tokens <= 0.0 {
+            0.0
+        } else {
+            self.peak_tokens / self.capacity_tokens
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> KvCacheModel {
+        KvCacheModel::new(
+            &WaferSystem::paper(),
+            &DeepSeekConfig::v3_671b(),
+            ParallelismPlan::new(32, 2),
+            Dtype::Fp8,
+        )
+    }
+
+    #[test]
+    fn weights_leave_room_for_kv() {
+        let m = model();
+        // EP32-PP2 on the 128 GiB chip: weights well under capacity …
+        assert!(m.weight_bytes_per_chip < m.hbm_capacity_bytes / 2, "weights {} GiB", m.weight_bytes_per_chip >> 30);
+        // … and the leftover holds at least the Table II operating point:
+        // 256 users × pp waves at kv 4096+ per chip-column.
+        assert!(m.users_per_column_at(4096 + 1024) >= 512, "users {}", m.users_per_column_at(5120));
+    }
+
+    #[test]
+    fn per_token_bytes_match_mla_layout() {
+        let m = model();
+        let ds = DeepSeekConfig::v3_671b();
+        // (512 latent + 64 rope) × 1 B × ceil(61/2) layers.
+        assert_eq!(m.bytes_per_token_per_chip, (512 + 64) * 31);
+        assert_eq!(
+            m.bytes_per_token_per_chip,
+            ds.kv_cache_bytes_per_user_layer(1, Dtype::Fp8) * 31
+        );
+    }
+
+    #[test]
+    fn deeper_pp_shrinks_per_chip_share() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let a = KvCacheModel::new(&sys, &ds, ParallelismPlan::new(32, 2), Dtype::Fp8);
+        let b = KvCacheModel::new(&sys, &ds, ParallelismPlan::new(16, 4), Dtype::Fp8);
+        assert!(b.bytes_per_token_per_chip < a.bytes_per_token_per_chip);
+        assert!(b.weight_bytes_per_chip < a.weight_bytes_per_chip + (1 << 30));
+    }
+
+    #[test]
+    fn column_accounting_and_watermark() {
+        let mut c = KvColumn::new(1000);
+        assert!(c.reserve(600.0));
+        assert!(!c.reserve(500.0), "overflow must be refused");
+        assert!(c.reserve(400.0));
+        assert!((c.occupancy_frac() - 1.0).abs() < 1e-12);
+        c.release(700.0);
+        assert!((c.held_tokens - 300.0).abs() < 1e-12);
+        assert!((c.peak_frac() - 1.0).abs() < 1e-12, "watermark sticks at the peak");
+    }
+}

@@ -1,0 +1,35 @@
+//! Request-level serving simulator on top of the wafer-scale decode model
+//! (the layer the paper's §V-C steady-state operating points abstract away).
+//!
+//! The steady-state `multichip::parallelism::DecodeEvaluator` answers "what
+//! is TPOT/throughput at a *fixed* batch and KV length"; production serving
+//! instead sees request arrivals, mixed prompt/output lengths, KV-cache
+//! pressure and queueing. This module closes that gap with a deterministic,
+//! iteration-level simulation:
+//!
+//! - [`request`] — seeded synthetic traces: Poisson / bursty / diurnal
+//!   arrivals × prompt/output-length mixtures, with coupled thinning for
+//!   load sweeps.
+//! - [`kv`] — per-chip KV capacity from the MLA latent cache layout
+//!   (`DeepSeekConfig`), weights subtracted, organized per EP column.
+//! - [`scheduler`] — continuous batching: iteration-level batch formation,
+//!   chunked prefill riding decode iterations, FCFS admission with
+//!   reserve-full or on-demand+preemption KV policies.
+//! - [`sim`] — the event loop driving memoized stage times from
+//!   [`DecodeEvaluator`](crate::multichip::parallelism::DecodeEvaluator),
+//!   emitting TTFT/TPOT p50/p95/p99, system tokens/s and SLO goodput, plus
+//!   [`sim::load_sweep`] for goodput-vs-offered-load curves and
+//!   [`sim::saturation_knee`] detection.
+//!
+//! Entry points: `flatattention serve` (CLI), experiment ids `serve_load`
+//! and `serve_policies`, `examples/serving.rs`, `benches/serve_load.rs`.
+
+pub mod kv;
+pub mod request;
+pub mod scheduler;
+pub mod sim;
+
+pub use kv::KvCacheModel;
+pub use request::{generate_trace, thin_trace, LengthProfile, Request, TraceConfig, TrafficPattern};
+pub use scheduler::{AdmissionPolicy, Scheduler, SchedulerConfig};
+pub use sim::{load_sweep, saturation_knee, simulate, ServeConfig, ServeOutcome, StageTimeCache};

@@ -1,0 +1,289 @@
+//! Request and trace model for the serving simulator: seeded synthetic
+//! arrival processes (Poisson, bursty on/off, diurnal) with mixed
+//! prompt/output-length distributions.
+//!
+//! All generators are deterministic functions of a [`SplitMix64`] seed, so a
+//! trace — and therefore a whole serving simulation — replays bit-exactly.
+//! Non-homogeneous arrivals use Lewis–Shedler thinning of a homogeneous
+//! Poisson process at the peak rate; [`thin_trace`] additionally supports
+//! *coupled* subsampling (per-request uniforms), so the trace at offered
+//! load `r` is a superset of the trace at any `r' < r` — the property the
+//! load-monotonicity invariants lean on.
+
+use crate::util::SplitMix64;
+
+/// One inference request of the serving workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt (prefill) length in tokens.
+    pub prompt_tokens: u32,
+    /// Requested output (decode) length in tokens.
+    pub output_tokens: u32,
+}
+
+impl Request {
+    /// Total KV footprint in tokens once fully decoded.
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens as u64 + self.output_tokens as u64
+    }
+}
+
+/// Arrival-process shape; every variant has unit mean intensity so
+/// [`TraceConfig::rate_rps`] is always the *average* offered load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficPattern {
+    /// Homogeneous Poisson arrivals.
+    Poisson,
+    /// On/off modulated Poisson: a fraction `duty` of each `period_s` runs
+    /// at `burst_factor`× the off-phase intensity.
+    Bursty { period_s: f64, duty: f64, burst_factor: f64 },
+    /// Sinusoidal intensity with trough at `trough_factor`× the mean
+    /// (0 < trough_factor ≤ 1), period `period_s`.
+    Diurnal { period_s: f64, trough_factor: f64 },
+}
+
+impl TrafficPattern {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrafficPattern::Poisson => "poisson",
+            TrafficPattern::Bursty { .. } => "bursty",
+            TrafficPattern::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Intensity multiplier at time `t` (mean 1 over a period).
+    pub fn intensity(&self, t: f64) -> f64 {
+        match *self {
+            TrafficPattern::Poisson => 1.0,
+            TrafficPattern::Bursty { period_s, duty, burst_factor } => {
+                // lo/hi chosen so duty·hi + (1−duty)·lo = 1, hi = bf·lo.
+                let lo = 1.0 / (duty * burst_factor + (1.0 - duty));
+                let phase = (t / period_s).fract();
+                if phase < duty {
+                    burst_factor * lo
+                } else {
+                    lo
+                }
+            }
+            TrafficPattern::Diurnal { period_s, trough_factor } => {
+                let amp = 1.0 - trough_factor.clamp(0.0, 1.0);
+                1.0 + amp * (2.0 * std::f64::consts::PI * t / period_s).sin()
+            }
+        }
+    }
+
+    /// Peak intensity multiplier (thinning envelope).
+    fn peak_intensity(&self) -> f64 {
+        match *self {
+            TrafficPattern::Poisson => 1.0,
+            TrafficPattern::Bursty { duty, burst_factor, .. } => {
+                burst_factor / (duty * burst_factor + (1.0 - duty))
+            }
+            TrafficPattern::Diurnal { trough_factor, .. } => 2.0 - trough_factor.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Prompt/output length mixture: exponential lengths clamped to
+/// [min, max] — a heavy-ish right tail without needing special functions.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthProfile {
+    pub prompt_mean: f64,
+    pub prompt_min: u32,
+    pub prompt_max: u32,
+    pub output_mean: f64,
+    pub output_min: u32,
+    pub output_max: u32,
+}
+
+impl LengthProfile {
+    /// Chat-like default: ~512-token prompts (≤4096), ~192-token outputs
+    /// (≤1024).
+    pub fn chat() -> Self {
+        LengthProfile {
+            prompt_mean: 512.0,
+            prompt_min: 32,
+            prompt_max: 4096,
+            output_mean: 192.0,
+            output_min: 8,
+            output_max: 1024,
+        }
+    }
+
+    /// Short-prompt, long-generation mix (agentic decode-heavy traffic).
+    pub fn decode_heavy() -> Self {
+        LengthProfile {
+            prompt_mean: 128.0,
+            prompt_min: 16,
+            prompt_max: 1024,
+            output_mean: 512.0,
+            output_min: 32,
+            output_max: 2048,
+        }
+    }
+
+    fn sample(&self, rng: &mut SplitMix64, mean: f64, min: u32, max: u32) -> u32 {
+        let u = rng.next_f64();
+        let x = -mean * (1.0 - u).ln();
+        (x.round() as u64).clamp(min as u64, max as u64) as u32
+    }
+
+    pub fn sample_prompt(&self, rng: &mut SplitMix64) -> u32 {
+        self.sample(rng, self.prompt_mean, self.prompt_min, self.prompt_max)
+    }
+
+    pub fn sample_output(&self, rng: &mut SplitMix64) -> u32 {
+        self.sample(rng, self.output_mean, self.output_min, self.output_max)
+    }
+}
+
+/// Everything needed to synthesize a trace deterministically.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub pattern: TrafficPattern,
+    /// Mean offered load in requests/second.
+    pub rate_rps: f64,
+    /// Trace horizon in seconds (arrivals beyond it are not generated).
+    pub horizon_s: f64,
+    pub lengths: LengthProfile,
+}
+
+impl TraceConfig {
+    pub fn new(seed: u64, pattern: TrafficPattern, rate_rps: f64, horizon_s: f64) -> Self {
+        TraceConfig { seed, pattern, rate_rps, horizon_s, lengths: LengthProfile::chat() }
+    }
+}
+
+/// Generate the arrival trace for `cfg` (sorted by arrival time).
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
+    let mut arr_rng = SplitMix64::new(cfg.seed ^ 0xA11C_E5A1_7EAF_0001);
+    let mut len_rng = SplitMix64::new(cfg.seed ^ 0x5EED_0F0F_1E15_0002);
+    let peak_rate = cfg.rate_rps * cfg.pattern.peak_intensity();
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    if peak_rate <= 0.0 {
+        return out;
+    }
+    loop {
+        // Exponential inter-arrival at the envelope rate …
+        t += -(1.0 - arr_rng.next_f64()).ln() / peak_rate;
+        if t >= cfg.horizon_s {
+            break;
+        }
+        // … thinned down to the instantaneous intensity.
+        let accept = arr_rng.next_f64() * cfg.pattern.peak_intensity() < cfg.pattern.intensity(t);
+        // Lengths are always drawn (accepted or not) so the accepted
+        // subsequence stays aligned across nearby configurations.
+        let prompt = cfg.lengths.sample_prompt(&mut len_rng);
+        let output = cfg.lengths.sample_output(&mut len_rng);
+        if accept {
+            out.push(Request { id, arrival_s: t, prompt_tokens: prompt, output_tokens: output });
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Coupled subsampling: keep each request iff its per-id uniform is below
+/// `keep_fraction`. The kept set at a higher fraction is a strict superset
+/// of the kept set at a lower fraction (same `seed`), which makes offered
+/// load comparable across points of a load sweep.
+pub fn thin_trace(trace: &[Request], keep_fraction: f64, seed: u64) -> Vec<Request> {
+    if keep_fraction >= 1.0 {
+        return trace.to_vec();
+    }
+    trace
+        .iter()
+        .filter(|r| {
+            let mut rng = SplitMix64::new(seed ^ r.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            rng.next_f64() < keep_fraction
+        })
+        .copied()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig::new(7, TrafficPattern::Poisson, 100.0, 10.0);
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        for r in &a {
+            assert!(r.arrival_s < 10.0);
+            assert!(r.prompt_tokens >= 32 && r.prompt_tokens <= 4096);
+            assert!(r.output_tokens >= 8 && r.output_tokens <= 1024);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let cfg = TraceConfig::new(11, TrafficPattern::Poisson, 200.0, 50.0);
+        let t = generate_trace(&cfg);
+        let rate = t.len() as f64 / 50.0;
+        assert!((rate - 200.0).abs() < 20.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn modulated_patterns_hold_mean_rate() {
+        for pattern in [
+            TrafficPattern::Bursty { period_s: 5.0, duty: 0.3, burst_factor: 4.0 },
+            TrafficPattern::Diurnal { period_s: 10.0, trough_factor: 0.2 },
+        ] {
+            let cfg = TraceConfig::new(13, pattern, 200.0, 50.0);
+            let t = generate_trace(&cfg);
+            let rate = t.len() as f64 / 50.0;
+            assert!((rate - 200.0).abs() < 25.0, "{}: empirical rate {rate}", pattern.label());
+        }
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_duty_window() {
+        let pattern = TrafficPattern::Bursty { period_s: 5.0, duty: 0.2, burst_factor: 8.0 };
+        let cfg = TraceConfig::new(17, pattern, 100.0, 50.0);
+        let t = generate_trace(&cfg);
+        let in_burst = t.iter().filter(|r| (r.arrival_s / 5.0).fract() < 0.2).count();
+        let frac = in_burst as f64 / t.len() as f64;
+        // duty·hi = 0.2·8/(0.2·8+0.8) = 2/3 of arrivals in 20% of the time.
+        assert!(frac > 0.5, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn thinning_is_nested_and_rate_proportional() {
+        let cfg = TraceConfig::new(23, TrafficPattern::Poisson, 400.0, 20.0);
+        let full = generate_trace(&cfg);
+        let half = thin_trace(&full, 0.5, 99);
+        let quarter = thin_trace(&full, 0.25, 99);
+        // Nested: every kept-at-0.25 id is kept at 0.5.
+        let half_ids: std::collections::HashSet<u64> = half.iter().map(|r| r.id).collect();
+        assert!(quarter.iter().all(|r| half_ids.contains(&r.id)));
+        let f = half.len() as f64 / full.len() as f64;
+        assert!((f - 0.5).abs() < 0.06, "kept fraction {f}");
+    }
+
+    #[test]
+    fn intensity_means_are_unit() {
+        for pattern in [
+            TrafficPattern::Poisson,
+            TrafficPattern::Bursty { period_s: 5.0, duty: 0.3, burst_factor: 4.0 },
+            TrafficPattern::Diurnal { period_s: 10.0, trough_factor: 0.2 },
+        ] {
+            let n = 100_000;
+            let mean: f64 = (0..n).map(|i| pattern.intensity(i as f64 * 10.0 / n as f64)).sum::<f64>() / n as f64;
+            assert!((mean - 1.0).abs() < 0.01, "{}: mean {mean}", pattern.label());
+            assert!(pattern.peak_intensity() + 1e-12 >= pattern.intensity(3.3));
+        }
+    }
+}

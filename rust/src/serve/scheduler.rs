@@ -1,0 +1,500 @@
+//! Iteration-level continuous-batching scheduler over the wafer's EP
+//! columns and PP waves.
+//!
+//! Topology recap (matches the wave-pipelined decode model of
+//! `multichip::parallelism`): an EP×PP plan gives `ep` *columns* × `pp`
+//! *waves*. Each (column, wave) cell owns up to `max_batch_per_chip` user
+//! slots on one chip; the KV budget is per *column* (all waves of a column
+//! share the same chips' HBM, see `serve::kv`).
+//!
+//! Per wave-iteration the scheduler:
+//! 1. admits waiting requests FCFS into the wave's freest column, gated by
+//!    the KV admission policy;
+//! 2. (on-demand policy) reserves this iteration's KV growth, preempting the
+//!    newest resident of an over-committed column — preempted requests lose
+//!    their cache and re-enter the queue head for recomputation;
+//! 3. executes the iteration: chunked prefill first (budget
+//!    `prefill_chunk_tokens` per chip), the prefill-finishing iteration
+//!    emits the first token, decoding users advance by
+//!    `tokens_per_iteration`, finished users free their slot and KV.
+
+use std::collections::VecDeque;
+
+use crate::serve::kv::{KvCacheModel, KvColumn};
+use crate::serve::request::Request;
+
+/// KV admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Reserve the full final context (prompt + output + margin) at
+    /// admission: no preemption can ever be needed (vLLM's conservative
+    /// mode). Queue-delays under pressure instead.
+    ReserveFull,
+    /// Reserve only the current context and grow per iteration; on
+    /// overflow, preempt the newest resident for recomputation.
+    OnDemandPreempt,
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Decode user slots per (column, wave) cell — per-chip batch ceiling.
+    pub max_batch_per_chip: u32,
+    /// Prefill tokens one chip may process per iteration (chunked prefill
+    /// riding the decode iterations).
+    pub prefill_chunk_tokens: u32,
+    pub policy: AdmissionPolicy,
+    /// Safety margin on reservations (draft-token overshoot of MTP).
+    pub reserve_margin_tokens: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch_per_chip: 512,
+            // SLO-aware chunk: small enough that one chip's prefill work
+            // cannot stretch the whole EP group's iteration far past the
+            // decode TPOT budget (the reason chunked prefill exists), large
+            // enough that aggregate prefill bandwidth clears the offered
+            // prompt load below the intended saturation knee.
+            prefill_chunk_tokens: 1024,
+            policy: AdmissionPolicy::ReserveFull,
+            reserve_margin_tokens: 4.0,
+        }
+    }
+}
+
+/// A resident request in one (column, wave) cell.
+#[derive(Debug, Clone)]
+struct Active {
+    rec: usize,
+    admit_seq: u64,
+    /// Context tokens still to prefill (full context on re-admission after
+    /// a preemption — recomputation).
+    remaining_prefill: u32,
+    /// Output tokens generated so far (fractional: MTP expected tokens).
+    generated: f64,
+    /// KV tokens currently reserved on the column for this request.
+    held_tokens: f64,
+}
+
+/// A queued request (fresh arrival or preempted resident).
+#[derive(Debug, Clone, Copy)]
+pub struct Waiting {
+    pub rec: usize,
+    pub generated: f64,
+}
+
+/// What happened during one wave iteration.
+#[derive(Debug, Clone, Default)]
+pub struct WaveEvents {
+    /// Records whose first output token was emitted this iteration.
+    pub first_tokens: Vec<usize>,
+    /// Records that finished this iteration.
+    pub completions: Vec<usize>,
+    /// Output tokens produced this iteration (completion-clamped).
+    pub tokens_produced: f64,
+    /// Prefill tokens processed this iteration.
+    pub prefill_tokens: u64,
+    /// Users that ran a decode step this iteration.
+    pub decode_users: u32,
+}
+
+pub struct Scheduler<'t> {
+    trace: &'t [Request],
+    cfg: SchedulerConfig,
+    /// Expected tokens per decode iteration (MTP).
+    tokens_per_iter: f64,
+    pub columns: Vec<KvColumn>,
+    /// actives[wave][column] → residents in admission order.
+    actives: Vec<Vec<Vec<Active>>>,
+    pub queue: VecDeque<Waiting>,
+    admit_seq: u64,
+    pub preemptions: u64,
+    /// Records rejected at admission (can never fit a column).
+    pub rejected: Vec<usize>,
+}
+
+impl<'t> Scheduler<'t> {
+    pub fn new(
+        trace: &'t [Request],
+        kv: &KvCacheModel,
+        waves: u32,
+        cfg: SchedulerConfig,
+        tokens_per_iter: f64,
+    ) -> Self {
+        Scheduler {
+            trace,
+            cfg,
+            tokens_per_iter,
+            columns: (0..kv.columns).map(|_| KvColumn::new(kv.column_capacity_tokens)).collect(),
+            actives: (0..waves)
+                .map(|_| (0..kv.columns).map(|_| Vec::new()).collect())
+                .collect(),
+            queue: VecDeque::new(),
+            admit_seq: 0,
+            preemptions: 0,
+            rejected: Vec::new(),
+        }
+    }
+
+    pub fn enqueue_arrival(&mut self, rec: usize) {
+        self.queue.push_back(Waiting { rec, generated: 0.0 });
+    }
+
+    fn final_need(&self, r: &Request) -> f64 {
+        r.total_tokens() as f64 + self.cfg.reserve_margin_tokens
+    }
+
+    fn admit_need(&self, r: &Request, generated: f64) -> f64 {
+        match self.cfg.policy {
+            AdmissionPolicy::ReserveFull => self.final_need(r),
+            AdmissionPolicy::OnDemandPreempt => {
+                r.prompt_tokens as f64 + generated + self.cfg.reserve_margin_tokens
+            }
+        }
+    }
+
+    /// FCFS admission into wave `w` (head-of-line blocking on KV pressure,
+    /// as a fair FCFS queue must).
+    pub fn admit_wave(&mut self, w: usize) {
+        loop {
+            let Some(&head) = self.queue.front() else { break };
+            let r = self.trace[head.rec];
+            if self.final_need(&r) > self.columns[0].capacity_tokens {
+                self.queue.pop_front();
+                self.rejected.push(head.rec);
+                continue;
+            }
+            // Freest column among those with a spare slot in this wave.
+            let mut best: Option<usize> = None;
+            for c in 0..self.columns.len() {
+                if self.actives[w][c].len() >= self.cfg.max_batch_per_chip as usize {
+                    continue;
+                }
+                if best.map_or(true, |b| self.columns[c].free_tokens() > self.columns[b].free_tokens()) {
+                    best = Some(c);
+                }
+            }
+            let Some(c) = best else { break };
+            let need = self.admit_need(&r, head.generated);
+            if !self.columns[c].reserve(need) {
+                break;
+            }
+            self.queue.pop_front();
+            // Re-admission recomputes the whole context (prompt + tokens
+            // generated before preemption).
+            let context = r.prompt_tokens as u64 + head.generated.floor() as u64;
+            self.actives[w][c].push(Active {
+                rec: head.rec,
+                admit_seq: self.admit_seq,
+                remaining_prefill: context.min(u32::MAX as u64) as u32,
+                generated: head.generated,
+                held_tokens: need,
+            });
+            self.admit_seq += 1;
+        }
+    }
+
+    /// On-demand KV growth for wave `w`'s decoders, preempting the newest
+    /// resident of any over-committed column (recomputation preemption).
+    pub fn grow_wave(&mut self, w: usize) {
+        if self.cfg.policy != AdmissionPolicy::OnDemandPreempt {
+            return;
+        }
+        for c in 0..self.columns.len() {
+            loop {
+                let growers = self.actives[w][c].iter().filter(|a| a.remaining_prefill == 0).count();
+                let need = growers as f64 * self.tokens_per_iter;
+                if need <= 0.0 || self.columns[c].fits(need) {
+                    if need > 0.0 {
+                        assert!(self.columns[c].reserve(need));
+                        for a in self.actives[w][c].iter_mut() {
+                            if a.remaining_prefill == 0 {
+                                a.held_tokens += self.tokens_per_iter;
+                            }
+                        }
+                    }
+                    break;
+                }
+                if !self.preempt_newest_in_column(c) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Evict the newest resident (largest admit_seq) of column `c` back to
+    /// the queue head. Returns false if the column is empty.
+    fn preempt_newest_in_column(&mut self, c: usize) -> bool {
+        let mut newest: Option<(usize, usize, u64)> = None; // (wave, idx, seq)
+        for (w, per_col) in self.actives.iter().enumerate() {
+            for (i, a) in per_col[c].iter().enumerate() {
+                if newest.map_or(true, |(_, _, seq)| a.admit_seq > seq) {
+                    newest = Some((w, i, a.admit_seq));
+                }
+            }
+        }
+        let Some((w, i, _)) = newest else { return false };
+        let victim = self.actives[w][c].remove(i);
+        self.columns[c].release(victim.held_tokens);
+        self.queue.push_front(Waiting { rec: victim.rec, generated: victim.generated });
+        self.preemptions += 1;
+        true
+    }
+
+    /// Execute one iteration of wave `w`: chunked prefill, first-token
+    /// emission, decode progress, completions.
+    pub fn execute_wave(&mut self, w: usize) -> WaveEvents {
+        let mut ev = WaveEvents::default();
+        let tpi = self.tokens_per_iter;
+        for c in 0..self.columns.len() {
+            let mut budget = self.cfg.prefill_chunk_tokens;
+            let mut done: Vec<usize> = Vec::new();
+            for i in 0..self.actives[w][c].len() {
+                let a = &mut self.actives[w][c][i];
+                let r = &self.trace[a.rec];
+                if a.remaining_prefill > 0 {
+                    let take = a.remaining_prefill.min(budget);
+                    a.remaining_prefill -= take;
+                    budget -= take;
+                    ev.prefill_tokens += take as u64;
+                    if a.remaining_prefill == 0 && take > 0 {
+                        // The prefill-finishing iteration emits token #1.
+                        a.generated += 1.0;
+                        ev.first_tokens.push(a.rec);
+                        ev.tokens_produced += 1.0;
+                        if a.generated + 1e-9 >= r.output_tokens as f64 {
+                            done.push(i);
+                            ev.completions.push(a.rec);
+                        }
+                    }
+                } else {
+                    let before = a.generated;
+                    a.generated += tpi;
+                    ev.decode_users += 1;
+                    ev.tokens_produced += (r.output_tokens as f64 - before).clamp(0.0, tpi);
+                    if a.generated + 1e-9 >= r.output_tokens as f64 {
+                        done.push(i);
+                        ev.completions.push(a.rec);
+                    }
+                }
+            }
+            // Release completed residents (reverse order keeps indices valid).
+            for &i in done.iter().rev() {
+                let a = self.actives[w][c].remove(i);
+                self.columns[c].release(a.held_tokens);
+            }
+        }
+        ev
+    }
+
+    /// Worst-case per-chip iteration load across all (wave, column) cells:
+    /// `(decode users, prefill tokens co-scheduled next iteration)`. The
+    /// two maxima may come from different cells — the stage-time lookup
+    /// combines them, which errs conservative. Drives the tick duration.
+    pub fn peak_cell_load(&self) -> (u64, u64) {
+        let mut decode_max = 0u64;
+        let mut prefill_max = 0u64;
+        for per_col in &self.actives {
+            for cell in per_col {
+                let decode_users = cell.iter().filter(|a| a.remaining_prefill == 0).count() as u64;
+                let prefill_pending: u64 = cell.iter().map(|a| a.remaining_prefill as u64).sum();
+                decode_max = decode_max.max(decode_users);
+                prefill_max = prefill_max.max(prefill_pending.min(self.cfg.prefill_chunk_tokens as u64));
+            }
+        }
+        (decode_max, prefill_max)
+    }
+
+    /// Longest current context (prompt + generated) among residents, in
+    /// tokens — the KV length the stage-time lookup should assume.
+    pub fn max_context_tokens(&self) -> f64 {
+        let mut max = 0.0f64;
+        for per_col in &self.actives {
+            for cell in per_col {
+                for a in cell {
+                    let ctx = self.trace[a.rec].prompt_tokens as f64 + a.generated;
+                    max = max.max(ctx);
+                }
+            }
+        }
+        max
+    }
+
+    pub fn active_total(&self) -> usize {
+        self.actives.iter().map(|pc| pc.iter().map(Vec::len).sum::<usize>()).sum()
+    }
+
+    /// Highest KV occupancy fraction reached on any column so far.
+    pub fn peak_kv_occupancy(&self) -> f64 {
+        self.columns.iter().map(KvColumn::peak_frac).fold(0.0, f64::max)
+    }
+
+    /// True iff some column currently holds more than its capacity (must
+    /// never happen; surfaced for the invariant tests).
+    pub fn kv_over_capacity(&self) -> bool {
+        self.columns.iter().any(|c| c.held_tokens > c.capacity_tokens + 1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::Dtype;
+    use crate::multichip::d2d::WaferSystem;
+    use crate::multichip::parallelism::ParallelismPlan;
+    use crate::workload::deepseek::DeepSeekConfig;
+
+    fn tiny_kv(capacity_tokens: u64, columns: u32) -> KvCacheModel {
+        // Hand-built small model for policy tests.
+        KvCacheModel {
+            bytes_per_token_per_chip: 576,
+            weight_bytes_per_chip: 0,
+            hbm_capacity_bytes: capacity_tokens * 576,
+            column_capacity_tokens: capacity_tokens,
+            columns,
+        }
+    }
+
+    fn req(id: u64, prompt: u32, output: u32) -> Request {
+        Request { id, arrival_s: 0.0, prompt_tokens: prompt, output_tokens: output }
+    }
+
+    #[test]
+    fn admits_fcfs_and_prefills_in_chunks() {
+        let trace = vec![req(0, 3000, 4), req(1, 100, 4)];
+        let kv = tiny_kv(100_000, 1);
+        let mut s = Scheduler::new(
+            &trace,
+            &kv,
+            1,
+            SchedulerConfig { prefill_chunk_tokens: 2048, ..Default::default() },
+            1.0,
+        );
+        s.enqueue_arrival(0);
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 2);
+        // Tick 1: request 0 eats the whole chunk; request 1 stalls.
+        let ev = s.execute_wave(0);
+        assert_eq!(ev.prefill_tokens, 2048);
+        assert!(ev.first_tokens.is_empty());
+        // Tick 2: request 0 finishes (952) and request 1 (100) fits too.
+        let ev = s.execute_wave(0);
+        assert_eq!(ev.prefill_tokens, 952 + 100);
+        assert_eq!(ev.first_tokens, vec![0, 1]);
+    }
+
+    #[test]
+    fn reserve_full_never_overflows_and_blocks_head_of_line() {
+        let trace = vec![req(0, 500, 100), req(1, 500, 100), req(2, 500, 100)];
+        // Capacity fits two full reservations (604 each), not three.
+        let kv = tiny_kv(1300, 1);
+        let mut s = Scheduler::new(&trace, &kv, 1, SchedulerConfig::default(), 1.0);
+        for i in 0..3 {
+            s.enqueue_arrival(i);
+        }
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 2);
+        assert_eq!(s.queue.len(), 1, "third request must wait");
+        assert!(!s.kv_over_capacity());
+        // Run everything to completion; capacity is never exceeded.
+        for _ in 0..300 {
+            s.admit_wave(0);
+            s.grow_wave(0);
+            s.execute_wave(0);
+            assert!(!s.kv_over_capacity());
+        }
+        assert_eq!(s.active_total(), 0);
+        assert_eq!(s.queue.len(), 0);
+        assert_eq!(s.preemptions, 0, "ReserveFull never preempts");
+    }
+
+    #[test]
+    fn infeasible_request_is_rejected_not_wedged() {
+        let trace = vec![req(0, 5000, 1000), req(1, 100, 10)];
+        let kv = tiny_kv(2000, 1);
+        let mut s = Scheduler::new(&trace, &kv, 1, SchedulerConfig::default(), 1.0);
+        s.enqueue_arrival(0);
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        assert_eq!(s.rejected, vec![0]);
+        assert_eq!(s.active_total(), 1, "queue must not wedge behind an impossible request");
+    }
+
+    #[test]
+    fn on_demand_preempts_newest_and_recomputes() {
+        let trace = vec![req(0, 400, 600), req(1, 400, 600)];
+        // Each needs 1004 at completion; both admit on-demand (404 each)
+        // but cannot both finish in a 1200-token column.
+        let kv = tiny_kv(1200, 1);
+        let cfg = SchedulerConfig { policy: AdmissionPolicy::OnDemandPreempt, ..Default::default() };
+        let mut s = Scheduler::new(&trace, &kv, 1, cfg, 1.0);
+        s.enqueue_arrival(0);
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 2, "on-demand admits both");
+        let mut preempted = false;
+        for _ in 0..5000 {
+            s.admit_wave(0);
+            s.grow_wave(0);
+            s.execute_wave(0);
+            assert!(!s.kv_over_capacity(), "growth must never overflow the column");
+            preempted |= s.preemptions > 0;
+            if s.active_total() == 0 && s.queue.is_empty() {
+                break;
+            }
+        }
+        assert!(preempted, "KV pressure must have forced a preemption");
+        assert_eq!(s.active_total() + s.queue.len(), 0, "both requests eventually drain");
+    }
+
+    #[test]
+    fn peak_cell_load_counts_decode_and_chunked_prefill() {
+        let trace = vec![req(0, 5000, 50), req(1, 64, 50)];
+        let kv = tiny_kv(100_000, 1);
+        let mut s = Scheduler::new(
+            &trace,
+            &kv,
+            1,
+            SchedulerConfig { prefill_chunk_tokens: 1024, ..Default::default() },
+            1.0,
+        );
+        s.enqueue_arrival(0);
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        // Pending prefill 5064 capped at the 1024 chunk; no decoders yet.
+        assert_eq!(s.peak_cell_load(), (0, 1024));
+        for _ in 0..5 {
+            s.execute_wave(0); // 5 chunks drain req0 (5000) and req1 (64)
+        }
+        let (decode, prefill) = s.peak_cell_load();
+        assert_eq!(decode, 2, "both requests must be decoding");
+        assert_eq!(prefill, 0);
+    }
+
+    #[test]
+    fn kv_model_based_scheduler_smoke() {
+        // End-to-end with the real EP32-PP2 KV model: admit 64 requests,
+        // run some iterations, conservation of residents + queue holds.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let kv = KvCacheModel::new(&sys, &ds, ParallelismPlan::new(32, 2), Dtype::Fp8);
+        let trace: Vec<Request> = (0..64).map(|i| req(i, 512, 64)).collect();
+        let mut s = Scheduler::new(&trace, &kv, 2, SchedulerConfig::default(), ds.tokens_per_iteration());
+        for i in 0..64 {
+            s.enqueue_arrival(i);
+        }
+        let mut completed = 0usize;
+        for t in 0..2000 {
+            let w = t % 2;
+            s.admit_wave(w);
+            s.grow_wave(w);
+            completed += s.execute_wave(w).completions.len();
+            assert!(!s.kv_over_capacity());
+        }
+        assert_eq!(completed, 64);
+        assert_eq!(s.active_total(), 0);
+    }
+}

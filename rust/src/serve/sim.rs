@@ -1,0 +1,534 @@
+//! The serving event loop: iteration-level simulation of continuous
+//! batching on the wafer-scale decode model, plus the offered-load sweep
+//! that produces the goodput / TTFT / TPOT curves.
+//!
+//! Time advances one *stage-step* per tick (every pipeline wave advances one
+//! stage; the wave wrapping from the last stage completes its iteration).
+//! Tick duration comes from the steady-state decode model
+//! ([`DecodeEvaluator`]): the decode stage time of the worst-loaded
+//! (column, wave) cell, plus the co-scheduled chunked-prefill tokens at the
+//! evaluator's marginal per-row cost. Stage times are memoized per (plan,
+//! dataflow, batch-bucket, kv-bucket) in a shareable [`StageTimeCache`], on
+//! top of the kernel-level [`KernelCache`] — the serving loop never
+//! re-simulates an identical (plan, batch, kv_len) kernel.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::arch::config::{Dtype, SimFidelity};
+use crate::metrics::Percentiles;
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
+use crate::serve::kv::KvCacheModel;
+use crate::serve::request::{generate_trace, thin_trace, Request, TraceConfig, TrafficPattern};
+use crate::serve::scheduler::{Scheduler, SchedulerConfig};
+use crate::workload::deepseek::DeepSeekConfig;
+
+/// Serving-simulation configuration (system/plan side; traffic comes from
+/// the trace).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    pub plan: ParallelismPlan,
+    pub choice: AttentionChoice,
+    pub fidelity: SimFidelity,
+    pub dtype: Dtype,
+    pub scheduler: SchedulerConfig,
+    /// Per-user TPOT SLO in ms (paper Table II: 50 ms).
+    pub slo_tpot_ms: f64,
+    /// TTFT SLO in ms for goodput accounting.
+    pub slo_ttft_ms: f64,
+    /// Hard tick bound (safety valve; never binds in practice).
+    pub max_ticks: u64,
+}
+
+impl Default for ServeConfig {
+    /// The Table II EP32-PP2 wafer operating regime.
+    fn default() -> Self {
+        ServeConfig {
+            plan: ParallelismPlan::new(32, 2),
+            choice: AttentionChoice::Flat,
+            fidelity: SimFidelity::Analytic,
+            dtype: Dtype::Fp8,
+            scheduler: SchedulerConfig::default(),
+            slo_tpot_ms: 50.0,
+            slo_ttft_ms: 2000.0,
+            max_ticks: 2_000_000,
+        }
+    }
+}
+
+/// Shareable memo of stage times. Keys carry the full system identity
+/// (chip fingerprint, D2D parameters, fidelity, dtype) alongside the plan,
+/// dataflow and (batch, kv) buckets, so one cache can safely back
+/// simulations of *different* wafer configurations — a mutated-in-place
+/// ablation system can never alias the original's entries.
+#[derive(Clone, Default)]
+pub struct StageTimeCache {
+    inner: Arc<Mutex<HashMap<String, f64>>>,
+}
+
+impl StageTimeCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `key`, computing outside the lock on a miss (mirrors
+    /// `KernelCache`; keeps the lock discipline inside the type).
+    fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> f64) -> f64 {
+        if let Some(&s) = self.inner.lock().unwrap().get(&key) {
+            return s;
+        }
+        let s = f();
+        *self.inner.lock().unwrap().entry(key).or_insert(s)
+    }
+}
+
+/// Stage-time oracle for one (system, model, plan, dataflow) combination.
+///
+/// Tick duration is a two-term model: a memoized *decode* stage time at the
+/// bucketed (batch, kv) operating point, plus the co-scheduled prefill
+/// tokens at the evaluator's marginal per-row cost (GEMM/vector/C2C row
+/// work at short context — a prefill token must not be billed a decode
+/// row's full-KV attention).
+struct StageTimes<'a> {
+    sys: &'a WaferSystem,
+    ds: &'a DeepSeekConfig,
+    cfg: ServeConfig,
+    ev: DecodeEvaluator,
+    shared: StageTimeCache,
+    /// Constant cache-key prefix (system fingerprint, D2D, model, fidelity,
+    /// dtype, dataflow, plan) — only `|b{}|kv{}` varies per lookup.
+    key_prefix: String,
+    prefill_row_s: Option<f64>,
+}
+
+/// Quantize the per-chip user count for the stage-time memo: powers of two
+/// in the small range, multiples of 64 above (coarse enough to bound the
+/// number of distinct decode evaluations, fine enough that a single
+/// prefill chunk doesn't round a light batch up to a saturated one).
+/// Rounding *up* keeps the estimate conservative.
+fn batch_bucket(users: u64) -> u32 {
+    let u = users.clamp(1, 4096) as u32;
+    if u <= 64 {
+        u.next_power_of_two()
+    } else {
+        u.div_ceil(64) * 64
+    }
+}
+
+/// Round KV length up to a 1 KiB-token multiple.
+fn kv_bucket(tokens: f64) -> u32 {
+    let t = tokens.max(1.0).ceil() as u64;
+    (t.div_ceil(1024) * 1024).min(1 << 16) as u32
+}
+
+impl<'a> StageTimes<'a> {
+    fn new(sys: &'a WaferSystem, ds: &'a DeepSeekConfig, cfg: ServeConfig, kernels: KernelCache, shared: StageTimeCache) -> Self {
+        let key_prefix = format!(
+            "{}|d2d{}x{}+{:.4e}bps+{:.1e}s|{}L{}d{}|{:?}|{:?}|{}|ep{}pp{}",
+            sys.chip.fingerprint(),
+            sys.d2d.mesh_x,
+            sys.d2d.mesh_y,
+            sys.d2d.link_bandwidth_bytes_per_s,
+            sys.d2d.hop_latency_s,
+            ds.name,
+            ds.layers,
+            ds.d_model,
+            cfg.fidelity,
+            cfg.dtype,
+            cfg.choice.label(),
+            cfg.plan.ep,
+            cfg.plan.pp,
+        );
+        StageTimes {
+            sys,
+            ds,
+            cfg,
+            ev: DecodeEvaluator::with_cache(cfg.fidelity, kernels),
+            shared,
+            key_prefix,
+            prefill_row_s: None,
+        }
+    }
+
+    /// Memoized decode stage time at a bucketed (users, kv) point.
+    fn decode_stage_seconds(&mut self, users: u64, kv_tokens: f64) -> f64 {
+        let b = batch_bucket(users);
+        let kv = kv_bucket(kv_tokens);
+        let key = format!("{}|b{}|kv{}", self.key_prefix, b, kv);
+        let (sys, ds, plan, choice, ev) =
+            (self.sys, self.ds, self.cfg.plan, self.cfg.choice, &mut self.ev);
+        self.shared
+            .get_or_insert_with(key, || ev.evaluate(sys, ds, plan, b, kv, choice).stage_seconds)
+    }
+
+    /// Marginal stage seconds per additional chip row at short context —
+    /// the per-token cost a chunked-prefill token adds to the iteration.
+    fn prefill_row_seconds(&mut self) -> f64 {
+        if let Some(s) = self.prefill_row_s {
+            return s;
+        }
+        let spec = self.spec_len() as f64;
+        let lo = self.decode_stage_seconds(128, 1024.0);
+        let hi = self.decode_stage_seconds(256, 1024.0);
+        let s = ((hi - lo) / (128.0 * spec)).max(0.0);
+        self.prefill_row_s = Some(s);
+        s
+    }
+
+    /// Tick duration for an iteration decoding `decode_users` per chip at
+    /// contexts up to `kv_tokens`, with `prefill_tokens` riding along.
+    fn stage_seconds(&mut self, decode_users: u64, kv_tokens: f64, prefill_tokens: u64) -> f64 {
+        let decode = self.decode_stage_seconds(decode_users.max(1), kv_tokens);
+        decode + prefill_tokens as f64 * self.prefill_row_seconds()
+    }
+
+    fn spec_len(&self) -> u64 {
+        self.ds.mtp_spec_len.max(1) as u64
+    }
+}
+
+/// Per-request latency record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    pub first_token_s: Option<f64>,
+    pub completion_s: Option<f64>,
+}
+
+impl RequestRecord {
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_s.map(|t| (t - self.arrival_s) * 1e3)
+    }
+
+    /// Steady-state per-token latency after the first token.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_s, self.completion_s) {
+            (Some(f), Some(c)) if self.output_tokens > 1 => {
+                Some((c - f) * 1e3 / (self.output_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate outcome of one serving simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOutcome {
+    pub pattern: String,
+    pub offered_rps: f64,
+    pub horizon_s: f64,
+    /// Requests in the trace (offered).
+    pub offered: usize,
+    /// Requests whose arrival time the simulation reached.
+    pub arrived: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub in_flight: usize,
+    pub queued: usize,
+    pub completed_within_slo: usize,
+    pub ttft_ms: Percentiles,
+    pub tpot_ms: Percentiles,
+    pub system_tokens_per_s: f64,
+    /// SLO-satisfying completions per second over the horizon.
+    pub goodput_rps: f64,
+    pub peak_kv_occupancy: f64,
+    pub kv_over_capacity: bool,
+    pub preemptions: u64,
+    pub ticks: u64,
+    pub elapsed_s: f64,
+}
+
+impl ServeOutcome {
+    /// Request-conservation identity over the simulated portion of the
+    /// trace: everything that arrived is exactly one of completed /
+    /// rejected / in-flight / queued.
+    pub fn conserves_requests(&self) -> bool {
+        self.arrived == self.completed + self.rejected + self.in_flight + self.queued
+    }
+}
+
+/// Run one serving simulation of `trace` against the wafer system. Stops at
+/// `horizon_s` (in-flight work is reported, not drained), so overload
+/// manifests as queue growth rather than unbounded simulation time.
+pub fn simulate(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ServeConfig,
+    horizon_s: f64,
+    pattern_label: &str,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+) -> (ServeOutcome, Vec<RequestRecord>) {
+    let kv = KvCacheModel::new(sys, ds, cfg.plan, cfg.dtype);
+    let tpi = ds.tokens_per_iteration();
+    let pp = cfg.plan.pp.max(1) as u64;
+    let mut sched = Scheduler::new(trace, &kv, cfg.plan.pp, cfg.scheduler, tpi);
+    let mut stage = StageTimes::new(sys, ds, *cfg, kernels.clone(), stages.clone());
+    let mut records: Vec<RequestRecord> = trace
+        .iter()
+        .map(|r| RequestRecord {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.output_tokens,
+            first_token_s: None,
+            completion_s: None,
+        })
+        .collect();
+
+    let mut clock = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut tick = 0u64;
+    let mut total_tokens = 0.0f64;
+    let mut kv_violation = false;
+
+    while clock < horizon_s && tick < cfg.max_ticks {
+        while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
+            sched.enqueue_arrival(next_arrival);
+            next_arrival += 1;
+        }
+        if sched.active_total() == 0 && sched.queue.is_empty() {
+            match trace.get(next_arrival) {
+                Some(r) if r.arrival_s < horizon_s => {
+                    clock = r.arrival_s;
+                    continue;
+                }
+                _ => break,
+            }
+        }
+        let w = (tick % pp) as usize;
+        sched.admit_wave(w);
+        sched.grow_wave(w);
+        let (decode_users, prefill_tokens) = sched.peak_cell_load();
+        let kv_len = sched.max_context_tokens().max(1.0);
+        clock += stage.stage_seconds(decode_users, kv_len, prefill_tokens);
+        let ev = sched.execute_wave(w);
+        total_tokens += ev.tokens_produced;
+        for rec in ev.first_tokens {
+            records[rec].first_token_s.get_or_insert(clock);
+        }
+        for rec in ev.completions {
+            records[rec].completion_s = Some(clock);
+        }
+        kv_violation |= sched.kv_over_capacity();
+        tick += 1;
+    }
+
+    let completed: Vec<&RequestRecord> = records.iter().filter(|r| r.completion_s.is_some()).collect();
+    // TTFT samples every request that got a first token — restricting to
+    // completed requests would survivorship-bias the overload points, where
+    // thousands start but don't finish inside the horizon.
+    let ttft: Vec<f64> = records.iter().filter_map(|r| r.ttft_ms()).collect();
+    let tpot: Vec<f64> = completed.iter().filter_map(|r| r.tpot_ms()).collect();
+    let within_slo = completed
+        .iter()
+        .filter(|r| {
+            r.ttft_ms().is_some_and(|t| t <= cfg.slo_ttft_ms)
+                && r.tpot_ms().map_or(true, |t| t <= cfg.slo_tpot_ms)
+        })
+        .count();
+    let outcome = ServeOutcome {
+        pattern: pattern_label.to_string(),
+        offered_rps,
+        horizon_s,
+        offered: trace.len(),
+        arrived: next_arrival,
+        completed: completed.len(),
+        rejected: sched.rejected.len(),
+        in_flight: sched.active_total(),
+        queued: sched.queue.len(),
+        completed_within_slo: within_slo,
+        ttft_ms: Percentiles::from_values(&ttft),
+        tpot_ms: Percentiles::from_values(&tpot),
+        system_tokens_per_s: if horizon_s > 0.0 { total_tokens / horizon_s } else { 0.0 },
+        goodput_rps: if horizon_s > 0.0 { within_slo as f64 / horizon_s } else { 0.0 },
+        peak_kv_occupancy: sched.peak_kv_occupancy(),
+        kv_over_capacity: kv_violation,
+        preemptions: sched.preemptions,
+        ticks: tick,
+        elapsed_s: clock,
+    };
+    (outcome, records)
+}
+
+/// Sweep offered load for one traffic pattern. A single master trace at the
+/// top rate is generated and *coupled-thinned* down to each lower rate
+/// (`serve::request::thin_trace`), so successive points see nested request
+/// sets — the load axis is a true refinement, and p99 latencies are
+/// monotone in offered load up to bucketing. Each rate simulates on its own
+/// `std::thread` worker; the shared caches make results independent of
+/// completion order.
+pub fn load_sweep(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    cfg: &ServeConfig,
+    pattern: TrafficPattern,
+    rates_rps: &[f64],
+    seed: u64,
+    horizon_s: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+) -> Vec<ServeOutcome> {
+    let max_rate = rates_rps.iter().cloned().fold(0.0f64, f64::max);
+    let master = generate_trace(&TraceConfig::new(seed, pattern, max_rate, horizon_s));
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = rates_rps
+            .iter()
+            .map(|&rate| {
+                let master = &master;
+                let kernels = kernels.clone();
+                let stages = stages.clone();
+                scope.spawn(move || {
+                    let trace = thin_trace(master, rate / max_rate, seed ^ 0xC0FF_EE00);
+                    let (outcome, _) = simulate(
+                        sys,
+                        ds,
+                        &trace,
+                        cfg,
+                        horizon_s,
+                        pattern.label(),
+                        rate,
+                        &kernels,
+                        &stages,
+                    );
+                    outcome
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("serve worker panicked")).collect()
+    })
+}
+
+/// First offered load whose p99 TPOT violates the SLO — the saturation knee
+/// of a goodput curve (None if the sweep never saturates).
+pub fn saturation_knee(outcomes: &[ServeOutcome], slo_tpot_ms: f64) -> Option<f64> {
+    outcomes
+        .iter()
+        .find(|o| o.completed > 0 && o.tpot_ms.p99 > slo_tpot_ms)
+        .map(|o| o.offered_rps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_trace(rate: f64, horizon: f64, seed: u64) -> Vec<Request> {
+        generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon))
+    }
+
+    fn run(trace: &[Request], horizon: f64) -> ServeOutcome {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let (o, _) = simulate(
+            &sys,
+            &ds,
+            trace,
+            &cfg,
+            horizon,
+            "poisson",
+            0.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+        );
+        o
+    }
+
+    #[test]
+    fn light_load_completes_everything_under_slo() {
+        let trace = quick_trace(20.0, 2.0, 3);
+        let o = run(&trace, 60.0);
+        assert!(o.conserves_requests());
+        assert_eq!(o.rejected, 0);
+        assert_eq!(o.completed, trace.len(), "light load must fully drain: {o:?}");
+        assert!(o.tpot_ms.p99 < 50.0, "p99 TPOT {} at light load", o.tpot_ms.p99);
+        assert!(!o.kv_over_capacity);
+    }
+
+    #[test]
+    fn bucketing_helpers() {
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(3), 4);
+        assert_eq!(batch_bucket(64), 64);
+        assert_eq!(batch_bucket(65), 128);
+        assert_eq!(batch_bucket(512), 512);
+        assert_eq!(batch_bucket(513), 576);
+        assert_eq!(kv_bucket(1.0), 1024);
+        assert_eq!(kv_bucket(1024.0), 1024);
+        assert_eq!(kv_bucket(1025.0), 2048);
+    }
+
+    #[test]
+    fn stage_cache_is_shared_between_runs() {
+        let trace = quick_trace(20.0, 1.0, 5);
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let (a, _) = simulate(&sys, &ds, &trace, &cfg, 30.0, "p", 20.0, &kernels, &stages);
+        let n = stages.len();
+        assert!(n > 0);
+        let k = kernels.len();
+        let (b, _) = simulate(&sys, &ds, &trace, &cfg, 30.0, "p", 20.0, &kernels, &stages);
+        assert_eq!(a, b, "identical runs over shared caches must agree exactly");
+        assert_eq!(stages.len(), n, "second run reuses every stage time");
+        assert_eq!(kernels.len(), k, "second run reuses every kernel simulation");
+    }
+
+    #[test]
+    fn shared_cache_never_aliases_across_systems() {
+        // Two systems with identical chips but 6× different D2D bandwidth,
+        // simulated over ONE shared cache pair: the slow system must not
+        // inherit the fast system's stage times (kernel entries may be
+        // legitimately shared — C2C lives outside the kernel simulations).
+        let trace = quick_trace(20.0, 1.0, 6);
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let fast = WaferSystem::paper();
+        let slow = WaferSystem::paper_nvlink_class();
+        let (a, _) = simulate(&fast, &ds, &trace, &cfg, 30.0, "p", 20.0, &kernels, &stages);
+        let (b, _) = simulate(&slow, &ds, &trace, &cfg, 30.0, "p", 20.0, &kernels, &stages);
+        assert!(
+            b.tpot_ms.p50 > a.tpot_ms.p50,
+            "slow D2D must show higher TPOT: {} vs {}",
+            b.tpot_ms.p50,
+            a.tpot_ms.p50
+        );
+        // A fresh-cache run of the slow system agrees exactly with the
+        // shared-cache run — the cache changed nothing but speed.
+        let (b2, _) =
+            simulate(&slow, &ds, &trace, &cfg, 30.0, "p", 20.0, &KernelCache::new(), &StageTimeCache::new());
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn saturation_knee_detection() {
+        let mk = |rate: f64, p99: f64| {
+            let mut o = run(&[], 1.0);
+            o.offered_rps = rate;
+            o.completed = 10;
+            o.tpot_ms.p99 = p99;
+            o
+        };
+        let curve = vec![mk(100.0, 12.0), mk(200.0, 30.0), mk(400.0, 61.0), mk(800.0, 90.0)];
+        assert_eq!(saturation_knee(&curve, 50.0), Some(400.0));
+        assert_eq!(saturation_knee(&curve[..2], 50.0), None);
+    }
+}

@@ -1,0 +1,168 @@
+//! Serving-simulator invariants: request conservation, determinism under a
+//! fixed seed, p99-TPOT monotonicity in offered load, KV-capacity safety
+//! under both admission policies, and the Table II EP32-PP2 saturation knee
+//! the acceptance criteria call for.
+
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::serve::request::{generate_trace, LengthProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::scheduler::{AdmissionPolicy, SchedulerConfig};
+use flatattention::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+fn patterns(horizon_s: f64) -> Vec<TrafficPattern> {
+    vec![
+        TrafficPattern::Poisson,
+        TrafficPattern::Bursty { period_s: horizon_s / 5.0, duty: 0.3, burst_factor: 4.0 },
+        TrafficPattern::Diurnal { period_s: horizon_s, trough_factor: 0.25 },
+    ]
+}
+
+#[test]
+fn requests_are_conserved_across_patterns_and_loads() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    for pattern in patterns(5.0) {
+        let outcomes =
+            load_sweep(&sys, &ds, &cfg, pattern, &[250.0, 2000.0], 11, 5.0, &kernels, &stages);
+        for o in &outcomes {
+            // arrived = completed + rejected + in-flight + queued at horizon.
+            assert!(o.conserves_requests(), "conservation violated: {o:?}");
+            assert!(o.arrived <= o.offered);
+            assert!(!o.kv_over_capacity, "{} @ {} overflowed KV", o.pattern, o.offered_rps);
+            assert!(o.completed > 0, "{} @ {}: nothing completed", o.pattern, o.offered_rps);
+        }
+    }
+}
+
+#[test]
+fn simulation_is_deterministic_under_fixed_seed() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    // Two fully independent runs (fresh caches each) — thread scheduling and
+    // cache population order must not leak into any reported number.
+    let run = || {
+        load_sweep(
+            &sys,
+            &ds,
+            &cfg,
+            TrafficPattern::Bursty { period_s: 3.0, duty: 0.3, burst_factor: 4.0 },
+            &[500.0, 1500.0],
+            2026,
+            4.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must reproduce the outcome bit-for-bit");
+    // And per-request records replay too.
+    let trace = generate_trace(&TraceConfig::new(9, TrafficPattern::Poisson, 300.0, 3.0));
+    let (_, recs_a) = simulate(&sys, &ds, &trace, &cfg, 3.0, "p", 300.0, &KernelCache::new(), &StageTimeCache::new());
+    let (_, recs_b) = simulate(&sys, &ds, &trace, &cfg, 3.0, "p", 300.0, &KernelCache::new(), &StageTimeCache::new());
+    assert_eq!(recs_a, recs_b);
+}
+
+#[test]
+fn p99_tpot_is_monotone_in_offered_load_with_saturation_knee() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let rates = [250.0, 1000.0, 2000.0, 4000.0];
+    let outcomes = load_sweep(
+        &sys,
+        &ds,
+        &cfg,
+        TrafficPattern::Poisson,
+        &rates,
+        2026,
+        10.0,
+        &KernelCache::new(),
+        &StageTimeCache::new(),
+    );
+    for o in &outcomes {
+        assert!(o.completed > 100, "{} rps: only {} completed", o.offered_rps, o.completed);
+        assert!(o.conserves_requests());
+    }
+    // Coupled thinning makes the load axis a refinement: p99 TPOT must be
+    // non-decreasing (small slack for batch/kv bucket boundaries).
+    for w in outcomes.windows(2) {
+        assert!(
+            w[1].tpot_ms.p99 >= 0.9 * w[0].tpot_ms.p99,
+            "p99 TPOT regressed with load: {} rps → {:.1} ms, {} rps → {:.1} ms",
+            w[0].offered_rps,
+            w[0].tpot_ms.p99,
+            w[1].offered_rps,
+            w[1].tpot_ms.p99
+        );
+    }
+    assert!(
+        outcomes.last().unwrap().tpot_ms.p99 > outcomes[0].tpot_ms.p99,
+        "overload must visibly degrade p99 TPOT"
+    );
+    // The acceptance-criteria knee on the Table II EP32-PP2 configuration:
+    // under-SLO at the bottom of the sweep, past the 50 ms SLO at the top.
+    assert!(outcomes[0].tpot_ms.p99 < cfg.slo_tpot_ms, "light load p99 {:.1} ms", outcomes[0].tpot_ms.p99);
+    assert!(
+        outcomes.last().unwrap().tpot_ms.p99 > cfg.slo_tpot_ms,
+        "saturated p99 {:.1} ms should exceed the SLO",
+        outcomes.last().unwrap().tpot_ms.p99
+    );
+    let knee = saturation_knee(&outcomes, cfg.slo_tpot_ms).expect("sweep must exhibit a knee");
+    assert!(knee > rates[0] && knee <= *rates.last().unwrap(), "knee at {knee} rps");
+    // Goodput collapses past the knee relative to offered load.
+    let last = outcomes.last().unwrap();
+    assert!(last.goodput_rps < 0.9 * last.offered_rps, "goodput {:.0} at {:.0} rps", last.goodput_rps, last.offered_rps);
+}
+
+#[test]
+fn kv_occupancy_never_exceeds_capacity_under_pressure() {
+    let ds = DeepSeekConfig::v3_671b();
+    // Memory-starved wafer: 20 GiB HBM/chip leaves ~2.5 GiB for KV after
+    // weights, so both policies hit the capacity wall hard.
+    let mut sys = WaferSystem::paper();
+    sys.chip.hbm.capacity_gib_per_stack = 10;
+    let mut tc = TraceConfig::new(5, TrafficPattern::Poisson, 2500.0, 8.0);
+    tc.lengths = LengthProfile::decode_heavy();
+    let trace = generate_trace(&tc);
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    for policy in [AdmissionPolicy::ReserveFull, AdmissionPolicy::OnDemandPreempt] {
+        let cfg = ServeConfig {
+            scheduler: SchedulerConfig { policy, ..Default::default() },
+            ..Default::default()
+        };
+        let (o, _) = simulate(&sys, &ds, &trace, &cfg, 8.0, "pressure", 2500.0, &kernels, &stages);
+        assert!(!o.kv_over_capacity, "{policy:?} overflowed KV");
+        assert!(o.peak_kv_occupancy <= 1.0 + 1e-9, "{policy:?} peak {}", o.peak_kv_occupancy);
+        assert!(o.peak_kv_occupancy > 0.5, "{policy:?} never came under pressure: peak {}", o.peak_kv_occupancy);
+        assert!(o.conserves_requests());
+        match policy {
+            AdmissionPolicy::ReserveFull => {
+                assert_eq!(o.preemptions, 0, "reserve-full must never preempt")
+            }
+            AdmissionPolicy::OnDemandPreempt => {
+                assert!(o.preemptions > 0, "on-demand under pressure must preempt")
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_experiments_render() {
+    for id in ["serve_load", "serve_policies"] {
+        let rep = flatattention::coordinator::experiments::run(id, true)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        let text = rep.render();
+        assert!(text.len() > 200, "{id}: short report\n{text}");
+        assert!(!rep.rows.is_empty(), "{id}: no rows");
+    }
+    // The full registry advertises the serving experiments.
+    let ids: Vec<&str> = flatattention::coordinator::experiments::list().iter().map(|(i, _)| *i).collect();
+    assert!(ids.contains(&"serve_load") && ids.contains(&"serve_policies"));
+}

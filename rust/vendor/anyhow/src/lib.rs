@@ -1,0 +1,183 @@
+//! Minimal offline shim of the `anyhow` API surface this workspace uses:
+//! [`Error`], [`Result`], [`Context`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The build environment has no crates.io access, so the
+//! real crate cannot be fetched; this shim keeps call sites source-compatible.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?`) possible.
+
+use std::fmt;
+
+/// A context-carrying error: a message plus the chain of contexts added via
+/// [`Context::context`] (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, ctx: String) -> Self {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// The innermost (root-cause) message — the opposite end of the chain
+    /// from what `Display`/`to_string` shows.
+    pub fn root_cause_message(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole context chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context lines.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Add context to errors (and convert `Option` to `Result`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 7");
+    }
+
+    #[test]
+    fn ensure_both_arities() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x > 1);
+            ensure!(x > 2, "x was {x}");
+            Ok(())
+        }
+        assert!(f(3).is_ok());
+        assert!(f(2).unwrap_err().to_string().contains("x was 2"));
+        assert!(f(1).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: Result<()> = "x".parse::<u32>().map_err(Error::from).context("parsing config");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "parsing config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing config: "), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let v: u32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+}
