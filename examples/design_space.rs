@@ -68,5 +68,7 @@ fn main() {
             cfg.peak_flops() / 1e12
         );
     }
-    println!("\ntakeaway: the Table I point sits where larger groups stop paying (over-flattening)\nand HBM stops being the bottleneck — the co-design balance of paper Appendix D.");
+    println!(
+        "\ntakeaway: the Table I point sits where larger groups stop paying (over-flattening)\nand HBM stops being the bottleneck — the co-design balance of paper Appendix D."
+    );
 }

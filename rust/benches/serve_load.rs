@@ -1,10 +1,11 @@
 //! Bench harness for the serving simulator: the full offered-load sweep
-//! (3 traffic patterns × 6 load points) plus the KV-policy comparison.
+//! (3 traffic patterns × 6 load points), the KV-policy comparison, and the
+//! prefix-cache / scheduling-policy experiment on shared-prompt traffic.
 //! (criterion is unavailable in the offline build; this is a plain
 //! `harness = false` driver with std timing.)
 
 fn main() {
-    for id in ["serve_load", "serve_policies"] {
+    for id in ["serve_load", "serve_policies", "serve_prefix"] {
         let t0 = std::time::Instant::now();
         let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
         rep.print();

@@ -1,0 +1,169 @@
+//! Argument parsing for the `flatattention serve` subcommand.
+//!
+//! Lives in the library (not `main.rs`) so the parser is unit-testable:
+//! bad policy names, malformed numbers and out-of-range rates must come
+//! back as `Err`, never as a panic inside the CLI.
+
+use anyhow::{bail, Result};
+
+use crate::serve::scheduler::QueuePolicy;
+
+/// Parsed `flatattention serve` options.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeArgs {
+    /// Shrink sweeps (test/CI mode).
+    pub fast: bool,
+    /// Also run the KV admission-policy comparison.
+    pub policies: bool,
+    /// Run the prefix-cache / scheduling-policy experiment instead of the
+    /// load sweep.
+    pub prefix: bool,
+    /// Queue policy for the custom sweep (`--policy`, default FCFS).
+    pub queue_policy: QueuePolicy,
+    /// Custom offered load in requests/s (`--rate`).
+    pub rate_rps: Option<f64>,
+    /// Custom horizon in seconds (`--horizon`).
+    pub horizon_s: Option<f64>,
+    /// Trace seed (`--seed`, default 2026).
+    pub seed: u64,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        ServeArgs {
+            fast: false,
+            policies: false,
+            prefix: false,
+            queue_policy: QueuePolicy::Fcfs,
+            rate_rps: None,
+            horizon_s: None,
+            seed: 2026,
+        }
+    }
+}
+
+impl ServeArgs {
+    /// True when the user asked for a non-default single sweep (a custom
+    /// rate/horizon/queue-policy) rather than the canned `serve_load`.
+    pub fn is_custom(&self) -> bool {
+        self.queue_policy != QueuePolicy::Fcfs
+            || self.rate_rps.is_some()
+            || self.horizon_s.is_some()
+            || self.seed != 2026
+    }
+
+    /// Parse the argument tail after `serve`. Unknown flags, bad policy
+    /// names and out-of-range numbers are errors, not panics.
+    pub fn parse(args: &[String]) -> Result<ServeArgs> {
+        let mut out = ServeArgs::default();
+        let mut i = 0usize;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--fast" => out.fast = true,
+                "--policies" => out.policies = true,
+                "--prefix" => out.prefix = true,
+                "--policy" => {
+                    let v = value(args, i, "--policy")?;
+                    out.queue_policy = match QueuePolicy::parse(v) {
+                        Some(p) => p,
+                        None => bail!("unknown queue policy '{v}' (expected fcfs|sjf|priority)"),
+                    };
+                    i += 1;
+                }
+                "--rate" => {
+                    let v = parse_num(args, i, "--rate")?;
+                    if !(v > 0.0 && v <= 1e6) {
+                        bail!("--rate must be in (0, 1e6] requests/s, got {v}");
+                    }
+                    out.rate_rps = Some(v);
+                    i += 1;
+                }
+                "--horizon" => {
+                    let v = parse_num(args, i, "--horizon")?;
+                    if !(v > 0.0 && v <= 3600.0) {
+                        bail!("--horizon must be in (0, 3600] seconds, got {v}");
+                    }
+                    out.horizon_s = Some(v);
+                    i += 1;
+                }
+                "--seed" => {
+                    let v = value(args, i, "--seed")?;
+                    out.seed = match v.parse::<u64>() {
+                        Ok(s) => s,
+                        Err(_) => bail!("--seed expects an unsigned integer, got '{v}'"),
+                    };
+                    i += 1;
+                }
+                other => bail!("unknown serve option '{other}'; see `flatattention help`"),
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+fn value<'a>(args: &'a [String], i: usize, flag: &str) -> Result<&'a str> {
+    match args.get(i + 1) {
+        Some(v) => Ok(v.as_str()),
+        None => bail!("{flag} expects a value"),
+    }
+}
+
+fn parse_num(args: &[String], i: usize, flag: &str) -> Result<f64> {
+    let v = value(args, i, flag)?;
+    match v.parse::<f64>() {
+        Ok(x) if x.is_finite() => Ok(x),
+        _ => bail!("{flag} expects a finite number, got '{v}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_flags() {
+        let a = ServeArgs::parse(&argv(&[])).unwrap();
+        assert_eq!(a, ServeArgs::default());
+        assert!(!a.is_custom());
+        let a = ServeArgs::parse(&argv(&["--fast", "--policies", "--prefix"])).unwrap();
+        assert!(a.fast && a.policies && a.prefix);
+        assert!(!a.is_custom());
+    }
+
+    #[test]
+    fn parses_policy_rate_horizon_seed() {
+        let a = ServeArgs::parse(&argv(&[
+            "--policy", "sjf", "--rate", "800", "--horizon", "12.5", "--seed", "7",
+        ]))
+        .unwrap();
+        assert_eq!(a.queue_policy, QueuePolicy::Sjf);
+        assert_eq!(a.rate_rps, Some(800.0));
+        assert_eq!(a.horizon_s, Some(12.5));
+        assert_eq!(a.seed, 7);
+        assert!(a.is_custom());
+    }
+
+    #[test]
+    fn bad_policy_name_is_an_error_not_a_panic() {
+        let e = ServeArgs::parse(&argv(&["--policy", "lifo"])).unwrap_err();
+        assert!(e.to_string().contains("unknown queue policy"), "{e}");
+        assert!(ServeArgs::parse(&argv(&["--policy"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn out_of_range_and_malformed_rates_error() {
+        for bad in [["--rate", "0"], ["--rate", "-5"], ["--rate", "1e9"], ["--rate", "abc"]] {
+            assert!(ServeArgs::parse(&argv(&bad)).is_err(), "{bad:?} must fail");
+        }
+        for bad in [["--horizon", "0"], ["--horizon", "1e7"], ["--horizon", "NaN"]] {
+            assert!(ServeArgs::parse(&argv(&bad)).is_err(), "{bad:?} must fail");
+        }
+        assert!(ServeArgs::parse(&argv(&["--seed", "-1"])).is_err());
+        assert!(ServeArgs::parse(&argv(&["--bogus"])).is_err());
+    }
+}

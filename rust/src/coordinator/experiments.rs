@@ -22,8 +22,8 @@ use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
 use crate::multichip::wafer::{best_under_tpot, ep_plans, parallel_batch_sweeps};
 use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
-use crate::serve::request::{generate_trace, TraceConfig, TrafficPattern};
-use crate::serve::scheduler::AdmissionPolicy;
+use crate::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use crate::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
 use crate::sim::Graph;
 use crate::workload::attention::{AttentionShape, Phase};
 use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
@@ -47,6 +47,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("tab3", "Related-work feature matrix"),
         ("serve_load", "Serving: goodput + TTFT/TPOT percentiles vs offered load, 3 traffic patterns"),
         ("serve_policies", "Serving: KV admission policies (reserve vs on-demand+preempt) under memory pressure"),
+        ("serve_prefix", "Serving: prefix-cache KV reuse + FCFS/SJF/priority scheduling on shared-prompt traffic"),
     ]
 }
 
@@ -69,6 +70,7 @@ pub fn run(id: &str, fast: bool) -> Result<Report> {
         "tab3" => tab3(),
         "serve_load" => serve_load(fast),
         "serve_policies" => serve_policies(fast),
+        "serve_prefix" => serve_prefix(fast),
         _ => bail!("unknown experiment '{id}'; see `flatattention list`"),
     })
 }
@@ -707,7 +709,129 @@ fn serve_load(fast: bool) -> Report {
             None => r.note(format!("{}: no saturation inside the sweep", pattern.label())),
         };
     }
-    r.note("steady-state anchor: Table II Ours1 holds 50 ms TPOT at batch 256 — the serving knee sits where continuous batching pushes past that regime");
+    r.note(
+        "steady-state anchor: Table II Ours1 holds 50 ms TPOT at batch 256 — the serving knee sits where continuous batching pushes past that regime",
+    );
+    r
+}
+
+/// Serving sweep at a caller-chosen queue policy / rate / horizon / seed
+/// (the `flatattention serve --policy/--rate/...` path).
+pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig {
+        scheduler: SchedulerConfig { queue_policy: policy, ..Default::default() },
+        ..Default::default()
+    };
+    let trace = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon));
+    let mut r = Report::new("Serving — custom sweep (DeepSeek-v3-671B, EP32-PP2 wafer)");
+    r.preamble(format!(
+        "poisson {rate:.0} rps over {horizon} s, queue policy {}, seed {seed}",
+        policy.label()
+    ));
+    r.header(&[
+        "policy", "rps", "done", "backlog", "TTFT mean", "p99 (ms)", "TPOT p99 (ms)", "tok/s",
+        "goodput",
+    ]);
+    let (o, _) = simulate(
+        &sys,
+        &ds,
+        &trace,
+        &cfg,
+        horizon,
+        policy.label(),
+        rate,
+        &KernelCache::new(),
+        &StageTimeCache::new(),
+    );
+    r.row(vec![
+        policy.label().into(),
+        format!("{:.0}", o.offered_rps),
+        o.completed.to_string(),
+        (o.in_flight + o.queued).to_string(),
+        format!("{:.0}", o.ttft_ms.mean),
+        format!("{:.0}", o.ttft_ms.p99),
+        format!("{:.1}", o.tpot_ms.p99),
+        format!("{:.0}", o.system_tokens_per_s),
+        format!("{:.0}", o.goodput_rps),
+    ]);
+    r
+}
+
+/// Prefix-cache KV reuse + scheduling policies on shared-prompt traffic:
+/// the `serve_prefix` experiment. Deterministic at the fixed seed — the
+/// whole table (hit rates, TTFT deltas) replays bit-exactly.
+fn serve_prefix(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let horizon = if fast { 4.0 } else { 15.0 };
+    let rate = if fast { 300.0 } else { 1000.0 };
+    let seed = 4242u64;
+    let tc = TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon)
+        .with_prefixes(PrefixProfile::agentic());
+    let trace = generate_trace(&tc);
+    let mut r = Report::new(
+        "Serving — prefix-cache KV reuse + scheduling policies (shared-prompt traffic)",
+    );
+    r.preamble(format!(
+        "poisson {rate:.0} rps over {horizon} s, EP32-PP2, seed {seed}; 70% of prompts share one of 8 system prefixes (~1k tokens)"
+    ));
+    r.preamble("hit rate = shareable prefix tokens served from the cache at admission");
+    r.header(&[
+        "config", "done", "hit rate", "evict", "TTFT mean", "TTFT p50", "p99 (ms)", "TPOT p99",
+        "tok/s", "goodput",
+    ]);
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let mut baseline_ttft: Option<f64> = None;
+    let mut prefix_ttft: Option<f64> = None;
+    for (name, queue_policy, block) in [
+        ("fcfs (no cache)", QueuePolicy::Fcfs, 0u32),
+        ("fcfs + prefix", QueuePolicy::Fcfs, 256),
+        ("sjf + prefix", QueuePolicy::Sjf, 256),
+        ("priority + prefix", QueuePolicy::Priority, 256),
+    ] {
+        let cfg = ServeConfig {
+            scheduler: SchedulerConfig {
+                queue_policy,
+                prefix_block_tokens: block,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (o, _) =
+            simulate(&sys, &ds, &trace, &cfg, horizon, name, rate, &kernels, &stages);
+        assert!(o.conserves_requests(), "request conservation violated in {name}");
+        assert!(!o.kv_over_capacity, "KV overflow in {name}");
+        if name == "fcfs (no cache)" {
+            baseline_ttft = Some(o.ttft_ms.mean);
+        }
+        if name == "fcfs + prefix" {
+            prefix_ttft = Some(o.ttft_ms.mean);
+        }
+        r.row(vec![
+            name.into(),
+            o.completed.to_string(),
+            fmt_pct(o.prefix_hit_rate()),
+            o.prefix_evictions.to_string(),
+            format!("{:.0}", o.ttft_ms.mean),
+            format!("{:.0}", o.ttft_ms.p50),
+            format!("{:.0}", o.ttft_ms.p99),
+            format!("{:.1}", o.tpot_ms.p99),
+            format!("{:.0}", o.system_tokens_per_s),
+            format!("{:.0}", o.goodput_rps),
+        ]);
+    }
+    if let (Some(base), Some(pfx)) = (baseline_ttft, prefix_ttft) {
+        if base > 0.0 {
+            r.note(format!(
+                "prefix cache TTFT delta (fcfs): mean {base:.0} ms → {pfx:.0} ms ({:+.1}%)",
+                100.0 * (pfx - base) / base
+            ));
+        }
+    }
+    r.note("reused prefix blocks skip both prefill compute and KV admission; SJF reorders the queue by prompt length for TTFT");
     r
 }
 

@@ -1,3 +1,4 @@
-//! Experiment coordinator: registry, sweeps, reports.
+//! Experiment coordinator: registry, sweeps, reports, CLI parsing.
+pub mod cli;
 pub mod experiments;
 pub mod report;

@@ -26,10 +26,14 @@
 //! - [`multichip`] — the wafer-scale multi-die system model: D2D mesh,
 //!   PP / EP / hybrid parallelism, throughput + TPOT estimation.
 //! - [`serve`] — the request-level serving simulator layered on the decode
-//!   model: synthetic arrival traces (Poisson/bursty/diurnal), KV-cache
-//!   admission from the MLA cache layout, continuous batching with chunked
-//!   prefill and preemption, and offered-load sweeps reporting TTFT/TPOT
-//!   percentiles and SLO goodput.
+//!   model: synthetic arrival traces (Poisson/bursty/diurnal, with shared
+//!   system-prompt populations and priority classes), KV-cache admission
+//!   from the MLA cache layout, prefix-cache KV reuse via a per-column
+//!   token-block trie, continuous batching with chunked prefill billed by
+//!   the *actual prefill dataflow simulation* (per-chunk causal attention
+//!   shapes at the request's context offset), FCFS/SJF/priority queue
+//!   policies, preemption, and offered-load sweeps reporting TTFT/TPOT
+//!   percentiles, prefix hit rates and SLO goodput.
 //! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
 //! - [`coordinator`] — the experiment registry (one entry per paper
 //!   figure/table, plus the `serve_*` serving experiments), sweep runner and

@@ -7,18 +7,22 @@
 //! flatattention experiment <id> [--fast]     # regenerate a paper figure/table
 //! flatattention all [--fast]                 # run every experiment
 //! flatattention simulate [options]           # simulate one attention kernel
-//! flatattention serve [--fast] [--policies]  # request-level serving simulation
+//! flatattention serve [--fast] [--policies] [--prefix]
+//!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
 //!
 //! `serve` drives the continuous-batching serving simulator (experiment ids
-//! `serve_load` / `serve_policies`): deterministic goodput-vs-offered-load
-//! curves with TTFT/TPOT p50/p95/p99 for Poisson, bursty and diurnal
-//! traffic on the Table II EP32-PP2 wafer configuration.
+//! `serve_load` / `serve_policies` / `serve_prefix`): deterministic
+//! goodput-vs-offered-load curves with TTFT/TPOT p50/p95/p99 for Poisson,
+//! bursty and diurnal traffic on the Table II EP32-PP2 wafer configuration,
+//! with dataflow-grounded prefill billing, prefix-cache KV reuse and
+//! FCFS/SJF/priority queue policies.
 
 use anyhow::{bail, Context, Result};
 
 use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
+use flatattention::coordinator::cli::ServeArgs;
 use flatattention::coordinator::experiments;
 use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
 use flatattention::exec::functional;
@@ -57,7 +61,8 @@ fn run() -> Result<()> {
             println!("  flatattention simulate [--dataflow fa2|fa3|flat] [--phase prefill|decode]");
             println!("                         [--seq N] [--kv N] [--heads N] [--dim N] [--batch N]");
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
-            println!("  flatattention serve [--fast] [--policies]");
+            println!("  flatattention serve [--fast] [--policies] [--prefix]");
+            println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
             println!("  flatattention verify");
             Ok(())
         }
@@ -132,13 +137,22 @@ fn run() -> Result<()> {
             Ok(())
         }
         "serve" => {
-            // Shorthand for the serving experiments: the load sweep, plus
-            // the KV-policy comparison when --policies is given.
-            let rep = experiments::run("serve_load", flag("--fast"))?;
-            rep.print();
-            if flag("--policies") {
+            // Shorthand for the serving experiments: the load sweep (or a
+            // custom single sweep / the prefix-cache experiment), plus the
+            // KV-policy comparison when --policies is given.
+            let sargs = ServeArgs::parse(&args[1..])?;
+            if sargs.prefix {
+                experiments::run("serve_prefix", sargs.fast)?.print();
+            } else if sargs.is_custom() {
+                let rate = sargs.rate_rps.unwrap_or(1000.0);
+                let horizon = sargs.horizon_s.unwrap_or(if sargs.fast { 4.0 } else { 10.0 });
+                experiments::serve_custom(sargs.queue_policy, rate, horizon, sargs.seed).print();
+            } else {
+                experiments::run("serve_load", sargs.fast)?.print();
+            }
+            if sargs.policies {
                 println!();
-                experiments::run("serve_policies", flag("--fast"))?.print();
+                experiments::run("serve_policies", sargs.fast)?.print();
             }
             Ok(())
         }

@@ -109,7 +109,9 @@ impl KernelCache {
 
     /// Look up `key`, simulating outside the lock on a miss so concurrent
     /// workers overlap their kernel simulations instead of serializing.
-    fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> KernelMetrics) -> KernelMetrics {
+    /// Crate-visible so the serving layer's prefill engine shares one kernel
+    /// memo with the decode evaluator.
+    pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> KernelMetrics) -> KernelMetrics {
         if let Some(m) = self.inner.lock().unwrap().get(&key) {
             return m.clone();
         }

@@ -10,6 +10,14 @@
 //! Weights per chip: routed experts are sharded EP-ways within each stage's
 //! layers; everything else (attention, shared experts, gates, dense FFN) is
 //! replicated across the EP group but split across pipeline stages.
+//!
+//! [`PrefixStore`] adds prefix-cache KV reuse on top of the per-column
+//! budget: a token-block trie keyed by `(prefix_id, block_index)` holding
+//! the shared leading blocks of system prompts. Hits skip both prefill
+//! compute and KV admission for the shared tokens; unreferenced blocks are
+//! evicted LRU-from-the-chain-tail under memory pressure.
+
+use std::collections::HashMap;
 
 use crate::arch::config::Dtype;
 use crate::multichip::d2d::WaferSystem;
@@ -119,6 +127,165 @@ impl KvColumn {
     }
 }
 
+/// One resident shared block of a prompt prefix.
+#[derive(Debug, Clone, Copy)]
+struct PrefixBlock {
+    /// Requests currently pinning this block (admitted and not yet
+    /// completed/preempted). Zero-ref blocks stay resident for future hits
+    /// until evicted under pressure.
+    refs: u32,
+    /// LRU clock stamp of the last pin/insert touching this block.
+    last_use: u64,
+}
+
+/// Per-EP-column prefix-cache: a token-block trie over shared prompt
+/// prefixes. The path of prefix `p` is the block chain `(p, 0), (p, 1), …`;
+/// pins always cover a leading chain, so reference counts are non-increasing
+/// along it and zero-ref blocks form a suffix — eviction from the chain tail
+/// keeps the trie prefix-closed.
+///
+/// Token accounting: block tokens are charged to the owning [`KvColumn`] by
+/// the scheduler (transferred from the inserting request's reservation), so
+/// `column.held_tokens` always covers private KV *plus* shared blocks and
+/// the capacity invariant needs no second ledger.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStore {
+    /// Shareable-block granularity in tokens (0 disables the store).
+    pub block_tokens: u32,
+    blocks: HashMap<(u64, u32), PrefixBlock>,
+    clock: u64,
+    /// Tokens currently held by resident shared blocks.
+    pub shared_tokens: f64,
+    /// Blocks evicted under pressure so far.
+    pub evictions: u64,
+    /// Blocks ever inserted.
+    pub inserted_blocks: u64,
+}
+
+impl PrefixStore {
+    pub fn new(block_tokens: u32) -> Self {
+        PrefixStore { block_tokens, ..Default::default() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.block_tokens > 0
+    }
+
+    /// Whole leading blocks of `prefix_tokens` that are shareable at all.
+    pub fn shareable_tokens(&self, prefix_id: u64, prefix_tokens: u32) -> u32 {
+        if prefix_id == 0 || !self.is_enabled() {
+            return 0;
+        }
+        (prefix_tokens / self.block_tokens) * self.block_tokens
+    }
+
+    /// Longest resident leading chain of `prefix_id`, in tokens, capped at
+    /// the shareable part of `prefix_tokens`.
+    pub fn probe(&self, prefix_id: u64, prefix_tokens: u32) -> u32 {
+        let shareable = self.shareable_tokens(prefix_id, prefix_tokens);
+        if shareable == 0 {
+            return 0;
+        }
+        let mut hit = 0u32;
+        for b in 0..shareable / self.block_tokens {
+            if self.blocks.contains_key(&(prefix_id, b)) {
+                hit += 1;
+            } else {
+                break;
+            }
+        }
+        hit * self.block_tokens
+    }
+
+    /// Pin the leading `tokens` (whole blocks, as returned by [`probe`]) of
+    /// `prefix_id` for an admitted request.
+    ///
+    /// [`probe`]: PrefixStore::probe
+    pub fn pin(&mut self, prefix_id: u64, tokens: u32) {
+        if prefix_id == 0 || !self.is_enabled() || tokens == 0 {
+            return;
+        }
+        self.clock += 1;
+        for b in 0..tokens / self.block_tokens {
+            if let Some(e) = self.blocks.get_mut(&(prefix_id, b)) {
+                e.refs += 1;
+                e.last_use = self.clock;
+            }
+        }
+    }
+
+    /// Release the pins of a completed or preempted request that held the
+    /// leading `tokens` of `prefix_id`. Blocks stay resident for reuse.
+    pub fn unpin(&mut self, prefix_id: u64, tokens: u32) {
+        if prefix_id == 0 || !self.is_enabled() || tokens == 0 {
+            return;
+        }
+        for b in 0..tokens / self.block_tokens {
+            if let Some(e) = self.blocks.get_mut(&(prefix_id, b)) {
+                e.refs = e.refs.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Publish the blocks covering `[from_tokens, to_tokens)` of `prefix_id`
+    /// after the inserting request finished prefilling them. Blocks another
+    /// request published meanwhile are pinned instead of re-inserted.
+    /// Returns the tokens *newly* charged to the store — the scheduler must
+    /// transfer exactly that many from the inserter's private reservation.
+    pub fn insert(&mut self, prefix_id: u64, from_tokens: u32, to_tokens: u32) -> u32 {
+        if prefix_id == 0 || !self.is_enabled() || to_tokens <= from_tokens {
+            return 0;
+        }
+        self.clock += 1;
+        let mut newly = 0u32;
+        for b in from_tokens / self.block_tokens..to_tokens / self.block_tokens {
+            match self.blocks.get_mut(&(prefix_id, b)) {
+                Some(e) => {
+                    e.refs += 1;
+                    e.last_use = self.clock;
+                }
+                None => {
+                    self.blocks.insert(
+                        (prefix_id, b),
+                        PrefixBlock { refs: 1, last_use: self.clock },
+                    );
+                    self.inserted_blocks += 1;
+                    newly += self.block_tokens;
+                }
+            }
+        }
+        self.shared_tokens += newly as f64;
+        newly
+    }
+
+    /// Evict unreferenced blocks (LRU first, always from a chain's tail so
+    /// the trie stays prefix-closed) until at least `deficit` tokens are
+    /// freed or nothing evictable remains. Returns the tokens freed — the
+    /// caller releases them from the owning column.
+    pub fn evict_for(&mut self, deficit: f64) -> f64 {
+        let mut freed = 0.0f64;
+        while freed < deficit {
+            let victim = self
+                .blocks
+                .iter()
+                .filter(|(&(p, b), e)| e.refs == 0 && !self.blocks.contains_key(&(p, b + 1)))
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&k, _)| k);
+            let Some(k) = victim else { break };
+            self.blocks.remove(&k);
+            self.evictions += 1;
+            freed += self.block_tokens as f64;
+        }
+        self.shared_tokens = (self.shared_tokens - freed).max(0.0);
+        freed
+    }
+
+    /// Resident shared blocks (all prefixes).
+    pub fn resident_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +329,50 @@ mod tests {
         let b = KvCacheModel::new(&sys, &ds, ParallelismPlan::new(16, 4), Dtype::Fp8);
         assert!(b.bytes_per_token_per_chip < a.bytes_per_token_per_chip);
         assert!(b.weight_bytes_per_chip < a.weight_bytes_per_chip + (1 << 30));
+    }
+
+    #[test]
+    fn prefix_store_probe_insert_reuse() {
+        let mut s = PrefixStore::new(256);
+        assert_eq!(s.probe(1, 1000), 0);
+        // Only whole blocks are shareable: 1000 tokens → 3 blocks (768).
+        assert_eq!(s.shareable_tokens(1, 1000), 768);
+        let newly = s.insert(1, 0, 768);
+        assert_eq!(newly, 768);
+        assert_eq!(s.resident_blocks(), 3);
+        assert_eq!(s.probe(1, 1000), 768);
+        // A different prefix id shares nothing.
+        assert_eq!(s.probe(2, 1000), 0);
+        // Re-inserting the same range charges nothing new.
+        assert_eq!(s.insert(1, 0, 768), 0);
+        // prefix_id 0 means "no shared prefix".
+        assert_eq!(s.probe(0, 4096), 0);
+        assert_eq!(s.insert(0, 0, 4096), 0);
+    }
+
+    #[test]
+    fn prefix_store_eviction_respects_pins_and_chain_order() {
+        let mut s = PrefixStore::new(256);
+        s.insert(1, 0, 512); // blocks (1,0),(1,1) — pinned by inserter
+        s.insert(2, 0, 256); // block (2,0) — pinned by inserter
+        // Nothing evictable while every block is pinned.
+        assert_eq!(s.evict_for(256.0), 0.0);
+        s.unpin(1, 512);
+        s.unpin(2, 256);
+        // Pin prefix 1 again (a hit): prefix 2 is now the LRU zero-ref.
+        s.pin(1, s.probe(1, 512));
+        let freed = s.evict_for(1.0);
+        assert_eq!(freed, 256.0, "LRU zero-ref block (2,0) goes first");
+        assert_eq!(s.probe(2, 256), 0);
+        assert_eq!(s.probe(1, 512), 512, "pinned chain survives");
+        // Unpin and evict everything: tail block (1,1) must go before (1,0).
+        s.unpin(1, 512);
+        assert_eq!(s.evict_for(256.0), 256.0);
+        assert_eq!(s.probe(1, 512), 256, "chain stays prefix-closed");
+        assert_eq!(s.evict_for(1e9), 256.0);
+        assert_eq!(s.resident_blocks(), 0);
+        assert!(s.shared_tokens.abs() < 1e-9);
+        assert_eq!(s.evictions, 3);
     }
 
     #[test]

@@ -3,33 +3,48 @@
 //!
 //! The steady-state `multichip::parallelism::DecodeEvaluator` answers "what
 //! is TPOT/throughput at a *fixed* batch and KV length"; production serving
-//! instead sees request arrivals, mixed prompt/output lengths, KV-cache
-//! pressure and queueing. This module closes that gap with a deterministic,
-//! iteration-level simulation:
+//! instead sees request arrivals, mixed prompt/output lengths, shared
+//! system prompts, KV-cache pressure and queueing. This module closes that
+//! gap with a deterministic, iteration-level simulation:
 //!
 //! - [`request`] — seeded synthetic traces: Poisson / bursty / diurnal
-//!   arrivals × prompt/output-length mixtures, with coupled thinning for
-//!   load sweeps.
+//!   arrivals × prompt/output-length mixtures × shared-prefix populations
+//!   ([`request::PrefixProfile`]) and priority classes, with coupled
+//!   thinning for load sweeps.
 //! - [`kv`] — per-chip KV capacity from the MLA latent cache layout
-//!   (`DeepSeekConfig`), weights subtracted, organized per EP column.
+//!   (`DeepSeekConfig`), weights subtracted, organized per EP column; plus
+//!   [`kv::PrefixStore`], the token-block trie behind prefix-cache KV reuse
+//!   (hits skip prefill compute and KV admission; LRU chain-tail eviction
+//!   under pressure).
 //! - [`scheduler`] — continuous batching: iteration-level batch formation,
-//!   chunked prefill riding decode iterations, FCFS admission with
-//!   reserve-full or on-demand+preemption KV policies.
-//! - [`sim`] — the event loop driving memoized stage times from
-//!   [`DecodeEvaluator`](crate::multichip::parallelism::DecodeEvaluator),
-//!   emitting TTFT/TPOT p50/p95/p99, system tokens/s and SLO goodput, plus
-//!   [`sim::load_sweep`] for goodput-vs-offered-load curves and
+//!   chunked prefill riding decode iterations, FCFS / SJF / Priority queue
+//!   policies, prefix-aware placement, and reserve-full or
+//!   on-demand+preemption KV admission.
+//! - [`prefill`] — the dataflow-grounded prefill cost model: each chunk is
+//!   billed by the actual FlatAttention/FlashAttention dataflow simulation
+//!   of its causal attention shape at the request's context offset
+//!   (replacing PR 1's marginal-row approximation).
+//! - [`sim`] — the event loop combining memoized decode stage times from
+//!   [`DecodeEvaluator`](crate::multichip::parallelism::DecodeEvaluator)
+//!   with [`prefill::PrefillEngine`] chunk billing, emitting TTFT/TPOT
+//!   p50/p95/p99, system tokens/s, SLO goodput and prefix-cache hit rates,
+//!   plus [`sim::load_sweep`] for goodput-vs-offered-load curves and
 //!   [`sim::saturation_knee`] detection.
 //!
-//! Entry points: `flatattention serve` (CLI), experiment ids `serve_load`
-//! and `serve_policies`, `examples/serving.rs`, `benches/serve_load.rs`.
+//! Entry points: `flatattention serve` (CLI), experiment ids `serve_load`,
+//! `serve_policies` and `serve_prefix`, `examples/serving.rs`,
+//! `benches/serve_load.rs`.
 
 pub mod kv;
+pub mod prefill;
 pub mod request;
 pub mod scheduler;
 pub mod sim;
 
-pub use kv::KvCacheModel;
-pub use request::{generate_trace, thin_trace, LengthProfile, Request, TraceConfig, TrafficPattern};
-pub use scheduler::{AdmissionPolicy, Scheduler, SchedulerConfig};
+pub use kv::{KvCacheModel, PrefixStore};
+pub use prefill::PrefillEngine;
+pub use request::{
+    generate_trace, thin_trace, LengthProfile, PrefixProfile, Request, TraceConfig, TrafficPattern,
+};
+pub use scheduler::{AdmissionPolicy, QueuePolicy, Scheduler, SchedulerConfig};
 pub use sim::{load_sweep, saturation_knee, simulate, ServeConfig, ServeOutcome, StageTimeCache};

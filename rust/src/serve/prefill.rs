@@ -1,0 +1,290 @@
+//! Dataflow-grounded prefill cost model for the serving loop.
+//!
+//! PR 1 billed co-scheduled prefill tokens at the decode evaluator's
+//! *marginal per-row* cost — a GEMM-only approximation that ignored the
+//! phase change: prefill attention is compute-bound (Fig. 1a/1b) while
+//! decode is memory-bound, and an MLA prefill chunk additionally pays the
+//! un-absorbed K/V recompute over its whole context offset. This module
+//! replaces that path end-to-end: each chunk is billed by the *actual*
+//! FlatAttention / FlashAttention dataflow simulation of its causal
+//! [`AttentionShape`](crate::workload::attention::AttentionShape) at the
+//! request's current context offset, composed through the same per-layer
+//! kernel flow machinery the decode evaluator uses
+//! ([`prefill_layer_kernels`]).
+//!
+//! Chunk stage times are memoized per (system, model, plan, dataflow,
+//! chunk-bucket, context-bucket) in the shared
+//! [`StageTimeCache`](crate::serve::sim::StageTimeCache), on top of the
+//! kernel-level [`KernelCache`] — the serving loop never re-simulates an
+//! identical chunk shape, and GEMM/vector kernels whose shapes coincide
+//! with decode kernels hit the same entries the decode evaluator populated.
+
+use crate::arch::config::{Dtype, SimFidelity};
+use crate::dataflow::{simulate_kernel, AttentionDataflow};
+use crate::metrics::KernelMetrics;
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::{AttentionChoice, KernelCache, ParallelismPlan};
+use crate::serve::sim::{kv_bucket, StageTimeCache};
+use crate::workload::attention::AttentionShape;
+use crate::workload::deepseek::{prefill_layer_kernels, DeepSeekConfig, KernelClass, MoePlacement};
+
+/// Quantize a chunk size for the stage-time memo: the next power of two.
+/// Chunks are bounded by `prefill_chunk_tokens` (1k by default), so this
+/// keeps the number of distinct chunk evaluations logarithmic while
+/// rounding *up* stays conservative.
+pub fn chunk_bucket(tokens: u64) -> u32 {
+    (tokens.clamp(1, 1 << 20) as u32).next_power_of_two()
+}
+
+/// Stage-time oracle for prefill chunks of one (system, model, plan,
+/// dataflow) combination. Mirrors the decode evaluator's structure: build
+/// the per-layer kernel flow, simulate each kernel on the chip (memoized),
+/// add EP all-to-all dispatch/combine and the PP boundary transfer, and
+/// scale by the layers per pipeline stage.
+pub struct PrefillEngine<'a> {
+    sys: &'a WaferSystem,
+    ds: &'a DeepSeekConfig,
+    plan: ParallelismPlan,
+    choice: AttentionChoice,
+    fidelity: SimFidelity,
+    dtype: Dtype,
+    kernels: KernelCache,
+    stages: StageTimeCache,
+    /// Constant cache-key prefix (system fingerprint, D2D, model, fidelity,
+    /// dtype, dataflow, plan) — only `|pfc{}|ctx{}` varies per lookup.
+    key_prefix: String,
+}
+
+impl<'a> PrefillEngine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        sys: &'a WaferSystem,
+        ds: &'a DeepSeekConfig,
+        plan: ParallelismPlan,
+        choice: AttentionChoice,
+        fidelity: SimFidelity,
+        dtype: Dtype,
+        kernels: KernelCache,
+        stages: StageTimeCache,
+    ) -> Self {
+        let key_prefix = format!(
+            "prefill|{}|d2d{}x{}+{:.4e}bps+{:.1e}s|{}L{}d{}|{:?}|{:?}|{}|ep{}pp{}",
+            sys.chip.fingerprint(),
+            sys.d2d.mesh_x,
+            sys.d2d.mesh_y,
+            sys.d2d.link_bandwidth_bytes_per_s,
+            sys.d2d.hop_latency_s,
+            ds.name,
+            ds.layers,
+            ds.d_model,
+            fidelity,
+            dtype,
+            choice.label(),
+            plan.ep,
+            plan.pp,
+        );
+        PrefillEngine { sys, ds, plan, choice, fidelity, dtype, kernels, stages, key_prefix }
+    }
+
+    /// The (chunk, context) operating point a lookup is actually billed at.
+    pub fn bucketed(&self, chunk_tokens: u64, context_tokens: f64) -> (u32, u32) {
+        let chunk = chunk_bucket(chunk_tokens);
+        let ctx = kv_bucket(context_tokens.max(chunk as f64), self.ds.max_context);
+        (chunk, ctx.max(chunk))
+    }
+
+    /// The causal chunk attention shape billed at a bucketed operating
+    /// point (exposed so regression tests can evaluate the identical shape
+    /// directly against the dataflow simulation).
+    pub fn chunk_shape(&self, chunk: u32, context: u32) -> AttentionShape {
+        self.ds.mla_prefill_shape(chunk, context, self.dtype)
+    }
+
+    /// Memoized stage seconds one pipeline stage spends on a prefill chunk
+    /// of `chunk_tokens` at `context_tokens` total context.
+    pub fn chunk_stage_seconds(&self, chunk_tokens: u64, context_tokens: f64) -> f64 {
+        if chunk_tokens == 0 {
+            return 0.0;
+        }
+        let (chunk, ctx) = self.bucketed(chunk_tokens, context_tokens);
+        let key = format!("{}|pfc{}|ctx{}", self.key_prefix, chunk, ctx);
+        let stages = self.stages.clone();
+        stages.get_or_insert_with(key, || self.evaluate_chunk(chunk, ctx))
+    }
+
+    /// Direct (unmemoized at stage level; kernel-memoized) dataflow
+    /// evaluation of one chunk: the ground truth `chunk_stage_seconds`
+    /// must match.
+    pub fn evaluate_chunk(&self, chunk: u32, context: u32) -> f64 {
+        let cfg = &self.sys.chip;
+        let chip_fp = cfg.fingerprint();
+        let rows = chunk.max(1) as u64;
+
+        // MoE routing statistics across the EP group (every column runs a
+        // comparable chunk concurrently in the worst iteration).
+        let group_tokens = rows * self.plan.ep as u64;
+        let total_pairs = group_tokens * self.ds.experts_per_token as u64;
+        let active_total = total_pairs.min(self.ds.n_experts as u64).max(1);
+        let rows_per_expert = total_pairs.div_ceil(active_total);
+        let active_per_chip = active_total
+            .div_ceil(self.plan.ep as u64)
+            .min((self.ds.n_experts / self.plan.ep).max(1) as u64);
+        let moe = MoePlacement { experts_on_chip: active_per_chip as u32, rows_per_expert };
+
+        // Per-layer kernel times (attention at the causal chunk shape).
+        let kernels = prefill_layer_kernels(self.ds, chunk, context, self.dtype, moe);
+        let mut layer_s = 0.0;
+        let mut moe_s = 0.0;
+        for k in &kernels {
+            let m = self.kernel(&chip_fp, &k.class);
+            layer_s += m.seconds;
+            if k.name.starts_with("moe.") {
+                moe_s += m.seconds;
+            }
+        }
+
+        // C2C dispatch + combine per MoE layer (within the EP group).
+        let dispatch_bytes = rows as f64
+            * self.ds.experts_per_token as f64
+            * self.ds.d_model as f64
+            * self.dtype.bytes() as f64;
+        let c2c_s = 2.0 * self.sys.d2d.all_to_all_seconds(self.plan.ep, dispatch_bytes);
+        let moe_layer_s = layer_s + c2c_s;
+
+        // Dense leading layers: replace MoE kernels with the dense FFN.
+        let d = self.ds.d_model as u64;
+        let di = self.ds.dense_inter as u64;
+        let up = self.kernel(&chip_fp, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 });
+        let down = self.kernel(&chip_fp, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 });
+        let dense_layer_s = moe_layer_s - c2c_s - moe_s + up.seconds + down.seconds;
+
+        // Stage time: layers split over pipeline stages + PP boundary xfer.
+        let moe_layers = (self.ds.layers - self.ds.dense_layers) as f64;
+        let per_stage_moe = moe_layers / self.plan.pp as f64;
+        let per_stage_dense = self.ds.dense_layers as f64 / self.plan.pp as f64;
+        let boundary = if self.plan.pp > 1 {
+            self.sys
+                .d2d
+                .neighbor_transfer_seconds(rows as f64 * d as f64 * self.dtype.bytes() as f64)
+        } else {
+            0.0
+        };
+        per_stage_moe * moe_layer_s + per_stage_dense * dense_layer_s + boundary
+    }
+
+    /// Memoized single-kernel simulation. The key layout matches the decode
+    /// evaluator's exactly, so GEMM/vector kernels with coinciding shapes
+    /// share entries across the two engines; attention kernels can never
+    /// collide because their shapes carry the phase.
+    fn kernel(&self, chip_fp: &str, class: &KernelClass) -> KernelMetrics {
+        let cfg = &self.sys.chip;
+        let key = format!("{chip_fp}|{:?}|{:?}|{:?}", self.fidelity, self.choice, class);
+        let (choice, fidelity) = (self.choice, self.fidelity);
+        self.kernels.get_or_insert_with(key, || {
+            simulate_kernel(
+                cfg,
+                class,
+                |s| match choice {
+                    AttentionChoice::Flat => AttentionDataflow::auto_flat(cfg, s),
+                    // The prefill-side SoA baseline is FlashAttention-3
+                    // (Fig. 1b), not the decode-side FA-2 lowering.
+                    AttentionChoice::FlashMla => AttentionDataflow::Fa3,
+                },
+                fidelity,
+            )
+        })
+    }
+
+    /// Entries currently in the backing stage-time memo (shared with the
+    /// decode stage times).
+    pub fn stage_cache_len(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::sim::ServeConfig;
+
+    fn engine<'a>(
+        sys: &'a WaferSystem,
+        ds: &'a DeepSeekConfig,
+        cfg: &ServeConfig,
+    ) -> PrefillEngine<'a> {
+        PrefillEngine::new(
+            sys,
+            ds,
+            cfg.plan,
+            cfg.choice,
+            cfg.fidelity,
+            cfg.dtype,
+            KernelCache::new(),
+            StageTimeCache::new(),
+        )
+    }
+
+    #[test]
+    fn chunk_bucket_rounds_up_to_pow2() {
+        assert_eq!(chunk_bucket(1), 1);
+        assert_eq!(chunk_bucket(3), 4);
+        assert_eq!(chunk_bucket(512), 512);
+        assert_eq!(chunk_bucket(513), 1024);
+        assert_eq!(chunk_bucket(1024), 1024);
+    }
+
+    #[test]
+    fn billed_time_matches_direct_dataflow_evaluation() {
+        // Acceptance criterion: a chunk's billed time equals a direct
+        // dataflow evaluation of the same (bucketed) shape within 1%.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let e = engine(&sys, &ds, &cfg);
+        for (chunk, ctx) in [(800u64, 900.0f64), (1024, 5000.0), (300, 40_000.0)] {
+            let billed = e.chunk_stage_seconds(chunk, ctx);
+            let (cb, xb) = e.bucketed(chunk, ctx);
+            let direct = e.evaluate_chunk(cb, xb);
+            assert!(billed > 0.0);
+            assert!(
+                (billed - direct).abs() <= 0.01 * direct,
+                "chunk {chunk} ctx {ctx}: billed {billed} vs direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_cost_grows_with_size_and_offset() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let e = engine(&sys, &ds, &cfg);
+        let small = e.chunk_stage_seconds(256, 256.0);
+        let big = e.chunk_stage_seconds(1024, 1024.0);
+        assert!(big > small, "bigger chunk must cost more: {big} vs {small}");
+        // Deep offsets pay K/V recompute + longer attention.
+        let shallow = e.chunk_stage_seconds(1024, 2048.0);
+        let deep = e.chunk_stage_seconds(1024, 65_536.0);
+        assert!(deep > 1.5 * shallow, "deep {deep} vs shallow {shallow}");
+        // Zero prefill tokens cost nothing.
+        assert_eq!(e.chunk_stage_seconds(0, 4096.0), 0.0);
+    }
+
+    #[test]
+    fn memoization_is_bucket_grained_and_shared() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let e = engine(&sys, &ds, &cfg);
+        let a = e.chunk_stage_seconds(700, 3000.0);
+        let n = e.stage_cache_len();
+        assert_eq!(n, 1);
+        // Same buckets (1024, 3072) → same memo entry, identical time.
+        let b = e.chunk_stage_seconds(600, 2100.0);
+        assert_eq!(e.stage_cache_len(), n);
+        assert_eq!(a, b);
+        // A different context bucket adds one entry.
+        e.chunk_stage_seconds(600, 9000.0);
+        assert_eq!(e.stage_cache_len(), n + 1);
+    }
+}

@@ -22,9 +22,33 @@ pub struct Request {
     pub prompt_tokens: u32,
     /// Requested output (decode) length in tokens.
     pub output_tokens: u32,
+    /// Shared-prompt family this request belongs to (a seeded system-prompt
+    /// id; 0 = unique prompt, nothing shareable). Every request with the
+    /// same non-zero `prefix_id` shares the identical leading
+    /// `prefix_tokens` of its prompt — the prefix cache's reuse key.
+    pub prefix_id: u64,
+    /// Leading prompt tokens shared by the whole `prefix_id` family
+    /// (`<= prompt_tokens`; 0 when `prefix_id` is 0).
+    pub prefix_tokens: u32,
+    /// Scheduling priority class, 0 = most urgent (the `Priority` queue
+    /// policy orders on this; FCFS/SJF ignore it).
+    pub priority: u8,
 }
 
 impl Request {
+    /// A plain request with no shared prefix and default priority.
+    pub fn new(id: u64, arrival_s: f64, prompt_tokens: u32, output_tokens: u32) -> Self {
+        Request {
+            id,
+            arrival_s,
+            prompt_tokens,
+            output_tokens,
+            prefix_id: 0,
+            prefix_tokens: 0,
+            priority: 0,
+        }
+    }
+
     /// Total KV footprint in tokens once fully decoded.
     pub fn total_tokens(&self) -> u64 {
         self.prompt_tokens as u64 + self.output_tokens as u64
@@ -140,6 +164,56 @@ impl LengthProfile {
     }
 }
 
+/// Shared-prompt population: which fraction of requests carry one of a
+/// small set of seeded system prompts, and how long those prompts are.
+/// Per-prefix lengths are a pure function of (trace seed, prefix id), so
+/// every request of a family reports the identical `prefix_tokens`.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixProfile {
+    /// Probability a request carries a shared prefix at all.
+    pub share_prob: f64,
+    /// Number of distinct shared prefixes (system prompts) in rotation.
+    pub num_prefixes: u32,
+    /// Prefix length distribution (exponential, clamped like
+    /// [`LengthProfile`]).
+    pub prefix_mean: f64,
+    pub prefix_min: u32,
+    pub prefix_max: u32,
+}
+
+impl PrefixProfile {
+    /// No shared prefixes (the default — traces behave exactly as before).
+    pub fn none() -> Self {
+        PrefixProfile {
+            share_prob: 0.0,
+            num_prefixes: 0,
+            prefix_mean: 0.0,
+            prefix_min: 0,
+            prefix_max: 0,
+        }
+    }
+
+    /// Agentic/RAG-like traffic: 70% of requests reuse one of 8 system
+    /// prompts of ~1k tokens (≤4k).
+    pub fn agentic() -> Self {
+        PrefixProfile {
+            share_prob: 0.7,
+            num_prefixes: 8,
+            prefix_mean: 1024.0,
+            prefix_min: 256,
+            prefix_max: 4096,
+        }
+    }
+
+    /// Deterministic length of prefix `id` under trace seed `seed`.
+    pub fn prefix_len(&self, seed: u64, id: u64) -> u32 {
+        let mut rng = SplitMix64::new(seed ^ 0x9D5F_AB12_77C0_0004 ^ id.wrapping_mul(0xA24B_AED4_963E_E407));
+        let u = rng.next_f64();
+        let x = -self.prefix_mean * (1.0 - u).ln();
+        (x.round() as u64).clamp(self.prefix_min as u64, self.prefix_max as u64) as u32
+    }
+}
+
 /// Everything needed to synthesize a trace deterministically.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceConfig {
@@ -150,11 +224,25 @@ pub struct TraceConfig {
     /// Trace horizon in seconds (arrivals beyond it are not generated).
     pub horizon_s: f64,
     pub lengths: LengthProfile,
+    pub prefixes: PrefixProfile,
 }
 
 impl TraceConfig {
     pub fn new(seed: u64, pattern: TrafficPattern, rate_rps: f64, horizon_s: f64) -> Self {
-        TraceConfig { seed, pattern, rate_rps, horizon_s, lengths: LengthProfile::chat() }
+        TraceConfig {
+            seed,
+            pattern,
+            rate_rps,
+            horizon_s,
+            lengths: LengthProfile::chat(),
+            prefixes: PrefixProfile::none(),
+        }
+    }
+
+    /// Builder-style override of the shared-prefix population.
+    pub fn with_prefixes(mut self, prefixes: PrefixProfile) -> Self {
+        self.prefixes = prefixes;
+        self
     }
 }
 
@@ -162,6 +250,9 @@ impl TraceConfig {
 pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
     let mut arr_rng = SplitMix64::new(cfg.seed ^ 0xA11C_E5A1_7EAF_0001);
     let mut len_rng = SplitMix64::new(cfg.seed ^ 0x5EED_0F0F_1E15_0002);
+    // Prefix/priority draws use their own stream so enabling shared
+    // prefixes never perturbs the arrival or length sequences.
+    let mut pfx_rng = SplitMix64::new(cfg.seed ^ 0x10CA_70B5_0B0E_0003);
     let peak_rate = cfg.rate_rps * cfg.pattern.peak_intensity();
     let mut out = Vec::new();
     let mut t = 0.0f64;
@@ -177,12 +268,34 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
         }
         // … thinned down to the instantaneous intensity.
         let accept = arr_rng.next_f64() * cfg.pattern.peak_intensity() < cfg.pattern.intensity(t);
-        // Lengths are always drawn (accepted or not) so the accepted
-        // subsequence stays aligned across nearby configurations.
+        // Lengths / prefixes / priorities are always drawn (accepted or
+        // not) so the accepted subsequence stays aligned across nearby
+        // configurations.
         let prompt = cfg.lengths.sample_prompt(&mut len_rng);
         let output = cfg.lengths.sample_output(&mut len_rng);
+        let shared = pfx_rng.next_f64() < cfg.prefixes.share_prob && cfg.prefixes.num_prefixes > 0;
+        let family = pfx_rng.next_range(cfg.prefixes.num_prefixes.max(1) as u64);
+        let priority = (pfx_rng.next_range(4)) as u8;
         if accept {
-            out.push(Request { id, arrival_s: t, prompt_tokens: prompt, output_tokens: output });
+            let (prefix_id, prefix_tokens, prompt_tokens) = if shared {
+                let pid = family + 1;
+                let plen = cfg.prefixes.prefix_len(cfg.seed, pid);
+                // The shared prefix prepends the request's own prompt, so
+                // families genuinely share their leading tokens.
+                let total = (plen as u64 + prompt as u64).min(u32::MAX as u64) as u32;
+                (pid, plen, total)
+            } else {
+                (0, 0, prompt)
+            };
+            out.push(Request {
+                id,
+                arrival_s: t,
+                prompt_tokens,
+                output_tokens: output,
+                prefix_id,
+                prefix_tokens,
+                priority,
+            });
             id += 1;
         }
     }
@@ -258,6 +371,51 @@ mod tests {
         let frac = in_burst as f64 / t.len() as f64;
         // duty·hi = 0.2·8/(0.2·8+0.8) = 2/3 of arrivals in 20% of the time.
         assert!(frac > 0.5, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn shared_prefixes_are_consistent_within_a_family() {
+        let cfg = TraceConfig::new(31, TrafficPattern::Poisson, 300.0, 20.0)
+            .with_prefixes(PrefixProfile::agentic());
+        let t = generate_trace(&cfg);
+        let mut lens: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+        let mut shared = 0usize;
+        for r in &t {
+            assert!(r.priority < 4);
+            if r.prefix_id == 0 {
+                assert_eq!(r.prefix_tokens, 0);
+                continue;
+            }
+            shared += 1;
+            assert!(r.prefix_id <= 8);
+            assert!(r.prefix_tokens >= 256 && r.prefix_tokens <= 4096);
+            assert!(r.prefix_tokens <= r.prompt_tokens, "prefix within prompt");
+            // Every member of a family shares the identical prefix length.
+            let prev = lens.insert(r.prefix_id, r.prefix_tokens);
+            if let Some(p) = prev {
+                assert_eq!(p, r.prefix_tokens, "family {} length drifted", r.prefix_id);
+            }
+        }
+        let frac = shared as f64 / t.len() as f64;
+        assert!((frac - 0.7).abs() < 0.08, "shared fraction {frac}");
+        // Replays bit-exactly.
+        assert_eq!(t, generate_trace(&cfg));
+    }
+
+    #[test]
+    fn disabling_prefixes_leaves_arrivals_and_lengths_untouched() {
+        let base = TraceConfig::new(41, TrafficPattern::Poisson, 200.0, 10.0);
+        let with = base.with_prefixes(PrefixProfile::agentic());
+        let a = generate_trace(&base);
+        let b = generate_trace(&with);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.output_tokens, y.output_tokens);
+            // Prompt only grows (by the prepended shared prefix).
+            assert!(y.prompt_tokens >= x.prompt_tokens);
+            assert_eq!(y.prompt_tokens - y.prefix_tokens, x.prompt_tokens);
+        }
     }
 
     #[test]

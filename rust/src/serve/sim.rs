@@ -4,13 +4,16 @@
 //!
 //! Time advances one *stage-step* per tick (every pipeline wave advances one
 //! stage; the wave wrapping from the last stage completes its iteration).
-//! Tick duration comes from the steady-state decode model
-//! ([`DecodeEvaluator`]): the decode stage time of the worst-loaded
-//! (column, wave) cell, plus the co-scheduled chunked-prefill tokens at the
-//! evaluator's marginal per-row cost. Stage times are memoized per (plan,
-//! dataflow, batch-bucket, kv-bucket) in a shareable [`StageTimeCache`], on
-//! top of the kernel-level [`KernelCache`] — the serving loop never
-//! re-simulates an identical (plan, batch, kv_len) kernel.
+//! Tick duration is a two-phase model: the decode stage time of the
+//! worst-loaded (column, wave) cell from the steady-state decode model
+//! ([`DecodeEvaluator`]), plus the co-scheduled chunked-prefill work billed
+//! by the *actual prefill dataflow simulation* of the chunk's causal
+//! attention shape at its context offset
+//! ([`PrefillEngine`](crate::serve::prefill::PrefillEngine)). Both phases
+//! are memoized per (plan, dataflow, batch/chunk-bucket, kv/context-bucket)
+//! in a shareable [`StageTimeCache`], on top of the kernel-level
+//! [`KernelCache`] — the serving loop never re-simulates an identical
+//! kernel shape.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -20,6 +23,7 @@ use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
 use crate::serve::kv::KvCacheModel;
+use crate::serve::prefill::PrefillEngine;
 use crate::serve::request::{generate_trace, thin_trace, Request, TraceConfig, TrafficPattern};
 use crate::serve::scheduler::{Scheduler, SchedulerConfig};
 use crate::workload::deepseek::DeepSeekConfig;
@@ -82,7 +86,9 @@ impl StageTimeCache {
 
     /// Look up `key`, computing outside the lock on a miss (mirrors
     /// `KernelCache`; keeps the lock discipline inside the type).
-    fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> f64) -> f64 {
+    /// Crate-visible so the prefill engine shares one stage-time memo with
+    /// the decode path.
+    pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> f64) -> f64 {
         if let Some(&s) = self.inner.lock().unwrap().get(&key) {
             return s;
         }
@@ -93,11 +99,12 @@ impl StageTimeCache {
 
 /// Stage-time oracle for one (system, model, plan, dataflow) combination.
 ///
-/// Tick duration is a two-term model: a memoized *decode* stage time at the
-/// bucketed (batch, kv) operating point, plus the co-scheduled prefill
-/// tokens at the evaluator's marginal per-row cost (GEMM/vector/C2C row
-/// work at short context — a prefill token must not be billed a decode
-/// row's full-KV attention).
+/// Tick duration is a two-phase model: a memoized *decode* stage time at
+/// the bucketed (batch, kv) operating point, plus the co-scheduled prefill
+/// chunk billed by the prefill dataflow simulation at its bucketed
+/// (chunk, context) operating point — prefill attention is compute-bound
+/// while decode is memory-bound, so neither phase may be billed at the
+/// other's cost structure.
 struct StageTimes<'a> {
     sys: &'a WaferSystem,
     ds: &'a DeepSeekConfig,
@@ -107,7 +114,8 @@ struct StageTimes<'a> {
     /// Constant cache-key prefix (system fingerprint, D2D, model, fidelity,
     /// dtype, dataflow, plan) — only `|b{}|kv{}` varies per lookup.
     key_prefix: String,
-    prefill_row_s: Option<f64>,
+    /// Dataflow-grounded chunk billing (shares both caches).
+    prefill: PrefillEngine<'a>,
 }
 
 /// Quantize the per-chip user count for the stage-time memo: powers of two
@@ -124,10 +132,14 @@ fn batch_bucket(users: u64) -> u32 {
     }
 }
 
-/// Round KV length up to a 1 KiB-token multiple.
-fn kv_bucket(tokens: f64) -> u32 {
+/// Round a KV/context length up to a 1 KiB-token multiple, capped at the
+/// model's maximum context (NOT an arbitrary constant: a 64 KiB cap used to
+/// fold every context beyond 65,536 tokens into one memo bucket, billing a
+/// 128k-token conversation at 64k-token stage times).
+pub fn kv_bucket(tokens: f64, max_context_tokens: u32) -> u32 {
+    let cap = (max_context_tokens.max(1024) as u64).div_ceil(1024) * 1024;
     let t = tokens.max(1.0).ceil() as u64;
-    (t.div_ceil(1024) * 1024).min(1 << 16) as u32
+    (t.div_ceil(1024) * 1024).min(cap) as u32
 }
 
 impl<'a> StageTimes<'a> {
@@ -152,17 +164,26 @@ impl<'a> StageTimes<'a> {
             sys,
             ds,
             cfg,
-            ev: DecodeEvaluator::with_cache(cfg.fidelity, kernels),
-            shared,
+            ev: DecodeEvaluator::with_cache(cfg.fidelity, kernels.clone()),
+            shared: shared.clone(),
             key_prefix,
-            prefill_row_s: None,
+            prefill: PrefillEngine::new(
+                sys,
+                ds,
+                cfg.plan,
+                cfg.choice,
+                cfg.fidelity,
+                cfg.dtype,
+                kernels,
+                shared,
+            ),
         }
     }
 
     /// Memoized decode stage time at a bucketed (users, kv) point.
     fn decode_stage_seconds(&mut self, users: u64, kv_tokens: f64) -> f64 {
         let b = batch_bucket(users);
-        let kv = kv_bucket(kv_tokens);
+        let kv = kv_bucket(kv_tokens, self.ds.max_context);
         let key = format!("{}|b{}|kv{}", self.key_prefix, b, kv);
         let (sys, ds, plan, choice, ev) =
             (self.sys, self.ds, self.cfg.plan, self.cfg.choice, &mut self.ev);
@@ -170,29 +191,19 @@ impl<'a> StageTimes<'a> {
             .get_or_insert_with(key, || ev.evaluate(sys, ds, plan, b, kv, choice).stage_seconds)
     }
 
-    /// Marginal stage seconds per additional chip row at short context —
-    /// the per-token cost a chunked-prefill token adds to the iteration.
-    fn prefill_row_seconds(&mut self) -> f64 {
-        if let Some(s) = self.prefill_row_s {
-            return s;
-        }
-        let spec = self.spec_len() as f64;
-        let lo = self.decode_stage_seconds(128, 1024.0);
-        let hi = self.decode_stage_seconds(256, 1024.0);
-        let s = ((hi - lo) / (128.0 * spec)).max(0.0);
-        self.prefill_row_s = Some(s);
-        s
-    }
-
     /// Tick duration for an iteration decoding `decode_users` per chip at
-    /// contexts up to `kv_tokens`, with `prefill_tokens` riding along.
-    fn stage_seconds(&mut self, decode_users: u64, kv_tokens: f64, prefill_tokens: u64) -> f64 {
+    /// contexts up to `kv_tokens`, with a prefill chunk of `prefill_tokens`
+    /// riding along at `prefill_context` total context — billed by the
+    /// prefill dataflow simulation, not a marginal-row approximation.
+    fn stage_seconds(
+        &mut self,
+        decode_users: u64,
+        kv_tokens: f64,
+        prefill_tokens: u64,
+        prefill_context: f64,
+    ) -> f64 {
         let decode = self.decode_stage_seconds(decode_users.max(1), kv_tokens);
-        decode + prefill_tokens as f64 * self.prefill_row_seconds()
-    }
-
-    fn spec_len(&self) -> u64 {
-        self.ds.mtp_spec_len.max(1) as u64
+        decode + self.prefill.chunk_stage_seconds(prefill_tokens, prefill_context)
     }
 }
 
@@ -246,6 +257,12 @@ pub struct ServeOutcome {
     pub peak_kv_occupancy: f64,
     pub kv_over_capacity: bool,
     pub preemptions: u64,
+    /// Shareable prefix tokens served from the prefix cache at admission.
+    pub prefix_hit_tokens: u64,
+    /// Shareable prefix tokens that had to be prefilled (cold or evicted).
+    pub prefix_miss_tokens: u64,
+    /// Prefix-cache blocks evicted under memory pressure.
+    pub prefix_evictions: u64,
     pub ticks: u64,
     pub elapsed_s: f64,
 }
@@ -256,6 +273,17 @@ impl ServeOutcome {
     /// rejected / in-flight / queued.
     pub fn conserves_requests(&self) -> bool {
         self.arrived == self.completed + self.rejected + self.in_flight + self.queued
+    }
+
+    /// Fraction of shareable prefix tokens served from the cache
+    /// (0 when the trace has no shared prefixes).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / total as f64
+        }
     }
 }
 
@@ -314,8 +342,9 @@ pub fn simulate(
         sched.admit_wave(w);
         sched.grow_wave(w);
         let (decode_users, prefill_tokens) = sched.peak_cell_load();
+        let prefill_ctx = sched.peak_prefill_context() as f64;
         let kv_len = sched.max_context_tokens().max(1.0);
-        clock += stage.stage_seconds(decode_users, kv_len, prefill_tokens);
+        clock += stage.stage_seconds(decode_users, kv_len, prefill_tokens, prefill_ctx);
         let ev = sched.execute_wave(w);
         total_tokens += ev.tokens_produced;
         for rec in ev.first_tokens {
@@ -359,6 +388,9 @@ pub fn simulate(
         peak_kv_occupancy: sched.peak_kv_occupancy(),
         kv_over_capacity: kv_violation,
         preemptions: sched.preemptions,
+        prefix_hit_tokens: sched.prefix_hit_tokens,
+        prefix_miss_tokens: sched.prefix_miss_tokens,
+        prefix_evictions: sched.prefix_evictions(),
         ticks: tick,
         elapsed_s: clock,
     };
@@ -467,9 +499,28 @@ mod tests {
         assert_eq!(batch_bucket(65), 128);
         assert_eq!(batch_bucket(512), 512);
         assert_eq!(batch_bucket(513), 576);
-        assert_eq!(kv_bucket(1.0), 1024);
-        assert_eq!(kv_bucket(1024.0), 1024);
-        assert_eq!(kv_bucket(1025.0), 2048);
+        let max = DeepSeekConfig::v3_671b().max_context;
+        assert_eq!(kv_bucket(1.0, max), 1024);
+        assert_eq!(kv_bucket(1024.0, max), 1024);
+        assert_eq!(kv_bucket(1025.0, max), 2048);
+    }
+
+    #[test]
+    fn kv_bucket_distinguishes_contexts_beyond_64k() {
+        // Regression: the old 1<<16 cap folded every context above 65,536
+        // tokens into one bucket. The cap now sits at the model's max
+        // context, so two >64k lengths land in distinct buckets.
+        let max = DeepSeekConfig::v3_671b().max_context;
+        assert_eq!(max, 131_072);
+        let a = kv_bucket(70_000.0, max);
+        let b = kv_bucket(100_000.0, max);
+        assert_ne!(a, b, "distinct >64k contexts must get distinct buckets");
+        assert_eq!(a, 70_656);
+        assert_eq!(b, 100_352);
+        // The cap binds only at the model limit …
+        assert_eq!(kv_bucket(1e9, max), 131_072);
+        // … and degenerate caps still bucket sanely.
+        assert_eq!(kv_bucket(4096.0, 0), 1024);
     }
 
     #[test]

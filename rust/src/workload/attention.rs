@@ -85,6 +85,36 @@ impl AttentionShape {
         }
     }
 
+    /// A chunked-prefill invocation: `chunk` fresh query rows appended at
+    /// context offset `context − chunk`, attending causally over the whole
+    /// `context` (prior KV plus the chunk itself). This is the shape the
+    /// serving layer bills one prefill chunk at — for a fresh prompt
+    /// (`context == chunk`) it degenerates to [`AttentionShape::mha_prefill`].
+    pub fn mha_chunked_prefill(
+        batch: u32,
+        heads: u32,
+        head_dim: u32,
+        v_head_dim: u32,
+        chunk: u32,
+        context: u32,
+        dtype: Dtype,
+    ) -> Self {
+        let chunk = chunk.max(1);
+        AttentionShape {
+            variant: AttentionVariant::Mha,
+            phase: Phase::Prefill,
+            batch,
+            heads,
+            kv_heads: heads,
+            head_dim,
+            v_head_dim,
+            seq_q: chunk,
+            seq_kv: context.max(chunk),
+            dtype,
+            causal: true,
+        }
+    }
+
     pub fn mha_decode(batch: u32, heads: u32, head_dim: u32, kv_len: u32, sp: u32, dtype: Dtype) -> Self {
         AttentionShape {
             variant: AttentionVariant::Mha,
@@ -156,14 +186,22 @@ impl AttentionShape {
     /// Exact FLOPs: score GEMM (2·rows·kv·D) + output GEMM (2·rows·kv·Dv)
     /// per unit (softmax vector work excluded, consistent with the paper's
     /// matrix-engine utilization metric). Causal masks in prefill halve the
-    /// score/output work.
+    /// score/output work; a chunked prefill (`seq_q < seq_kv`, see
+    /// [`AttentionShape::mha_chunked_prefill`]) instead attends over the
+    /// average causal context `seq_kv − (seq_q − 1)/2`.
     pub fn flops(&self) -> u64 {
         let rows = self.effective_q_rows();
         let kv = self.seq_kv as u64;
-        let per_unit = 2 * rows * kv * (self.head_dim as u64 + self.v_head_dim as u64);
+        let dims = self.head_dim as u64 + self.v_head_dim as u64;
+        let per_unit = 2 * rows * kv * dims;
         let full = self.independent_units() * per_unit;
         if self.causal && self.phase == Phase::Prefill {
-            full / 2
+            if self.seq_q == self.seq_kv {
+                full / 2
+            } else {
+                let avg_kv = kv - (self.seq_q as u64 - 1) / 2;
+                self.independent_units() * 2 * rows * avg_kv * dims
+            }
         } else {
             full
         }
@@ -256,6 +294,23 @@ mod tests {
         let s = AttentionShape::mha_prefill(1, 1, 64, 128, Dtype::Fp16);
         // causal prefill: 2·S²·(D+Dv)/2 = S²·2D
         assert_eq!(s.flops(), 128 * 128 * 2 * 64);
+    }
+
+    #[test]
+    fn chunked_prefill_flops_interpolate_causal_cost() {
+        // A fresh chunk (offset 0, chunk == context) degenerates to the
+        // classic causal prefill exactly; a late chunk at a deep offset
+        // approaches the full rectangle (almost every key is visible to
+        // every chunk row).
+        let fresh = AttentionShape::mha_chunked_prefill(1, 1, 64, 64, 128, 128, Dtype::Fp16);
+        let classic = AttentionShape::mha_prefill(1, 1, 64, 128, Dtype::Fp16);
+        assert_eq!(fresh.flops(), classic.flops());
+        let late = AttentionShape::mha_chunked_prefill(1, 1, 64, 64, 128, 8192, Dtype::Fp16);
+        let rect = 2 * 128 * 8192 * (64 + 64);
+        let ratio = late.flops() as f64 / rect as f64;
+        assert!(ratio > 0.98 && ratio <= 1.0, "late-chunk ratio {ratio}");
+        // And the chunk still reads the whole KV once.
+        assert_eq!(late.kv_bytes_per_unit(), 8192 * (64 + 64) * 2);
     }
 
     #[test]

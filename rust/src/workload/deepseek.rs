@@ -40,6 +40,9 @@ pub struct DeepSeekConfig {
     pub mtp_spec_len: u32,
     /// MTP draft acceptance rate.
     pub mtp_acceptance: f64,
+    /// Maximum supported context length in tokens (KV-length memo buckets
+    /// and admission sanity checks cap here, not at an arbitrary constant).
+    pub max_context: u32,
 }
 
 impl DeepSeekConfig {
@@ -63,6 +66,7 @@ impl DeepSeekConfig {
             dense_inter: 18432,
             mtp_spec_len: 2,
             mtp_acceptance: 0.7,
+            max_context: 131_072,
         }
     }
 
@@ -86,6 +90,7 @@ impl DeepSeekConfig {
             dense_inter: 10944,
             mtp_spec_len: 1,
             mtp_acceptance: 1.0,
+            max_context: 32_768,
         }
     }
 
@@ -104,6 +109,24 @@ impl DeepSeekConfig {
             self.qk_rope_dim,
             kv_len,
             self.mtp_spec_len,
+            dtype,
+        )
+    }
+
+    /// The attention core shape of one prefill chunk: `chunk` fresh prompt
+    /// rows attending causally over `context` total tokens (prior KV +
+    /// chunk). Prefill runs *un-absorbed* — per-head K/V are materialized
+    /// from the cached latent, so the core is an MHA-style kernel with
+    /// `qk_nope + rope` score width and the full per-head V width (the
+    /// compute-bound regime of Fig. 1a/1b, unlike absorbed MQA decode).
+    pub fn mla_prefill_shape(&self, chunk: u32, context: u32, dtype: Dtype) -> AttentionShape {
+        AttentionShape::mha_chunked_prefill(
+            1,
+            self.n_heads,
+            self.qk_nope_dim + self.qk_rope_dim,
+            self.v_head_dim,
+            chunk,
+            context,
             dtype,
         )
     }
@@ -276,6 +299,89 @@ pub fn decode_layer_kernels(
     v
 }
 
+/// Build the kernel flow of one MoE decoder layer for one *prefill chunk*
+/// of `chunk_tokens` prompt rows at `context_tokens` total context (paper
+/// §III-E; the serving layer's chunked-prefill cost model). Differences
+/// from [`decode_layer_kernels`]:
+///
+/// - rows = the chunk itself (no speculative multiplier);
+/// - attention runs un-absorbed: per-head K and V are up-projected from the
+///   cached latent for the *whole context* (the MLA prefill recompute — its
+///   cost grows with the chunk's offset, which is what makes late chunks of
+///   a long prompt more expensive than early ones);
+/// - the attention core is the causal chunked-prefill MHA shape.
+pub fn prefill_layer_kernels(
+    ds: &DeepSeekConfig,
+    chunk_tokens: u32,
+    context_tokens: u32,
+    dtype: Dtype,
+    moe: MoePlacement,
+) -> Vec<DecoderKernel> {
+    let rows = chunk_tokens.max(1) as u64;
+    let context = context_tokens.max(chunk_tokens) as u64;
+    let d = ds.d_model as u64;
+    let h = ds.n_heads as u64;
+    let qk = (ds.qk_nope_dim + ds.qk_rope_dim) as u64;
+    let dc = ds.kv_lora_rank as u64;
+    let mut v = Vec::new();
+
+    v.push(DecoderKernel::vec("attn.rmsnorm", rows * d));
+    if ds.q_lora_rank > 0 {
+        let ql = ds.q_lora_rank as u64;
+        v.push(DecoderKernel::gemm("attn.q_down (W^DQ)", rows, d, ql));
+        v.push(DecoderKernel::vec("attn.q_norm", rows * ql));
+        v.push(DecoderKernel::gemm("attn.q_up (W^UQ)", rows, ql, h * qk));
+    } else {
+        v.push(DecoderKernel::gemm("attn.q_proj (W^Q)", rows, d, h * qk));
+    }
+    v.push(DecoderKernel::gemm("attn.kv_down (W^DKV)", rows, d, dc + ds.qk_rope_dim as u64));
+    v.push(DecoderKernel::vec("attn.kv_norm+rope", rows * (dc + 2 * ds.qk_rope_dim as u64)));
+    // Un-absorbed prefill: reconstruct per-head K and V for the whole
+    // context from the cached latent (Eq. 7/8 run forward, not absorbed).
+    v.push(DecoderKernel::gemm_b("attn.k_up (W^UK)", context, dc, ds.qk_nope_dim as u64, h));
+    v.push(DecoderKernel::gemm_b("attn.v_up (W^UV)", context, dc, ds.v_head_dim as u64, h));
+    v.push(DecoderKernel {
+        name: "attn.prefill_core".into(),
+        class: KernelClass::Attention(ds.mla_prefill_shape(
+            chunk_tokens.max(1),
+            context as u32,
+            dtype,
+        )),
+    });
+    v.push(DecoderKernel::gemm("attn.o_proj (W^O)", rows, h * ds.v_head_dim as u64, d));
+    v.push(DecoderKernel::vec("ffn.rmsnorm", rows * d));
+    v.push(DecoderKernel::gemm("moe.gate", rows, d, ds.n_experts as u64));
+    v.push(DecoderKernel::vec("moe.routing(top-k)", rows * ds.n_experts as u64));
+    let ei = ds.expert_inter as u64;
+    for s in 0..ds.shared_experts {
+        v.push(DecoderKernel::gemm(&format!("moe.shared{s}.gate_up"), rows, d, 2 * ei));
+        v.push(DecoderKernel::vec(&format!("moe.shared{s}.silu"), rows * ei));
+        v.push(DecoderKernel::gemm(&format!("moe.shared{s}.down"), rows, ei, d));
+    }
+    if moe.experts_on_chip > 0 && moe.rows_per_expert > 0 {
+        v.push(DecoderKernel::gemm_b(
+            "moe.routed.gate_up",
+            moe.rows_per_expert,
+            d,
+            2 * ei,
+            moe.experts_on_chip as u64,
+        ));
+        v.push(DecoderKernel::vec(
+            "moe.routed.silu",
+            moe.rows_per_expert * ei * moe.experts_on_chip as u64,
+        ));
+        v.push(DecoderKernel::gemm_b(
+            "moe.routed.down",
+            moe.rows_per_expert,
+            ei,
+            d,
+            moe.experts_on_chip as u64,
+        ));
+    }
+    v.push(DecoderKernel::vec("residual.add", 2 * rows * d));
+    v
+}
+
 /// FLOP breakdown of a whole model forward, per generated token:
 /// (attention-core FLOPs, all other FLOPs). Fig. 1a.
 pub fn flop_breakdown_per_token(ds: &DeepSeekConfig, phase: Phase, len: u32, dtype: Dtype) -> (f64, f64) {
@@ -393,6 +499,36 @@ mod tests {
             assert_eq!(s.head_dim, 576);
             assert_eq!(s.kv_heads, 1);
         }
+    }
+
+    #[test]
+    fn prefill_kernel_flow_is_chunk_shaped() {
+        let ds = DeepSeekConfig::v3_671b();
+        let moe = MoePlacement { experts_on_chip: 8, rows_per_expert: 256 };
+        let ks = prefill_layer_kernels(&ds, 1024, 9216, Dtype::Fp8, moe);
+        assert_eq!(ks.iter().filter(|k| k.is_attention()).count(), 1);
+        // Prefill is un-absorbed: K/V up-projections over the full context,
+        // and no decode-style q_absorb / v_unabsorb kernels.
+        assert!(ks.iter().any(|k| k.name.contains("k_up")));
+        assert!(ks.iter().any(|k| k.name.contains("v_up")));
+        assert!(!ks.iter().any(|k| k.name.contains("q_absorb")));
+        let a = ks.iter().find(|k| k.is_attention()).unwrap();
+        if let KernelClass::Attention(s) = &a.class {
+            assert_eq!(s.seq_q, 1024);
+            assert_eq!(s.seq_kv, 9216);
+            assert_eq!(s.head_dim, 192);
+            assert_eq!(s.v_head_dim, 128);
+            assert_eq!(s.kv_heads, s.heads);
+            assert!(s.causal);
+        }
+        // Deeper offsets cost strictly more (K/V recompute + attention).
+        let flops = |ctx: u32| -> u64 {
+            prefill_layer_kernels(&ds, 1024, ctx, Dtype::Fp8, moe)
+                .iter()
+                .map(|k| k.class.flops())
+                .sum()
+        };
+        assert!(flops(32_768) > flops(9216));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Golden-figure regression suite: pins the analytical model to the paper's
+//! anchor points with tolerance bands, so future refactors cannot silently
+//! drift the headline numbers (the FuseMax lesson: a cost model is only
+//! trustworthy once it is pinned to its analytical figures by tests).
+//!
+//! Each test names the figure/table it guards. Bands are deliberately wider
+//! than the paper's single numbers — they catch structural drift (a broken
+//! dataflow, a mis-billed phase), not last-digit noise.
+
+use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
+use flatattention::baseline::gh200::{self, Gh200};
+use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams, FlatTiling};
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::{AttentionChoice, KernelCache, ParallelismPlan};
+use flatattention::multichip::wafer::{batch_sweep, best_under_tpot, ours1};
+use flatattention::serve::prefill::PrefillEngine;
+use flatattention::serve::request::TrafficPattern;
+use flatattention::serve::sim::{load_sweep, saturation_knee, ServeConfig, StageTimeCache};
+use flatattention::workload::attention::AttentionShape;
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+/// Fig. 9 anchor: the paper's peak-utilization FlatAttention configuration
+/// (FlatAsync, 32×32 group, 128×128 slices, S=4096, D=128) reaches ≥92%
+/// matrix utilization on the Table I chip. Our DES lands in the same
+/// regime; the band guards against the dataflow ever falling out of it.
+#[test]
+fn golden_fig9_peak_flatattention_utilization() {
+    let cfg = ChipConfig::table1();
+    let shape = AttentionShape::mha_prefill(4, 32, 128, 4096, Dtype::Fp16);
+    let t = FlatTiling { gx: 32, gy: 32, slice_r: 128, slice_c: 128 };
+    let m = simulate_attention(&cfg, &shape, AttentionDataflow::Flat(FlatParams::flat_async(t)), SimFidelity::Full);
+    assert!(
+        m.compute_utilization > 0.80 && m.compute_utilization <= 1.0,
+        "peak-config utilization drifted out of band: {}",
+        m.compute_utilization
+    );
+    // The same config's active-engine efficiency must also stay high.
+    assert!(
+        m.matrix_efficiency_active > 0.80,
+        "active efficiency {}",
+        m.matrix_efficiency_active
+    );
+}
+
+/// Fig. 1b anchor: FA-3 prefill efficiency on GH200 sits 26–64% below the
+/// roofline, i.e. inside the [0.36, 0.74] efficiency envelope, for the
+/// figure's prefill shapes.
+#[test]
+fn golden_fig1b_fa3_prefill_efficiency_envelope() {
+    let gh = Gh200::new();
+    for d in [64u32, 128] {
+        for s in [2048u32, 4096, 8192] {
+            let shape = AttentionShape::mha_prefill(2, 32, d, s, Dtype::Fp16);
+            let a = gh200::attention(&gh, &shape);
+            assert_eq!(a.kernel, "FlashAttention-3");
+            assert!(
+                a.efficiency >= 0.36 && a.efficiency <= 0.74,
+                "FA-3 prefill d{d} s{s} efficiency {} left the Fig. 1b envelope",
+                a.efficiency
+            );
+        }
+    }
+}
+
+/// §III-A / §V-A closed-form anchors: the FlashAttention→FlatAttention HBM
+/// traffic reductions at the paper's two quoted points (6.6× at N=8 and
+/// ~16× at full 32-wide flattening, D=128, S=4096).
+#[test]
+fn golden_hbm_traffic_reduction_anchors() {
+    let s1 = AttentionShape::mha_prefill(1, 1, 128, 4096, Dtype::Fp16);
+    let r8 = s1.flash_io_bytes(128) as f64 / s1.io_bytes_with_flattening(128, 8) as f64;
+    assert!((r8 - 6.6).abs() < 0.2, "N=8 reduction {r8} (paper: 6.6x)");
+    let s2 = AttentionShape::mha_prefill(2, 32, 128, 4096, Dtype::Fp16);
+    let r32 = s2.flash_io_bytes(128) as f64 / s2.io_bytes_with_flattening(128, 32) as f64;
+    assert!((r32 - 16.5).abs() < 0.5, "N=32 reduction {r32} (paper: 16x)");
+}
+
+/// Fig. 13a sweep shape: TPOT grows monotonically with batch for both
+/// dataflows, FlatAttention beats FlashMLA at the paper's high-batch point
+/// (within the repro's measured 1.3–3.0× band), and throughput grows from
+/// mid to high batch.
+#[test]
+fn golden_fig13a_sweep_monotonicity_and_ordering() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let plan = ParallelismPlan::new(32, 2);
+    let flat = batch_sweep(&sys, &ds, plan, 4096, AttentionChoice::Flat, SimFidelity::Analytic);
+    let mla = batch_sweep(&sys, &ds, plan, 4096, AttentionChoice::FlashMla, SimFidelity::Analytic);
+    for sweep in [&flat, &mla] {
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].tpot_ms >= 0.999 * w[0].tpot_ms,
+                "TPOT regressed with batch: {} → {}",
+                w[0].tpot_ms,
+                w[1].tpot_ms
+            );
+        }
+    }
+    let f256 = flat.iter().find(|o| o.batch_per_chip == 256).unwrap();
+    let m256 = mla.iter().find(|o| o.batch_per_chip == 256).unwrap();
+    let speedup = f256.system_tokens_per_s / m256.system_tokens_per_s;
+    assert!(speedup > 1.3 && speedup < 3.0, "Flat/FlashMLA speedup {speedup} left the band");
+    let f64b = flat.iter().find(|o| o.batch_per_chip == 64).unwrap();
+    assert!(f256.system_tokens_per_s > f64b.system_tokens_per_s, "throughput must grow 64→256");
+}
+
+/// Table II anchor: the Ours1 sweep holds a <50 ms TPOT operating point
+/// with per-chip throughput in the thousands of tokens/s.
+#[test]
+fn golden_table2_ours1_operating_point() {
+    let sweep = ours1(SimFidelity::Analytic);
+    let best = best_under_tpot(&sweep, 50.0).expect("Ours1 must hold a sub-50ms point");
+    assert!(best.tpot_ms < 50.0);
+    assert!(
+        best.per_chip_tokens_per_s > 3000.0,
+        "per-chip throughput {} fell out of the Table II regime",
+        best.per_chip_tokens_per_s
+    );
+}
+
+/// Serving acceptance anchor: a prefill chunk's billed stage time equals a
+/// direct dataflow evaluation of the identical (bucketed) shape within 1% —
+/// the serving loop bills real dataflow numbers, not an approximation.
+#[test]
+fn golden_prefill_chunk_billing_matches_dataflow() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let engine = PrefillEngine::new(
+        &sys,
+        &ds,
+        cfg.plan,
+        cfg.choice,
+        cfg.fidelity,
+        cfg.dtype,
+        KernelCache::new(),
+        StageTimeCache::new(),
+    );
+    for (chunk, ctx) in [(1024u64, 1024.0f64), (1024, 8192.0), (512, 3000.0), (256, 70_000.0)] {
+        let billed = engine.chunk_stage_seconds(chunk, ctx);
+        let (cb, xb) = engine.bucketed(chunk, ctx);
+        let direct = engine.evaluate_chunk(cb, xb);
+        assert!(billed > 0.0, "chunk {chunk} ctx {ctx} billed nothing");
+        assert!(
+            (billed - direct).abs() <= 0.01 * direct,
+            "chunk {chunk} ctx {ctx}: billed {billed} vs direct dataflow {direct}"
+        );
+    }
+    // And prefill is billed at prefill economics: a full chunk at fresh
+    // context costs materially more than one decode row's marginal cost
+    // would suggest is free — i.e. strictly positive and growing in depth.
+    let shallow = engine.chunk_stage_seconds(1024, 1024.0);
+    let deep = engine.chunk_stage_seconds(1024, 65_536.0);
+    assert!(deep > shallow, "chunk cost must grow with context offset");
+}
+
+/// Serving knee reproducibility: the `serve_load`-style sweep at a fixed
+/// seed replays bit-exactly across fresh caches, and the Table II EP32-PP2
+/// configuration exhibits a saturation knee inside the sweep.
+#[test]
+fn golden_serve_load_knee_is_reproducible() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let rates = [250.0, 1000.0, 4000.0];
+    let run = || {
+        load_sweep(
+            &sys,
+            &ds,
+            &cfg,
+            TrafficPattern::Poisson,
+            &rates,
+            2026,
+            8.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "fixed-seed sweep must replay bit-exactly");
+    for o in &a {
+        assert!(o.conserves_requests());
+        assert!(!o.kv_over_capacity);
+        assert!(o.completed > 0);
+    }
+    // Light load holds the SLO; the overdriven tail violates it.
+    assert!(a[0].tpot_ms.p99 < cfg.slo_tpot_ms, "light-load p99 {}", a[0].tpot_ms.p99);
+    assert!(
+        a.last().unwrap().tpot_ms.p99 > cfg.slo_tpot_ms,
+        "overload p99 {} should exceed the SLO",
+        a.last().unwrap().tpot_ms.p99
+    );
+    let knee = saturation_knee(&a, cfg.slo_tpot_ms).expect("sweep must exhibit a knee");
+    assert!(knee > rates[0] && knee <= rates[2], "knee at {knee} rps");
+}

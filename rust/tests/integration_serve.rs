@@ -155,7 +155,7 @@ fn kv_occupancy_never_exceeds_capacity_under_pressure() {
 
 #[test]
 fn serve_experiments_render() {
-    for id in ["serve_load", "serve_policies"] {
+    for id in ["serve_load", "serve_policies", "serve_prefix"] {
         let rep = flatattention::coordinator::experiments::run(id, true)
             .unwrap_or_else(|e| panic!("{id}: {e}"));
         let text = rep.render();
@@ -164,5 +164,16 @@ fn serve_experiments_render() {
     }
     // The full registry advertises the serving experiments.
     let ids: Vec<&str> = flatattention::coordinator::experiments::list().iter().map(|(i, _)| *i).collect();
-    assert!(ids.contains(&"serve_load") && ids.contains(&"serve_policies"));
+    assert!(ids.contains(&"serve_load") && ids.contains(&"serve_policies") && ids.contains(&"serve_prefix"));
+}
+
+#[test]
+fn serve_prefix_experiment_is_deterministic() {
+    // Acceptance criterion: serve_prefix reports prefix-cache hit rate and
+    // TTFT deltas deterministically at its fixed seed — two fresh runs
+    // render the identical table.
+    let a = flatattention::coordinator::experiments::run("serve_prefix", true).unwrap();
+    let b = flatattention::coordinator::experiments::run("serve_prefix", true).unwrap();
+    assert_eq!(a.render(), b.render());
+    assert!(a.render().contains("hit rate"), "report must surface the hit rate");
 }

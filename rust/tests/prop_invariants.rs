@@ -8,8 +8,14 @@ use flatattention::dataflow::tiling::{choose_tiling, l1_working_set_kv, Concurre
 use flatattention::dataflow::FlatTiling;
 use flatattention::exec::functional;
 use flatattention::exec::tensor::Mat;
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::serve::request::{generate_trace, PrefixProfile, Request, TraceConfig, TrafficPattern};
+use flatattention::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
+use flatattention::serve::sim::{simulate, ServeConfig, StageTimeCache};
 use flatattention::util::SplitMix64;
 use flatattention::workload::attention::AttentionShape;
+use flatattention::workload::deepseek::DeepSeekConfig;
 
 const CASES: u64 = 60;
 
@@ -170,5 +176,139 @@ fn prop_causal_flops_half_of_full() {
         let causal = shape.flops();
         shape.causal = false;
         assert_eq!(causal * 2, shape.flops());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving-layer properties (prefix cache, preemption, queue policies).
+// ---------------------------------------------------------------------------
+
+/// A family of well-spaced requests all sharing prefix id 1 of
+/// `prefix_tokens` leading tokens (spacing guarantees request i finishes
+/// prefilling before i+1 arrives, so reuse is sequential and deterministic).
+fn shared_prefix_trace(n: u64, prefix_tokens: u32) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            prefix_id: 1,
+            prefix_tokens,
+            ..Request::new(i, i as f64, prefix_tokens + 128, 16)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_prefix_hit_ratio_monotone_in_shared_prefix_length() {
+    // Longer shared prefixes can only increase the cache-served token count
+    // and the hit ratio (whole-block rounding makes it stepwise).
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig::default();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let mut rng = SplitMix64::new(43);
+    let n = 8u64;
+    let horizon = 60.0;
+    for _ in 0..6 {
+        let mut lens: Vec<u32> = (0..3).map(|_| 64 + rng.next_range(1984) as u32).collect();
+        lens.sort_unstable();
+        let mut last_hits = 0u64;
+        let mut last_ratio = 0.0f64;
+        for len in lens {
+            let trace = shared_prefix_trace(n, len);
+            let (o, _) = simulate(&sys, &ds, &trace, &cfg, horizon, "pfx", 1.0, &kernels, &stages);
+            assert_eq!(o.completed, n as usize, "len {len}: all requests must drain");
+            assert!(o.conserves_requests());
+            assert!(
+                o.prefix_hit_tokens >= last_hits,
+                "hit tokens regressed with longer prefix: {} < {last_hits} at len {len}",
+                o.prefix_hit_tokens
+            );
+            assert!(
+                o.prefix_hit_rate() >= last_ratio - 1e-12,
+                "hit ratio regressed: {} < {last_ratio} at len {len}",
+                o.prefix_hit_rate()
+            );
+            // Whole-block accounting: with ≥1 shareable block, everyone but
+            // the cold first request hits the full shareable prefix.
+            let block = cfg.scheduler.prefix_block_tokens;
+            let shareable = (len / block) * block;
+            assert_eq!(o.prefix_hit_tokens, (n - 1) * shareable as u64);
+            assert_eq!(o.prefix_miss_tokens, shareable as u64);
+            last_hits = o.prefix_hit_tokens;
+            last_ratio = o.prefix_hit_rate();
+        }
+    }
+}
+
+#[test]
+fn prop_conservation_and_kv_safety_under_preemption_and_reuse() {
+    // Memory-starved wafer + on-demand admission + shared-prefix traffic:
+    // requests are preempted, recomputed and reuse cached prefixes — the
+    // conservation identity and the KV capacity bound must survive all of
+    // it, with the trie active.
+    let ds = DeepSeekConfig::v3_671b();
+    let mut sys = WaferSystem::paper();
+    sys.chip.hbm.capacity_gib_per_stack = 10;
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    for (seed, policy) in [
+        (3u64, AdmissionPolicy::OnDemandPreempt),
+        (17, AdmissionPolicy::OnDemandPreempt),
+        (17, AdmissionPolicy::ReserveFull),
+    ] {
+        let tc = TraceConfig::new(seed, TrafficPattern::Poisson, 2000.0, 6.0)
+            .with_prefixes(PrefixProfile::agentic());
+        let trace = generate_trace(&tc);
+        let cfg = ServeConfig {
+            scheduler: SchedulerConfig { policy, ..Default::default() },
+            ..Default::default()
+        };
+        let (o, recs) = simulate(&sys, &ds, &trace, &cfg, 6.0, "pressure", 2000.0, &kernels, &stages);
+        assert!(o.conserves_requests(), "seed {seed} {policy:?}: {o:?}");
+        assert!(!o.kv_over_capacity, "seed {seed} {policy:?} overflowed KV with trie active");
+        assert!(o.peak_kv_occupancy <= 1.0 + 1e-9, "seed {seed}: peak {}", o.peak_kv_occupancy);
+        // Record-level token/causality conservation.
+        let completed = recs.iter().filter(|r| r.completion_s.is_some()).count();
+        assert_eq!(completed, o.completed);
+        for r in &recs {
+            if let Some(c) = r.completion_s {
+                let f = r.first_token_s.expect("completion implies a first token");
+                assert!(f <= c + 1e-12);
+                assert!(f >= r.arrival_s - 1e-12, "first token before arrival");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sjf_does_not_increase_mean_ttft_vs_fcfs() {
+    // On identical overloaded traces, shortest-prompt-first can only help
+    // mean TTFT (small tolerance for batching/bucketing discreteness).
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    for seed in [7u64, 29] {
+        let trace =
+            generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, 1500.0, 5.0));
+        let run = |queue_policy: QueuePolicy| {
+            let cfg = ServeConfig {
+                scheduler: SchedulerConfig { queue_policy, ..Default::default() },
+                ..Default::default()
+            };
+            let (o, _) =
+                simulate(&sys, &ds, &trace, &cfg, 5.0, "q", 1500.0, &kernels, &stages);
+            assert!(o.conserves_requests());
+            o
+        };
+        let fcfs = run(QueuePolicy::Fcfs);
+        let sjf = run(QueuePolicy::Sjf);
+        assert!(fcfs.ttft_ms.n > 100, "need a populated TTFT sample");
+        assert!(
+            sjf.ttft_ms.mean <= fcfs.ttft_ms.mean * 1.05,
+            "seed {seed}: SJF mean TTFT {} exceeds FCFS {}",
+            sjf.ttft_ms.mean,
+            fcfs.ttft_ms.mean
+        );
     }
 }
