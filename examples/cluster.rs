@@ -1,0 +1,115 @@
+//! Fleet-level serving across multiple wafer instances: disaggregated
+//! prefill/decode pools, KV-transfer accounting and prefix-affinity routing
+//! on top of the request-level simulator of `examples/serving.rs`.
+//!
+//! 1. Sizes the KV handoff: latent-KV layout bytes and exposed delay per
+//!    migrated prompt over inter-node vs D2D-class links.
+//! 2. Sweeps prefill:decode pool ratios at fixed fleet size against the
+//!    colocated baseline and prints the TPOT crossover.
+//! 3. Compares routing policies on shared-prompt traffic (prefix affinity
+//!    concentrates family blocks on their home instance).
+//!
+//! Run: `cargo run --release --example cluster`
+
+use anyhow::Result;
+
+use flatattention::cluster::{
+    simulate_cluster, tpot_crossover, ClusterConfig, ClusterOutcome, FleetMode, KvTransferModel, RoutingPolicy,
+};
+use flatattention::metrics::fmt_pct;
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::serve::request::{generate_trace, thin_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::sim::StageTimeCache;
+use flatattention::util::fmt_bytes;
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+fn main() -> Result<()> {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    println!("# Fleet serving: 4× EP32-PP2 wafer instances, DeepSeek-v3-671B\n");
+
+    // --- 1. KV handoff economics ------------------------------------------
+    let inter = KvTransferModel::inter_node(&ds, flatattention::arch::config::Dtype::Fp8);
+    let d2d = KvTransferModel::d2d_class(&ds, flatattention::arch::config::Dtype::Fp8);
+    println!("## KV handoff (MLA latent layout, {} B/token across 61 layers)", inter.bytes_per_token);
+    for ctx in [512u64, 2048, 8192] {
+        println!(
+            "  {ctx:>5}-token prompt: {:>9}  inter-node {:>7.2} ms exposed  d2d-class {:>6.3} ms",
+            fmt_bytes(inter.bytes_for(ctx)),
+            inter.exposed_seconds(ctx) * 1e3,
+            d2d.exposed_seconds(ctx) * 1e3,
+        );
+    }
+
+    // --- 2. Pool-ratio sweep vs colocated ---------------------------------
+    let horizon = 8.0;
+    let rates = [125.0, 1000.0, 4000.0, 8000.0];
+    let seed = 2026u64;
+    let max_rate = rates.iter().cloned().fold(0.0f64, f64::max);
+    let master = generate_trace(
+        &TraceConfig::new(seed, TrafficPattern::Poisson, max_rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let modes = [
+        FleetMode::Colocated { instances: 4 },
+        FleetMode::Disaggregated { prefill: 1, decode: 3 },
+        FleetMode::Disaggregated { prefill: 2, decode: 2 },
+        FleetMode::Disaggregated { prefill: 3, decode: 1 },
+    ];
+    println!("\n## Pool ratios over offered load, horizon {horizon} s");
+    println!(
+        "{:>14} {:>6} {:>6} {:>9} {:>9} {:>9} {:>10} {:>8} {:>9}",
+        "fleet", "rps", "done", "TTFT p50", "TPOT p50", "TPOT p99", "tok/s", "goodput", "transfer"
+    );
+    let mut curves: Vec<Vec<ClusterOutcome>> = Vec::new();
+    for mode in modes {
+        let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(4, &ds) };
+        let mut curve = Vec::new();
+        for &rate in &rates {
+            let trace = thin_trace(&master, rate / max_rate, seed ^ 0xC0FF_EE00);
+            let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &kernels, &stages);
+            assert!(o.conserves_requests());
+            println!(
+                "{:>14} {:>6.0} {:>6} {:>7.0}ms {:>7.1}ms {:>7.1}ms {:>10.0} {:>8.0} {:>9}",
+                o.label,
+                rate,
+                o.completed,
+                o.ttft_ms.p50,
+                o.tpot_ms.p50,
+                o.tpot_ms.p99,
+                o.fleet_tokens_per_s,
+                o.goodput_rps,
+                fmt_pct(o.transfer_overhead_share),
+            );
+            curve.push(o);
+        }
+        curves.push(curve);
+    }
+    for (mode, curve) in modes.iter().zip(&curves).skip(1) {
+        match tpot_crossover(&curves[0], curve) {
+            Some(rate) => println!("→ {}: p99 TPOT beats colocated from {rate:.0} rps", mode.label()),
+            None => println!("→ {}: colocated p99 TPOT never beaten in this sweep", mode.label()),
+        }
+    }
+
+    // --- 3. Routing policies on shared-prompt traffic ---------------------
+    println!("\n## Arrival routing at 1000 rps (70% shared prompts, colocated-4)");
+    let trace = thin_trace(&master, 1000.0 / max_rate, seed ^ 0xC0FF_EE00);
+    for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PrefixAffinity] {
+        let ccfg = ClusterConfig { routing: policy, ..ClusterConfig::colocated(4, &ds) };
+        let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, 1000.0, &kernels, &stages);
+        let hits: u64 = o.instances.iter().map(|i| i.prefix_hit_tokens).sum();
+        println!(
+            "  {:<18} done {:>6}  TTFT mean {:>6.0} ms  prefix hits {:>10} tokens  goodput {:>5.0} rps",
+            policy.label(),
+            o.completed,
+            o.ttft_ms.mean,
+            hits,
+            o.goodput_rps,
+        );
+    }
+    println!("\ncluster example OK");
+    Ok(())
+}

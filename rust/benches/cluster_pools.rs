@@ -1,0 +1,14 @@
+//! Bench harness for the fleet layer: the full prefill:decode pool-ratio
+//! sweep (4 configurations × load points on a 4-instance fleet) and the
+//! multi-model co-serving comparison. (criterion is unavailable in the
+//! offline build; this is a plain `harness = false` driver with std
+//! timing.)
+
+fn main() {
+    for id in ["cluster_pools", "cluster_models"] {
+        let t0 = std::time::Instant::now();
+        let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
+        rep.print();
+        println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+    }
+}

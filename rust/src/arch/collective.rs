@@ -62,6 +62,7 @@ fn transfer_cycles(cfg: &ChipConfig, bytes: u64, hops: u64) -> u64 {
 
 /// One-to-all multicast of `bytes` along `axis` at row/column `index`,
 /// to `width` tiles (including the source). Returns the completion op.
+#[allow(clippy::too_many_arguments)]
 pub fn multicast(
     g: &mut Graph,
     res: &ChipResources,
@@ -122,6 +123,7 @@ pub fn multicast(
 /// All-to-one sum reduction of per-tile payloads of `bytes` along `axis`,
 /// over `width` tiles, landing on tile `dst`. `deps` gate the whole
 /// collective (callers join per-tile readiness first). Returns completion.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce(
     g: &mut Graph,
     res: &ChipResources,

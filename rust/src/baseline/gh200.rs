@@ -17,6 +17,12 @@ pub struct Gh200 {
     pub hbm_bytes_per_s: f64,
 }
 
+impl Default for Gh200 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Gh200 {
     pub fn new() -> Self {
         // 989 TFLOPS FP16 dense (no sparsity), 1979 TFLOPS FP8, 4 TB/s

@@ -1,0 +1,668 @@
+//! Fleet-level simulation: N wafer instances, pool roles, routing and KV
+//! handoff.
+//!
+//! The fleet simulator composes the *existing* request-level serving
+//! simulator (`serve::sim::simulate`) — every instance runs the same
+//! iteration-level continuous-batching loop against the shared
+//! `StageTimeCache`/`KernelCache`, so all latencies stay grounded in the
+//! FlatAttention dataflow simulations. The cluster layer adds exactly the
+//! parts one instance cannot see:
+//!
+//! - **Routing** ([`Router`]): arrivals are assigned to an instance of the
+//!   entry pool (colocated or prefill) by a pluggable policy; migrated
+//!   requests are assigned to a decode instance at handoff time.
+//! - **Disaggregation**: prefill-pool instances serve truncated requests
+//!   (`output_tokens = 1` — prefill + first token, then the KV leaves);
+//!   decode-pool instances receive `prefilled` arrivals that skip prefill
+//!   and resume from one generated token. Decode iterations therefore never
+//!   carry chunked-prefill interference — the mechanism behind the
+//!   colocated-vs-disaggregated TPOT crossover.
+//! - **KV handoff** ([`KvTransferModel`]): the migrated prompt's latent-KV
+//!   layout bytes ship over the inter-instance link; the exposed share of
+//!   the transfer delays both the user-visible first token and the decode
+//!   arrival (TetriInfer/DistServe-style accounting).
+//!
+//! Simulation is two-phase and exactly replayable: entry-pool instances run
+//! first (concurrently, over shared caches), handoffs are sorted by
+//! completion time, routed, and the decode pool runs second. Every routing
+//! decision is a pure function of the arrival/handoff sequence.
+
+use std::collections::HashMap;
+
+use crate::cluster::router::{Router, RoutingPolicy};
+use crate::cluster::transfer::KvTransferModel;
+use crate::metrics::Percentiles;
+use crate::multichip::d2d::WaferSystem;
+use crate::multichip::parallelism::KernelCache;
+use crate::serve::request::Request;
+use crate::serve::sim::{simulate, RequestRecord, ServeConfig, ServeOutcome, StageTimeCache};
+use crate::workload::deepseek::DeepSeekConfig;
+
+/// Role split of the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetMode {
+    /// Every instance runs prefill + decode (classic continuous batching).
+    Colocated { instances: u32 },
+    /// Dedicated prefill and decode pools with KV handoff between them.
+    Disaggregated { prefill: u32, decode: u32 },
+}
+
+impl FleetMode {
+    pub fn instances(&self) -> u32 {
+        match *self {
+            FleetMode::Colocated { instances } => instances,
+            FleetMode::Disaggregated { prefill, decode } => prefill + decode,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            FleetMode::Colocated { instances } => format!("colocated-{instances}"),
+            FleetMode::Disaggregated { prefill, decode } => format!("disagg-{prefill}p{decode}d"),
+        }
+    }
+
+    fn validate(&self) {
+        match *self {
+            FleetMode::Colocated { instances } => assert!(instances >= 1, "empty fleet"),
+            FleetMode::Disaggregated { prefill, decode } => {
+                assert!(prefill >= 1 && decode >= 1, "both pools need at least one instance")
+            }
+        }
+    }
+}
+
+/// Fleet configuration: per-instance serving config plus the cluster-only
+/// knobs (mode, routing policies, transfer model, router drain proxy).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub mode: FleetMode,
+    /// Per-instance serving configuration (identical across the fleet).
+    pub serve: ServeConfig,
+    /// Arrival routing into the entry pool (colocated or prefill).
+    pub routing: RoutingPolicy,
+    /// Handoff routing into the decode pool (disaggregated only).
+    pub decode_routing: RoutingPolicy,
+    pub transfer: KvTransferModel,
+    /// Fluid drain rate of the router's outstanding-work proxy.
+    pub drain_rate: f64,
+}
+
+impl ClusterConfig {
+    /// Colocated fleet of `instances` wafer instances, prefix-affinity
+    /// arrival routing (prefix caches live on the entry pool).
+    pub fn colocated(instances: u32, ds: &DeepSeekConfig) -> Self {
+        let serve = ServeConfig::default();
+        ClusterConfig {
+            mode: FleetMode::Colocated { instances },
+            serve,
+            routing: RoutingPolicy::PrefixAffinity,
+            decode_routing: RoutingPolicy::LeastOutstanding,
+            transfer: KvTransferModel::inter_node(ds, serve.dtype),
+            drain_rate: Router::DEFAULT_DRAIN_RATE,
+        }
+    }
+
+    /// Disaggregated `prefill`:`decode` pools. Prefix affinity routes the
+    /// *prefill* pool (that is where cached prefixes save compute); the
+    /// decode pool balances by outstanding work.
+    pub fn disaggregated(prefill: u32, decode: u32, ds: &DeepSeekConfig) -> Self {
+        ClusterConfig {
+            mode: FleetMode::Disaggregated { prefill, decode },
+            ..Self::colocated(prefill + decode, ds)
+        }
+    }
+}
+
+/// Fleet-level view of one request's life.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    /// User-visible first-token time: prefill completion plus (for migrated
+    /// requests) the exposed KV-handoff delay.
+    pub first_token_s: Option<f64>,
+    pub completion_s: Option<f64>,
+    /// Entry-pool instance (colocated or prefill), `u32::MAX` if unrouted.
+    pub prefill_instance: u32,
+    /// Decode-pool instance (== entry instance when colocated).
+    pub decode_instance: u32,
+    /// Latent-KV bytes shipped at handoff (0 when not migrated).
+    pub transfer_bytes: u64,
+    /// Exposed handoff delay in seconds (0 when not migrated).
+    pub transfer_s: f64,
+}
+
+impl ClusterRecord {
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_s.map(|t| (t - self.arrival_s) * 1e3)
+    }
+
+    /// Per-token latency after the first token; for migrated requests this
+    /// includes decode-pool queueing — the user's actual stream cadence.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_s, self.completion_s) {
+            (Some(f), Some(c)) if self.output_tokens > 1 => {
+                Some((c - f) * 1e3 / (self.output_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Per-instance roll-up inside a [`ClusterOutcome`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceSummary {
+    /// "colocated" | "prefill" | "decode".
+    pub role: &'static str,
+    /// Requests routed to this instance.
+    pub routed: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// In-flight + queued at the horizon.
+    pub backlog: usize,
+    pub tokens_per_s: f64,
+    pub peak_kv_occupancy: f64,
+    pub prefix_hit_tokens: u64,
+    pub preemptions: u64,
+}
+
+impl InstanceSummary {
+    fn from_outcome(role: &'static str, o: &ServeOutcome) -> Self {
+        InstanceSummary {
+            role,
+            routed: o.offered,
+            completed: o.completed,
+            rejected: o.rejected,
+            backlog: o.in_flight + o.queued,
+            tokens_per_s: o.system_tokens_per_s,
+            peak_kv_occupancy: o.peak_kv_occupancy,
+            prefix_hit_tokens: o.prefix_hit_tokens,
+            preemptions: o.preemptions,
+        }
+    }
+}
+
+/// Aggregate outcome of one fleet simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterOutcome {
+    pub label: String,
+    pub mode: FleetMode,
+    pub offered_rps: f64,
+    pub horizon_s: f64,
+    /// Requests in the input trace.
+    pub offered: usize,
+    /// Arrivals the entry pool reached inside the horizon.
+    pub arrived: usize,
+    /// End-to-end completions (decode side for disaggregated fleets).
+    pub completed: usize,
+    /// Rejections across both pools.
+    pub rejected: usize,
+    /// Arrived but neither completed nor rejected at the horizon: entry-pool
+    /// backlog + KV transfers en route + decode-pool backlog.
+    pub in_flight: usize,
+    /// Of `in_flight`: handoffs whose KV had not landed by the horizon.
+    pub in_transfer: usize,
+    pub completed_within_slo: usize,
+    pub ttft_ms: Percentiles,
+    pub tpot_ms: Percentiles,
+    /// Output tokens/s summed over every instance of the fleet.
+    pub fleet_tokens_per_s: f64,
+    pub goodput_rps: f64,
+    /// Requests whose KV migrated prefill → decode.
+    pub migrated: usize,
+    pub kv_transfer_bytes: u64,
+    /// Summed exposed handoff delay across migrations.
+    pub kv_transfer_exposed_s: f64,
+    /// Exposed transfer time as a share of completed migrated requests'
+    /// end-to-end latency (0 for colocated fleets).
+    pub transfer_overhead_share: f64,
+    pub kv_over_capacity: bool,
+    pub preemptions: u64,
+    pub instances: Vec<InstanceSummary>,
+}
+
+impl ClusterOutcome {
+    /// Fleet-wide request conservation: every arrival is exactly one of
+    /// completed / rejected / in-flight (pool backlogs + transfers en
+    /// route) at the horizon.
+    pub fn conserves_requests(&self) -> bool {
+        self.arrived == self.completed + self.rejected + self.in_flight
+    }
+}
+
+/// Split `trace` across the entry pool: per-instance sub-traces (arrival
+/// order preserved) plus the chosen instance per request index. `work`
+/// prices a request in the pool's own currency — prompt + output tokens
+/// for a colocated pool, prompt tokens only for a prefill pool (whose
+/// instances never do the decode work).
+fn route_arrivals(
+    trace: &[Request],
+    cfg: &ClusterConfig,
+    n: usize,
+    work: fn(&Request) -> f64,
+) -> (Vec<Vec<Request>>, Vec<usize>) {
+    let mut router = Router::new(cfg.routing, cfg.serve.scheduler.prefix_keying, n, cfg.drain_rate);
+    let mut subs: Vec<Vec<Request>> = vec![Vec::new(); n];
+    let mut chosen = Vec::with_capacity(trace.len());
+    for r in trace {
+        let i = router.route(r, r.arrival_s, work(r));
+        subs[i].push(*r);
+        chosen.push(i);
+    }
+    (subs, chosen)
+}
+
+/// Run one serving simulation per sub-trace concurrently over the shared
+/// caches (deterministic: cached stage times are pure simulation results,
+/// so worker completion order cannot change any value).
+#[allow(clippy::too_many_arguments)]
+fn run_pool(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    subs: &[Vec<Request>],
+    cfg: &ServeConfig,
+    horizon_s: f64,
+    label: &str,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+) -> Vec<(ServeOutcome, Vec<RequestRecord>)> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = subs
+            .iter()
+            .map(|t| {
+                let kernels = kernels.clone();
+                let stages = stages.clone();
+                scope.spawn(move || simulate(sys, ds, t, cfg, horizon_s, label, 0.0, &kernels, &stages))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("cluster instance worker panicked")).collect()
+    })
+}
+
+/// Simulate `trace` on the fleet described by `cfg`. Deterministic: two
+/// identical invocations return identical outcomes and records.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cluster(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ClusterConfig,
+    horizon_s: f64,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+) -> (ClusterOutcome, Vec<ClusterRecord>) {
+    cfg.mode.validate();
+    let mut records: Vec<ClusterRecord> = trace
+        .iter()
+        .map(|r| ClusterRecord {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.output_tokens,
+            first_token_s: None,
+            completion_s: None,
+            prefill_instance: u32::MAX,
+            decode_instance: u32::MAX,
+            transfer_bytes: 0,
+            transfer_s: 0.0,
+        })
+        .collect();
+    let pos_of: HashMap<u64, usize> = trace.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+
+    match cfg.mode {
+        FleetMode::Colocated { instances } => {
+            let (subs, chosen) =
+                route_arrivals(trace, cfg, instances as usize, |r| r.prompt_tokens as f64 + r.output_tokens as f64);
+            for (idx, &i) in chosen.iter().enumerate() {
+                records[idx].prefill_instance = i as u32;
+                records[idx].decode_instance = i as u32;
+            }
+            let results = run_pool(sys, ds, &subs, &cfg.serve, horizon_s, "colocated", kernels, stages);
+            for (_, recs) in &results {
+                for rec in recs {
+                    let p = pos_of[&rec.id];
+                    records[p].first_token_s = rec.first_token_s;
+                    records[p].completion_s = rec.completion_s;
+                }
+            }
+            let outcome = aggregate(cfg, trace.len(), &records, &results, &[], 0, horizon_s, offered_rps, "colocated");
+            (outcome, records)
+        }
+        FleetMode::Disaggregated { prefill, decode } => {
+            // Phase 1: route arrivals into the prefill pool — priced at
+            // prompt tokens only, the work this pool actually does — and
+            // truncate each request to prefill + first token (the KV then
+            // leaves).
+            let (mut subs, chosen) = route_arrivals(trace, cfg, prefill as usize, |r| r.prompt_tokens as f64);
+            for sub in &mut subs {
+                for r in sub.iter_mut() {
+                    r.output_tokens = 1;
+                }
+            }
+            for (idx, &i) in chosen.iter().enumerate() {
+                records[idx].prefill_instance = i as u32;
+            }
+            let prefill_results = run_pool(sys, ds, &subs, &cfg.serve, horizon_s, "prefill", kernels, stages);
+
+            // Phase 2: handoffs in completion order. The migrated context is
+            // the prompt KV (token #1's cache entry is produced decode-side).
+            let mut handoffs: Vec<(f64, u64)> = Vec::new(); // (completion, id)
+            for (_, recs) in &prefill_results {
+                for rec in recs {
+                    if let Some(c) = rec.completion_s {
+                        handoffs.push((c, rec.id));
+                    }
+                }
+            }
+            handoffs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut router = Router::new(cfg.decode_routing, cfg.serve.scheduler.prefix_keying, decode as usize, cfg.drain_rate);
+            let mut dsubs: Vec<Vec<Request>> = vec![Vec::new(); decode as usize];
+            for &(c, id) in &handoffs {
+                let p = pos_of[&id];
+                let orig = trace[p];
+                let ctx = orig.prompt_tokens as u64;
+                let delay = cfg.transfer.exposed_seconds(ctx);
+                let i = router.route(&orig, c, orig.output_tokens as f64);
+                records[p].decode_instance = i as u32;
+                records[p].transfer_bytes = cfg.transfer.bytes_for(ctx);
+                records[p].transfer_s = delay;
+                // The user sees token #1 once the handoff lands. Sampling
+                // rule (mirrors the colocated side): every request whose
+                // prefill finished inside the simulated window contributes
+                // a TTFT sample — colocated first tokens stamped during the
+                // final tick may likewise overshoot the horizon by up to
+                // one tick, and here the overshoot bound is one tick plus
+                // the exposed transfer delay. A migrated request the decode
+                // pool later rejects keeps its sample too: its first token
+                // WAS delivered (post-prefill aborts in real disaggregated
+                // serving still stream token #1).
+                records[p].first_token_s = Some(c + delay);
+                dsubs[i].push(Request {
+                    arrival_s: c + delay,
+                    prefix_id: 0,
+                    prefix_tokens: 0,
+                    prefix_hash: 0,
+                    prefilled: true,
+                    ..orig
+                });
+            }
+            // Handoff delays differ per context length, so per-instance
+            // decode arrivals must be re-sorted.
+            for sub in &mut dsubs {
+                sub.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+            }
+
+            // Phase 3: the decode pool (pure decode iterations — no chunked
+            // prefill riding the ticks).
+            let decode_results = run_pool(sys, ds, &dsubs, &cfg.serve, horizon_s, "decode", kernels, stages);
+            for (_, recs) in &decode_results {
+                for rec in recs {
+                    records[pos_of[&rec.id]].completion_s = rec.completion_s;
+                }
+            }
+            let outcome = aggregate(
+                cfg,
+                trace.len(),
+                &records,
+                &prefill_results,
+                &decode_results,
+                handoffs.len(),
+                horizon_s,
+                offered_rps,
+                "prefill",
+            );
+            (outcome, records)
+        }
+    }
+}
+
+/// Roll per-instance outcomes and fleet records into a [`ClusterOutcome`].
+#[allow(clippy::too_many_arguments)]
+fn aggregate(
+    cfg: &ClusterConfig,
+    offered: usize,
+    records: &[ClusterRecord],
+    entry: &[(ServeOutcome, Vec<RequestRecord>)],
+    decode: &[(ServeOutcome, Vec<RequestRecord>)],
+    migrated: usize,
+    horizon_s: f64,
+    offered_rps: f64,
+    entry_role: &'static str,
+) -> ClusterOutcome {
+    let disagg = !decode.is_empty();
+    let arrived: usize = entry.iter().map(|(o, _)| o.arrived).sum();
+    let completed: usize = if disagg {
+        decode.iter().map(|(o, _)| o.completed).sum()
+    } else {
+        entry.iter().map(|(o, _)| o.completed).sum()
+    };
+    let rejected: usize = entry.iter().map(|(o, _)| o.rejected).sum::<usize>()
+        + decode.iter().map(|(o, _)| o.rejected).sum::<usize>();
+    let entry_backlog: usize = entry.iter().map(|(o, _)| o.in_flight + o.queued).sum();
+    let decode_backlog: usize = decode.iter().map(|(o, _)| o.in_flight + o.queued).sum();
+    let decode_arrived: usize = decode.iter().map(|(o, _)| o.arrived).sum();
+    let in_transfer = if disagg { migrated - decode_arrived } else { 0 };
+    let in_flight = entry_backlog + in_transfer + decode_backlog;
+
+    let ttft: Vec<f64> = records.iter().filter_map(ClusterRecord::ttft_ms).collect();
+    let tpot: Vec<f64> = records
+        .iter()
+        .filter(|r| r.completion_s.is_some())
+        .filter_map(ClusterRecord::tpot_ms)
+        .collect();
+    let within_slo = records
+        .iter()
+        .filter(|r| r.completion_s.is_some())
+        .filter(|r| {
+            r.ttft_ms().is_some_and(|t| t <= cfg.serve.slo_ttft_ms)
+                && r.tpot_ms().map_or(true, |t| t <= cfg.serve.slo_tpot_ms)
+        })
+        .count();
+
+    let kv_transfer_bytes: u64 = records.iter().map(|r| r.transfer_bytes).sum();
+    let kv_transfer_exposed_s: f64 = records.iter().map(|r| r.transfer_s).sum();
+    let (mut xfer_s, mut e2e_s) = (0.0f64, 0.0f64);
+    for r in records {
+        if let Some(c) = r.completion_s {
+            if r.transfer_bytes > 0 {
+                xfer_s += r.transfer_s;
+                e2e_s += c - r.arrival_s;
+            }
+        }
+    }
+    let transfer_overhead_share = if e2e_s > 0.0 { xfer_s / e2e_s } else { 0.0 };
+
+    let all = entry.iter().chain(decode.iter());
+    let fleet_tokens_per_s: f64 = all.clone().map(|(o, _)| o.system_tokens_per_s).sum();
+    let kv_over_capacity = all.clone().any(|(o, _)| o.kv_over_capacity);
+    let preemptions: u64 = all.map(|(o, _)| o.preemptions).sum();
+
+    let mut instances: Vec<InstanceSummary> = entry
+        .iter()
+        .map(|(o, _)| InstanceSummary::from_outcome(entry_role, o))
+        .collect();
+    instances.extend(decode.iter().map(|(o, _)| InstanceSummary::from_outcome("decode", o)));
+
+    ClusterOutcome {
+        label: cfg.mode.label(),
+        mode: cfg.mode,
+        offered_rps,
+        horizon_s,
+        offered,
+        arrived,
+        completed,
+        rejected,
+        in_flight,
+        in_transfer,
+        completed_within_slo: within_slo,
+        ttft_ms: Percentiles::from_values(&ttft),
+        tpot_ms: Percentiles::from_values(&tpot),
+        fleet_tokens_per_s,
+        goodput_rps: if horizon_s > 0.0 { within_slo as f64 / horizon_s } else { 0.0 },
+        migrated,
+        kv_transfer_bytes,
+        kv_transfer_exposed_s,
+        transfer_overhead_share,
+        kv_over_capacity,
+        preemptions,
+        instances,
+    }
+}
+
+/// First offered load at which the disaggregated fleet's p99 TPOT drops
+/// below the colocated fleet's — the crossover the `cluster_pools`
+/// experiment reports. Curves must be paired by offered rate.
+pub fn tpot_crossover(colocated: &[ClusterOutcome], disagg: &[ClusterOutcome]) -> Option<f64> {
+    colocated
+        .iter()
+        .zip(disagg.iter())
+        .find(|(c, d)| {
+            c.completed > 0 && d.completed > 0 && d.tpot_ms.p99 < c.tpot_ms.p99
+        })
+        .map(|(c, _)| c.offered_rps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{generate_trace, TraceConfig, TrafficPattern};
+
+    fn trace(rate: f64, horizon: f64, seed: u64) -> Vec<Request> {
+        generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon))
+    }
+
+    #[test]
+    fn colocated_single_instance_matches_serve_sim() {
+        // A colocated fleet of 1 is exactly the serving simulator: every
+        // first-token / completion time must agree with a direct call.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig::colocated(1, &ds);
+        let t = trace(60.0, 4.0, 3);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let (co, crecs) = simulate_cluster(&sys, &ds, &t, &ccfg, 4.0, 60.0, &kernels, &stages);
+        let (so, srecs) = simulate(&sys, &ds, &t, &ccfg.serve, 4.0, "p", 60.0, &kernels, &stages);
+        assert_eq!(co.completed, so.completed);
+        assert_eq!(co.arrived, so.arrived);
+        assert!(co.conserves_requests());
+        assert_eq!(co.migrated, 0);
+        assert_eq!(co.kv_transfer_bytes, 0);
+        for (c, s) in crecs.iter().zip(&srecs) {
+            assert_eq!(c.id, s.id);
+            assert_eq!(c.first_token_s, s.first_token_s);
+            assert_eq!(c.completion_s, s.completion_s);
+            assert_eq!(c.prefill_instance, 0);
+        }
+        assert_eq!(co.tpot_ms, so.tpot_ms);
+    }
+
+    #[test]
+    fn disaggregated_smoke_conserves_and_bills_transfers() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig::disaggregated(1, 1, &ds);
+        let t = trace(80.0, 4.0, 7);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let (o, recs) = simulate_cluster(&sys, &ds, &t, &ccfg, 4.0, 80.0, &kernels, &stages);
+        assert!(o.conserves_requests(), "{o:?}");
+        assert!(o.completed > 0, "light load must complete requests end-to-end");
+        assert!(o.migrated >= o.completed);
+        assert!(!o.kv_over_capacity);
+        let layout = KvTransferModel::layout_bytes_per_token(&ds, ccfg.serve.dtype);
+        for r in &recs {
+            if r.transfer_bytes > 0 {
+                // The transfer-bytes invariant: exactly the latent-KV layout
+                // bytes of the migrated prompt context.
+                assert_eq!(r.transfer_bytes, r.prompt_tokens as u64 * layout);
+                assert!(r.transfer_s > 0.0);
+                assert_eq!(r.decode_instance, 0);
+            }
+            if let (Some(f), Some(c)) = (r.first_token_s, r.completion_s) {
+                assert!(f >= r.arrival_s && c >= f, "causality violated: {r:?}");
+            }
+        }
+        assert_eq!(o.kv_transfer_bytes, recs.iter().map(|r| r.transfer_bytes).sum::<u64>());
+        assert!(o.transfer_overhead_share > 0.0 && o.transfer_overhead_share < 0.5);
+    }
+
+    #[test]
+    fn cluster_simulation_is_deterministic() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let t = trace(100.0, 3.0, 11);
+        let run = |mode: FleetMode| {
+            let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(2, &ds) };
+            simulate_cluster(
+                &sys,
+                &ds,
+                &t,
+                &ccfg,
+                3.0,
+                100.0,
+                &KernelCache::new(),
+                &StageTimeCache::new(),
+            )
+        };
+        for mode in [FleetMode::Colocated { instances: 2 }, FleetMode::Disaggregated { prefill: 1, decode: 1 }] {
+            let (a, ra) = run(mode);
+            let (b, rb) = run(mode);
+            assert_eq!(a, b, "{mode:?} must replay identically");
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn routing_policies_spread_load() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let t = trace(120.0, 3.0, 13);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PrefixAffinity] {
+            let ccfg = ClusterConfig { routing: policy, ..ClusterConfig::colocated(3, &ds) };
+            let (o, _) = simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 120.0, &kernels, &stages);
+            assert!(o.conserves_requests(), "{policy:?}");
+            assert_eq!(o.instances.len(), 3);
+            let routed: Vec<usize> = o.instances.iter().map(|i| i.routed).collect();
+            let total: usize = routed.iter().sum();
+            assert_eq!(total, t.len());
+            // No instance may be starved by a balancing policy.
+            assert!(routed.iter().all(|&r| r > total / 10), "{policy:?}: skewed {routed:?}");
+        }
+    }
+
+    #[test]
+    fn tpot_crossover_detection() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig::colocated(1, &ds);
+        let t = trace(10.0, 1.0, 5);
+        let (base, _) = simulate_cluster(
+            &sys,
+            &ds,
+            &t,
+            &ccfg,
+            1.0,
+            10.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+        );
+        let mk = |rate: f64, p99: f64| {
+            let mut o = base.clone();
+            o.offered_rps = rate;
+            o.completed = 5;
+            o.tpot_ms.p99 = p99;
+            o
+        };
+        let colo = vec![mk(100.0, 10.0), mk(400.0, 40.0), mk(1600.0, 90.0)];
+        let disagg = vec![mk(100.0, 12.0), mk(400.0, 38.0), mk(1600.0, 45.0)];
+        assert_eq!(tpot_crossover(&colo, &disagg), Some(400.0));
+        assert_eq!(tpot_crossover(&colo[..1], &disagg[..1]), None);
+    }
+}

@@ -1,0 +1,43 @@
+//! Fleet-level cluster simulator: multiple wafer instances, disaggregated
+//! prefill/decode pools, KV-transfer modeling and prefix-affinity routing.
+//!
+//! # Layering: `serve` vs `cluster`
+//!
+//! The [`serve`](crate::serve) layer answers "what does ONE wafer instance
+//! do under a request stream" — continuous batching, KV admission, chunked
+//! prefill billed by the real dataflow simulation. This module is the layer
+//! above: a *fleet* of such instances behind a cluster router, which is
+//! where the paper's end-to-end claims (§V-C) and the ROADMAP's "millions
+//! of users" north star actually live. Nothing in `serve` knows about the
+//! fleet; nothing here re-models what an instance already simulates — every
+//! instance runs the unmodified `serve::sim` event loop against the shared
+//! `StageTimeCache`/`KernelCache`, so fleet numbers inherit the dataflow
+//! grounding.
+//!
+//! The cluster layer owns exactly three concerns:
+//!
+//! - [`router`] — which instance a request (or a KV handoff) lands on:
+//!   round-robin, fluid least-outstanding-work, or prefix-affinity keyed on
+//!   the per-instance `PrefixStore` fingerprints.
+//! - [`transfer`] — what a prefill→decode migration costs: the MLA
+//!   *latent*-KV layout bytes over an inter-instance link, partially
+//!   overlappable with the prefill tail (layer streaming).
+//! - [`fleet`] — the two-phase fleet simulation itself: colocated fleets,
+//!   or prefill pools feeding decode pools whose iterations never carry
+//!   chunked-prefill interference. Prefill is compute-bound and decode
+//!   memory-bound (PAPERS.md, "Rethinking LLM Inference Bottlenecks"), so
+//!   the split trades first-token transfer latency for interference-free
+//!   decode cadence — the colocated-vs-disaggregated crossover the
+//!   `cluster_pools` experiment sweeps.
+//!
+//! Entry points: `flatattention cluster` (CLI), experiment ids
+//! `cluster_pools` and `cluster_models`, `examples/cluster.rs`,
+//! `benches/cluster_pools.rs`.
+
+pub mod fleet;
+pub mod router;
+pub mod transfer;
+
+pub use fleet::{simulate_cluster, tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FleetMode, InstanceSummary};
+pub use router::{Router, RoutingPolicy};
+pub use transfer::KvTransferModel;

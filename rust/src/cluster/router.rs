@@ -1,0 +1,266 @@
+//! Cluster-level request routing across instances of one pool.
+//!
+//! Routing decisions are made at arrival (prefill / colocated routing) or
+//! at KV-handoff time (decode routing) and are pure functions of the
+//! arrival sequence, so a routed fleet simulation replays bit-exactly.
+//!
+//! Outstanding work is tracked with a fluid proxy: every instance drains
+//! its backlog at a nominal `drain_rate` tokens/s and each routed request
+//! deposits its token work. The proxy only shapes *balancing* — the actual
+//! per-instance latencies come from the instances' own iteration-level
+//! simulations — so any positive drain rate yields a sane policy; the
+//! default is the order of one wafer instance's serving throughput.
+
+use std::collections::HashMap;
+
+use crate::serve::request::Request;
+use crate::serve::scheduler::PrefixKeying;
+
+/// Pluggable routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through the pool's instances in order.
+    RoundRobin,
+    /// Fluid least-outstanding-work: route to the instance with the least
+    /// undrained token work (ties to the lowest index).
+    LeastOutstanding,
+    /// Prefix affinity: requests of one shared-prefix family stick to the
+    /// instance whose `PrefixStore` fingerprints their blocks (first member
+    /// placed least-outstanding); prefix-free requests fall back to
+    /// least-outstanding. A 2× overload guard spills a family's traffic
+    /// without re-homing the fingerprint.
+    PrefixAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastOutstanding => "least-outstanding",
+            RoutingPolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    /// Parse a CLI policy name (case-insensitive).
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "roundrobin" | "round-robin" | "rr" => Some(RoutingPolicy::RoundRobin),
+            "leastoutstanding" | "least-outstanding" | "low" => Some(RoutingPolicy::LeastOutstanding),
+            "prefixaffinity" | "prefix-affinity" | "prefix" => Some(RoutingPolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic router over one pool of `n` instances.
+pub struct Router {
+    policy: RoutingPolicy,
+    /// Family-key mode — MUST match the instances' scheduler keying, or the
+    /// affinity fingerprints and the per-instance `PrefixStore`s would
+    /// disagree about which requests share blocks.
+    keying: PrefixKeying,
+    rr_next: usize,
+    /// Fluid undrained token work per instance.
+    outstanding: Vec<f64>,
+    last_t: f64,
+    drain_rate: f64,
+    /// Prefix-family fingerprint → owning instance (mirrors which
+    /// instance's `PrefixStore` holds the family's blocks).
+    affinity: HashMap<u64, usize>,
+}
+
+impl Router {
+    /// Nominal per-instance drain rate for the fluid backlog proxy
+    /// (order of one wafer instance's serving throughput in tokens/s).
+    pub const DEFAULT_DRAIN_RATE: f64 = 250_000.0;
+
+    pub fn new(policy: RoutingPolicy, keying: PrefixKeying, n: usize, drain_rate: f64) -> Self {
+        assert!(n >= 1, "a pool needs at least one instance");
+        Router {
+            policy,
+            keying,
+            rr_next: 0,
+            outstanding: vec![0.0; n],
+            last_t: 0.0,
+            drain_rate: drain_rate.max(1.0),
+            affinity: HashMap::new(),
+        }
+    }
+
+    pub fn instances(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Lightest current backlog (read-only; the affinity guard's yardstick).
+    fn min_outstanding(&self) -> f64 {
+        self.outstanding.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Pick the least-loaded instance, breaking (near-)ties by rotating
+    /// preference — otherwise a fully-drained fleet would funnel every
+    /// light-load arrival to instance 0.
+    fn least_outstanding(&mut self) -> usize {
+        let n = self.outstanding.len();
+        let start = self.rr_next;
+        let mut best = start;
+        for k in 1..n {
+            let i = (start + k) % n;
+            if self.outstanding[i] + 1e-9 < self.outstanding[best] {
+                best = i;
+            }
+        }
+        self.rr_next = (best + 1) % n;
+        best
+    }
+
+    /// Route a request arriving at time `t` carrying `work_tokens` of
+    /// future work (prompt tokens for a prefill pool, output tokens for a
+    /// decode pool). Returns the chosen instance index.
+    pub fn route(&mut self, r: &Request, t: f64, work_tokens: f64) -> usize {
+        // Fluid drain since the previous decision.
+        let dt = (t - self.last_t).max(0.0);
+        self.last_t = self.last_t.max(t);
+        for w in &mut self.outstanding {
+            *w = (*w - dt * self.drain_rate).max(0.0);
+        }
+        let i = match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.outstanding.len();
+                i
+            }
+            RoutingPolicy::LeastOutstanding => self.least_outstanding(),
+            RoutingPolicy::PrefixAffinity => {
+                let key = self.keying.key_of(r);
+                if key == 0 {
+                    self.least_outstanding()
+                } else {
+                    match self.affinity.get(&key) {
+                        Some(&home) => {
+                            // Overload guard: spill (this request only, the
+                            // fingerprint stays home) once affinity would
+                            // cost more than ~1 s of extra backlog over the
+                            // lightest instance.
+                            let light = self.min_outstanding();
+                            if self.outstanding[home] > 2.0 * light + self.drain_rate {
+                                self.least_outstanding()
+                            } else {
+                                home
+                            }
+                        }
+                        None => {
+                            let home = self.least_outstanding();
+                            self.affinity.insert(key, home);
+                            home
+                        }
+                    }
+                }
+            }
+        };
+        self.outstanding[i] += work_tokens.max(0.0);
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plain(id: u64, t: f64) -> Request {
+        Request::new(id, t, 512, 64)
+    }
+
+    fn fam(id: u64, t: f64, family: u64) -> Request {
+        Request { prefix_id: family, prefix_tokens: 256, prefix_hash: family.wrapping_mul(0x9E37) | 1, ..plain(id, t) }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin, PrefixKeying::TokenHash, 3, Router::DEFAULT_DRAIN_RATE);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&plain(i, 0.0), 0.0, 100.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_balances_uneven_work() {
+        let mut r = Router::new(RoutingPolicy::LeastOutstanding, PrefixKeying::TokenHash, 2, 1000.0);
+        assert_eq!(r.route(&plain(0, 0.0), 0.0, 10_000.0), 0);
+        // Instance 0 carries 10k tokens; light requests land on instance 1
+        // until its backlog catches up, then balancing resumes.
+        assert_eq!(r.route(&plain(1, 0.0), 0.0, 4_000.0), 1);
+        assert_eq!(r.route(&plain(2, 0.0), 0.0, 4_000.0), 1);
+        assert_eq!(r.route(&plain(3, 0.0), 0.0, 4_000.0), 1);
+        assert_eq!(r.route(&plain(4, 0.0), 0.0, 4_000.0), 0);
+    }
+
+    #[test]
+    fn fluid_drain_forgets_old_work() {
+        let mut r = Router::new(RoutingPolicy::LeastOutstanding, PrefixKeying::TokenHash, 2, 1000.0);
+        assert_eq!(r.route(&plain(0, 0.0), 0.0, 50_000.0), 0);
+        // The heavy backlog on 0 steers the next arrivals away …
+        assert_eq!(r.route(&plain(1, 0.1), 0.1, 100.0), 1);
+        assert_eq!(r.route(&plain(2, 0.2), 0.2, 100.0), 1);
+        // … but a minute later it has fully drained and rotation resumes.
+        assert_eq!(r.route(&plain(3, 60.0), 60.0, 100.0), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_keeps_families_together() {
+        // All arrivals at t = 0 so the fluid drain stays out of the picture.
+        let mut r = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 4, Router::DEFAULT_DRAIN_RATE);
+        let a0 = r.route(&fam(0, 0.0, 5), 0.0, 500.0);
+        let b0 = r.route(&fam(1, 0.0, 9), 0.0, 500.0);
+        assert_ne!(a0, b0, "second family homes on a lighter instance");
+        for i in 2..10 {
+            let fam5 = r.route(&fam(i, 0.0, 5), 0.0, 500.0);
+            assert_eq!(fam5, a0, "family 5 must stick to its home");
+        }
+        // Prefix-free traffic still spreads to an idle instance.
+        let free = r.route(&plain(99, 0.0), 0.0, 500.0);
+        assert!(free != a0, "least-outstanding fallback avoids the loaded home");
+    }
+
+    #[test]
+    fn prefix_affinity_spills_under_overload() {
+        let mut r = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 2, 1000.0);
+        let home = r.route(&fam(0, 0.0, 7), 0.0, 1_000.0);
+        // Pile family work onto the home until the imbalance guard
+        // (2× lightest + 1 s of drain) trips.
+        let mut spilled = false;
+        for i in 1..20 {
+            spilled |= r.route(&fam(i, 0.0, 7), 0.0, 1_000.0) != home;
+        }
+        assert!(spilled, "a hot family must eventually spill");
+    }
+
+    #[test]
+    fn affinity_keying_matches_scheduler_semantics() {
+        // Two families with identical content hashes: under TokenHash they
+        // are ONE family (one home — the instance whose PrefixStore will
+        // hold the shared blocks); under ExactId they are distinct families
+        // with distinct homes, mirroring the scheduler's block keying.
+        let mk = |id: u64, family: u64| Request {
+            prefix_id: family,
+            prefix_tokens: 256,
+            prefix_hash: 0xFEED,
+            ..plain(id, 0.0)
+        };
+        let mut hashed = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 4, 1e9);
+        let h3 = hashed.route(&mk(0, 3), 0.0, 500.0);
+        let h9 = hashed.route(&mk(1, 9), 0.0, 500.0);
+        assert_eq!(h3, h9, "shared content must share a home under TokenHash");
+        let mut exact = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::ExactId, 4, 1e9);
+        let e3 = exact.route(&mk(0, 3), 0.0, 500.0);
+        let e9 = exact.route(&mk(1, 9), 0.0, 500.0);
+        assert_ne!(e3, e9, "distinct ids must home separately under ExactId");
+    }
+
+    #[test]
+    fn routing_policy_parse_roundtrip() {
+        for p in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PrefixAffinity] {
+            assert_eq!(RoutingPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::parse("RR"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! KV-cache handoff model for disaggregated prefill/decode pools.
+//!
+//! When a request migrates from a prefill-pool instance to a decode-pool
+//! instance, its whole prompt KV must move. Under MLA the payload is the
+//! *latent* cache layout — `(kv_lora_rank + qk_rope_dim)` values per token
+//! per layer, the same layout `serve::kv::KvCacheModel` budgets — which is
+//! what makes disaggregation affordable for DeepSeek-class models in the
+//! first place: ~576 B/token/layer at FP8 instead of the 32 KiB/token/layer
+//! an uncompressed MHA cache would ship.
+//!
+//! The transfer is *layer-streamable*: stage `l`'s latent KV is final as
+//! soon as layer `l`'s prefill finishes, so a fraction of the serialization
+//! overlaps the tail of prefill (and the prefill instance's next chunk).
+//! Only the exposed remainder delays the user's first token and the decode
+//! pool's admission — the prefill instance itself is never stalled (the
+//! D2D/NIC engines move the bytes, not the compute tiles).
+
+use crate::arch::config::Dtype;
+use crate::workload::deepseek::DeepSeekConfig;
+
+/// Closed-form KV handoff cost between two instances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvTransferModel {
+    /// Latent-KV layout bytes one context token occupies across *all*
+    /// layers (`(kv_lora_rank + qk_rope_dim) × dtype × layers`).
+    pub bytes_per_token: u64,
+    /// Effective inter-instance bandwidth in bytes/second.
+    pub link_bandwidth_bytes_per_s: f64,
+    /// Per-transfer base latency in seconds (connection setup, routing).
+    pub base_latency_s: f64,
+    /// Fraction of the serialization hidden behind the tail of prefill /
+    /// the next prefill chunk (layer-streamed transfer), in [0, 1].
+    pub overlap_fraction: f64,
+}
+
+impl KvTransferModel {
+    /// Inter-node class links between wafer instances: 16 GB/s effective
+    /// per-flow (RDMA NIC class) with a 1 ms setup latency, half the
+    /// serialization hidden by layer streaming.
+    pub fn inter_node(ds: &DeepSeekConfig, dtype: Dtype) -> Self {
+        KvTransferModel {
+            bytes_per_token: Self::layout_bytes_per_token(ds, dtype),
+            link_bandwidth_bytes_per_s: 16.0e9,
+            base_latency_s: 1.0e-3,
+            overlap_fraction: 0.5,
+        }
+    }
+
+    /// D2D-class links (instances on one wafer carrier, paper Fig. 2c
+    /// numbers: 1 TB/s, 256 ns): handoff is essentially free.
+    pub fn d2d_class(ds: &DeepSeekConfig, dtype: Dtype) -> Self {
+        KvTransferModel {
+            bytes_per_token: Self::layout_bytes_per_token(ds, dtype),
+            link_bandwidth_bytes_per_s: 1.0e12,
+            base_latency_s: 256e-9,
+            overlap_fraction: 0.5,
+        }
+    }
+
+    /// Latent-KV layout bytes per context token, all layers — the single
+    /// source of truth the transfer-bytes invariant tests pin against.
+    pub fn layout_bytes_per_token(ds: &DeepSeekConfig, dtype: Dtype) -> u64 {
+        (ds.kv_lora_rank + ds.qk_rope_dim) as u64 * dtype.bytes() * ds.layers as u64
+    }
+
+    /// Bytes a migrated request of `context_tokens` ships.
+    pub fn bytes_for(&self, context_tokens: u64) -> u64 {
+        context_tokens * self.bytes_per_token
+    }
+
+    /// Raw serialization time of the payload (no overlap, no base latency).
+    pub fn serialization_seconds(&self, context_tokens: u64) -> f64 {
+        self.bytes_for(context_tokens) as f64 / self.link_bandwidth_bytes_per_s.max(1.0)
+    }
+
+    /// Exposed handoff delay the migrating request experiences: base
+    /// latency plus the non-overlapped share of serialization. This delays
+    /// both the user-visible first token and the decode-pool arrival.
+    pub fn exposed_seconds(&self, context_tokens: u64) -> f64 {
+        let hidden = self.overlap_fraction.clamp(0.0, 1.0);
+        self.base_latency_s + (1.0 - hidden) * self.serialization_seconds(context_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_bytes_match_mla_cache() {
+        let ds = DeepSeekConfig::v3_671b();
+        let t = KvTransferModel::inter_node(&ds, Dtype::Fp8);
+        // (512 latent + 64 rope) × 1 B × 61 layers.
+        assert_eq!(t.bytes_per_token, 576 * 61);
+        assert_eq!(
+            t.bytes_per_token,
+            ds.kv_cache_bytes_per_user_layer(1, Dtype::Fp8) * ds.layers as u64
+        );
+        assert_eq!(t.bytes_for(1000), 1000 * 576 * 61);
+    }
+
+    #[test]
+    fn exposed_delay_is_base_plus_unhidden_serialization() {
+        let ds = DeepSeekConfig::v3_671b();
+        let t = KvTransferModel::inter_node(&ds, Dtype::Fp8);
+        let ctx = 1024u64;
+        let ser = t.serialization_seconds(ctx);
+        assert!(ser > 0.0);
+        let exp = t.exposed_seconds(ctx);
+        assert!((exp - (t.base_latency_s + 0.5 * ser)).abs() < 1e-15);
+        // Full overlap leaves only the base latency; zero overlap exposes
+        // the whole serialization.
+        let full = KvTransferModel { overlap_fraction: 1.0, ..t };
+        assert!((full.exposed_seconds(ctx) - t.base_latency_s).abs() < 1e-15);
+        let none = KvTransferModel { overlap_fraction: 0.0, ..t };
+        assert!((none.exposed_seconds(ctx) - (t.base_latency_s + ser)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn d2d_class_is_orders_of_magnitude_cheaper() {
+        let ds = DeepSeekConfig::v3_671b();
+        let inter = KvTransferModel::inter_node(&ds, Dtype::Fp8);
+        let d2d = KvTransferModel::d2d_class(&ds, Dtype::Fp8);
+        assert!(d2d.exposed_seconds(4096) < inter.exposed_seconds(4096) / 50.0);
+    }
+
+    #[test]
+    fn longer_contexts_ship_proportionally_more() {
+        let ds = DeepSeekConfig::v3_671b();
+        let t = KvTransferModel::inter_node(&ds, Dtype::Fp8);
+        assert_eq!(t.bytes_for(2048), 2 * t.bytes_for(1024));
+        assert!(t.exposed_seconds(2048) > t.exposed_seconds(1024));
+        assert_eq!(t.bytes_for(0), 0);
+    }
+}

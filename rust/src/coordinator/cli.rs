@@ -1,11 +1,13 @@
-//! Argument parsing for the `flatattention serve` subcommand.
+//! Argument parsing for the `flatattention serve` and `flatattention
+//! cluster` subcommands.
 //!
-//! Lives in the library (not `main.rs`) so the parser is unit-testable:
-//! bad policy names, malformed numbers and out-of-range rates must come
-//! back as `Err`, never as a panic inside the CLI.
+//! Lives in the library (not `main.rs`) so the parsers are unit-testable:
+//! bad policy names, malformed numbers, out-of-range rates and inconsistent
+//! pool specs must come back as `Err`, never as a panic inside the CLI.
 
 use anyhow::{bail, Result};
 
+use crate::cluster::{FleetMode, RoutingPolicy};
 use crate::serve::scheduler::QueuePolicy;
 
 /// Parsed `flatattention serve` options.
@@ -102,6 +104,162 @@ impl ServeArgs {
     }
 }
 
+/// Parsed `flatattention cluster` options.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterArgs {
+    /// Shrink sweeps (test/CI mode).
+    pub fast: bool,
+    /// Run the multi-model co-serving experiment instead of the pool sweep.
+    pub models: bool,
+    /// Arrival-routing policy for the custom fleet (`--routing`).
+    pub routing: RoutingPolicy,
+    /// Prefill-pool size of a custom disaggregated fleet (`--prefill`).
+    pub prefill: Option<u32>,
+    /// Decode-pool size of a custom disaggregated fleet (`--decode`).
+    pub decode: Option<u32>,
+    /// Colocated fleet size of a custom run (`--instances`).
+    pub instances: Option<u32>,
+    /// Custom offered load in requests/s (`--rate`).
+    pub rate_rps: Option<f64>,
+    /// Custom horizon in seconds (`--horizon`).
+    pub horizon_s: Option<f64>,
+    /// Trace seed (`--seed`, default 2026).
+    pub seed: u64,
+    /// Set when ANY custom-fleet flag was given, even with a value equal to
+    /// its default — `--seed 2026` is still a request for a custom run.
+    custom: bool,
+}
+
+impl Default for ClusterArgs {
+    fn default() -> Self {
+        ClusterArgs {
+            fast: false,
+            models: false,
+            routing: RoutingPolicy::PrefixAffinity,
+            prefill: None,
+            decode: None,
+            instances: None,
+            rate_rps: None,
+            horizon_s: None,
+            seed: 2026,
+            custom: false,
+        }
+    }
+}
+
+impl ClusterArgs {
+    /// True when the user asked for a single custom fleet simulation rather
+    /// than the canned `cluster_pools` sweep (any of `--routing`,
+    /// `--prefill/--decode`, `--instances`, `--rate`, `--horizon`, `--seed`
+    /// appeared — explicitly-passed default values count).
+    pub fn is_custom(&self) -> bool {
+        self.custom
+    }
+
+    /// Fleet mode of a custom run (colocated 4 when nothing was specified).
+    pub fn mode(&self) -> FleetMode {
+        match (self.prefill, self.decode, self.instances) {
+            (Some(p), Some(d), None) => FleetMode::Disaggregated { prefill: p, decode: d },
+            (None, None, Some(n)) => FleetMode::Colocated { instances: n },
+            _ => FleetMode::Colocated { instances: 4 },
+        }
+    }
+
+    /// Parse the argument tail after `cluster`.
+    pub fn parse(args: &[String]) -> Result<ClusterArgs> {
+        let mut out = ClusterArgs::default();
+        let mut i = 0usize;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--fast" => out.fast = true,
+                "--models" => out.models = true,
+                "--routing" => {
+                    let v = value(args, i, "--routing")?;
+                    out.routing = match RoutingPolicy::parse(v) {
+                        Some(p) => p,
+                        None => bail!("unknown routing policy '{v}' (expected round-robin|least-outstanding|prefix-affinity)"),
+                    };
+                    out.custom = true;
+                    i += 1;
+                }
+                "--prefill" => {
+                    out.prefill = Some(parse_count(args, i, "--prefill")?);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--decode" => {
+                    out.decode = Some(parse_count(args, i, "--decode")?);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--instances" => {
+                    out.instances = Some(parse_count(args, i, "--instances")?);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--rate" => {
+                    let v = parse_num(args, i, "--rate")?;
+                    if !(v > 0.0 && v <= 1e6) {
+                        bail!("--rate must be in (0, 1e6] requests/s, got {v}");
+                    }
+                    out.rate_rps = Some(v);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--horizon" => {
+                    let v = parse_num(args, i, "--horizon")?;
+                    if !(v > 0.0 && v <= 3600.0) {
+                        bail!("--horizon must be in (0, 3600] seconds, got {v}");
+                    }
+                    out.horizon_s = Some(v);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--seed" => {
+                    let v = value(args, i, "--seed")?;
+                    out.seed = match v.parse::<u64>() {
+                        Ok(s) => s,
+                        Err(_) => bail!("--seed expects an unsigned integer, got '{v}'"),
+                    };
+                    out.custom = true;
+                    i += 1;
+                }
+                other => bail!("unknown cluster option '{other}'; see `flatattention help`"),
+            }
+            i += 1;
+        }
+        // Pool specs must be consistent: --prefill and --decode together,
+        // and never mixed with --instances.
+        match (out.prefill, out.decode, out.instances) {
+            (Some(_), None, _) | (None, Some(_), _) => {
+                bail!("--prefill and --decode must be given together")
+            }
+            (Some(_), Some(_), Some(_)) => {
+                bail!("--instances conflicts with --prefill/--decode")
+            }
+            _ => {}
+        }
+        // `--models` runs the canned co-serving experiment at its pinned
+        // parameters — silently ignoring custom fleet/rate/seed flags would
+        // hand back a report that reflects none of them.
+        if out.models && out.is_custom() {
+            bail!("--models runs the fixed cluster_models experiment; it cannot be combined with --routing/--prefill/--decode/--instances/--rate/--horizon/--seed");
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a small positive instance count (bounded so a typo cannot spawn a
+/// thousand concurrent wafer simulations).
+fn parse_count(args: &[String], i: usize, flag: &str) -> Result<u32> {
+    let v = value(args, i, flag)?;
+    match v.parse::<u32>() {
+        Ok(n) if (1..=64).contains(&n) => Ok(n),
+        Ok(n) => bail!("{flag} must be in 1..=64 instances, got {n}"),
+        Err(_) => bail!("{flag} expects a positive integer, got '{v}'"),
+    }
+}
+
 fn value<'a>(args: &'a [String], i: usize, flag: &str) -> Result<&'a str> {
     match args.get(i + 1) {
         Some(v) => Ok(v.as_str()),
@@ -165,5 +323,68 @@ mod tests {
         }
         assert!(ServeArgs::parse(&argv(&["--seed", "-1"])).is_err());
         assert!(ServeArgs::parse(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_and_flags() {
+        let a = ClusterArgs::parse(&argv(&[])).unwrap();
+        assert_eq!(a, ClusterArgs::default());
+        assert!(!a.is_custom());
+        assert_eq!(a.mode(), FleetMode::Colocated { instances: 4 });
+        let a = ClusterArgs::parse(&argv(&["--fast", "--models"])).unwrap();
+        assert!(a.fast && a.models);
+        assert!(!a.is_custom());
+    }
+
+    #[test]
+    fn cluster_parses_pools_routing_rate() {
+        let a = ClusterArgs::parse(&argv(&[
+            "--prefill", "2", "--decode", "6", "--routing", "rr", "--rate", "1500", "--horizon", "8", "--seed", "9",
+        ]))
+        .unwrap();
+        assert_eq!(a.mode(), FleetMode::Disaggregated { prefill: 2, decode: 6 });
+        assert_eq!(a.routing, RoutingPolicy::RoundRobin);
+        assert_eq!(a.rate_rps, Some(1500.0));
+        assert_eq!(a.horizon_s, Some(8.0));
+        assert_eq!(a.seed, 9);
+        assert!(a.is_custom());
+        let b = ClusterArgs::parse(&argv(&["--instances", "2"])).unwrap();
+        assert_eq!(b.mode(), FleetMode::Colocated { instances: 2 });
+        assert!(b.is_custom());
+    }
+
+    #[test]
+    fn cluster_rejects_inconsistent_pool_specs() {
+        assert!(ClusterArgs::parse(&argv(&["--prefill", "2"])).is_err(), "prefill without decode");
+        assert!(ClusterArgs::parse(&argv(&["--decode", "2"])).is_err(), "decode without prefill");
+        assert!(
+            ClusterArgs::parse(&argv(&["--prefill", "1", "--decode", "1", "--instances", "2"])).is_err(),
+            "pools conflict with --instances"
+        );
+        for bad in [["--prefill", "0"], ["--instances", "65"], ["--decode", "x"]] {
+            assert!(ClusterArgs::parse(&argv(&bad)).is_err(), "{bad:?} must fail");
+        }
+        assert!(ClusterArgs::parse(&argv(&["--routing", "hash"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--bogus"])).is_err());
+        // --models runs a canned experiment: combining it with custom flags
+        // must be an error, never a silent ignore.
+        let e = ClusterArgs::parse(&argv(&["--models", "--seed", "9"])).unwrap_err();
+        assert!(e.to_string().contains("--models"), "{e}");
+        assert!(ClusterArgs::parse(&argv(&["--models", "--rate", "500"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--models", "--fast"])).is_ok(), "--fast stays compatible");
+    }
+
+    #[test]
+    fn cluster_explicit_default_values_still_mean_custom() {
+        // Passing a flag whose value happens to equal the default is still
+        // a request for a custom run — dispatch must not depend on whether
+        // the value matches the default.
+        let a = ClusterArgs::parse(&argv(&["--seed", "2026"])).unwrap();
+        assert!(a.is_custom(), "--seed 2026 must request a custom run");
+        let b = ClusterArgs::parse(&argv(&["--routing", "prefix-affinity"])).unwrap();
+        assert!(b.is_custom(), "--routing with the default policy is still custom");
+        // And the --models guard catches them too.
+        assert!(ClusterArgs::parse(&argv(&["--models", "--seed", "2026"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--models", "--routing", "prefix-affinity"])).is_err());
     }
 }

@@ -7,13 +7,14 @@
 
 use anyhow::{bail, Result};
 
+use crate::arch::collective;
 use crate::arch::collective::{multicast_latency_cycles, reduce_latency_cycles, CollectiveImpl};
 use crate::arch::config::{ChipConfig, Dtype, SimFidelity};
 use crate::arch::noc::ChipResources;
 use crate::arch::tile::{gemm_cycles, gemm_utilization};
-use crate::arch::collective;
 use crate::baseline::gh200::{self, Bound, Gh200};
 use crate::baseline::soa::SoaSystem;
+use crate::cluster::{simulate_cluster, tpot_crossover, ClusterConfig, ClusterOutcome, FleetMode, RoutingPolicy};
 use crate::coordinator::report::{fmt_time, stacked_bar, Report};
 use crate::dataflow::tiling::{l1_working_set, slice_utilization, Concurrency, FlatTiling};
 use crate::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
@@ -21,9 +22,10 @@ use crate::metrics::{fmt_pct, KernelMetrics};
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
 use crate::multichip::wafer::{best_under_tpot, ep_plans, parallel_batch_sweeps};
-use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
-use crate::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use crate::serve::kv::KvCacheModel;
+use crate::serve::request::{generate_trace, thin_trace, PrefixProfile, TraceConfig, TrafficPattern};
 use crate::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
+use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
 use crate::sim::Graph;
 use crate::workload::attention::{AttentionShape, Phase};
 use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
@@ -48,6 +50,8 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("serve_load", "Serving: goodput + TTFT/TPOT percentiles vs offered load, 3 traffic patterns"),
         ("serve_policies", "Serving: KV admission policies (reserve vs on-demand+preempt) under memory pressure"),
         ("serve_prefix", "Serving: prefix-cache KV reuse + FCFS/SJF/priority scheduling on shared-prompt traffic"),
+        ("cluster_pools", "Cluster: prefill:decode pool ratios, KV-transfer overhead, colocated-vs-disaggregated crossover"),
+        ("cluster_models", "Cluster: two DeepSeek variants co-served on partitioned vs shared pools"),
     ]
 }
 
@@ -71,6 +75,8 @@ pub fn run(id: &str, fast: bool) -> Result<Report> {
         "serve_load" => serve_load(fast),
         "serve_policies" => serve_policies(fast),
         "serve_prefix" => serve_prefix(fast),
+        "cluster_pools" => cluster_pools(fast),
+        "cluster_models" => cluster_models(fast),
         _ => bail!("unknown experiment '{id}'; see `flatattention list`"),
     })
 }
@@ -877,6 +883,224 @@ fn serve_policies(fast: bool) -> Report {
         ]);
     }
     r.note("on-demand admission packs more residents (higher KV peak) at the cost of recompute preemptions");
+    r
+}
+
+/// Fleet size of the cluster experiments (wafer instances).
+pub const CLUSTER_FLEET: u32 = 4;
+
+/// Offered fleet loads of `cluster_pools` in requests/s. A 4-instance fleet
+/// of EP32-PP2 wafers saturates around 4× the single-instance knee, so the
+/// top points deliberately overdrive the colocated fleet.
+pub fn cluster_rates(fast: bool) -> Vec<f64> {
+    if fast {
+        vec![125.0, 2000.0]
+    } else {
+        vec![125.0, 500.0, 2000.0, 4000.0, 8000.0]
+    }
+}
+
+fn cluster_outcome_row(o: &ClusterOutcome) -> Vec<String> {
+    vec![
+        o.label.clone(),
+        format!("{:.0}", o.offered_rps),
+        o.completed.to_string(),
+        o.in_flight.to_string(),
+        format!("{:.0}", o.ttft_ms.p50),
+        format!("{:.0}", o.ttft_ms.p99),
+        format!("{:.1}", o.tpot_ms.p50),
+        format!("{:.1}", o.tpot_ms.p95),
+        format!("{:.1}", o.tpot_ms.p99),
+        format!("{:.0}", o.fleet_tokens_per_s),
+        format!("{:.0}", o.goodput_rps),
+        o.migrated.to_string(),
+        fmt_pct(o.transfer_overhead_share),
+    ]
+}
+
+/// `cluster_pools`: sweep the prefill:decode pool ratio at fixed fleet size
+/// over offered load, against the colocated baseline. Coupled thinning of
+/// one master trace makes the load axis a true refinement, and the whole
+/// table (including the crossover notes) replays bit-exactly at the fixed
+/// seed — the acceptance criterion's determinism anchor.
+fn cluster_pools(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let horizon = if fast { 3.0 } else { 10.0 };
+    let rates = cluster_rates(fast);
+    let seed = 2026u64;
+    let max_rate = rates.iter().cloned().fold(0.0f64, f64::max);
+    let master = generate_trace(
+        &TraceConfig::new(seed, TrafficPattern::Poisson, max_rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let modes = [
+        FleetMode::Colocated { instances: CLUSTER_FLEET },
+        FleetMode::Disaggregated { prefill: 1, decode: 3 },
+        FleetMode::Disaggregated { prefill: 2, decode: 2 },
+        FleetMode::Disaggregated { prefill: 3, decode: 1 },
+    ];
+    let mut r = Report::new("Cluster — prefill:decode pool ratios across a 4-instance wafer fleet");
+    r.preamble(format!(
+        "4× EP32-PP2 wafer instances, poisson traffic (70% shared prompts), horizon {horizon} s, seed {seed}; \
+         prefix-affinity arrival routing, least-outstanding decode routing, inter-node KV handoff"
+    ));
+    r.preamble("transfer = exposed KV-handoff share of migrated requests' end-to-end latency");
+    r.header(&[
+        "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
+        "tok/s", "goodput", "migrated", "transfer",
+    ]);
+    let mut curves: Vec<Vec<ClusterOutcome>> = Vec::new();
+    for mode in modes {
+        let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(CLUSTER_FLEET, &ds) };
+        let mut curve = Vec::new();
+        for &rate in &rates {
+            let trace = thin_trace(&master, rate / max_rate, seed ^ 0xC0FF_EE00);
+            let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &kernels, &stages);
+            assert!(o.conserves_requests(), "request conservation violated in {} @ {rate}", o.label);
+            assert!(!o.kv_over_capacity, "KV overflow in {} @ {rate}", o.label);
+            r.row(cluster_outcome_row(&o));
+            curve.push(o);
+        }
+        curves.push(curve);
+    }
+    for (mode, curve) in modes.iter().zip(&curves).skip(1) {
+        match tpot_crossover(&curves[0], curve) {
+            Some(rate) => r.note(format!(
+                "{}: p99 TPOT beats colocated from {rate:.0} rps (decode pool carries no chunked-prefill interference)",
+                mode.label()
+            )),
+            None => r.note(format!("{}: colocated p99 TPOT never beaten inside the sweep", mode.label())),
+        }
+    }
+    let colo_ttft = curves[0][0].ttft_ms.p50;
+    let best_disagg_ttft = curves[1..].iter().map(|c| c[0].ttft_ms.p50).fold(f64::INFINITY, f64::min);
+    r.note(format!(
+        "low load ({:.0} rps): colocated TTFT p50 {colo_ttft:.0} ms vs best disaggregated {best_disagg_ttft:.0} ms — \
+         the KV handoff is pure first-token overhead when nothing queues",
+        rates[0]
+    ));
+    r
+}
+
+/// `cluster_models`: two DeepSeek variants co-served on a 4-instance fleet —
+/// dedicated sub-fleets (partitioned) vs every instance hosting both models
+/// (shared: full-fleet parallelism, but co-resident weights shrink the KV
+/// budget and the per-chip batch ceiling is split between the models).
+///
+/// Shared pools are a *static* co-residency model: each model's traffic is
+/// simulated in its own fleet pass, with the other model charged as
+/// reserved HBM plus half the batch ceiling (the slot split is the compute
+/// proxy). Cross-model tick interference — the 16B's chunks stretching the
+/// 671B's iterations on the same chips — is NOT billed; an interleaved
+/// single-clock fleet simulation is the ROADMAP follow-up, and the report
+/// says so in its notes.
+fn cluster_models(fast: bool) -> Report {
+    let sys = WaferSystem::paper();
+    let big = DeepSeekConfig::v3_671b();
+    let small = DeepSeekConfig::v3_16b();
+    let horizon = if fast { 3.0 } else { 10.0 };
+    let (rate_big, rate_small) = if fast { (300.0, 600.0) } else { (1000.0, 2000.0) };
+    let seed = 7100u64;
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let trace_big = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate_big, horizon));
+    let trace_small = generate_trace(&TraceConfig::new(seed ^ 0x51AA, TrafficPattern::Poisson, rate_small, horizon));
+    let base = ServeConfig::default();
+    let co_weights = |other: &DeepSeekConfig| KvCacheModel::new(&sys, other, base.plan, base.dtype).weight_bytes_per_chip;
+
+    let mut r = Report::new("Cluster — two DeepSeek variants co-served: partitioned vs shared pools (4 instances)");
+    r.preamble(format!(
+        "{} @ {rate_big:.0} rps + {} @ {rate_small:.0} rps, horizon {horizon} s, seed {seed}",
+        big.name, small.name
+    ));
+    r.preamble(
+        "partitioned: 3 dedicated instances for the 671B, 1 for the 16B; shared: both models resident on all 4 \
+         (halved batch ceiling, co-resident weights reserved out of the KV budget)",
+    );
+    r.header(&[
+        "scheme", "model", "done", "backlog", "TTFT p99 (ms)", "TPOT p99 (ms)", "tok/s", "goodput", "KV peak",
+    ]);
+    let mut run = |scheme: &str,
+                   ds: &DeepSeekConfig,
+                   trace: &[crate::serve::request::Request],
+                   rate: f64,
+                   instances: u32,
+                   reserved: u64,
+                   split: bool| {
+        let mut ccfg = ClusterConfig::colocated(instances, ds);
+        ccfg.serve.reserved_hbm_bytes = reserved;
+        if split {
+            ccfg.serve.scheduler.max_batch_per_chip = (ccfg.serve.scheduler.max_batch_per_chip / 2).max(1);
+        }
+        let (o, _) = simulate_cluster(&sys, ds, trace, &ccfg, horizon, rate, &kernels, &stages);
+        assert!(o.conserves_requests(), "conservation violated: {scheme} {}", ds.name);
+        assert!(!o.kv_over_capacity, "KV overflow: {scheme} {}", ds.name);
+        let kv_peak = o.instances.iter().map(|i| i.peak_kv_occupancy).fold(0.0f64, f64::max);
+        r.row(vec![
+            scheme.into(),
+            ds.name.clone(),
+            o.completed.to_string(),
+            o.in_flight.to_string(),
+            format!("{:.0}", o.ttft_ms.p99),
+            format!("{:.1}", o.tpot_ms.p99),
+            format!("{:.0}", o.fleet_tokens_per_s),
+            format!("{:.0}", o.goodput_rps),
+            fmt_pct(kv_peak),
+        ]);
+        o
+    };
+    run("partitioned", &big, &trace_big, rate_big, 3, 0, false);
+    run("partitioned", &small, &trace_small, rate_small, 1, 0, false);
+    run("shared", &big, &trace_big, rate_big, CLUSTER_FLEET, co_weights(&small), true);
+    run("shared", &small, &trace_small, rate_small, CLUSTER_FLEET, co_weights(&big), true);
+    r.note(
+        "shared pools trade KV headroom and batch ceiling for full-fleet parallelism per model; \
+         partitioned pools isolate the models at the cost of static capacity splits",
+    );
+    r.note(
+        "shared-pool caveat: co-residency is billed statically (reserved weights + halved batch ceiling); \
+         cross-model tick interference on a shared chip is not simulated, so shared-row latencies are a lower bound",
+    );
+    r
+}
+
+/// One fleet simulation at a caller-chosen mode/routing/rate/horizon/seed
+/// (the `flatattention cluster --prefill/--decode/...` path).
+pub fn cluster_custom(mode: FleetMode, routing: RoutingPolicy, rate: f64, horizon: f64, seed: u64) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let trace = generate_trace(
+        &TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let mut ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(mode.instances(), &ds) };
+    ccfg.routing = routing;
+    let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &KernelCache::new(), &StageTimeCache::new());
+    assert!(o.conserves_requests(), "request conservation violated");
+    let mut r = Report::new("Cluster — custom fleet simulation (DeepSeek-v3-671B wafer instances)");
+    r.preamble(format!(
+        "{} fleet, {} arrival routing, poisson {rate:.0} rps (70% shared prompts) over {horizon} s, seed {seed}",
+        mode.label(),
+        routing.label()
+    ));
+    r.header(&[
+        "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
+        "tok/s", "goodput", "migrated", "transfer",
+    ]);
+    r.row(cluster_outcome_row(&o));
+    for (i, s) in o.instances.iter().enumerate() {
+        r.note(format!(
+            "instance {i} ({}): routed {}, done {}, backlog {}, {:.0} tok/s, KV peak {}, prefix hits {} tokens",
+            s.role,
+            s.routed,
+            s.completed,
+            s.backlog,
+            s.tokens_per_s,
+            fmt_pct(s.peak_kv_occupancy),
+            s.prefix_hit_tokens
+        ));
+    }
     r
 }
 

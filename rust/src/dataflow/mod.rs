@@ -74,6 +74,7 @@ pub fn simulate_attention(
 }
 
 /// Simulate a (possibly batched) GEMM kernel via SUMMA.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_gemm(
     cfg: &ChipConfig,
     m: u64,

@@ -58,6 +58,7 @@ pub enum Concurrency {
 /// iteration). The O accumulator is held at engine-native precision (RedMulE
 /// accumulates in the input format; fp32 row statistics are carried
 /// separately), and P overwrites S in place.
+#[allow(clippy::too_many_arguments)]
 pub fn l1_working_set(
     slice_r: u64,
     slice_c: u64,

@@ -29,11 +29,18 @@
 //!   model: synthetic arrival traces (Poisson/bursty/diurnal, with shared
 //!   system-prompt populations and priority classes), KV-cache admission
 //!   from the MLA cache layout, prefix-cache KV reuse via a per-column
-//!   token-block trie, continuous batching with chunked prefill billed by
-//!   the *actual prefill dataflow simulation* (per-chunk causal attention
-//!   shapes at the request's context offset), FCFS/SJF/priority queue
-//!   policies, preemption, and offered-load sweeps reporting TTFT/TPOT
-//!   percentiles, prefix hit rates and SLO goodput.
+//!   token-block trie (keyed exactly or by hashed token blocks), continuous
+//!   batching with chunked prefill billed by the *actual prefill dataflow
+//!   simulation* (per-chunk causal attention shapes at the request's
+//!   context offset), FCFS/SJF/priority queue policies, preemption, and
+//!   offered-load sweeps reporting TTFT/TPOT percentiles, prefix hit rates
+//!   and SLO goodput.
+//! - [`cluster`] — the fleet layer above `serve`: N wafer instances behind
+//!   a cluster router (round-robin / least-outstanding-work /
+//!   prefix-affinity), colocated or disaggregated into prefill and decode
+//!   pools with the MLA latent-KV handoff billed over an inter-instance
+//!   link model. Each instance runs the unmodified `serve` event loop, so
+//!   fleet TTFT/TPOT/goodput numbers stay dataflow-grounded.
 //! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
 //! - [`coordinator`] — the experiment registry (one entry per paper
 //!   figure/table, plus the `serve_*` serving experiments), sweep runner and
@@ -50,6 +57,7 @@ pub mod exec;
 pub mod runtime;
 pub mod multichip;
 pub mod serve;
+pub mod cluster;
 pub mod baseline;
 pub mod coordinator;
 pub mod metrics;

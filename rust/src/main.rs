@@ -9,6 +9,9 @@
 //! flatattention simulate [options]           # simulate one attention kernel
 //! flatattention serve [--fast] [--policies] [--prefix]
 //!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
+//! flatattention cluster [--fast] [--models] [--routing P]
+//!                       [--prefill N --decode N | --instances N]
+//!                       [--rate R] [--horizon S] [--seed N]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
 //!
@@ -18,11 +21,16 @@
 //! bursty and diurnal traffic on the Table II EP32-PP2 wafer configuration,
 //! with dataflow-grounded prefill billing, prefix-cache KV reuse and
 //! FCFS/SJF/priority queue policies.
+//!
+//! `cluster` drives the fleet layer above `serve` (experiment ids
+//! `cluster_pools` / `cluster_models`): multiple wafer instances behind a
+//! cluster router, colocated or disaggregated into prefill/decode pools
+//! with the MLA latent-KV handoff billed over an inter-instance link.
 
 use anyhow::{bail, Context, Result};
 
 use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
-use flatattention::coordinator::cli::ServeArgs;
+use flatattention::coordinator::cli::{ClusterArgs, ServeArgs};
 use flatattention::coordinator::experiments;
 use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
 use flatattention::exec::functional;
@@ -63,6 +71,8 @@ fn run() -> Result<()> {
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
             println!("  flatattention serve [--fast] [--policies] [--prefix]");
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
+            println!("  flatattention cluster [--fast] [--models] [--routing round-robin|least-outstanding|prefix-affinity]");
+            println!("                        [--prefill N --decode N | --instances N] [--rate R] [--horizon S] [--seed N]");
             println!("  flatattention verify");
             Ok(())
         }
@@ -153,6 +163,21 @@ fn run() -> Result<()> {
             if sargs.policies {
                 println!();
                 experiments::run("serve_policies", sargs.fast)?.print();
+            }
+            Ok(())
+        }
+        "cluster" => {
+            // Shorthand for the fleet experiments: the pool-ratio sweep, the
+            // multi-model comparison (--models), or a single custom fleet.
+            let cargs = ClusterArgs::parse(&args[1..])?;
+            if cargs.models {
+                experiments::run("cluster_models", cargs.fast)?.print();
+            } else if cargs.is_custom() {
+                let rate = cargs.rate_rps.unwrap_or(1000.0);
+                let horizon = cargs.horizon_s.unwrap_or(if cargs.fast { 4.0 } else { 10.0 });
+                experiments::cluster_custom(cargs.mode(), cargs.routing, rate, horizon, cargs.seed).print();
+            } else {
+                experiments::run("cluster_pools", cargs.fast)?.print();
             }
             Ok(())
         }

@@ -163,6 +163,7 @@ impl DecodeEvaluator {
     }
 
     /// Evaluate one decode operating point.
+    #[allow(clippy::too_many_arguments)]
     pub fn evaluate(
         &mut self,
         sys: &WaferSystem,

@@ -38,6 +38,7 @@ pub fn batch_sweep(
 /// overlapping sweeps (Fig. 13a's two series, Fig. 13c's five plans, the
 /// serving simulator's stage-time probes) never re-simulate an identical
 /// (plan, batch, kv_len) kernel.
+#[allow(clippy::too_many_arguments)]
 pub fn batch_sweep_cached(
     sys: &WaferSystem,
     ds: &DeepSeekConfig,

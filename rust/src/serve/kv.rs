@@ -43,6 +43,20 @@ pub struct KvCacheModel {
 
 impl KvCacheModel {
     pub fn new(sys: &WaferSystem, ds: &DeepSeekConfig, plan: ParallelismPlan, dtype: Dtype) -> Self {
+        Self::with_reserved(sys, ds, plan, dtype, 0)
+    }
+
+    /// [`KvCacheModel::new`] with `reserved_bytes` of per-chip HBM carved
+    /// out of the KV budget before capacity is computed — the residency cost
+    /// of *other* models co-served on the same instance (multi-model shared
+    /// pools park every co-resident model's weights on every chip).
+    pub fn with_reserved(
+        sys: &WaferSystem,
+        ds: &DeepSeekConfig,
+        plan: ParallelismPlan,
+        dtype: Dtype,
+        reserved_bytes: u64,
+    ) -> Self {
         let layers_per_stage = (ds.layers as u64).div_ceil(plan.pp as u64);
         let bytes_per_token_per_chip =
             (ds.kv_lora_rank + ds.qk_rope_dim) as u64 * dtype.bytes() * layers_per_stage;
@@ -55,7 +69,7 @@ impl KvCacheModel {
             + rest_bytes / plan.pp as u64;
 
         let hbm_capacity_bytes = sys.chip.hbm.capacity_bytes();
-        let kv_budget = hbm_capacity_bytes.saturating_sub(weight_bytes_per_chip);
+        let kv_budget = hbm_capacity_bytes.saturating_sub(weight_bytes_per_chip).saturating_sub(reserved_bytes);
         KvCacheModel {
             bytes_per_token_per_chip,
             weight_bytes_per_chip,
@@ -139,7 +153,11 @@ struct PrefixBlock {
 }
 
 /// Per-EP-column prefix-cache: a token-block trie over shared prompt
-/// prefixes. The path of prefix `p` is the block chain `(p, 0), (p, 1), …`;
+/// prefixes. The `u64` family key is whatever the scheduler's
+/// [`PrefixKeying`](crate::serve::scheduler::PrefixKeying) mode supplies —
+/// the exact trace-family id, or the hashed-token-block content fingerprint
+/// that lets distinct families with identical seeded prefixes share blocks.
+/// The path of family key `p` is the block chain `(p, 0), (p, 1), …`;
 /// pins always cover a leading chain, so reference counts are non-increasing
 /// along it and zero-ref blocks form a suffix — eviction from the chain tail
 /// keeps the trie prefix-closed.
@@ -329,6 +347,32 @@ mod tests {
         let b = KvCacheModel::new(&sys, &ds, ParallelismPlan::new(16, 4), Dtype::Fp8);
         assert!(b.bytes_per_token_per_chip < a.bytes_per_token_per_chip);
         assert!(b.weight_bytes_per_chip < a.weight_bytes_per_chip + (1 << 30));
+    }
+
+    #[test]
+    fn reserved_bytes_shrink_kv_budget() {
+        let base = model();
+        let reserved = KvCacheModel::with_reserved(
+            &WaferSystem::paper(),
+            &DeepSeekConfig::v3_671b(),
+            ParallelismPlan::new(32, 2),
+            Dtype::Fp8,
+            8 << 30,
+        );
+        assert_eq!(reserved.weight_bytes_per_chip, base.weight_bytes_per_chip);
+        assert!(reserved.column_capacity_tokens < base.column_capacity_tokens);
+        let delta = base.column_capacity_tokens - reserved.column_capacity_tokens;
+        let expect = (8u64 << 30) / base.bytes_per_token_per_chip;
+        assert!(delta.abs_diff(expect) <= 1, "delta {delta} vs {expect}");
+        // Reserving more than the budget degrades to zero capacity, not a panic.
+        let starved = KvCacheModel::with_reserved(
+            &WaferSystem::paper(),
+            &DeepSeekConfig::v3_671b(),
+            ParallelismPlan::new(32, 2),
+            Dtype::Fp8,
+            u64::MAX,
+        );
+        assert_eq!(starved.column_capacity_tokens, 0);
     }
 
     #[test]

@@ -12,14 +12,18 @@
 //!   ([`request::PrefixProfile`]) and priority classes, with coupled
 //!   thinning for load sweeps.
 //! - [`kv`] — per-chip KV capacity from the MLA latent cache layout
-//!   (`DeepSeekConfig`), weights subtracted, organized per EP column; plus
-//!   [`kv::PrefixStore`], the token-block trie behind prefix-cache KV reuse
-//!   (hits skip prefill compute and KV admission; LRU chain-tail eviction
-//!   under pressure).
+//!   (`DeepSeekConfig`), weights subtracted (plus any co-served model's
+//!   reserved weights), organized per EP column; plus [`kv::PrefixStore`],
+//!   the token-block trie behind prefix-cache KV reuse (hits skip prefill
+//!   compute and KV admission; LRU chain-tail eviction under pressure).
 //! - [`scheduler`] — continuous batching: iteration-level batch formation,
 //!   chunked prefill riding decode iterations, FCFS / SJF / Priority queue
-//!   policies, prefix-aware placement, and reserve-full or
-//!   on-demand+preemption KV admission.
+//!   policies, prefix-aware placement with exact-id or hashed-token-block
+//!   prefix keying ([`scheduler::PrefixKeying`] — content hashes share
+//!   blocks across families with identical seeded prefixes), pre-filled
+//!   decode-pool arrivals (disaggregated handoffs skip prefill and resume
+//!   from one generated token), and reserve-full or on-demand+preemption KV
+//!   admission.
 //! - [`prefill`] — the dataflow-grounded prefill cost model: each chunk is
 //!   billed by the actual FlatAttention/FlashAttention dataflow simulation
 //!   of its causal attention shape at the request's context offset
@@ -46,5 +50,5 @@ pub use prefill::PrefillEngine;
 pub use request::{
     generate_trace, thin_trace, LengthProfile, PrefixProfile, Request, TraceConfig, TrafficPattern,
 };
-pub use scheduler::{AdmissionPolicy, QueuePolicy, Scheduler, SchedulerConfig};
+pub use scheduler::{AdmissionPolicy, PrefixKeying, QueuePolicy, Scheduler, SchedulerConfig};
 pub use sim::{load_sweep, saturation_knee, simulate, ServeConfig, ServeOutcome, StageTimeCache};

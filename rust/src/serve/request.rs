@@ -30,9 +30,20 @@ pub struct Request {
     /// Leading prompt tokens shared by the whole `prefix_id` family
     /// (`<= prompt_tokens`; 0 when `prefix_id` is 0).
     pub prefix_tokens: u32,
+    /// Content fingerprint of the shared prefix — a stand-in for hashing the
+    /// actual token blocks (0 when `prefix_id` is 0 or the content is
+    /// unknown). Distinct families whose seeded prefix *content* coincides
+    /// carry the same hash, which the `TokenHash` prefix-keying mode uses to
+    /// share cache blocks across families.
+    pub prefix_hash: u64,
     /// Scheduling priority class, 0 = most urgent (the `Priority` queue
     /// policy orders on this; FCFS/SJF ignore it).
     pub priority: u8,
+    /// True when the prompt's KV arrives already computed — a disaggregated
+    /// decode-pool arrival after a prefill-pool handoff. Admission skips
+    /// prefill entirely and the first output token was already emitted
+    /// upstream (the cluster layer constructs these; traces never do).
+    pub prefilled: bool,
 }
 
 impl Request {
@@ -45,7 +56,9 @@ impl Request {
             output_tokens,
             prefix_id: 0,
             prefix_tokens: 0,
+            prefix_hash: 0,
             priority: 0,
+            prefilled: false,
         }
     }
 
@@ -174,6 +187,12 @@ pub struct PrefixProfile {
     pub share_prob: f64,
     /// Number of distinct shared prefixes (system prompts) in rotation.
     pub num_prefixes: u32,
+    /// Distinct underlying prefix *contents* the families map onto (seeded).
+    /// 0 (the default) means every family has unique content; a value below
+    /// `num_prefixes` aliases several families onto one content — the
+    /// population where token-hash prefix keying strictly beats exact-id
+    /// keying, because cross-family hits become possible.
+    pub content_classes: u32,
     /// Prefix length distribution (exponential, clamped like
     /// [`LengthProfile`]).
     pub prefix_mean: f64,
@@ -187,6 +206,7 @@ impl PrefixProfile {
         PrefixProfile {
             share_prob: 0.0,
             num_prefixes: 0,
+            content_classes: 0,
             prefix_mean: 0.0,
             prefix_min: 0,
             prefix_max: 0,
@@ -194,23 +214,56 @@ impl PrefixProfile {
     }
 
     /// Agentic/RAG-like traffic: 70% of requests reuse one of 8 system
-    /// prompts of ~1k tokens (≤4k).
+    /// prompts of ~1k tokens (≤4k), every family with unique content.
     pub fn agentic() -> Self {
         PrefixProfile {
             share_prob: 0.7,
             num_prefixes: 8,
+            content_classes: 0,
             prefix_mean: 1024.0,
             prefix_min: 256,
             prefix_max: 4096,
         }
     }
 
-    /// Deterministic length of prefix `id` under trace seed `seed`.
+    /// Agentic traffic whose 8 families alias onto 3 underlying contents
+    /// (forked deployments of the same system prompt) — exact-id keying
+    /// misses the cross-family reuse that token-hash keying captures.
+    pub fn agentic_aliased() -> Self {
+        PrefixProfile { content_classes: 3, ..Self::agentic() }
+    }
+
+    /// Underlying content id of family `id`: with aliasing enabled the
+    /// family maps onto one of `content_classes` seeded contents, otherwise
+    /// each family is its own content (id 0 stays 0 — no shared prefix).
+    pub fn content_of(&self, seed: u64, id: u64) -> u64 {
+        if self.content_classes == 0 || id == 0 {
+            return id;
+        }
+        let mut rng = SplitMix64::new(seed ^ 0x51AE_D00D_BEEF_0005 ^ id.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        1 + rng.next_range(self.content_classes as u64)
+    }
+
+    /// Deterministic length of prefix `id` under trace seed `seed` — keyed
+    /// on the *content*, so aliased families report identical lengths (they
+    /// genuinely share their leading tokens).
     pub fn prefix_len(&self, seed: u64, id: u64) -> u32 {
-        let mut rng = SplitMix64::new(seed ^ 0x9D5F_AB12_77C0_0004 ^ id.wrapping_mul(0xA24B_AED4_963E_E407));
+        let c = self.content_of(seed, id);
+        let mut rng = SplitMix64::new(seed ^ 0x9D5F_AB12_77C0_0004 ^ c.wrapping_mul(0xA24B_AED4_963E_E407));
         let u = rng.next_f64();
         let x = -self.prefix_mean * (1.0 - u).ln();
         (x.round() as u64).clamp(self.prefix_min as u64, self.prefix_max as u64) as u32
+    }
+
+    /// Deterministic nonzero 64-bit fingerprint of family `id`'s prefix
+    /// content under trace seed `seed` (0 for id 0). Aliased families share
+    /// the fingerprint — the `TokenHash` keying mode's block key.
+    pub fn prefix_hash(&self, seed: u64, id: u64) -> u64 {
+        let c = self.content_of(seed, id);
+        if c == 0 {
+            return 0;
+        }
+        SplitMix64::new(seed ^ 0x7A5B_10C5_4A5B_0006 ^ c.wrapping_mul(0x2545_F491_4F6C_DD1D)).next_u64() | 1
     }
 }
 
@@ -277,15 +330,15 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
         let family = pfx_rng.next_range(cfg.prefixes.num_prefixes.max(1) as u64);
         let priority = (pfx_rng.next_range(4)) as u8;
         if accept {
-            let (prefix_id, prefix_tokens, prompt_tokens) = if shared {
+            let (prefix_id, prefix_tokens, prefix_hash, prompt_tokens) = if shared {
                 let pid = family + 1;
                 let plen = cfg.prefixes.prefix_len(cfg.seed, pid);
                 // The shared prefix prepends the request's own prompt, so
                 // families genuinely share their leading tokens.
                 let total = (plen as u64 + prompt as u64).min(u32::MAX as u64) as u32;
-                (pid, plen, total)
+                (pid, plen, cfg.prefixes.prefix_hash(cfg.seed, pid), total)
             } else {
-                (0, 0, prompt)
+                (0, 0, 0, prompt)
             };
             out.push(Request {
                 id,
@@ -294,7 +347,9 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
                 output_tokens: output,
                 prefix_id,
                 prefix_tokens,
+                prefix_hash,
                 priority,
+                prefilled: false,
             });
             id += 1;
         }
@@ -400,6 +455,66 @@ mod tests {
         assert!((frac - 0.7).abs() < 0.08, "shared fraction {frac}");
         // Replays bit-exactly.
         assert_eq!(t, generate_trace(&cfg));
+    }
+
+    #[test]
+    fn aliased_content_classes_share_hash_and_length() {
+        let p = PrefixProfile::agentic_aliased();
+        let seed = 77u64;
+        // Families land on 1..=3 contents; with 8 families over 3 contents
+        // some pair must alias (pigeonhole), and aliased families agree on
+        // both hash and length — they genuinely share their leading tokens.
+        let mut by_content: std::collections::HashMap<u64, (u64, u32)> = std::collections::HashMap::new();
+        let mut aliased_pairs = 0usize;
+        for id in 1..=8u64 {
+            let c = p.content_of(seed, id);
+            assert!((1..=3).contains(&c), "content {c} out of range");
+            let h = p.prefix_hash(seed, id);
+            let l = p.prefix_len(seed, id);
+            assert_ne!(h, 0);
+            match by_content.get(&c) {
+                Some(&(ph, pl)) => {
+                    assert_eq!(ph, h, "aliased families must share the content hash");
+                    assert_eq!(pl, l, "aliased families must share the prefix length");
+                    aliased_pairs += 1;
+                }
+                None => {
+                    by_content.insert(c, (h, l));
+                }
+            }
+        }
+        assert!(aliased_pairs > 0, "8 families over 3 contents must alias");
+        // Distinct contents get distinct hashes.
+        let hashes: std::collections::HashSet<u64> = by_content.values().map(|&(h, _)| h).collect();
+        assert_eq!(hashes.len(), by_content.len());
+        // Without aliasing every family is its own content and the lengths
+        // replay the pre-aliasing keying bit-exactly.
+        let flat = PrefixProfile::agentic();
+        for id in 1..=8u64 {
+            assert_eq!(flat.content_of(seed, id), id);
+            assert_ne!(flat.prefix_hash(seed, id), 0);
+        }
+        assert_eq!(flat.content_of(seed, 0), 0);
+        assert_eq!(flat.prefix_hash(seed, 0), 0);
+    }
+
+    #[test]
+    fn traces_carry_content_hashes() {
+        let cfg = TraceConfig::new(51, TrafficPattern::Poisson, 300.0, 10.0)
+            .with_prefixes(PrefixProfile::agentic_aliased());
+        let t = generate_trace(&cfg);
+        let mut shared = 0usize;
+        for r in &t {
+            assert!(!r.prefilled, "traces never emit pre-filled requests");
+            if r.prefix_id == 0 {
+                assert_eq!(r.prefix_hash, 0);
+            } else {
+                shared += 1;
+                assert_eq!(r.prefix_hash, cfg.prefixes.prefix_hash(cfg.seed, r.prefix_id));
+                assert_ne!(r.prefix_hash, 0);
+            }
+        }
+        assert!(shared > 0);
     }
 
     #[test]

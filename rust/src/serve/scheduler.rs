@@ -75,6 +75,41 @@ impl QueuePolicy {
     }
 }
 
+/// How the prefix store keys shared prompt prefixes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixKeying {
+    /// Exact trace-family identity (`Request::prefix_id`): distinct families
+    /// never share blocks, even when their seeded prefix content coincides.
+    ExactId,
+    /// Hashed token blocks (`Request::prefix_hash`): families with identical
+    /// seeded prefix content hit each other's blocks — content-addressed
+    /// prefix caching. Requests carrying a `prefix_id` but no content hash
+    /// (hand-built traces) fall back to identity keying, so this mode is a
+    /// strict superset of `ExactId` reuse.
+    TokenHash,
+}
+
+impl PrefixKeying {
+    /// Family key of `r` under this keying mode (0 = no shared prefix).
+    /// The single source of truth — the scheduler's prefix store and the
+    /// cluster router's affinity fingerprints must agree on it.
+    pub fn key_of(self, r: &Request) -> u64 {
+        match self {
+            PrefixKeying::ExactId => r.prefix_id,
+            // Content hash when the trace carries one; identity fallback
+            // keeps hand-built traces (hash 0, id != 0) sharing within
+            // their family exactly as under ExactId.
+            PrefixKeying::TokenHash => {
+                if r.prefix_hash != 0 {
+                    r.prefix_hash
+                } else {
+                    r.prefix_id
+                }
+            }
+        }
+    }
+}
+
 /// Scheduler knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
@@ -89,6 +124,8 @@ pub struct SchedulerConfig {
     pub reserve_margin_tokens: f64,
     /// Prefix-cache block granularity in tokens (0 disables KV reuse).
     pub prefix_block_tokens: u32,
+    /// Prefix-cache key: exact family id vs hashed token blocks.
+    pub prefix_keying: PrefixKeying,
 }
 
 impl Default for SchedulerConfig {
@@ -105,6 +142,7 @@ impl Default for SchedulerConfig {
             queue_policy: QueuePolicy::Fcfs,
             reserve_margin_tokens: 4.0,
             prefix_block_tokens: 256,
+            prefix_keying: PrefixKeying::TokenHash,
         }
     }
 }
@@ -127,8 +165,8 @@ struct Active {
     /// KV tokens currently reserved on the column for this request
     /// (excludes shared prefix blocks, which the store owns).
     held_tokens: f64,
-    /// Shared-prompt family (0 = none).
-    prefix_id: u64,
+    /// Prefix-store family key under the active [`PrefixKeying`] (0 = none).
+    prefix_key: u64,
     /// Prefix tokens this request currently pins in the column's store.
     prefix_pinned: u32,
     /// Whole-block shareable tokens of its prefix (publish target).
@@ -212,6 +250,11 @@ impl<'t> Scheduler<'t> {
         r.total_tokens() as f64 + self.cfg.reserve_margin_tokens
     }
 
+    /// Prefix-store family key of `r` under the configured keying mode.
+    fn prefix_key_of(&self, r: &Request) -> u64 {
+        self.cfg.prefix_keying.key_of(r)
+    }
+
     fn admit_need(&self, r: &Request, generated: f64) -> f64 {
         match self.cfg.policy {
             AdmissionPolicy::ReserveFull => self.final_need(r),
@@ -251,6 +294,13 @@ impl<'t> Scheduler<'t> {
                 self.rejected.push(head.rec);
                 continue;
             }
+            // A pre-filled arrival (disaggregated handoff: KV already
+            // computed at a prefill-pool instance, token #1 already emitted
+            // there) skips prefill and the prefix cache entirely on its
+            // first admission. Once preempted it loses the transferred KV
+            // and recomputes like any other resident.
+            let fresh_prefilled = r.prefilled && head.generated == 0.0;
+            let key = self.prefix_key_of(&r);
             // Prefix-aware placement: the column with the largest resident
             // hit for this request's prefix, then the freest, among those
             // with a spare slot in this wave.
@@ -259,7 +309,7 @@ impl<'t> Scheduler<'t> {
                 if self.actives[w][c].len() >= self.cfg.max_batch_per_chip as usize {
                     continue;
                 }
-                let hit = self.prefix[c].probe(r.prefix_id, r.prefix_tokens);
+                let hit = if fresh_prefilled { 0 } else { self.prefix[c].probe(key, r.prefix_tokens) };
                 let better = match best {
                     None => true,
                     Some((bc, bh)) => {
@@ -284,7 +334,10 @@ impl<'t> Scheduler<'t> {
             } else {
                 hit
             };
-            let need = (self.admit_need(&r, head.generated) - hit as f64).max(0.0);
+            // The upstream instance already emitted token #1 of a pre-filled
+            // request; it resumes decoding from one generated token.
+            let gen0 = if fresh_prefilled { 1.0 } else { head.generated };
+            let need = (self.admit_need(&r, gen0) - hit as f64).max(0.0);
             if !self.columns[c].fits(need) {
                 // Pressure: drop unreferenced prefix blocks before giving up.
                 let deficit = need - self.columns[c].free_tokens();
@@ -297,8 +350,8 @@ impl<'t> Scheduler<'t> {
                 break;
             }
             self.queue.remove(qi);
-            self.prefix[c].pin(r.prefix_id, hit);
-            let share_to = self.prefix[c].shareable_tokens(r.prefix_id, r.prefix_tokens);
+            self.prefix[c].pin(key, hit);
+            let share_to = if fresh_prefilled { 0 } else { self.prefix[c].shareable_tokens(key, r.prefix_tokens) };
             self.prefix_hit_tokens += hit as u64;
             self.prefix_miss_tokens += (share_to.saturating_sub(hit)) as u64;
             // Re-admission recomputes the whole context (prompt + tokens
@@ -306,11 +359,11 @@ impl<'t> Scheduler<'t> {
             self.actives[w][c].push(Active {
                 rec: head.rec,
                 admit_seq: self.admit_seq,
-                remaining_prefill: context - hit,
+                remaining_prefill: if fresh_prefilled { 0 } else { context - hit },
                 prefill_target: context,
-                generated: head.generated,
+                generated: gen0,
                 held_tokens: need,
-                prefix_id: r.prefix_id,
+                prefix_key: key,
                 prefix_pinned: hit,
                 prefix_share_to: share_to,
             });
@@ -367,7 +420,7 @@ impl<'t> Scheduler<'t> {
         let Some((w, i, _)) = newest else { return false };
         let victim = self.actives[w][c].remove(i);
         self.columns[c].release(victim.held_tokens);
-        self.prefix[c].unpin(victim.prefix_id, victim.prefix_pinned);
+        self.prefix[c].unpin(victim.prefix_key, victim.prefix_pinned);
         self.queue.push_front(Waiting { rec: victim.rec, generated: victim.generated });
         self.preemptions += 1;
         true
@@ -394,9 +447,9 @@ impl<'t> Scheduler<'t> {
                         // just prefilled: their tokens transfer from the
                         // private reservation to the shared store (column
                         // occupancy is unchanged — pure bookkeeping).
-                        if a.prefix_id != 0 && a.prefix_share_to > a.prefix_pinned {
+                        if a.prefix_key != 0 && a.prefix_share_to > a.prefix_pinned {
                             let newly =
-                                self.prefix[c].insert(a.prefix_id, a.prefix_pinned, a.prefix_share_to);
+                                self.prefix[c].insert(a.prefix_key, a.prefix_pinned, a.prefix_share_to);
                             a.held_tokens = (a.held_tokens - newly as f64).max(0.0);
                             a.prefix_pinned = a.prefix_share_to;
                         }
@@ -425,7 +478,7 @@ impl<'t> Scheduler<'t> {
             for &i in done.iter().rev() {
                 let a = self.actives[w][c].remove(i);
                 self.columns[c].release(a.held_tokens);
-                self.prefix[c].unpin(a.prefix_id, a.prefix_pinned);
+                self.prefix[c].unpin(a.prefix_key, a.prefix_pinned);
             }
         }
         ev
@@ -762,6 +815,91 @@ mod tests {
         s.admit_wave(0);
         let ev = s.execute_wave(0);
         assert_eq!(ev.prefill_tokens, 800, "priority 0 (record 1) runs first");
+    }
+
+    #[test]
+    fn token_hash_keying_shares_across_aliased_families() {
+        // Two distinct trace families (ids 3 and 9) carry the SAME content
+        // hash — forked deployments of one seeded system prompt. Exact-id
+        // keying re-prefills the second family cold; hashed-token-block
+        // keying hits the blocks the first family published, so its hit
+        // count is strictly above the exact-id baseline.
+        let run = |keying: PrefixKeying| {
+            let mut r0 = preq(0, 1024, 4, 3, 512);
+            r0.prefix_hash = 0xAB;
+            let mut r1 = preq(1, 1024, 4, 9, 512);
+            r1.prefix_hash = 0xAB;
+            let trace = vec![r0, r1];
+            let kv = tiny_kv(100_000, 1);
+            let cfg = SchedulerConfig { prefix_keying: keying, ..Default::default() };
+            let mut s = Scheduler::new(&trace, &kv, 1, cfg, 1.0);
+            s.enqueue_arrival(0);
+            s.admit_wave(0);
+            for _ in 0..10 {
+                s.execute_wave(0);
+            }
+            s.enqueue_arrival(1);
+            s.admit_wave(0);
+            let hits = s.prefix_hit_tokens;
+            for _ in 0..10 {
+                s.execute_wave(0);
+            }
+            assert_eq!(s.active_total(), 0, "{keying:?}: both requests must drain");
+            assert!(!s.kv_over_capacity());
+            hits
+        };
+        let exact = run(PrefixKeying::ExactId);
+        let hashed = run(PrefixKeying::TokenHash);
+        assert_eq!(exact, 0, "distinct ids never share under exact keying");
+        assert_eq!(hashed, 512, "identical content must hit across families");
+        assert!(hashed > exact, "token-hash keying must beat the exact-id baseline");
+    }
+
+    #[test]
+    fn token_hash_falls_back_to_id_when_hash_is_absent() {
+        // Hand-built traces (hash 0) behave identically under both modes.
+        let trace = vec![preq(0, 1024, 4, 7, 512), preq(1, 1024, 4, 7, 512)];
+        let kv = tiny_kv(100_000, 1);
+        let cfg = SchedulerConfig { prefix_keying: PrefixKeying::TokenHash, ..Default::default() };
+        let mut s = Scheduler::new(&trace, &kv, 1, cfg, 1.0);
+        s.enqueue_arrival(0);
+        s.admit_wave(0);
+        for _ in 0..10 {
+            s.execute_wave(0);
+        }
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        assert_eq!(s.prefix_hit_tokens, 512, "same-family reuse must survive the fallback");
+    }
+
+    #[test]
+    fn prefilled_arrival_skips_prefill_and_resumes_from_token_one() {
+        // A disaggregated handoff: KV arrives computed, token #1 was emitted
+        // at the prefill-pool instance. No prefill tokens are billed, no
+        // first token re-emitted, and the request completes after
+        // (output − 1) decode iterations at tpi = 1.
+        let mut r = req(0, 2048, 8);
+        r.prefilled = true;
+        let trace = vec![r];
+        let kv = tiny_kv(100_000, 1);
+        let mut s = Scheduler::new(&trace, &kv, 1, SchedulerConfig::default(), 1.0);
+        s.enqueue_arrival(0);
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 1);
+        assert_eq!(s.peak_cell_load(), (1, 0), "no prefill tokens may be pending");
+        let mut decode_tokens = 0.0;
+        let mut completions = 0usize;
+        for i in 0..7 {
+            let ev = s.execute_wave(0);
+            assert_eq!(ev.prefill_tokens, 0, "iteration {i} billed prefill");
+            assert!(ev.first_tokens.is_empty(), "token #1 was emitted upstream");
+            decode_tokens += ev.tokens_produced;
+            completions += ev.completions.len();
+        }
+        assert_eq!(completions, 1);
+        assert!((decode_tokens - 7.0).abs() < 1e-9, "7 of 8 tokens decode here, got {decode_tokens}");
+        assert_eq!(s.active_total(), 0);
+        assert!(!s.kv_over_capacity());
     }
 
     #[test]

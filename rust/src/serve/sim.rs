@@ -43,6 +43,10 @@ pub struct ServeConfig {
     pub slo_ttft_ms: f64,
     /// Hard tick bound (safety valve; never binds in practice).
     pub max_ticks: u64,
+    /// Per-chip HBM bytes reserved before the KV budget is computed — the
+    /// weight residency of *other* models co-served on this instance
+    /// (multi-model shared pools; 0 for single-model serving).
+    pub reserved_hbm_bytes: u64,
 }
 
 impl Default for ServeConfig {
@@ -57,6 +61,7 @@ impl Default for ServeConfig {
             slo_tpot_ms: 50.0,
             slo_ttft_ms: 2000.0,
             max_ticks: 2_000_000,
+            reserved_hbm_bytes: 0,
         }
     }
 }
@@ -290,6 +295,7 @@ impl ServeOutcome {
 /// Run one serving simulation of `trace` against the wafer system. Stops at
 /// `horizon_s` (in-flight work is reported, not drained), so overload
 /// manifests as queue growth rather than unbounded simulation time.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate(
     sys: &WaferSystem,
     ds: &DeepSeekConfig,
@@ -301,7 +307,7 @@ pub fn simulate(
     kernels: &KernelCache,
     stages: &StageTimeCache,
 ) -> (ServeOutcome, Vec<RequestRecord>) {
-    let kv = KvCacheModel::new(sys, ds, cfg.plan, cfg.dtype);
+    let kv = KvCacheModel::with_reserved(sys, ds, cfg.plan, cfg.dtype, cfg.reserved_hbm_bytes);
     let tpi = ds.tokens_per_iteration();
     let pp = cfg.plan.pp.max(1) as u64;
     let mut sched = Scheduler::new(trace, &kv, cfg.plan.pp, cfg.scheduler, tpi);
@@ -404,6 +410,7 @@ pub fn simulate(
 /// monotone in offered load up to bucketing. Each rate simulates on its own
 /// `std::thread` worker; the shared caches make results independent of
 /// completion order.
+#[allow(clippy::too_many_arguments)]
 pub fn load_sweep(
     sys: &WaferSystem,
     ds: &DeepSeekConfig,

@@ -90,6 +90,7 @@ impl AttentionShape {
     /// `context` (prior KV plus the chunk itself). This is the shape the
     /// serving layer bills one prefill chunk at — for a fresh prompt
     /// (`context == chunk`) it degenerates to [`AttentionShape::mha_prefill`].
+    #[allow(clippy::too_many_arguments)]
     pub fn mha_chunked_prefill(
         batch: u32,
         heads: u32,

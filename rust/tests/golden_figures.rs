@@ -9,12 +9,13 @@
 
 use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
 use flatattention::baseline::gh200::{self, Gh200};
+use flatattention::cluster::{simulate_cluster, ClusterConfig, FleetMode};
 use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams, FlatTiling};
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::{AttentionChoice, KernelCache, ParallelismPlan};
 use flatattention::multichip::wafer::{batch_sweep, best_under_tpot, ours1};
 use flatattention::serve::prefill::PrefillEngine;
-use flatattention::serve::request::TrafficPattern;
+use flatattention::serve::request::{generate_trace, TraceConfig, TrafficPattern};
 use flatattention::serve::sim::{load_sweep, saturation_knee, ServeConfig, StageTimeCache};
 use flatattention::workload::attention::AttentionShape;
 use flatattention::workload::deepseek::DeepSeekConfig;
@@ -152,6 +153,60 @@ fn golden_prefill_chunk_billing_matches_dataflow() {
     let shallow = engine.chunk_stage_seconds(1024, 1024.0);
     let deep = engine.chunk_stage_seconds(1024, 65_536.0);
     assert!(deep > shallow, "chunk cost must grow with context offset");
+}
+
+/// Cluster anchor: the colocated-vs-disaggregated crossover exists and is
+/// seed-stable on a 2-instance fleet. At high offered load, the dedicated
+/// decode pool's iterations carry no chunked-prefill interference, so
+/// disaggregation improves p99 TPOT over the colocated fleet; at low load
+/// nothing queues, so the KV handoff is pure first-token overhead and the
+/// colocated fleet wins TTFT.
+#[test]
+fn golden_cluster_disagg_crossover_anchor() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let horizon = 4.0;
+    let seed = 2026u64;
+    let run = |mode: FleetMode, rate: f64| {
+        let trace = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon));
+        let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(2, &ds) };
+        let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &kernels, &stages);
+        assert!(o.conserves_requests(), "{mode:?} @ {rate}: {o:?}");
+        assert!(!o.kv_over_capacity);
+        o
+    };
+    let colocated = FleetMode::Colocated { instances: 2 };
+    let disagg = FleetMode::Disaggregated { prefill: 1, decode: 1 };
+    // Low load: every request pays the exposed KV handoff, nothing queues —
+    // colocated must hold strictly lower mean TTFT.
+    let (colo_lo, dis_lo) = (run(colocated, 40.0), run(disagg, 40.0));
+    assert!(colo_lo.completed > 50 && dis_lo.completed > 50, "low-load runs must drain");
+    assert!(
+        colo_lo.ttft_ms.mean < dis_lo.ttft_ms.mean,
+        "colocated must win TTFT at low load: {} vs {}",
+        colo_lo.ttft_ms.mean,
+        dis_lo.ttft_ms.mean
+    );
+    assert!(dis_lo.transfer_overhead_share > 0.0);
+    // High load: colocated ticks all carry prefill chunks; the decode pool's
+    // do not — disaggregation must hold strictly lower p99 TPOT.
+    let (colo_hi, dis_hi) = (run(colocated, 3000.0), run(disagg, 3000.0));
+    assert!(colo_hi.completed > 0 && dis_hi.completed > 0);
+    assert!(
+        dis_hi.tpot_ms.p99 < colo_hi.tpot_ms.p99,
+        "disaggregation must win p99 TPOT at high load: {} vs {}",
+        dis_hi.tpot_ms.p99,
+        colo_hi.tpot_ms.p99
+    );
+    // Seed stability: the high-load crossover point replays identically on
+    // fresh caches.
+    let trace = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, 3000.0, horizon));
+    let ccfg = ClusterConfig { mode: disagg, ..ClusterConfig::colocated(2, &ds) };
+    let (replay, _) =
+        simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, 3000.0, &KernelCache::new(), &StageTimeCache::new());
+    assert_eq!(replay, dis_hi, "crossover point must be seed-stable");
 }
 
 /// Serving knee reproducibility: the `serve_load`-style sweep at a fixed

@@ -4,6 +4,7 @@
 
 use flatattention::arch::collective::{multicast_latency_cycles, reduce_latency_cycles, CollectiveImpl};
 use flatattention::arch::config::{ChipConfig, Dtype};
+use flatattention::cluster::{simulate_cluster, ClusterConfig, FleetMode, KvTransferModel};
 use flatattention::dataflow::tiling::{choose_tiling, l1_working_set_kv, Concurrency};
 use flatattention::dataflow::FlatTiling;
 use flatattention::exec::functional;
@@ -11,7 +12,7 @@ use flatattention::exec::tensor::Mat;
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
 use flatattention::serve::request::{generate_trace, PrefixProfile, Request, TraceConfig, TrafficPattern};
-use flatattention::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
+use flatattention::serve::scheduler::{AdmissionPolicy, PrefixKeying, QueuePolicy, SchedulerConfig};
 use flatattention::serve::sim::{simulate, ServeConfig, StageTimeCache};
 use flatattention::util::SplitMix64;
 use flatattention::workload::attention::AttentionShape;
@@ -277,6 +278,90 @@ fn prop_conservation_and_kv_safety_under_preemption_and_reuse() {
                 assert!(f >= r.arrival_s - 1e-12, "first token before arrival");
             }
         }
+    }
+}
+
+#[test]
+fn prop_cluster_conservation_and_transfer_bytes_across_seeds() {
+    // Randomized fleet shapes × seeds: the fleet-wide conservation identity
+    // (admitted = completed + rejected + in-flight at horizon) and the
+    // transfer-bytes == latent-KV layout identity must hold for every mode.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let layout = KvTransferModel::layout_bytes_per_token(&ds, ServeConfig::default().dtype);
+    let mut rng = SplitMix64::new(4040);
+    for case in 0..4 {
+        let seed = rng.next_u64();
+        let rate = 200.0 + rng.next_range(800) as f64;
+        let mode = match rng.next_range(3) {
+            0 => FleetMode::Colocated { instances: 1 + rng.next_range(3) as u32 },
+            1 => FleetMode::Disaggregated { prefill: 1, decode: 1 + rng.next_range(2) as u32 },
+            _ => FleetMode::Disaggregated { prefill: 2, decode: 1 },
+        };
+        let tc = TraceConfig::new(seed, TrafficPattern::Poisson, rate, 3.0)
+            .with_prefixes(PrefixProfile::agentic());
+        let trace = generate_trace(&tc);
+        let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(2, &ds) };
+        let (o, recs) = simulate_cluster(&sys, &ds, &trace, &ccfg, 3.0, rate, &kernels, &stages);
+        assert!(o.conserves_requests(), "case {case} {mode:?}: {o:?}");
+        assert!(!o.kv_over_capacity, "case {case} {mode:?} overflowed KV");
+        let backlog: usize = o.instances.iter().map(|i| i.backlog).sum();
+        assert_eq!(o.in_flight, backlog + o.in_transfer, "case {case} {mode:?}");
+        for r in &recs {
+            if r.transfer_bytes > 0 {
+                assert_eq!(
+                    r.transfer_bytes,
+                    r.prompt_tokens as u64 * layout,
+                    "case {case}: migration shipped non-layout bytes"
+                );
+            }
+            if let (Some(f), Some(c)) = (r.first_token_s, r.completion_s) {
+                assert!(r.arrival_s <= f + 1e-12 && f <= c + 1e-12, "case {case}: causality");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_token_hash_keying_hit_rate_dominates_exact_id() {
+    // On shared-prefix traffic whose families alias onto fewer underlying
+    // contents, hashed-token-block keying must serve strictly more prefix
+    // tokens from the cache than the exact-id baseline (and never fewer on
+    // any trace) — the cross-request sharing the ROADMAP open item asks for.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    for seed in [5u64, 67] {
+        let tc = TraceConfig::new(seed, TrafficPattern::Poisson, 300.0, 5.0)
+            .with_prefixes(PrefixProfile::agentic_aliased());
+        let trace = generate_trace(&tc);
+        let run = |keying: PrefixKeying| {
+            let cfg = ServeConfig {
+                scheduler: SchedulerConfig { prefix_keying: keying, ..Default::default() },
+                ..Default::default()
+            };
+            let (o, _) = simulate(&sys, &ds, &trace, &cfg, 5.0, "k", 300.0, &kernels, &stages);
+            assert!(o.conserves_requests());
+            assert!(!o.kv_over_capacity);
+            o
+        };
+        let exact = run(PrefixKeying::ExactId);
+        let hashed = run(PrefixKeying::TokenHash);
+        assert!(
+            hashed.prefix_hit_tokens > exact.prefix_hit_tokens,
+            "seed {seed}: hashed {} must beat exact {} on aliased families",
+            hashed.prefix_hit_tokens,
+            exact.prefix_hit_tokens
+        );
+        assert!(
+            hashed.prefix_hit_rate() > exact.prefix_hit_rate(),
+            "seed {seed}: hit rate must strictly improve"
+        );
+        // More cache hits can only reduce the prefill work actually billed.
+        assert!(hashed.prefix_miss_tokens <= exact.prefix_miss_tokens);
     }
 }
 
