@@ -38,8 +38,11 @@ fn main() -> Result<()> {
     );
 
     // --- 1+2. Offered-load sweep per traffic pattern -----------------------
-    let horizon = 20.0;
-    let rates = [250.0, 500.0, 1000.0, 2000.0, 4000.0];
+    // FLATATTENTION_FAST=1 shrinks horizons/rates to smoke-test scale (CI).
+    let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
+    let horizon = if fast { 3.0 } else { 20.0 };
+    let rates: &[f64] = if fast { &[250.0, 1000.0] } else { &[250.0, 500.0, 1000.0, 2000.0, 4000.0] };
+    let rates = rates.to_vec();
     let kernels = KernelCache::new();
     let stages = StageTimeCache::new();
     // Periods divide the horizon so realized load matches the offered rps.
@@ -75,10 +78,11 @@ fn main() -> Result<()> {
     }
 
     // --- 3. Admission policies under memory pressure -----------------------
-    println!("\n## KV admission policies on a 24 GiB-HBM wafer, poisson 1200 rps");
+    let (p_rate, p_horizon) = if fast { (400.0, 3.0) } else { (1200.0, 10.0) };
+    println!("\n## KV admission policies on a 24 GiB-HBM wafer, poisson {p_rate:.0} rps");
     let mut small = WaferSystem::paper();
     small.chip.hbm.capacity_gib_per_stack = 12;
-    let trace = generate_trace(&TraceConfig::new(77, TrafficPattern::Poisson, 1200.0, 10.0));
+    let trace = generate_trace(&TraceConfig::new(77, TrafficPattern::Poisson, p_rate, p_horizon));
     for (name, policy) in [
         ("reserve-full", AdmissionPolicy::ReserveFull),
         ("on-demand+preempt", AdmissionPolicy::OnDemandPreempt),
@@ -87,7 +91,7 @@ fn main() -> Result<()> {
             scheduler: SchedulerConfig { policy, ..Default::default() },
             ..Default::default()
         };
-        let (o, _) = simulate(&small, &ds, &trace, &pcfg, 10.0, name, 1200.0, &kernels, &stages);
+        let (o, _) = simulate(&small, &ds, &trace, &pcfg, p_horizon, name, p_rate, &kernels, &stages);
         println!(
             "  {:<18} done {:>5}  preempt {:>5}  TPOT p99 {:>6.1} ms  goodput {:>5.0} rps  KV peak {}",
             name,
@@ -103,8 +107,9 @@ fn main() -> Result<()> {
     // (~1k tokens). Reused blocks skip prefill compute AND KV admission, and
     // prefill itself is billed by the real prefill dataflow simulation, so
     // the TTFT delta below is dataflow-grounded, not a heuristic discount.
-    println!("\n## Prefix-cache KV reuse + queue policies, poisson 800 rps, shared prompts");
-    let tc = TraceConfig::new(4242, TrafficPattern::Poisson, 800.0, 10.0)
+    let (x_rate, x_horizon) = if fast { (300.0, 3.0) } else { (800.0, 10.0) };
+    println!("\n## Prefix-cache KV reuse + queue policies, poisson {x_rate:.0} rps, shared prompts");
+    let tc = TraceConfig::new(4242, TrafficPattern::Poisson, x_rate, x_horizon)
         .with_prefixes(PrefixProfile::agentic());
     let shared_trace = generate_trace(&tc);
     for (name, queue_policy, block) in [
@@ -121,7 +126,7 @@ fn main() -> Result<()> {
             },
             ..Default::default()
         };
-        let (o, _) = simulate(&sys, &ds, &shared_trace, &pcfg, 10.0, name, 800.0, &kernels, &stages);
+        let (o, _) = simulate(&sys, &ds, &shared_trace, &pcfg, x_horizon, name, x_rate, &kernels, &stages);
         println!(
             "  {:<20} done {:>5}  hit rate {:>6}  TTFT mean {:>6.0} ms  p99 {:>6.0} ms  goodput {:>5.0} rps",
             name,

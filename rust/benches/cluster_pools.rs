@@ -1,13 +1,17 @@
 //! Bench harness for the fleet layer: the full prefill:decode pool-ratio
-//! sweep (4 configurations × load points on a 4-instance fleet) and the
-//! multi-model co-serving comparison. (criterion is unavailable in the
-//! offline build; this is a plain `harness = false` driver with std
-//! timing.)
+//! sweep (4 configurations × load points on a 4-instance interleaved
+//! fleet), the multi-model co-serving comparison (interleaved shared pools
+//! vs the static bound), and the static-vs-live routing comparison.
+//! (criterion is unavailable in the offline build; this is a plain
+//! `harness = false` driver with std timing.)
 
 fn main() {
-    for id in ["cluster_pools", "cluster_models"] {
+    // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
+    // (the CI smoke job runs the drivers with tiny horizons this way).
+    let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
+    for id in ["cluster_pools", "cluster_models", "cluster_dynamic"] {
         let t0 = std::time::Instant::now();
-        let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
+        let rep = flatattention::coordinator::experiments::run(id, fast).expect("experiment");
         rep.print();
         println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
     }

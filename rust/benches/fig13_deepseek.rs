@@ -4,9 +4,12 @@
 //! `harness = false` driver with std timing.)
 
 fn main() {
+    // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
+    // (the CI smoke job runs the drivers with tiny horizons this way).
+    let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
     for id in ["fig13a", "fig13b", "fig13c", "fig13d"] {
         let t0 = std::time::Instant::now();
-        let rep = flatattention::coordinator::experiments::run(id, false).expect("experiment");
+        let rep = flatattention::coordinator::experiments::run(id, fast).expect("experiment");
         rep.print();
         println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
     }

@@ -4,8 +4,11 @@
 //! `harness = false` driver with std timing.)
 
 fn main() {
+    // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
+    // (the CI smoke job runs the drivers with tiny horizons this way).
+    let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
     let t0 = std::time::Instant::now();
-    let rep = flatattention::coordinator::experiments::run("fig8", false).expect("experiment");
+    let rep = flatattention::coordinator::experiments::run("fig8", fast).expect("experiment");
     rep.print();
     println!("\n[bench {}] regenerated in {:.2?}", "fig8", t0.elapsed());
 }

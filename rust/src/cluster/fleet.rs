@@ -1,41 +1,59 @@
-//! Fleet-level simulation: N wafer instances, pool roles, routing and KV
-//! handoff.
+//! Fleet-level simulation: N wafer instances on ONE interleaved event
+//! clock, with live routing, pool roles and congested KV handoff.
 //!
-//! The fleet simulator composes the *existing* request-level serving
-//! simulator (`serve::sim::simulate`) — every instance runs the same
-//! iteration-level continuous-batching loop against the shared
-//! `StageTimeCache`/`KernelCache`, so all latencies stay grounded in the
-//! FlatAttention dataflow simulations. The cluster layer adds exactly the
-//! parts one instance cannot see:
+//! The fleet simulator composes the *steppable* request-level serving
+//! engine (`serve::sim::ServeEngine`) — every instance is one engine
+//! running the same iteration-level continuous-batching simulation against
+//! the shared `StageTimeCache`/`KernelCache`, so all latencies stay
+//! grounded in the FlatAttention dataflow simulations. The cluster layer
+//! adds exactly the parts one instance cannot see:
 //!
-//! - **Routing** ([`Router`]): arrivals are assigned to an instance of the
-//!   entry pool (colocated or prefill) by a pluggable policy; migrated
-//!   requests are assigned to a decode instance at handoff time.
+//! - **Single global event clock**: the fleet always advances the earliest
+//!   pending event — an external arrival, a KV-handoff becoming ready, or
+//!   the instance whose local clock is smallest taking its next iteration.
+//!   Nothing is simulated out of causal order, which is what makes *live*
+//!   routing state meaningful.
+//! - **Routing** ([`Router`]): each arrival is routed *at its arrival
+//!   time*, with every instance's live engine snapshot (queue depth,
+//!   residents, KV occupancy) in hand — the `LeastQueueDepth` policy and
+//!   the prefix-affinity spill guard consume it (decode-side feedback);
+//!   static policies (round-robin, fluid least-outstanding) ignore it and
+//!   reproduce the arrival-sequence-pure decisions of the old two-phase
+//!   simulation. Migrated requests are routed to a decode instance at
+//!   handoff-ready time, again against live decode-pool state.
 //! - **Disaggregation**: prefill-pool instances serve truncated requests
 //!   (`output_tokens = 1` — prefill + first token, then the KV leaves);
-//!   decode-pool instances receive `prefilled` arrivals that skip prefill
-//!   and resume from one generated token. Decode iterations therefore never
-//!   carry chunked-prefill interference — the mechanism behind the
-//!   colocated-vs-disaggregated TPOT crossover.
-//! - **KV handoff** ([`KvTransferModel`]): the migrated prompt's latent-KV
-//!   layout bytes ship over the inter-instance link; the exposed share of
-//!   the transfer delays both the user-visible first token and the decode
-//!   arrival (TetriInfer/DistServe-style accounting).
+//!   decode-pool instances receive `prefilled` injections that skip
+//!   prefill and resume from one generated token. Decode iterations
+//!   therefore never carry chunked-prefill interference — the mechanism
+//!   behind the colocated-vs-disaggregated TPOT crossover.
+//! - **KV handoff** ([`KvTransferModel`] + [`SharedLink`]): the migrated
+//!   prompt's latent-KV layout bytes ship over the shared inter-pool
+//!   fabric with busy-until serialization — concurrent migrations queue
+//!   instead of overlapping for free, and the queue wait joins the exposed
+//!   share of the transfer in delaying both the user-visible first token
+//!   and the decode arrival (TetriInfer/DistServe-style accounting, plus
+//!   congestion).
 //!
-//! Simulation is two-phase and exactly replayable: entry-pool instances run
-//! first (concurrently, over shared caches), handoffs are sorted by
-//! completion time, routed, and the decode pool runs second. Every routing
-//! decision is a pure function of the arrival/handoff sequence.
+//! Shared multi-model pools ([`simulate_shared_pool`]) interleave BOTH
+//! models' engines on one chip clock per instance: a tick occupies the
+//! chip exclusively, so a co-resident model's iterations genuinely stretch
+//! the other's cadence instead of being statically billed.
+//!
+//! Everything is deterministic: ties on the event clock break by a fixed
+//! (kind, waiting-time, index) order, so two identical invocations return
+//! identical outcomes and records.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
-use crate::cluster::router::{Router, RoutingPolicy};
-use crate::cluster::transfer::KvTransferModel;
+use crate::cluster::router::{LiveLoad, Router, RoutingPolicy};
+use crate::cluster::transfer::{KvTransferModel, SharedLink};
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::KernelCache;
 use crate::serve::request::Request;
-use crate::serve::sim::{simulate, RequestRecord, ServeConfig, ServeOutcome, StageTimeCache};
+use crate::serve::sim::{RequestRecord, ServeConfig, ServeEngine, ServeOutcome, StageTimeCache, Step};
 use crate::workload::deepseek::DeepSeekConfig;
 
 /// Role split of the fleet.
@@ -122,7 +140,7 @@ pub struct ClusterRecord {
     pub prompt_tokens: u32,
     pub output_tokens: u32,
     /// User-visible first-token time: prefill completion plus (for migrated
-    /// requests) the exposed KV-handoff delay.
+    /// requests) the exposed KV-handoff delay including any link-queue wait.
     pub first_token_s: Option<f64>,
     pub completion_s: Option<f64>,
     /// Entry-pool instance (colocated or prefill), `u32::MAX` if unrouted.
@@ -131,7 +149,8 @@ pub struct ClusterRecord {
     pub decode_instance: u32,
     /// Latent-KV bytes shipped at handoff (0 when not migrated).
     pub transfer_bytes: u64,
-    /// Exposed handoff delay in seconds (0 when not migrated).
+    /// Exposed handoff delay in seconds, link-queue wait included
+    /// (0 when not migrated).
     pub transfer_s: f64,
 }
 
@@ -155,7 +174,7 @@ impl ClusterRecord {
 /// Per-instance roll-up inside a [`ClusterOutcome`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceSummary {
-    /// "colocated" | "prefill" | "decode".
+    /// "colocated" | "prefill" | "decode" | "shared".
     pub role: &'static str,
     /// Requests routed to this instance.
     pub routed: usize,
@@ -214,13 +233,22 @@ pub struct ClusterOutcome {
     /// Requests whose KV migrated prefill → decode.
     pub migrated: usize,
     pub kv_transfer_bytes: u64,
-    /// Summed exposed handoff delay across migrations.
+    /// Summed exposed handoff delay across migrations (link wait included).
     pub kv_transfer_exposed_s: f64,
     /// Exposed transfer time as a share of completed migrated requests'
     /// end-to-end latency (0 for colocated fleets).
     pub transfer_overhead_share: f64,
     pub kv_over_capacity: bool,
     pub preemptions: u64,
+    /// Router telemetry: affinity-overload spill/rebalance events across
+    /// the fleet's routers (entry + decode).
+    pub router_spills: u64,
+    /// Share of the shared KV link's capacity spent serializing transfers
+    /// (0 for colocated fleets).
+    pub link_busy_frac: f64,
+    /// Summed link-queue wait across migrations — the congestion cost the
+    /// old overlap-for-free model never billed.
+    pub link_wait_s: f64,
     pub instances: Vec<InstanceSummary>,
 }
 
@@ -233,57 +261,57 @@ impl ClusterOutcome {
     }
 }
 
-/// Split `trace` across the entry pool: per-instance sub-traces (arrival
-/// order preserved) plus the chosen instance per request index. `work`
-/// prices a request in the pool's own currency — prompt + output tokens
-/// for a colocated pool, prompt tokens only for a prefill pool (whose
-/// instances never do the decode work).
-fn route_arrivals(
-    trace: &[Request],
-    cfg: &ClusterConfig,
-    n: usize,
-    work: fn(&Request) -> f64,
-) -> (Vec<Vec<Request>>, Vec<usize>) {
-    let mut router = Router::new(cfg.routing, cfg.serve.scheduler.prefix_keying, n, cfg.drain_rate);
-    let mut subs: Vec<Vec<Request>> = vec![Vec::new(); n];
-    let mut chosen = Vec::with_capacity(trace.len());
-    for r in trace {
-        let i = router.route(r, r.arrival_s, work(r));
-        subs[i].push(*r);
-        chosen.push(i);
+/// Router/link telemetry carried into [`ClusterOutcome`].
+#[derive(Debug, Clone, Copy, Default)]
+struct FleetTelemetry {
+    router_spills: u64,
+    link_busy_frac: f64,
+    link_wait_s: f64,
+}
+
+/// A KV handoff waiting to be routed and transferred. Min-heap order:
+/// (ready time, id) — matching the old two-phase sort, so static decode
+/// routing reproduces the exact handoff sequence.
+#[derive(Debug, Clone, Copy)]
+struct HandoffEv {
+    ready_s: f64,
+    id: u64,
+    pos: usize,
+}
+
+impl PartialEq for HandoffEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
     }
-    (subs, chosen)
+}
+impl Eq for HandoffEv {}
+impl PartialOrd for HandoffEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HandoffEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.ready_s.total_cmp(&other.ready_s).then(self.id.cmp(&other.id))
+    }
 }
 
-/// Run one serving simulation per sub-trace concurrently over the shared
-/// caches (deterministic: cached stage times are pure simulation results,
-/// so worker completion order cannot change any value).
-#[allow(clippy::too_many_arguments)]
-fn run_pool(
-    sys: &WaferSystem,
-    ds: &DeepSeekConfig,
-    subs: &[Vec<Request>],
-    cfg: &ServeConfig,
-    horizon_s: f64,
-    label: &str,
-    kernels: &KernelCache,
-    stages: &StageTimeCache,
-) -> Vec<(ServeOutcome, Vec<RequestRecord>)> {
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = subs
-            .iter()
-            .map(|t| {
-                let kernels = kernels.clone();
-                let stages = stages.clone();
-                scope.spawn(move || simulate(sys, ds, t, cfg, horizon_s, label, 0.0, &kernels, &stages))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("cluster instance worker panicked")).collect()
-    })
+/// Sample every engine's live state for a routing decision.
+fn live_loads(engines: &[ServeEngine]) -> Vec<LiveLoad> {
+    engines
+        .iter()
+        .map(|e| {
+            let s = e.snapshot();
+            LiveLoad { queued: s.queue_depth, active: s.active_users }
+        })
+        .collect()
 }
 
-/// Simulate `trace` on the fleet described by `cfg`. Deterministic: two
-/// identical invocations return identical outcomes and records.
+/// Simulate `trace` on the fleet described by `cfg` on one interleaved
+/// event clock. Deterministic: two identical invocations return identical
+/// outcomes and records. A 1-instance colocated fleet reproduces
+/// `serve::sim::simulate` byte-identically (pinned by tests) — the fleet
+/// layer adds nothing an isolated instance would notice.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_cluster(
     sys: &WaferSystem,
@@ -296,6 +324,11 @@ pub fn simulate_cluster(
     stages: &StageTimeCache,
 ) -> (ClusterOutcome, Vec<ClusterRecord>) {
     cfg.mode.validate();
+    let disagg = matches!(cfg.mode, FleetMode::Disaggregated { .. });
+    let (n_entry, n_decode) = match cfg.mode {
+        FleetMode::Colocated { instances } => (instances as usize, 0usize),
+        FleetMode::Disaggregated { prefill, decode } => (prefill as usize, decode as usize),
+    };
     let mut records: Vec<ClusterRecord> = trace
         .iter()
         .map(|r| ClusterRecord {
@@ -311,65 +344,98 @@ pub fn simulate_cluster(
             transfer_s: 0.0,
         })
         .collect();
-    let pos_of: HashMap<u64, usize> = trace.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
 
-    match cfg.mode {
-        FleetMode::Colocated { instances } => {
-            let (subs, chosen) =
-                route_arrivals(trace, cfg, instances as usize, |r| r.prompt_tokens as f64 + r.output_tokens as f64);
-            for (idx, &i) in chosen.iter().enumerate() {
-                records[idx].prefill_instance = i as u32;
-                records[idx].decode_instance = i as u32;
-            }
-            let results = run_pool(sys, ds, &subs, &cfg.serve, horizon_s, "colocated", kernels, stages);
-            for (_, recs) in &results {
-                for rec in recs {
-                    let p = pos_of[&rec.id];
-                    records[p].first_token_s = rec.first_token_s;
-                    records[p].completion_s = rec.completion_s;
+    let mut entry: Vec<ServeEngine> =
+        (0..n_entry).map(|_| ServeEngine::new(sys, ds, cfg.serve, horizon_s, kernels, stages)).collect();
+    let mut dec: Vec<ServeEngine> =
+        (0..n_decode).map(|_| ServeEngine::new(sys, ds, cfg.serve, horizon_s, kernels, stages)).collect();
+    // Per-engine record index → position in `trace`/`records`.
+    let mut entry_pos: Vec<Vec<usize>> = vec![Vec::new(); n_entry];
+    let mut dec_pos: Vec<Vec<usize>> = vec![Vec::new(); n_decode];
+    let keying = cfg.serve.scheduler.prefix_keying;
+    let mut router = Router::new(cfg.routing, keying, n_entry, cfg.drain_rate);
+    let mut drouter = Router::new(cfg.decode_routing, keying, n_decode.max(1), cfg.drain_rate);
+    let mut link = SharedLink::new(cfg.transfer.parallel_flows);
+    let mut handoffs: BinaryHeap<Reverse<HandoffEv>> = BinaryHeap::new();
+    let mut next_arrival = 0usize;
+    let mut migrated = 0usize;
+
+    // The interleaved loop: always advance the globally earliest event.
+    // Event kinds at equal times order arrival < handoff < entry tick <
+    // decode tick (arrivals due at an instance's clock must be enqueued
+    // before the instance ticks — the `<=` the engine itself applies), and
+    // equal-time engines tick in index order.
+    loop {
+        let mut best: Option<(f64, u8, usize)> = None;
+        let mut consider = |t: f64, kind: u8, idx: usize, best: &mut Option<(f64, u8, usize)>| {
+            let replace = match *best {
+                None => true,
+                Some((bt, bk, bi)) => {
+                    t.total_cmp(&bt).then(kind.cmp(&bk)).then(idx.cmp(&bi)) == std::cmp::Ordering::Less
                 }
+            };
+            if replace {
+                *best = Some((t, kind, idx));
             }
-            let outcome = aggregate(cfg, trace.len(), &records, &results, &[], 0, horizon_s, offered_rps, "colocated");
-            (outcome, records)
+        };
+        if let Some(r) = trace.get(next_arrival) {
+            consider(r.arrival_s, 0, 0, &mut best);
         }
-        FleetMode::Disaggregated { prefill, decode } => {
-            // Phase 1: route arrivals into the prefill pool — priced at
-            // prompt tokens only, the work this pool actually does — and
-            // truncate each request to prefill + first token (the KV then
-            // leaves).
-            let (mut subs, chosen) = route_arrivals(trace, cfg, prefill as usize, |r| r.prompt_tokens as f64);
-            for sub in &mut subs {
-                for r in sub.iter_mut() {
-                    r.output_tokens = 1;
+        if let Some(&Reverse(h)) = handoffs.peek() {
+            consider(h.ready_s, 1, 0, &mut best);
+        }
+        for (i, e) in entry.iter().enumerate() {
+            if let Some(t) = e.next_event_s() {
+                consider(t, 2, i, &mut best);
+            }
+        }
+        for (i, e) in dec.iter().enumerate() {
+            if let Some(t) = e.next_event_s() {
+                consider(t, 3, i, &mut best);
+            }
+        }
+        let Some((_, kind, idx)) = best else { break };
+        match kind {
+            0 => {
+                // Route the arrival at its arrival time with live entry-pool
+                // state; the entry pool is priced in its own currency —
+                // prompt + output tokens for a colocated pool, prompt tokens
+                // only for a prefill pool (whose instances never decode).
+                let r = trace[next_arrival];
+                let work = if disagg {
+                    r.prompt_tokens as f64
+                } else {
+                    r.prompt_tokens as f64 + r.output_tokens as f64
+                };
+                let loads = cfg.routing.uses_live_state().then(|| live_loads(&entry));
+                let i = router.route_live(&r, r.arrival_s, work, loads.as_deref());
+                records[next_arrival].prefill_instance = i as u32;
+                if disagg {
+                    // Truncate to prefill + first token; the KV then leaves.
+                    entry[i].inject(Request { output_tokens: 1, ..r });
+                } else {
+                    records[next_arrival].decode_instance = i as u32;
+                    entry[i].inject(r);
                 }
+                entry_pos[i].push(next_arrival);
+                next_arrival += 1;
             }
-            for (idx, &i) in chosen.iter().enumerate() {
-                records[idx].prefill_instance = i as u32;
-            }
-            let prefill_results = run_pool(sys, ds, &subs, &cfg.serve, horizon_s, "prefill", kernels, stages);
-
-            // Phase 2: handoffs in completion order. The migrated context is
-            // the prompt KV (token #1's cache entry is produced decode-side).
-            let mut handoffs: Vec<(f64, u64)> = Vec::new(); // (completion, id)
-            for (_, recs) in &prefill_results {
-                for rec in recs {
-                    if let Some(c) = rec.completion_s {
-                        handoffs.push((c, rec.id));
-                    }
-                }
-            }
-            handoffs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            let mut router = Router::new(cfg.decode_routing, cfg.serve.scheduler.prefix_keying, decode as usize, cfg.drain_rate);
-            let mut dsubs: Vec<Vec<Request>> = vec![Vec::new(); decode as usize];
-            for &(c, id) in &handoffs {
-                let p = pos_of[&id];
-                let orig = trace[p];
+            1 => {
+                // A handoff became ready: serialize it on the shared link
+                // (queueing behind concurrent migrations), route the decode
+                // destination against live decode-pool state, and deliver
+                // the pre-filled request at the landing time. The migrated
+                // context is the prompt KV (token #1's cache entry is
+                // produced decode-side).
+                let Reverse(h) = handoffs.pop().expect("peeked handoff vanished");
+                let orig = trace[h.pos];
                 let ctx = orig.prompt_tokens as u64;
-                let delay = cfg.transfer.exposed_seconds(ctx);
-                let i = router.route(&orig, c, orig.output_tokens as f64);
-                records[p].decode_instance = i as u32;
-                records[p].transfer_bytes = cfg.transfer.bytes_for(ctx);
-                records[p].transfer_s = delay;
+                let exposed = link.schedule(h.ready_s, ctx, &cfg.transfer);
+                let loads = cfg.decode_routing.uses_live_state().then(|| live_loads(&dec));
+                let di = drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads.as_deref());
+                records[h.pos].decode_instance = di as u32;
+                records[h.pos].transfer_bytes = cfg.transfer.bytes_for(ctx);
+                records[h.pos].transfer_s = exposed;
                 // The user sees token #1 once the handoff lands. Sampling
                 // rule (mirrors the colocated side): every request whose
                 // prefill finished inside the simulated window contributes
@@ -380,44 +446,267 @@ pub fn simulate_cluster(
                 // pool later rejects keeps its sample too: its first token
                 // WAS delivered (post-prefill aborts in real disaggregated
                 // serving still stream token #1).
-                records[p].first_token_s = Some(c + delay);
-                dsubs[i].push(Request {
-                    arrival_s: c + delay,
+                records[h.pos].first_token_s = Some(h.ready_s + exposed);
+                dec[di].inject(Request {
+                    arrival_s: h.ready_s + exposed,
                     prefix_id: 0,
                     prefix_tokens: 0,
                     prefix_hash: 0,
                     prefilled: true,
                     ..orig
                 });
+                dec_pos[di].push(h.pos);
+                migrated += 1;
             }
-            // Handoff delays differ per context length, so per-instance
-            // decode arrivals must be re-sorted.
-            for sub in &mut dsubs {
-                sub.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
-            }
-
-            // Phase 3: the decode pool (pure decode iterations — no chunked
-            // prefill riding the ticks).
-            let decode_results = run_pool(sys, ds, &dsubs, &cfg.serve, horizon_s, "decode", kernels, stages);
-            for (_, recs) in &decode_results {
-                for rec in recs {
-                    records[pos_of[&rec.id]].completion_s = rec.completion_s;
+            2 => {
+                let step = entry[idx].step();
+                if disagg {
+                    if let Step::Ticked { completions, .. } = step {
+                        let ready = entry[idx].clock_s();
+                        for rec in completions {
+                            let pos = entry_pos[idx][rec];
+                            handoffs.push(Reverse(HandoffEv { ready_s: ready, id: trace[pos].id, pos }));
+                        }
+                    }
                 }
             }
-            let outcome = aggregate(
-                cfg,
-                trace.len(),
-                &records,
-                &prefill_results,
-                &decode_results,
-                handoffs.len(),
-                horizon_s,
-                offered_rps,
-                "prefill",
-            );
-            (outcome, records)
+            _ => {
+                dec[idx].step();
+            }
         }
     }
+
+    let entry_role: &'static str = if disagg { "prefill" } else { "colocated" };
+    let entry_results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
+        entry.into_iter().map(|e| e.finish(entry_role, 0.0)).collect();
+    let decode_results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
+        dec.into_iter().map(|e| e.finish("decode", 0.0)).collect();
+    for (i, (_, recs)) in entry_results.iter().enumerate() {
+        for (k, rec) in recs.iter().enumerate() {
+            if !disagg {
+                let p = entry_pos[i][k];
+                records[p].first_token_s = rec.first_token_s;
+                records[p].completion_s = rec.completion_s;
+            }
+        }
+    }
+    for (i, (_, recs)) in decode_results.iter().enumerate() {
+        for (k, rec) in recs.iter().enumerate() {
+            records[dec_pos[i][k]].completion_s = rec.completion_s;
+        }
+    }
+    let telemetry = FleetTelemetry {
+        router_spills: router.spill_events() + drouter.spill_events(),
+        link_busy_frac: link.busy_fraction(horizon_s),
+        link_wait_s: link.wait_s,
+    };
+    let outcome = aggregate(
+        cfg,
+        trace.len(),
+        &records,
+        &entry_results,
+        &decode_results,
+        migrated,
+        horizon_s,
+        offered_rps,
+        entry_role,
+        telemetry,
+    );
+    (outcome, records)
+}
+
+/// Per-model serve config for co-residency on a shared instance: the
+/// co-resident model's weight bytes are reserved out of the KV budget and
+/// the per-chip user slots are split between the models. This is THE
+/// co-residency billing recipe — both the static-bound arm (isolated
+/// fleets, no interference) and the interleaved shared pool use it, so the
+/// golden interference anchor compares the two arms under one definition.
+pub fn co_resident_serve(sys: &WaferSystem, other: &DeepSeekConfig, base: ServeConfig) -> ServeConfig {
+    let reserved = crate::serve::kv::KvCacheModel::new(sys, other, base.plan, base.dtype).weight_bytes_per_chip;
+    ServeConfig {
+        reserved_hbm_bytes: base.reserved_hbm_bytes + reserved,
+        scheduler: crate::serve::scheduler::SchedulerConfig {
+            max_batch_per_chip: (base.scheduler.max_batch_per_chip / 2).max(1),
+            ..base.scheduler
+        },
+        ..base
+    }
+}
+
+/// One co-resident model of a shared multi-model pool.
+pub struct SharedPoolSpec<'a> {
+    pub ds: &'a DeepSeekConfig,
+    pub trace: &'a [Request],
+    /// Per-instance serving config for this model (reserved co-resident
+    /// weight bytes and the split batch ceiling included).
+    pub serve: ServeConfig,
+    pub offered_rps: f64,
+}
+
+/// Simulate several models co-resident on ONE pool of `instances` shared
+/// instances, with cross-model tick interference: each instance's chip is
+/// exclusively occupied during any model's iteration, so co-resident ticks
+/// serialize on one chip clock — a model's decode cadence genuinely
+/// stretches while the other model runs, instead of being statically
+/// billed (the pre-interleaving lower bound). Returns one
+/// (outcome, records) pair per model, in input order.
+///
+/// Fairness at equal readiness is deterministic: the engine that has
+/// waited longest (smallest own clock) takes the chip next.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_shared_pool(
+    sys: &WaferSystem,
+    models: &[SharedPoolSpec],
+    instances: u32,
+    routing: RoutingPolicy,
+    drain_rate: f64,
+    horizon_s: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+) -> Vec<(ClusterOutcome, Vec<ClusterRecord>)> {
+    assert!(instances >= 1, "empty shared pool");
+    assert!(!models.is_empty(), "a shared pool needs at least one model");
+    let n = instances as usize;
+    let mut engines: Vec<Vec<ServeEngine>> = models
+        .iter()
+        .map(|m| (0..n).map(|_| ServeEngine::new(sys, m.ds, m.serve, horizon_s, kernels, stages)).collect())
+        .collect();
+    let mut pos: Vec<Vec<Vec<usize>>> = models.iter().map(|_| vec![Vec::new(); n]).collect();
+    let mut routers: Vec<Router> = models
+        .iter()
+        .map(|m| Router::new(routing, m.serve.scheduler.prefix_keying, n, drain_rate))
+        .collect();
+    let mut next_arrival: Vec<usize> = vec![0; models.len()];
+    // Chip-exclusive serialization state: instance i's chip is busy until
+    // chip_free[i]; any engine's next tick starts no earlier.
+    let mut chip_free: Vec<f64> = vec![0.0; n];
+
+    loop {
+        // (time, kind, waited-since, model, instance); arrivals first at
+        // ties, then the engine that has waited longest on the busy chip.
+        let mut best: Option<(f64, u8, f64, usize, usize)> = None;
+        let mut consider =
+            |cand: (f64, u8, f64, usize, usize), best: &mut Option<(f64, u8, f64, usize, usize)>| {
+                let replace = match *best {
+                    None => true,
+                    Some(b) => {
+                        cand.0
+                            .total_cmp(&b.0)
+                            .then(cand.1.cmp(&b.1))
+                            .then(cand.2.total_cmp(&b.2))
+                            .then(cand.3.cmp(&b.3))
+                            .then(cand.4.cmp(&b.4))
+                            == std::cmp::Ordering::Less
+                    }
+                };
+                if replace {
+                    *best = Some(cand);
+                }
+            };
+        for (m, spec) in models.iter().enumerate() {
+            if let Some(r) = spec.trace.get(next_arrival[m]) {
+                consider((r.arrival_s, 0, r.arrival_s, m, 0), &mut best);
+            }
+        }
+        for (m, es) in engines.iter().enumerate() {
+            for (i, e) in es.iter().enumerate() {
+                if let Some(t) = e.next_event_s() {
+                    consider((t.max(chip_free[i]), 1, e.clock_s(), m, i), &mut best);
+                }
+            }
+        }
+        let Some((_, kind, _, m, i)) = best else { break };
+        if kind == 0 {
+            // Route this model's arrival against the live COMBINED load of
+            // each shared instance (both models' queues compete for the
+            // same chips).
+            let r = models[m].trace[next_arrival[m]];
+            let loads: Option<Vec<LiveLoad>> = routing.uses_live_state().then(|| {
+                (0..n)
+                    .map(|j| {
+                        let mut queued = 0usize;
+                        let mut active = 0usize;
+                        for es in &engines {
+                            let s = es[j].snapshot();
+                            queued += s.queue_depth;
+                            active += s.active_users;
+                        }
+                        LiveLoad { queued, active }
+                    })
+                    .collect()
+            });
+            let work = r.prompt_tokens as f64 + r.output_tokens as f64;
+            let j = routers[m].route_live(&r, r.arrival_s, work, loads.as_deref());
+            engines[m][j].inject(r);
+            pos[m][j].push(next_arrival[m]);
+            next_arrival[m] += 1;
+        } else {
+            // The chip may still be held by a co-resident model's tick:
+            // that time has passed for this engine too.
+            let e = &mut engines[m][i];
+            e.advance_clock_to(chip_free[i]);
+            if let Step::Ticked { .. } = e.step() {
+                chip_free[i] = e.clock_s();
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(models.len());
+    for (m, spec) in models.iter().enumerate() {
+        let mut records: Vec<ClusterRecord> = spec
+            .trace
+            .iter()
+            .map(|r| ClusterRecord {
+                id: r.id,
+                arrival_s: r.arrival_s,
+                prompt_tokens: r.prompt_tokens,
+                output_tokens: r.output_tokens,
+                first_token_s: None,
+                completion_s: None,
+                prefill_instance: u32::MAX,
+                decode_instance: u32::MAX,
+                transfer_bytes: 0,
+                transfer_s: 0.0,
+            })
+            .collect();
+        let results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
+            std::mem::take(&mut engines[m]).into_iter().map(|e| e.finish("shared", 0.0)).collect();
+        for (i, (_, recs)) in results.iter().enumerate() {
+            for (k, rec) in recs.iter().enumerate() {
+                let p = pos[m][i][k];
+                records[p].prefill_instance = i as u32;
+                records[p].decode_instance = i as u32;
+                records[p].first_token_s = rec.first_token_s;
+                records[p].completion_s = rec.completion_s;
+            }
+        }
+        let pseudo = ClusterConfig {
+            mode: FleetMode::Colocated { instances },
+            serve: spec.serve,
+            routing,
+            decode_routing: routing,
+            transfer: KvTransferModel::inter_node(spec.ds, spec.serve.dtype),
+            drain_rate,
+        };
+        let telemetry = FleetTelemetry {
+            router_spills: routers[m].spill_events(),
+            ..Default::default()
+        };
+        let outcome = aggregate(
+            &pseudo,
+            spec.trace.len(),
+            &records,
+            &results,
+            &[],
+            0,
+            horizon_s,
+            spec.offered_rps,
+            "shared",
+            telemetry,
+        );
+        out.push((outcome, records));
+    }
+    out
 }
 
 /// Roll per-instance outcomes and fleet records into a [`ClusterOutcome`].
@@ -432,6 +721,7 @@ fn aggregate(
     horizon_s: f64,
     offered_rps: f64,
     entry_role: &'static str,
+    telemetry: FleetTelemetry,
 ) -> ClusterOutcome {
     let disagg = !decode.is_empty();
     let arrived: usize = entry.iter().map(|(o, _)| o.arrived).sum();
@@ -509,20 +799,27 @@ fn aggregate(
         transfer_overhead_share,
         kv_over_capacity,
         preemptions,
+        router_spills: telemetry.router_spills,
+        link_busy_frac: telemetry.link_busy_frac,
+        link_wait_s: telemetry.link_wait_s,
         instances,
     }
 }
 
-/// First offered load at which the disaggregated fleet's p99 TPOT drops
+/// Lowest offered load at which the disaggregated fleet's p99 TPOT drops
 /// below the colocated fleet's — the crossover the `cluster_pools`
-/// experiment reports. Curves must be paired by offered rate.
+/// experiment reports. Robust to unsorted or unequal-length inputs: the
+/// curves are paired by offered rate (points without a partner in the
+/// other curve are skipped) and scanned in increasing-rate order.
 pub fn tpot_crossover(colocated: &[ClusterOutcome], disagg: &[ClusterOutcome]) -> Option<f64> {
-    colocated
+    let mut pairs: Vec<(&ClusterOutcome, &ClusterOutcome)> = colocated
         .iter()
-        .zip(disagg.iter())
-        .find(|(c, d)| {
-            c.completed > 0 && d.completed > 0 && d.tpot_ms.p99 < c.tpot_ms.p99
-        })
+        .filter_map(|c| disagg.iter().find(|d| d.offered_rps == c.offered_rps).map(|d| (c, d)))
+        .collect();
+    pairs.sort_by(|a, b| a.0.offered_rps.total_cmp(&b.0.offered_rps));
+    pairs
+        .into_iter()
+        .find(|(c, d)| c.completed > 0 && d.completed > 0 && d.tpot_ms.p99 < c.tpot_ms.p99)
         .map(|(c, _)| c.offered_rps)
 }
 
@@ -530,6 +827,7 @@ pub fn tpot_crossover(colocated: &[ClusterOutcome], disagg: &[ClusterOutcome]) -
 mod tests {
     use super::*;
     use crate::serve::request::{generate_trace, TraceConfig, TrafficPattern};
+    use crate::serve::sim::simulate;
 
     fn trace(rate: f64, horizon: f64, seed: u64) -> Vec<Request> {
         generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon))
@@ -552,6 +850,7 @@ mod tests {
         assert!(co.conserves_requests());
         assert_eq!(co.migrated, 0);
         assert_eq!(co.kv_transfer_bytes, 0);
+        assert_eq!(co.link_busy_frac, 0.0);
         for (c, s) in crecs.iter().zip(&srecs) {
             assert_eq!(c.id, s.id);
             assert_eq!(c.first_token_s, s.first_token_s);
@@ -589,6 +888,41 @@ mod tests {
         }
         assert_eq!(o.kv_transfer_bytes, recs.iter().map(|r| r.transfer_bytes).sum::<u64>());
         assert!(o.transfer_overhead_share > 0.0 && o.transfer_overhead_share < 0.5);
+        // Link telemetry: the fabric carried every migration.
+        assert!(o.link_busy_frac > 0.0 && o.link_busy_frac <= 1.0);
+    }
+
+    #[test]
+    fn link_congestion_queues_migrations_under_load() {
+        // Starve the fabric down to one slow flow: concurrent migrations
+        // must queue (wait_s > 0) and every exposed delay still lands in
+        // the per-request records, keeping the timelines causal.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut slow = ClusterConfig::disaggregated(1, 1, &ds);
+        slow.transfer.parallel_flows = 1;
+        slow.transfer.link_bandwidth_bytes_per_s = 2.0e9;
+        let mut free = slow;
+        free.transfer.parallel_flows = 64;
+        let t = trace(400.0, 3.0, 17);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let (o_slow, recs) = simulate_cluster(&sys, &ds, &t, &slow, 3.0, 400.0, &kernels, &stages);
+        let (o_free, _) = simulate_cluster(&sys, &ds, &t, &free, 3.0, 400.0, &kernels, &stages);
+        assert!(o_slow.conserves_requests() && o_free.conserves_requests());
+        assert!(o_slow.link_wait_s > 0.0, "a single congested flow must queue migrations");
+        assert!(o_free.link_wait_s < o_slow.link_wait_s, "64 flows must absorb what 1 cannot");
+        assert!(
+            o_slow.kv_transfer_exposed_s > o_free.kv_transfer_exposed_s,
+            "queueing must show up in the exposed handoff time: {} vs {}",
+            o_slow.kv_transfer_exposed_s,
+            o_free.kv_transfer_exposed_s
+        );
+        for r in &recs {
+            if let Some(f) = r.first_token_s {
+                assert!(f >= r.arrival_s + r.transfer_s, "first token beat the congested handoff: {r:?}");
+            }
+        }
     }
 
     #[test]
@@ -624,7 +958,12 @@ mod tests {
         let t = trace(120.0, 3.0, 13);
         let kernels = KernelCache::new();
         let stages = StageTimeCache::new();
-        for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PrefixAffinity] {
+        for policy in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastOutstanding,
+            RoutingPolicy::LeastQueueDepth,
+            RoutingPolicy::PrefixAffinity,
+        ] {
             let ccfg = ClusterConfig { routing: policy, ..ClusterConfig::colocated(3, &ds) };
             let (o, _) = simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 120.0, &kernels, &stages);
             assert!(o.conserves_requests(), "{policy:?}");
@@ -635,6 +974,76 @@ mod tests {
             // No instance may be starved by a balancing policy.
             assert!(routed.iter().all(|&r| r > total / 10), "{policy:?}: skewed {routed:?}");
         }
+    }
+
+    #[test]
+    fn shared_pool_interference_stretches_both_models() {
+        // Two co-resident models on one shared instance, each saturating
+        // enough to keep residents active: with chip-exclusive tick
+        // serialization, each model's p50 TPOT must sit strictly above its
+        // solo (sole-tenant) run on the identical trace and config — and
+        // the combined pass must conserve requests per model.
+        let sys = WaferSystem::paper();
+        let big = DeepSeekConfig::v3_671b();
+        let small = DeepSeekConfig::v3_16b();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let horizon = 2.0;
+        let t_big = trace(60.0, horizon, 19);
+        let t_small = trace(120.0, horizon, 23);
+        let serve = ServeConfig::default();
+        let specs = [
+            SharedPoolSpec { ds: &big, trace: &t_big, serve, offered_rps: 60.0 },
+            SharedPoolSpec { ds: &small, trace: &t_small, serve, offered_rps: 120.0 },
+        ];
+        let shared = simulate_shared_pool(
+            &sys,
+            &specs,
+            1,
+            RoutingPolicy::LeastQueueDepth,
+            Router::DEFAULT_DRAIN_RATE,
+            horizon,
+            &kernels,
+            &stages,
+        );
+        assert_eq!(shared.len(), 2);
+        for (o, recs) in &shared {
+            assert!(o.conserves_requests(), "{o:?}");
+            assert!(o.completed > 0);
+            assert_eq!(recs.len(), o.offered);
+        }
+        // Solo runs of the same traces on a private instance each.
+        let solo = |ds: &DeepSeekConfig, t: &[Request]| {
+            let ccfg = ClusterConfig::colocated(1, ds);
+            simulate_cluster(&sys, ds, t, &ccfg, horizon, 0.0, &kernels, &stages).0
+        };
+        let solo_big = solo(&big, &t_big);
+        let solo_small = solo(&small, &t_small);
+        assert!(
+            shared[0].0.tpot_ms.p50 > solo_big.tpot_ms.p50,
+            "co-residency must stretch the 671B's cadence: {} vs solo {}",
+            shared[0].0.tpot_ms.p50,
+            solo_big.tpot_ms.p50
+        );
+        assert!(
+            shared[1].0.tpot_ms.p50 > solo_small.tpot_ms.p50,
+            "co-residency must stretch the 16B's cadence: {} vs solo {}",
+            shared[1].0.tpot_ms.p50,
+            solo_small.tpot_ms.p50
+        );
+        // Determinism of the interleaved shared pass.
+        let replay = simulate_shared_pool(
+            &sys,
+            &specs,
+            1,
+            RoutingPolicy::LeastQueueDepth,
+            Router::DEFAULT_DRAIN_RATE,
+            horizon,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+        );
+        assert_eq!(replay[0].0, shared[0].0);
+        assert_eq!(replay[1].0, shared[1].0);
     }
 
     #[test]
@@ -664,5 +1073,18 @@ mod tests {
         let disagg = vec![mk(100.0, 12.0), mk(400.0, 38.0), mk(1600.0, 45.0)];
         assert_eq!(tpot_crossover(&colo, &disagg), Some(400.0));
         assert_eq!(tpot_crossover(&colo[..1], &disagg[..1]), None);
+        // Hardened pairing: unsorted curves and unequal lengths must not
+        // mis-pair points by index. The shuffled disagg curve still crosses
+        // at 400, and the colocated point with no 1600-rps partner is
+        // skipped instead of being zipped against the wrong rate.
+        let shuffled = vec![mk(1600.0, 45.0), mk(100.0, 12.0), mk(400.0, 38.0)];
+        assert_eq!(tpot_crossover(&colo, &shuffled), Some(400.0));
+        let short = vec![mk(400.0, 38.0), mk(100.0, 12.0)];
+        assert_eq!(tpot_crossover(&colo, &short), Some(400.0));
+        let disjoint = vec![mk(250.0, 1.0)];
+        assert_eq!(tpot_crossover(&colo, &disjoint), None, "no shared rates → no crossover");
+        // An index-zip would have paired colo[0] (100 rps) with shuffled[0]
+        // (p99 45 < 90) and mis-reported the crossover at 100 rps.
+        assert_ne!(tpot_crossover(&colo, &shuffled), Some(100.0));
     }
 }

@@ -1,43 +1,61 @@
-//! Fleet-level cluster simulator: multiple wafer instances, disaggregated
-//! prefill/decode pools, KV-transfer modeling and prefix-affinity routing.
+//! Fleet-level cluster simulator: multiple wafer instances interleaved on
+//! one event clock, disaggregated prefill/decode pools, congested
+//! KV-transfer modeling and live (feedback-driven) routing.
 //!
 //! # Layering: `serve` vs `cluster`
 //!
 //! The [`serve`](crate::serve) layer answers "what does ONE wafer instance
-//! do under a request stream" — continuous batching, KV admission, chunked
-//! prefill billed by the real dataflow simulation. This module is the layer
-//! above: a *fleet* of such instances behind a cluster router, which is
-//! where the paper's end-to-end claims (§V-C) and the ROADMAP's "millions
-//! of users" north star actually live. Nothing in `serve` knows about the
-//! fleet; nothing here re-models what an instance already simulates — every
-//! instance runs the unmodified `serve::sim` event loop against the shared
+//! do under a request stream" — and, since the engine refactor, exposes it
+//! as a *steppable* unit: `serve::sim::ServeEngine` advances one iteration
+//! per `step()`, accepts `inject()`ed arrivals mid-simulation and publishes
+//! a live snapshot. This module is the layer above: a *fleet* of such
+//! engines behind a cluster router, which is where the paper's end-to-end
+//! claims (§V-C) and the ROADMAP's "millions of users" north star actually
+//! live. Nothing here re-models what an instance already simulates — every
+//! instance is an unmodified engine over the shared
 //! `StageTimeCache`/`KernelCache`, so fleet numbers inherit the dataflow
-//! grounding.
+//! grounding; and a 1-instance colocated fleet reproduces
+//! `serve::sim::simulate` byte-identically (pinned by test).
 //!
-//! The cluster layer owns exactly three concerns:
+//! The cluster layer owns exactly four concerns:
 //!
+//! - **the global event clock** ([`fleet`]): arrivals, KV handoffs and
+//!   engine iterations advance in causal order — always the earliest event,
+//!   always the instance with the smallest local clock. The old two-phase
+//!   (route → prefill-all → handoff → decode-all) mode is gone; its
+//!   behavior for static policies falls out of the interleaved loop as a
+//!   special case.
 //! - [`router`] — which instance a request (or a KV handoff) lands on:
-//!   round-robin, fluid least-outstanding-work, or prefix-affinity keyed on
-//!   the per-instance `PrefixStore` fingerprints.
+//!   round-robin, fluid least-outstanding-work, prefix-affinity keyed on
+//!   the per-instance `PrefixStore` fingerprints, or *live*
+//!   least-queue-depth reading each engine's snapshot at the decision time
+//!   (and feeding the prefix-affinity spill guard — decode-side feedback).
 //! - [`transfer`] — what a prefill→decode migration costs: the MLA
 //!   *latent*-KV layout bytes over an inter-instance link, partially
-//!   overlappable with the prefill tail (layer streaming).
-//! - [`fleet`] — the two-phase fleet simulation itself: colocated fleets,
-//!   or prefill pools feeding decode pools whose iterations never carry
-//!   chunked-prefill interference. Prefill is compute-bound and decode
-//!   memory-bound (PAPERS.md, "Rethinking LLM Inference Bottlenecks"), so
-//!   the split trades first-token transfer latency for interference-free
-//!   decode cadence — the colocated-vs-disaggregated crossover the
-//!   `cluster_pools` experiment sweeps.
+//!   overlappable with the prefill tail (layer streaming), *contended*:
+//!   [`SharedLink`] serializes concurrent migrations on a finite-flow
+//!   fabric with busy-until accounting, so congestion queues instead of
+//!   overlapping for free.
+//! - **shared multi-model pools** ([`fleet::simulate_shared_pool`]): both
+//!   co-resident models' engines interleave on one chip clock per
+//!   instance, so cross-model tick interference is simulated rather than
+//!   statically billed. Prefill is compute-bound and decode memory-bound
+//!   (PAPERS.md, "Rethinking LLM Inference Bottlenecks"), so the
+//!   disaggregation split trades first-token transfer latency for
+//!   interference-free decode cadence — the colocated-vs-disaggregated
+//!   crossover the `cluster_pools` experiment sweeps.
 //!
 //! Entry points: `flatattention cluster` (CLI), experiment ids
-//! `cluster_pools` and `cluster_models`, `examples/cluster.rs`,
-//! `benches/cluster_pools.rs`.
+//! `cluster_pools`, `cluster_models` and `cluster_dynamic`,
+//! `examples/cluster.rs`, `benches/cluster_pools.rs`.
 
 pub mod fleet;
 pub mod router;
 pub mod transfer;
 
-pub use fleet::{simulate_cluster, tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FleetMode, InstanceSummary};
-pub use router::{Router, RoutingPolicy};
-pub use transfer::KvTransferModel;
+pub use fleet::{
+    co_resident_serve, simulate_cluster, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome,
+    ClusterRecord, FleetMode, InstanceSummary, SharedPoolSpec,
+};
+pub use router::{LiveLoad, Router, RoutingPolicy};
+pub use transfer::{KvTransferModel, SharedLink};

@@ -1,15 +1,25 @@
 //! Cluster-level request routing across instances of one pool.
 //!
 //! Routing decisions are made at arrival (prefill / colocated routing) or
-//! at KV-handoff time (decode routing) and are pure functions of the
-//! arrival sequence, so a routed fleet simulation replays bit-exactly.
+//! at KV-handoff time (decode routing). Two kinds of state feed them:
 //!
-//! Outstanding work is tracked with a fluid proxy: every instance drains
-//! its backlog at a nominal `drain_rate` tokens/s and each routed request
-//! deposits its token work. The proxy only shapes *balancing* — the actual
-//! per-instance latencies come from the instances' own iteration-level
-//! simulations — so any positive drain rate yields a sane policy; the
-//! default is the order of one wafer instance's serving throughput.
+//! - a **fluid proxy** of outstanding work: every instance drains its
+//!   backlog at a nominal `drain_rate` tokens/s and each routed request
+//!   deposits its token work. Decisions driven only by the proxy are pure
+//!   functions of the arrival sequence ("static" routing — what a
+//!   two-phase fleet simulation could already do);
+//! - **live instance state** ([`LiveLoad`], sampled from each instance's
+//!   `ServeEngine` snapshot by the interleaved fleet): actual queue depth,
+//!   resident users and KV occupancy *at the decision time*. The
+//!   [`RoutingPolicy::LeastQueueDepth`] policy and the prefix-affinity
+//!   spill guard consume it — this is the decode-side feedback loop a
+//!   single-clock fleet simulation makes possible.
+//!
+//! Either way the router is deterministic: a routed fleet simulation
+//! replays bit-exactly. The router also counts affinity spill events, and
+//! together with the per-instance routed/backlog numbers each engine
+//! already reports (`InstanceSummary`), routing experiments are
+//! explainable from the `ClusterOutcome` alone.
 
 use std::collections::HashMap;
 
@@ -22,13 +32,20 @@ pub enum RoutingPolicy {
     /// Cycle through the pool's instances in order.
     RoundRobin,
     /// Fluid least-outstanding-work: route to the instance with the least
-    /// undrained token work (ties to the lowest index).
+    /// undrained token work (ties to the lowest index). Static — sees only
+    /// its own deposits, never the instances' actual progress.
     LeastOutstanding,
+    /// Live least-queue-depth: route to the instance whose *actual*
+    /// queued + resident request count is lowest at the decision time
+    /// (rotating tie-break). Requires live loads; falls back to the fluid
+    /// proxy when none are supplied.
+    LeastQueueDepth,
     /// Prefix affinity: requests of one shared-prefix family stick to the
     /// instance whose `PrefixStore` fingerprints their blocks (first member
     /// placed least-outstanding); prefix-free requests fall back to
-    /// least-outstanding. A 2× overload guard spills a family's traffic
-    /// without re-homing the fingerprint.
+    /// least-outstanding. An overload guard spills a family's traffic
+    /// without re-homing the fingerprint — against live queue depths when
+    /// available (decode-side feedback), else against the fluid proxy.
     PrefixAffinity,
 }
 
@@ -37,6 +54,7 @@ impl RoutingPolicy {
         match self {
             RoutingPolicy::RoundRobin => "round-robin",
             RoutingPolicy::LeastOutstanding => "least-outstanding",
+            RoutingPolicy::LeastQueueDepth => "least-queue-depth",
             RoutingPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
@@ -46,9 +64,41 @@ impl RoutingPolicy {
         match s.to_ascii_lowercase().as_str() {
             "roundrobin" | "round-robin" | "rr" => Some(RoutingPolicy::RoundRobin),
             "leastoutstanding" | "least-outstanding" | "low" => Some(RoutingPolicy::LeastOutstanding),
+            "leastqueuedepth" | "least-queue-depth" | "queue-depth" | "lqd" => {
+                Some(RoutingPolicy::LeastQueueDepth)
+            }
             "prefixaffinity" | "prefix-affinity" | "prefix" => Some(RoutingPolicy::PrefixAffinity),
             _ => None,
         }
+    }
+
+    /// True when decisions under this policy read live instance state —
+    /// the fleet skips sampling every engine's snapshot for the static
+    /// policies (round-robin, fluid least-outstanding), which would
+    /// otherwise scan all columns of all instances per arrival for a
+    /// value the router discards.
+    pub fn uses_live_state(self) -> bool {
+        matches!(self, RoutingPolicy::LeastQueueDepth | RoutingPolicy::PrefixAffinity)
+    }
+}
+
+/// Live state of one instance at a routing decision, sampled from its
+/// `ServeEngine` snapshot by the interleaved fleet. Deliberately minimal:
+/// exactly the fields a policy reads (KV-pressure-aware placement is a
+/// ROADMAP follow-up, not carried state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveLoad {
+    /// Requests waiting in the instance's scheduler queue.
+    pub queued: usize,
+    /// Requests resident in (column, wave) cells.
+    pub active: usize,
+}
+
+impl LiveLoad {
+    /// Total requests the instance currently holds — the congestion signal
+    /// live policies rank on.
+    pub fn depth(&self) -> usize {
+        self.queued + self.active
     }
 }
 
@@ -67,12 +117,22 @@ pub struct Router {
     /// Prefix-family fingerprint → owning instance (mirrors which
     /// instance's `PrefixStore` holds the family's blocks).
     affinity: HashMap<u64, usize>,
+    /// Affinity-overload spill events (telemetry): requests steered away
+    /// from their family's home instance. Per-instance routed counts are
+    /// NOT duplicated here — each instance's engine already knows exactly
+    /// what was injected into it (`InstanceSummary::routed`).
+    spills: u64,
 }
 
 impl Router {
     /// Nominal per-instance drain rate for the fluid backlog proxy
     /// (order of one wafer instance's serving throughput in tokens/s).
     pub const DEFAULT_DRAIN_RATE: f64 = 250_000.0;
+
+    /// Live-depth slack of the affinity spill guard: the home instance must
+    /// hold at least this many more requests than twice the lightest before
+    /// a family spills (keeps tiny imbalances from shredding affinity).
+    pub const SPILL_DEPTH_SLACK: usize = 16;
 
     pub fn new(policy: RoutingPolicy, keying: PrefixKeying, n: usize, drain_rate: f64) -> Self {
         assert!(n >= 1, "a pool needs at least one instance");
@@ -84,11 +144,17 @@ impl Router {
             last_t: 0.0,
             drain_rate: drain_rate.max(1.0),
             affinity: HashMap::new(),
+            spills: 0,
         }
     }
 
     pub fn instances(&self) -> usize {
         self.outstanding.len()
+    }
+
+    /// Affinity-overload spill events so far.
+    pub fn spill_events(&self) -> u64 {
+        self.spills
     }
 
     /// Lightest current backlog (read-only; the affinity guard's yardstick).
@@ -113,10 +179,59 @@ impl Router {
         best
     }
 
+    /// Pick the instance with the lowest live queue depth (rotating
+    /// tie-break, mirroring [`Router::least_outstanding`]).
+    fn least_depth(&mut self, live: &[LiveLoad]) -> usize {
+        let n = self.outstanding.len();
+        debug_assert_eq!(live.len(), n, "one LiveLoad per instance");
+        let start = self.rr_next;
+        let mut best = start;
+        for k in 1..n {
+            let i = (start + k) % n;
+            if live[i].depth() < live[best].depth() {
+                best = i;
+            }
+        }
+        self.rr_next = (best + 1) % n;
+        best
+    }
+
+    /// True when routing to the family home would pile onto a visibly
+    /// overloaded instance. With live state: the home holds more than twice
+    /// the lightest instance's requests plus a slack. Without: the fluid
+    /// proxy's ~1 s-of-backlog rule.
+    fn home_overloaded(&self, home: usize, live: Option<&[LiveLoad]>) -> bool {
+        match live {
+            Some(l) => {
+                let lightest = l.iter().map(LiveLoad::depth).min().unwrap_or(0);
+                l[home].depth() > 2 * lightest + Self::SPILL_DEPTH_SLACK
+            }
+            None => {
+                let light = self.min_outstanding();
+                self.outstanding[home] > 2.0 * light + self.drain_rate
+            }
+        }
+    }
+
     /// Route a request arriving at time `t` carrying `work_tokens` of
     /// future work (prompt tokens for a prefill pool, output tokens for a
-    /// decode pool). Returns the chosen instance index.
+    /// decode pool), without live state — static policies only (live
+    /// policies degrade to their fluid fallback).
     pub fn route(&mut self, r: &Request, t: f64, work_tokens: f64) -> usize {
+        self.route_live(r, t, work_tokens, None)
+    }
+
+    /// [`Router::route`] with the pool's live instance state at time `t`.
+    /// The interleaved fleet samples every instance's engine snapshot at
+    /// each decision, so live policies see actual queues — including decode
+    /// backlog, which a static arrival-sequence router can never observe.
+    pub fn route_live(
+        &mut self,
+        r: &Request,
+        t: f64,
+        work_tokens: f64,
+        live: Option<&[LiveLoad]>,
+    ) -> usize {
         // Fluid drain since the previous decision.
         let dt = (t - self.last_t).max(0.0);
         self.last_t = self.last_t.max(t);
@@ -130,6 +245,10 @@ impl Router {
                 i
             }
             RoutingPolicy::LeastOutstanding => self.least_outstanding(),
+            RoutingPolicy::LeastQueueDepth => match live {
+                Some(l) => self.least_depth(l),
+                None => self.least_outstanding(),
+            },
             RoutingPolicy::PrefixAffinity => {
                 let key = self.keying.key_of(r);
                 if key == 0 {
@@ -139,11 +258,13 @@ impl Router {
                         Some(&home) => {
                             // Overload guard: spill (this request only, the
                             // fingerprint stays home) once affinity would
-                            // cost more than ~1 s of extra backlog over the
-                            // lightest instance.
-                            let light = self.min_outstanding();
-                            if self.outstanding[home] > 2.0 * light + self.drain_rate {
-                                self.least_outstanding()
+                            // visibly overload the home instance.
+                            if self.home_overloaded(home, live) {
+                                self.spills += 1;
+                                match live {
+                                    Some(l) => self.least_depth(l),
+                                    None => self.least_outstanding(),
+                                }
                             } else {
                                 home
                             }
@@ -174,11 +295,16 @@ mod tests {
         Request { prefix_id: family, prefix_tokens: 256, prefix_hash: family.wrapping_mul(0x9E37) | 1, ..plain(id, t) }
     }
 
+    fn load(queued: usize, active: usize) -> LiveLoad {
+        LiveLoad { queued, active }
+    }
+
     #[test]
     fn round_robin_cycles() {
         let mut r = Router::new(RoutingPolicy::RoundRobin, PrefixKeying::TokenHash, 3, Router::DEFAULT_DRAIN_RATE);
         let picks: Vec<usize> = (0..6).map(|i| r.route(&plain(i, 0.0), 0.0, 100.0)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.spill_events(), 0);
     }
 
     #[test]
@@ -202,6 +328,26 @@ mod tests {
         assert_eq!(r.route(&plain(2, 0.2), 0.2, 100.0), 1);
         // … but a minute later it has fully drained and rotation resumes.
         assert_eq!(r.route(&plain(3, 60.0), 60.0, 100.0), 0);
+    }
+
+    #[test]
+    fn least_queue_depth_follows_live_state_not_deposits() {
+        let mut r = Router::new(RoutingPolicy::LeastQueueDepth, PrefixKeying::TokenHash, 3, 1000.0);
+        // The fluid proxy believes instance 0 is buried (huge deposit), but
+        // live state says instance 0 is actually the emptiest — live wins.
+        assert_eq!(r.route_live(&plain(0, 0.0), 0.0, 1e9, Some(&[load(0, 0), load(5, 5), load(9, 1)])), 0);
+        // And when live state flips, so does the decision.
+        assert_eq!(r.route_live(&plain(1, 0.0), 0.0, 100.0, Some(&[load(50, 0), load(0, 1), load(9, 1)])), 1);
+        // Rotating tie-break: equal depths spread instead of funneling.
+        let picks: Vec<usize> =
+            (2..8).map(|i| r.route_live(&plain(i, 0.0), 0.0, 0.0, Some(&[load(1, 1), load(1, 1), load(1, 1)]))).collect();
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "ties must rotate across all instances: {picks:?}");
+        // Without live state the policy degrades to the fluid proxy rather
+        // than panicking (instance 0 still carries the 1e9 deposit).
+        assert_ne!(r.route(&plain(99, 0.0), 0.0, 100.0), 0);
     }
 
     #[test]
@@ -231,6 +377,31 @@ mod tests {
             spilled |= r.route(&fam(i, 0.0, 7), 0.0, 1_000.0) != home;
         }
         assert!(spilled, "a hot family must eventually spill");
+        assert!(r.spill_events() > 0, "spills must be counted");
+    }
+
+    #[test]
+    fn prefix_affinity_spills_on_live_depth_feedback() {
+        // The fluid proxy sees a healthy home (tiny deposits), but the live
+        // snapshot shows the home drowning in decode backlog — exactly what
+        // a static arrival-sequence router cannot observe. The guard must
+        // spill on the live signal, to the live-lightest instance.
+        let mut r = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 3, 1e9);
+        let idle = [load(0, 0), load(0, 0), load(0, 0)];
+        let home = r.route_live(&fam(0, 0.0, 7), 0.0, 10.0, Some(&idle));
+        let mut drowned = idle;
+        drowned[home] = load(100, 40);
+        let away = r.route_live(&fam(1, 0.0, 7), 0.0, 10.0, Some(&drowned));
+        assert_ne!(away, home, "live overload must spill the family");
+        assert_eq!(r.spill_events(), 1);
+        // Recovery: once the home drains, affinity resumes (fingerprint
+        // never re-homed).
+        let healed = r.route_live(&fam(2, 0.0, 7), 0.0, 10.0, Some(&idle));
+        assert_eq!(healed, home, "the fingerprint stays home across a spill");
+        // Below the slack the guard holds even with mild imbalance.
+        let mut mild = idle;
+        mild[home] = load(Router::SPILL_DEPTH_SLACK, 0);
+        assert_eq!(r.route_live(&fam(3, 0.0, 7), 0.0, 10.0, Some(&mild)), home);
     }
 
     #[test]
@@ -257,10 +428,21 @@ mod tests {
 
     #[test]
     fn routing_policy_parse_roundtrip() {
-        for p in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PrefixAffinity] {
+        for p in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastOutstanding,
+            RoutingPolicy::LeastQueueDepth,
+            RoutingPolicy::PrefixAffinity,
+        ] {
             assert_eq!(RoutingPolicy::parse(p.label()), Some(p));
         }
         assert_eq!(RoutingPolicy::parse("RR"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("lqd"), Some(RoutingPolicy::LeastQueueDepth));
         assert_eq!(RoutingPolicy::parse("nope"), None);
+        // Only the live/feedback policies ask for engine snapshots.
+        assert!(RoutingPolicy::LeastQueueDepth.uses_live_state());
+        assert!(RoutingPolicy::PrefixAffinity.uses_live_state());
+        assert!(!RoutingPolicy::RoundRobin.uses_live_state());
+        assert!(!RoutingPolicy::LeastOutstanding.uses_live_state());
     }
 }

@@ -14,6 +14,15 @@
 //! Only the exposed remainder delays the user's first token and the decode
 //! pool's admission — the prefill instance itself is never stalled (the
 //! D2D/NIC engines move the bytes, not the compute tiles).
+//!
+//! Concurrent migrations are NOT free: the pools share one inter-instance
+//! fabric of [`KvTransferModel::parallel_flows`] equal channels, and
+//! [`SharedLink`] serializes transfers on it with busy-until accounting —
+//! a migration that finds every channel occupied queues behind the earliest
+//! one to free up, and the wait adds to its exposed handoff delay. The
+//! interleaved fleet schedules every handoff through one `SharedLink`, so
+//! link congestion shows up in TTFT exactly when migration traffic exceeds
+//! fabric capacity.
 
 use crate::arch::config::Dtype;
 use crate::workload::deepseek::DeepSeekConfig;
@@ -31,18 +40,24 @@ pub struct KvTransferModel {
     /// Fraction of the serialization hidden behind the tail of prefill /
     /// the next prefill chunk (layer-streamed transfer), in [0, 1].
     pub overlap_fraction: f64,
+    /// Equal channels of the shared inter-pool fabric ([`SharedLink`]):
+    /// this many migrations serialize concurrently at full per-flow
+    /// bandwidth; the rest queue.
+    pub parallel_flows: u32,
 }
 
 impl KvTransferModel {
     /// Inter-node class links between wafer instances: 16 GB/s effective
     /// per-flow (RDMA NIC class) with a 1 ms setup latency, half the
-    /// serialization hidden by layer streaming.
+    /// serialization hidden by layer streaming, four bonded flows on the
+    /// shared fabric.
     pub fn inter_node(ds: &DeepSeekConfig, dtype: Dtype) -> Self {
         KvTransferModel {
             bytes_per_token: Self::layout_bytes_per_token(ds, dtype),
             link_bandwidth_bytes_per_s: 16.0e9,
             base_latency_s: 1.0e-3,
             overlap_fraction: 0.5,
+            parallel_flows: 4,
         }
     }
 
@@ -54,6 +69,7 @@ impl KvTransferModel {
             link_bandwidth_bytes_per_s: 1.0e12,
             base_latency_s: 256e-9,
             overlap_fraction: 0.5,
+            parallel_flows: 8,
         }
     }
 
@@ -73,12 +89,82 @@ impl KvTransferModel {
         self.bytes_for(context_tokens) as f64 / self.link_bandwidth_bytes_per_s.max(1.0)
     }
 
-    /// Exposed handoff delay the migrating request experiences: base
-    /// latency plus the non-overlapped share of serialization. This delays
-    /// both the user-visible first token and the decode-pool arrival.
+    /// Exposed handoff delay the migrating request experiences on an idle
+    /// fabric: base latency plus the non-overlapped share of serialization.
+    /// This delays both the user-visible first token and the decode-pool
+    /// arrival. Under contention, [`SharedLink::schedule`] adds the queue
+    /// wait on top.
     pub fn exposed_seconds(&self, context_tokens: u64) -> f64 {
         let hidden = self.overlap_fraction.clamp(0.0, 1.0);
         self.base_latency_s + (1.0 - hidden) * self.serialization_seconds(context_tokens)
+    }
+}
+
+/// Busy-until serialization state of the shared inter-pool KV fabric.
+///
+/// The fabric is `parallel_flows` equal channels; a migration occupies the
+/// earliest-free channel for its full serialization time. When every
+/// channel is busy at the migration's ready time, the transfer *queues* —
+/// concurrent migrations no longer overlap for free — and the wait is
+/// exposed to the user on top of [`KvTransferModel::exposed_seconds`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedLink {
+    /// Per-channel busy-until times.
+    free_at: Vec<f64>,
+    /// Transfers scheduled so far.
+    pub transfers: u64,
+    /// Summed serialization time occupying the fabric.
+    pub busy_s: f64,
+    /// Summed queueing wait across transfers (0 on an uncontended fabric).
+    pub wait_s: f64,
+}
+
+impl SharedLink {
+    pub fn new(parallel_flows: u32) -> Self {
+        SharedLink {
+            free_at: vec![0.0; parallel_flows.max(1) as usize],
+            transfers: 0,
+            busy_s: 0.0,
+            wait_s: 0.0,
+        }
+    }
+
+    /// Schedule a migration of `context_tokens` that becomes ready (prefill
+    /// complete) at `ready_s`. Returns the exposed handoff delay: base
+    /// latency + queue wait + the non-overlapped serialization share.
+    /// Deterministic: the earliest-free channel wins, ties to the lowest
+    /// index.
+    pub fn schedule(&mut self, ready_s: f64, context_tokens: u64, model: &KvTransferModel) -> f64 {
+        let ser = model.serialization_seconds(context_tokens);
+        let mut ch = 0usize;
+        for (i, &t) in self.free_at.iter().enumerate().skip(1) {
+            if t < self.free_at[ch] {
+                ch = i;
+            }
+        }
+        let start = ready_s.max(self.free_at[ch]);
+        let wait = start - ready_s;
+        self.free_at[ch] = start + ser;
+        self.transfers += 1;
+        self.busy_s += ser;
+        self.wait_s += wait;
+        let hidden = model.overlap_fraction.clamp(0.0, 1.0);
+        model.base_latency_s + wait + (1.0 - hidden) * ser
+    }
+
+    /// Fraction of the fabric's capacity (all channels × horizon) spent
+    /// serializing transfers — the router-telemetry congestion signal.
+    /// Counts each transfer's FULL serialization time: a handoff becoming
+    /// ready near the end of the window books its whole transfer even
+    /// though part of it lands past the horizon, so under end-of-window
+    /// migration bursts this reads as an upper bound on within-horizon
+    /// occupancy (clamped at 1.0), not an exact time-in-window integral.
+    pub fn busy_fraction(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            (self.busy_s / (horizon_s * self.free_at.len() as f64)).min(1.0)
+        }
     }
 }
 
@@ -122,6 +208,62 @@ mod tests {
         let inter = KvTransferModel::inter_node(&ds, Dtype::Fp8);
         let d2d = KvTransferModel::d2d_class(&ds, Dtype::Fp8);
         assert!(d2d.exposed_seconds(4096) < inter.exposed_seconds(4096) / 50.0);
+    }
+
+    #[test]
+    fn shared_link_queues_concurrent_migrations() {
+        let ds = DeepSeekConfig::v3_671b();
+        // One flow, no base latency / overlap noise: exposure is pure
+        // serialization + queueing.
+        let model = KvTransferModel {
+            base_latency_s: 0.0,
+            overlap_fraction: 0.0,
+            parallel_flows: 1,
+            ..KvTransferModel::inter_node(&ds, Dtype::Fp8)
+        };
+        let ser = model.serialization_seconds(1024);
+        let mut link = SharedLink::new(model.parallel_flows);
+        // First transfer at t=0 rides an idle link.
+        let e0 = link.schedule(0.0, 1024, &model);
+        assert!((e0 - ser).abs() < 1e-15, "idle link exposes only serialization");
+        // A second transfer ready at the same instant queues a full slot.
+        let e1 = link.schedule(0.0, 1024, &model);
+        assert!((e1 - 2.0 * ser).abs() < 1e-12, "concurrent migration must wait: {e1} vs {ser}");
+        assert!((link.wait_s - ser).abs() < 1e-12);
+        // A transfer ready after the backlog drains pays no wait.
+        let e2 = link.schedule(10.0, 1024, &model);
+        assert!((e2 - ser).abs() < 1e-15);
+        assert_eq!(link.transfers, 3);
+        assert!((link.busy_s - 3.0 * ser).abs() < 1e-12);
+        assert!(link.busy_fraction(10.0) > 0.0 && link.busy_fraction(10.0) <= 1.0);
+        assert_eq!(link.busy_fraction(0.0), 0.0);
+    }
+
+    #[test]
+    fn shared_link_parallel_flows_absorb_bursts() {
+        let ds = DeepSeekConfig::v3_671b();
+        let model = KvTransferModel {
+            base_latency_s: 0.0,
+            overlap_fraction: 0.0,
+            ..KvTransferModel::inter_node(&ds, Dtype::Fp8)
+        };
+        assert_eq!(model.parallel_flows, 4);
+        let ser = model.serialization_seconds(2048);
+        let mut link = SharedLink::new(model.parallel_flows);
+        // Four simultaneous migrations each get their own channel …
+        for _ in 0..4 {
+            let e = link.schedule(0.0, 2048, &model);
+            assert!((e - ser).abs() < 1e-15, "within-capacity burst must not queue");
+        }
+        // … and the fifth queues behind the earliest.
+        let e = link.schedule(0.0, 2048, &model);
+        assert!((e - 2.0 * ser).abs() < 1e-12);
+        assert!((link.wait_s - ser).abs() < 1e-12);
+        // Uncontended exposure matches the closed-form model exactly.
+        let full = KvTransferModel::inter_node(&ds, Dtype::Fp8);
+        let mut idle = SharedLink::new(full.parallel_flows);
+        let e = idle.schedule(0.0, 4096, &full);
+        assert!((e - full.exposed_seconds(4096)).abs() < 1e-15);
     }
 
     #[test]

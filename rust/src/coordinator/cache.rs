@@ -1,0 +1,494 @@
+//! On-disk persistence for the simulation memo caches — cross-process
+//! memoization of kernel simulations and stage times.
+//!
+//! The in-memory [`KernelCache`] / [`StageTimeCache`] already make repeated
+//! sweeps cheap *within* one process; this module closes the ROADMAP's
+//! cross-process gap: `--cache-dir DIR` loads a JSON snapshot at startup
+//! and writes it back after the run, so a second `flatattention` invocation
+//! never re-simulates a kernel shape the first one already priced.
+//!
+//! Safety of a single shared file: every cache key embeds the full config
+//! identity it was computed under — the chip fingerprint, D2D parameters,
+//! model, fidelity, dtype, dataflow, plan and operating-point buckets — so
+//! entries for different systems can never alias (the same property that
+//! lets one in-memory cache back concurrent sweeps of different wafers).
+//! The file name carries the schema version ([`SCHEMA_VERSION`]); a file
+//! with a different embedded schema is ignored rather than misread.
+//!
+//! The JSON codec is a deliberately tiny, dependency-free subset (objects,
+//! arrays, strings with escapes, numbers): the offline build vendors no
+//! serde. Values round-trip exactly — floats are written in shortest
+//! `{:e}` form, which `f64::from_str` parses back bit-identically.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::KernelMetrics;
+use crate::multichip::parallelism::KernelCache;
+use crate::serve::sim::StageTimeCache;
+
+/// Bump when the serialized layout changes; mismatched files are ignored.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The shared cache pair every serving/cluster experiment draws on.
+#[derive(Clone, Default)]
+pub struct SimCaches {
+    pub kernels: KernelCache,
+    pub stages: StageTimeCache,
+}
+
+impl SimCaches {
+    pub fn fresh() -> Self {
+        Self::default()
+    }
+}
+
+/// Path of the cache file inside `dir` (keyed by schema version; the
+/// per-entry config hashes live in the keys themselves).
+pub fn cache_path(dir: &Path) -> PathBuf {
+    dir.join(format!("flatattention-cache-v{SCHEMA_VERSION}.json"))
+}
+
+/// Load the caches persisted under `dir`. A missing file (or one written
+/// by a different schema) yields fresh caches; a corrupt file is an error
+/// rather than a silent cold start.
+pub fn load(dir: &Path) -> Result<SimCaches> {
+    let path = cache_path(dir);
+    let caches = SimCaches::fresh();
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(caches),
+        Err(e) => return Err(e).with_context(|| format!("reading cache file {}", path.display())),
+    };
+    let doc = JsonValue::parse(&text).with_context(|| format!("parsing cache file {}", path.display()))?;
+    let obj = doc.as_object().context("cache root must be a JSON object")?;
+    match obj.iter().find(|(k, _)| k == "schema").map(|(_, v)| v) {
+        Some(v) if v.as_f64() == Some(SCHEMA_VERSION as f64) => {}
+        _ => return Ok(caches), // other schema (or none): start cold, don't misread
+    }
+    if let Some(stages) = obj.iter().find(|(k, _)| k == "stages").map(|(_, v)| v) {
+        for (key, v) in stages.as_object().context("'stages' must be an object")? {
+            let s = v.as_f64().with_context(|| format!("stage entry '{key}' is not a number"))?;
+            caches.stages.seed(key.clone(), s);
+        }
+    }
+    if let Some(kernels) = obj.iter().find(|(k, _)| k == "kernels").map(|(_, v)| v) {
+        for (key, v) in kernels.as_object().context("'kernels' must be an object")? {
+            let arr = v.as_array().with_context(|| format!("kernel entry '{key}' is not an array"))?;
+            let m = metrics_from_fields(arr)
+                .with_context(|| format!("kernel entry '{key}' has a malformed field list"))?;
+            caches.kernels.seed(key.clone(), m);
+        }
+    }
+    Ok(caches)
+}
+
+/// Persist the caches under `dir` (created if needed). Output is
+/// deterministic: entries are sorted by key, floats in shortest `{:e}`
+/// form. The write is atomic (temp file + rename in the same directory),
+/// so an interrupted or concurrent save can never leave a truncated file
+/// that would fail every subsequent `load`.
+pub fn save(dir: &Path, caches: &SimCaches) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating cache dir {}", dir.display()))?;
+    let mut out = String::new();
+    out.push_str(&format!("{{\"schema\":{SCHEMA_VERSION},\"stages\":{{"));
+    for (i, (k, s)) in caches.stages.entries().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_json_string(&mut out, k);
+        let _ = write!(out, ":{s:e}");
+    }
+    out.push_str("},\"kernels\":{");
+    for (i, (k, m)) in caches.kernels.entries().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_json_string(&mut out, k);
+        out.push(':');
+        write_metrics_fields(&mut out, m);
+    }
+    out.push_str("}}\n");
+    let path = cache_path(dir);
+    let tmp = dir.join(format!("flatattention-cache-v{SCHEMA_VERSION}.json.tmp-{}", std::process::id()));
+    std::fs::write(&tmp, out).with_context(|| format!("writing cache file {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("moving cache file into place at {}", path.display()))
+}
+
+/// Field order of a serialized [`KernelMetrics`] — integers for the u64
+/// fields, shortest-exponential floats for the rest.
+fn write_metrics_fields(out: &mut String, m: &KernelMetrics) {
+    let _ = write!(
+        out,
+        "[{},{:e},{:e},{:e},{:e},{},{},{:e},{:e},{},{},{},{},{}]",
+        m.cycles,
+        m.seconds,
+        m.tflops,
+        m.compute_utilization,
+        m.hbm_bw_utilization,
+        m.hbm_bytes,
+        m.noc_bytes,
+        m.matrix_utilization_active,
+        m.matrix_efficiency_active,
+        m.exposed[0],
+        m.exposed[1],
+        m.exposed[2],
+        m.exposed[3],
+        m.exposed[4],
+    );
+}
+
+fn metrics_from_fields(arr: &[JsonValue]) -> Result<KernelMetrics> {
+    if arr.len() != 14 {
+        bail!("expected 14 fields, got {}", arr.len());
+    }
+    let f = |i: usize| -> Result<f64> { arr[i].as_f64().with_context(|| format!("field {i} is not a number")) };
+    let u = |i: usize| -> Result<u64> { arr[i].as_u64().with_context(|| format!("field {i} is not a u64")) };
+    Ok(KernelMetrics {
+        cycles: u(0)?,
+        seconds: f(1)?,
+        tflops: f(2)?,
+        compute_utilization: f(3)?,
+        hbm_bw_utilization: f(4)?,
+        hbm_bytes: u(5)?,
+        noc_bytes: u(6)?,
+        matrix_utilization_active: f(7)?,
+        matrix_efficiency_active: f(8)?,
+        exposed: [u(9)?, u(10)?, u(11)?, u(12)?, u(13)?],
+    })
+}
+
+fn write_json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// The JSON subset the cache file uses. Object member order is preserved
+/// (a Vec, not a map) — duplicates cannot occur in our own output, and
+/// lookups are by linear scan over a 3-member root.
+#[derive(Debug, Clone, PartialEq)]
+enum JsonValue {
+    Number { raw: String },
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser { bytes: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    fn as_object(&self) -> Option<&[(String, JsonValue)]> {
+        match self {
+            JsonValue::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Number { raw } => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Number { raw } => raw.parse().ok(),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.bytes.len() && matches!(self.bytes[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes.get(self.i).copied().with_context(|| "unexpected end of input".to_string())
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!("expected '{}' at byte {}, found '{}'", b as char, self.i, got as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(JsonValue::String(self.string()?)),
+            b'-' | b'0'..=b'9' => self.number(),
+            other => bail!("unexpected '{}' at byte {}", other as char, self.i),
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(JsonValue::Object(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            let v = self.value()?;
+            members.push((key, v));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(JsonValue::Object(members));
+                }
+                other => bail!("expected ',' or '}}' at byte {}, found '{}'", self.i, other as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(JsonValue::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(JsonValue::Array(items));
+                }
+                other => bail!("expected ',' or ']' at byte {}, found '{}'", self.i, other as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.i) else { bail!("unterminated string") };
+            self.i += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.i) else { bail!("unterminated escape") };
+                    self.i += 1;
+                    match esc {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let end = self.i + 4;
+                            let hex = self
+                                .bytes
+                                .get(self.i..end)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .with_context(|| "truncated \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16).context("bad \\u escape")?;
+                            // The writer only emits \u for control chars; any
+                            // BMP scalar parses, surrogates are rejected.
+                            let c = char::from_u32(code).context("\\u escape is not a scalar value")?;
+                            s.push(c);
+                            self.i = end;
+                        }
+                        other => bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                _ => {
+                    // Collect the full UTF-8 sequence starting at b.
+                    let start = self.i - 1;
+                    let width = utf8_width(b);
+                    let end = start + width;
+                    let chunk = self
+                        .bytes
+                        .get(start..end)
+                        .and_then(|c| std::str::from_utf8(c).ok())
+                        .with_context(|| format!("invalid UTF-8 at byte {start}"))?;
+                    s.push_str(chunk);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.bytes.len()
+            && matches!(self.bytes[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let raw = std::str::from_utf8(&self.bytes[start..self.i]).expect("ascii number");
+        if raw.parse::<f64>().is_err() {
+            bail!("malformed number '{raw}' at byte {start}");
+        }
+        Ok(JsonValue::Number { raw: raw.to_string() })
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::SimFidelity;
+    use crate::multichip::d2d::WaferSystem;
+    use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
+    use crate::workload::deepseek::DeepSeekConfig;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("flatattention-cache-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn missing_file_loads_fresh() {
+        let dir = temp_dir("missing");
+        let c = load(&dir).expect("missing cache dir is a cold start, not an error");
+        assert!(c.kernels.is_empty());
+        assert!(c.stages.is_empty());
+    }
+
+    #[test]
+    fn populated_caches_round_trip_exactly() {
+        // Populate both caches with REAL simulation results (a decode
+        // evaluation fills kernel entries; stage keys use the production
+        // key shape with '|' separators), plus adversarial keys exercising
+        // every escape path.
+        let dir = temp_dir("roundtrip");
+        let caches = SimCaches::fresh();
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::with_cache(SimFidelity::Analytic, caches.kernels.clone());
+        ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        assert!(!caches.kernels.is_empty());
+        caches.stages.seed("chip|b128|kv4096".into(), 1.234e-3);
+        caches.stages.seed("weird \"quoted\" \\ key\twith\ncontrol \u{1} bytes".into(), 5.5e-7);
+        caches.stages.seed("unicode µs — key".into(), f64::MIN_POSITIVE);
+        save(&dir, &caches).expect("save");
+
+        let loaded = load(&dir).expect("load");
+        assert_eq!(loaded.stages.len(), caches.stages.len());
+        assert_eq!(loaded.kernels.len(), caches.kernels.len());
+        for ((ka, va), (kb, vb)) in caches.stages.entries().iter().zip(loaded.stages.entries()) {
+            assert_eq!(ka, &kb);
+            assert!(va.to_bits() == vb.to_bits(), "stage '{ka}' drifted: {va} vs {vb}");
+        }
+        for ((ka, ma), (kb, mb)) in caches.kernels.entries().iter().zip(loaded.kernels.entries()) {
+            assert_eq!(ka, &kb);
+            assert_eq!(ma.cycles, mb.cycles);
+            assert!(ma.seconds.to_bits() == mb.seconds.to_bits());
+            assert!(ma.tflops.to_bits() == mb.tflops.to_bits());
+            assert_eq!(ma.hbm_bytes, mb.hbm_bytes);
+            assert_eq!(ma.noc_bytes, mb.noc_bytes);
+            assert_eq!(ma.exposed, mb.exposed);
+        }
+        // A warmed evaluator over the loaded cache re-simulates nothing.
+        let n = loaded.kernels.len();
+        let mut ev2 = DecodeEvaluator::with_cache(SimFidelity::Analytic, loaded.kernels.clone());
+        ev2.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        assert_eq!(loaded.kernels.len(), n, "the persisted cache must serve every kernel");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_is_deterministic_and_live_entries_win() {
+        let dir = temp_dir("determinism");
+        let caches = SimCaches::fresh();
+        caches.stages.seed("b".into(), 2.0);
+        caches.stages.seed("a".into(), 1.0);
+        save(&dir, &caches).expect("save");
+        let first = std::fs::read_to_string(cache_path(&dir)).unwrap();
+        save(&dir, &caches).expect("save again");
+        assert_eq!(first, std::fs::read_to_string(cache_path(&dir)).unwrap());
+        assert!(first.find("\"a\"").unwrap() < first.find("\"b\"").unwrap(), "sorted by key");
+        // The atomic rename leaves no temp residue behind.
+        let residue: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+            .collect();
+        assert!(residue.is_empty(), "temp files left behind: {residue:?}");
+        // seed() never clobbers a live value.
+        let loaded = load(&dir).unwrap();
+        loaded.stages.seed("a".into(), 99.0);
+        assert_eq!(loaded.stages.entries()[0], ("a".to_string(), 1.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_is_loud_and_wrong_schema_is_cold() {
+        let dir = temp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(cache_path(&dir), "{\"schema\":1,\"stages\":{\"k\":").unwrap();
+        assert!(load(&dir).is_err(), "a truncated cache file must be an error");
+        std::fs::write(cache_path(&dir), "not json at all").unwrap();
+        assert!(load(&dir).is_err());
+        // A different schema parses fine but is ignored (cold start).
+        std::fs::write(cache_path(&dir), "{\"schema\":999,\"stages\":{\"k\":1.0}}").unwrap();
+        let c = load(&dir).expect("foreign schema is a cold start");
+        assert!(c.stages.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

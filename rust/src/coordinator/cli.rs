@@ -11,7 +11,7 @@ use crate::cluster::{FleetMode, RoutingPolicy};
 use crate::serve::scheduler::QueuePolicy;
 
 /// Parsed `flatattention serve` options.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeArgs {
     /// Shrink sweeps (test/CI mode).
     pub fast: bool,
@@ -28,6 +28,10 @@ pub struct ServeArgs {
     pub horizon_s: Option<f64>,
     /// Trace seed (`--seed`, default 2026).
     pub seed: u64,
+    /// On-disk kernel/stage cache directory (`--cache-dir`): loaded at
+    /// startup, written back after the run. Orthogonal to custom-run
+    /// dispatch — caching never changes a result.
+    pub cache_dir: Option<String>,
 }
 
 impl Default for ServeArgs {
@@ -40,6 +44,7 @@ impl Default for ServeArgs {
             rate_rps: None,
             horizon_s: None,
             seed: 2026,
+            cache_dir: None,
         }
     }
 }
@@ -96,6 +101,10 @@ impl ServeArgs {
                     };
                     i += 1;
                 }
+                "--cache-dir" => {
+                    out.cache_dir = Some(value(args, i, "--cache-dir")?.to_string());
+                    i += 1;
+                }
                 other => bail!("unknown serve option '{other}'; see `flatattention help`"),
             }
             i += 1;
@@ -104,15 +113,48 @@ impl ServeArgs {
     }
 }
 
+/// Inter-instance KV-handoff link class of a custom cluster run
+/// (`--link`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LinkClass {
+    /// RDMA-NIC-class inter-node fabric (the default).
+    #[default]
+    InterNode,
+    /// D2D-class links — instances on one wafer carrier.
+    D2dClass,
+}
+
+impl LinkClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            LinkClass::InterNode => "inter-node",
+            LinkClass::D2dClass => "d2d",
+        }
+    }
+
+    /// Parse a CLI link-class name (case-insensitive).
+    pub fn parse(s: &str) -> Option<LinkClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "inter-node" | "internode" | "nic" => Some(LinkClass::InterNode),
+            "d2d" | "d2d-class" | "wafer" => Some(LinkClass::D2dClass),
+            _ => None,
+        }
+    }
+}
+
 /// Parsed `flatattention cluster` options.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterArgs {
     /// Shrink sweeps (test/CI mode).
     pub fast: bool,
     /// Run the multi-model co-serving experiment instead of the pool sweep.
     pub models: bool,
+    /// Run the static-vs-live routing experiment instead of the pool sweep.
+    pub dynamic: bool,
     /// Arrival-routing policy for the custom fleet (`--routing`).
     pub routing: RoutingPolicy,
+    /// KV-handoff link class for the custom fleet (`--link`).
+    pub link: LinkClass,
     /// Prefill-pool size of a custom disaggregated fleet (`--prefill`).
     pub prefill: Option<u32>,
     /// Decode-pool size of a custom disaggregated fleet (`--decode`).
@@ -125,6 +167,10 @@ pub struct ClusterArgs {
     pub horizon_s: Option<f64>,
     /// Trace seed (`--seed`, default 2026).
     pub seed: u64,
+    /// On-disk kernel/stage cache directory (`--cache-dir`): loaded at
+    /// startup, written back after the run. Orthogonal to custom-run
+    /// dispatch — caching never changes a result.
+    pub cache_dir: Option<String>,
     /// Set when ANY custom-fleet flag was given, even with a value equal to
     /// its default — `--seed 2026` is still a request for a custom run.
     custom: bool,
@@ -135,13 +181,16 @@ impl Default for ClusterArgs {
         ClusterArgs {
             fast: false,
             models: false,
+            dynamic: false,
             routing: RoutingPolicy::PrefixAffinity,
+            link: LinkClass::InterNode,
             prefill: None,
             decode: None,
             instances: None,
             rate_rps: None,
             horizon_s: None,
             seed: 2026,
+            cache_dir: None,
             custom: false,
         }
     }
@@ -173,11 +222,21 @@ impl ClusterArgs {
             match args[i].as_str() {
                 "--fast" => out.fast = true,
                 "--models" => out.models = true,
+                "--dynamic" => out.dynamic = true,
                 "--routing" => {
                     let v = value(args, i, "--routing")?;
                     out.routing = match RoutingPolicy::parse(v) {
                         Some(p) => p,
-                        None => bail!("unknown routing policy '{v}' (expected round-robin|least-outstanding|prefix-affinity)"),
+                        None => bail!("unknown routing policy '{v}' (expected round-robin|least-outstanding|least-queue-depth|prefix-affinity)"),
+                    };
+                    out.custom = true;
+                    i += 1;
+                }
+                "--link" => {
+                    let v = value(args, i, "--link")?;
+                    out.link = match LinkClass::parse(v) {
+                        Some(l) => l,
+                        None => bail!("unknown link class '{v}' (expected inter-node|d2d)"),
                     };
                     out.custom = true;
                     i += 1;
@@ -224,6 +283,10 @@ impl ClusterArgs {
                     out.custom = true;
                     i += 1;
                 }
+                "--cache-dir" => {
+                    out.cache_dir = Some(value(args, i, "--cache-dir")?.to_string());
+                    i += 1;
+                }
                 other => bail!("unknown cluster option '{other}'; see `flatattention help`"),
             }
             i += 1;
@@ -239,11 +302,16 @@ impl ClusterArgs {
             }
             _ => {}
         }
-        // `--models` runs the canned co-serving experiment at its pinned
+        // `--models` / `--dynamic` run canned experiments at their pinned
         // parameters — silently ignoring custom fleet/rate/seed flags would
-        // hand back a report that reflects none of them.
-        if out.models && out.is_custom() {
-            bail!("--models runs the fixed cluster_models experiment; it cannot be combined with --routing/--prefill/--decode/--instances/--rate/--horizon/--seed");
+        // hand back a report that reflects none of them. (`--cache-dir` is
+        // fine: caching cannot change a result.)
+        if out.models && out.dynamic {
+            bail!("--models and --dynamic are distinct canned experiments; pick one");
+        }
+        if (out.models || out.dynamic) && out.is_custom() {
+            let which = if out.models { "--models" } else { "--dynamic" };
+            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed");
         }
         Ok(out)
     }
@@ -372,6 +440,42 @@ mod tests {
         assert!(e.to_string().contains("--models"), "{e}");
         assert!(ClusterArgs::parse(&argv(&["--models", "--rate", "500"])).is_err());
         assert!(ClusterArgs::parse(&argv(&["--models", "--fast"])).is_ok(), "--fast stays compatible");
+    }
+
+    #[test]
+    fn cache_dir_is_orthogonal_to_custom_dispatch() {
+        // --cache-dir is pure memoization plumbing: it must neither flip a
+        // run to custom nor conflict with the canned experiments.
+        let a = ServeArgs::parse(&argv(&["--cache-dir", "/tmp/c"])).unwrap();
+        assert_eq!(a.cache_dir.as_deref(), Some("/tmp/c"));
+        assert!(!a.is_custom());
+        let b = ClusterArgs::parse(&argv(&["--cache-dir", "/tmp/c", "--models"])).unwrap();
+        assert_eq!(b.cache_dir.as_deref(), Some("/tmp/c"));
+        assert!(b.models && !b.is_custom());
+        assert!(ServeArgs::parse(&argv(&["--cache-dir"])).is_err(), "missing value");
+        assert!(ClusterArgs::parse(&argv(&["--cache-dir"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn cluster_parses_link_and_live_routing() {
+        let a = ClusterArgs::parse(&argv(&["--routing", "least-queue-depth", "--link", "d2d"])).unwrap();
+        assert_eq!(a.routing, RoutingPolicy::LeastQueueDepth);
+        assert_eq!(a.link, LinkClass::D2dClass);
+        assert!(a.is_custom());
+        let b = ClusterArgs::parse(&argv(&["--routing", "lqd"])).unwrap();
+        assert_eq!(b.routing, RoutingPolicy::LeastQueueDepth);
+        assert_eq!(b.link, LinkClass::InterNode, "inter-node is the default link");
+        for l in [LinkClass::InterNode, LinkClass::D2dClass] {
+            assert_eq!(LinkClass::parse(l.label()), Some(l));
+        }
+        assert!(ClusterArgs::parse(&argv(&["--link", "carrier-pigeon"])).is_err());
+        // Canned experiments reject custom link/routing flags …
+        assert!(ClusterArgs::parse(&argv(&["--models", "--link", "d2d"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--dynamic", "--routing", "lqd"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--models", "--dynamic"])).is_err());
+        // … but --dynamic alone (with --fast) is a valid canned run.
+        let d = ClusterArgs::parse(&argv(&["--dynamic", "--fast"])).unwrap();
+        assert!(d.dynamic && d.fast && !d.is_custom());
     }
 
     #[test]

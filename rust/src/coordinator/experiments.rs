@@ -14,18 +14,21 @@ use crate::arch::noc::ChipResources;
 use crate::arch::tile::{gemm_cycles, gemm_utilization};
 use crate::baseline::gh200::{self, Bound, Gh200};
 use crate::baseline::soa::SoaSystem;
-use crate::cluster::{simulate_cluster, tpot_crossover, ClusterConfig, ClusterOutcome, FleetMode, RoutingPolicy};
+use crate::cluster::{
+    simulate_cluster, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome, FleetMode, Router,
+    RoutingPolicy, SharedPoolSpec,
+};
+use crate::coordinator::cache::SimCaches;
 use crate::coordinator::report::{fmt_time, stacked_bar, Report};
 use crate::dataflow::tiling::{l1_working_set, slice_utilization, Concurrency, FlatTiling};
 use crate::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
 use crate::metrics::{fmt_pct, KernelMetrics};
 use crate::multichip::d2d::WaferSystem;
-use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
+use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
 use crate::multichip::wafer::{best_under_tpot, ep_plans, parallel_batch_sweeps};
-use crate::serve::kv::KvCacheModel;
 use crate::serve::request::{generate_trace, thin_trace, PrefixProfile, TraceConfig, TrafficPattern};
 use crate::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
-use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig, StageTimeCache};
+use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig};
 use crate::sim::Graph;
 use crate::workload::attention::{AttentionShape, Phase};
 use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
@@ -50,13 +53,22 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("serve_load", "Serving: goodput + TTFT/TPOT percentiles vs offered load, 3 traffic patterns"),
         ("serve_policies", "Serving: KV admission policies (reserve vs on-demand+preempt) under memory pressure"),
         ("serve_prefix", "Serving: prefix-cache KV reuse + FCFS/SJF/priority scheduling on shared-prompt traffic"),
-        ("cluster_pools", "Cluster: prefill:decode pool ratios, KV-transfer overhead, colocated-vs-disaggregated crossover"),
-        ("cluster_models", "Cluster: two DeepSeek variants co-served on partitioned vs shared pools"),
+        ("cluster_pools", "Cluster: prefill:decode pool ratios, KV-link congestion, colocated-vs-disaggregated crossover"),
+        ("cluster_models", "Cluster: two DeepSeek variants co-served; interleaved shared pools vs the static bound"),
+        ("cluster_dynamic", "Cluster: static (arrival-sequence) vs live routing on the interleaved single-clock fleet"),
     ]
 }
 
-/// Run an experiment by id.
+/// Run an experiment by id over fresh caches.
 pub fn run(id: &str, fast: bool) -> Result<Report> {
+    run_with(id, fast, &SimCaches::fresh())
+}
+
+/// Run an experiment by id over shared caches — possibly loaded from a
+/// `--cache-dir` snapshot (`coordinator::cache`), so a warm second process
+/// re-simulates nothing. Cache reuse never changes a value: entries are
+/// pure simulation results keyed by their full config identity.
+pub fn run_with(id: &str, fast: bool, caches: &SimCaches) -> Result<Report> {
     Ok(match id {
         "fig1a" => fig1a(),
         "fig1b" => fig1b(),
@@ -66,17 +78,18 @@ pub fn run(id: &str, fast: bool) -> Result<Report> {
         "fig9" => fig9(fast),
         "fig11" => fig11(),
         "fig12" => fig12(fast),
-        "fig13a" => fig13a(fast),
+        "fig13a" => fig13a(fast, caches),
         "fig13b" => fig13b(fast),
-        "fig13c" => fig13c(fast),
+        "fig13c" => fig13c(fast, caches),
         "fig13d" => fig13d(fast),
         "tab2" => tab2(fast),
         "tab3" => tab3(),
-        "serve_load" => serve_load(fast),
-        "serve_policies" => serve_policies(fast),
-        "serve_prefix" => serve_prefix(fast),
-        "cluster_pools" => cluster_pools(fast),
-        "cluster_models" => cluster_models(fast),
+        "serve_load" => serve_load(fast, caches),
+        "serve_policies" => serve_policies(fast, caches),
+        "serve_prefix" => serve_prefix(fast, caches),
+        "cluster_pools" => cluster_pools(fast, caches),
+        "cluster_models" => cluster_models(fast, caches),
+        "cluster_dynamic" => cluster_dynamic(fast, caches),
         _ => bail!("unknown experiment '{id}'; see `flatattention list`"),
     })
 }
@@ -473,7 +486,7 @@ fn fig12(fast: bool) -> Report {
     r
 }
 
-fn fig13a(fast: bool) -> Report {
+fn fig13a(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let fidelity = SimFidelity::Analytic;
@@ -482,7 +495,7 @@ fn fig13a(fast: bool) -> Report {
     let plan = ParallelismPlan::new(32, 2);
     // Both dataflow series sweep concurrently over one shared kernel cache.
     let specs = [(plan, AttentionChoice::Flat), (plan, AttentionChoice::FlashMla)];
-    let sweeps = parallel_batch_sweeps(&sys, &ds, &specs, 4096, fidelity, &KernelCache::new());
+    let sweeps = parallel_batch_sweeps(&sys, &ds, &specs, 4096, fidelity, &caches.kernels);
     for ((_, choice), sweep) in specs.iter().zip(sweeps) {
         let choice = *choice;
         let sweep = if fast { sweep.into_iter().step_by(3).collect::<Vec<_>>() } else { sweep };
@@ -536,7 +549,7 @@ fn fig13b(fast: bool) -> Report {
     r
 }
 
-fn fig13c(fast: bool) -> Report {
+fn fig13c(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let mut r = Report::new("Fig. 13c — expert-parallelism sweep (FlatAttention)");
@@ -544,7 +557,7 @@ fn fig13c(fast: bool) -> Report {
     // One thread worker per EP plan, all hitting a common kernel cache
     // (plans share most GEMM/vector kernel shapes).
     let specs: Vec<_> = ep_plans().into_iter().map(|p| (p, AttentionChoice::Flat)).collect();
-    let sweeps = parallel_batch_sweeps(&sys, &ds, &specs, 4096, SimFidelity::Analytic, &KernelCache::new());
+    let sweeps = parallel_batch_sweeps(&sys, &ds, &specs, 4096, SimFidelity::Analytic, &caches.kernels);
     for ((plan, _), sweep) in specs.iter().zip(sweeps) {
         let plan = *plan;
         let sweep: Vec<_> = if fast { sweep.into_iter().step_by(3).collect() } else { sweep };
@@ -679,7 +692,7 @@ fn serve_outcome_row(o: &crate::serve::sim::ServeOutcome) -> Vec<String> {
     ]
 }
 
-fn serve_load(fast: bool) -> Report {
+fn serve_load(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let cfg = ServeConfig::default();
@@ -697,10 +710,9 @@ fn serve_load(fast: bool) -> Report {
         "pattern", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
         "tok/s", "goodput", "KV peak",
     ]);
-    let kernels = KernelCache::new();
-    let stages = StageTimeCache::new();
     for pattern in serve_patterns(horizon) {
-        let outcomes = load_sweep(&sys, &ds, &cfg, pattern, &rates, 2026, horizon, &kernels, &stages);
+        let outcomes =
+            load_sweep(&sys, &ds, &cfg, pattern, &rates, 2026, horizon, &caches.kernels, &caches.stages);
         for o in &outcomes {
             assert!(o.conserves_requests(), "request conservation violated");
             assert!(!o.kv_over_capacity, "KV overflow in {} @ {}", o.pattern, o.offered_rps);
@@ -723,7 +735,7 @@ fn serve_load(fast: bool) -> Report {
 
 /// Serving sweep at a caller-chosen queue policy / rate / horizon / seed
 /// (the `flatattention serve --policy/--rate/...` path).
-pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64) -> Report {
+pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let cfg = ServeConfig {
@@ -748,8 +760,8 @@ pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64) -> 
         horizon,
         policy.label(),
         rate,
-        &KernelCache::new(),
-        &StageTimeCache::new(),
+        &caches.kernels,
+        &caches.stages,
     );
     r.row(vec![
         policy.label().into(),
@@ -768,7 +780,7 @@ pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64) -> 
 /// Prefix-cache KV reuse + scheduling policies on shared-prompt traffic:
 /// the `serve_prefix` experiment. Deterministic at the fixed seed — the
 /// whole table (hit rates, TTFT deltas) replays bit-exactly.
-fn serve_prefix(fast: bool) -> Report {
+fn serve_prefix(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let horizon = if fast { 4.0 } else { 15.0 };
@@ -788,8 +800,8 @@ fn serve_prefix(fast: bool) -> Report {
         "config", "done", "hit rate", "evict", "TTFT mean", "TTFT p50", "p99 (ms)", "TPOT p99",
         "tok/s", "goodput",
     ]);
-    let kernels = KernelCache::new();
-    let stages = StageTimeCache::new();
+    let kernels = &caches.kernels;
+    let stages = &caches.stages;
     let mut baseline_ttft: Option<f64> = None;
     let mut prefix_ttft: Option<f64> = None;
     for (name, queue_policy, block) in [
@@ -806,8 +818,7 @@ fn serve_prefix(fast: bool) -> Report {
             },
             ..Default::default()
         };
-        let (o, _) =
-            simulate(&sys, &ds, &trace, &cfg, horizon, name, rate, &kernels, &stages);
+        let (o, _) = simulate(&sys, &ds, &trace, &cfg, horizon, name, rate, kernels, stages);
         assert!(o.conserves_requests(), "request conservation violated in {name}");
         assert!(!o.kv_over_capacity, "KV overflow in {name}");
         if name == "fcfs (no cache)" {
@@ -841,11 +852,12 @@ fn serve_prefix(fast: bool) -> Report {
     r
 }
 
-fn serve_policies(fast: bool) -> Report {
+fn serve_policies(fast: bool, caches: &SimCaches) -> Report {
     let ds = DeepSeekConfig::v3_671b();
     // Memory-constrained wafer (24 GiB HBM/chip): full-context reservations
     // cap residency well below the batch ceiling, so the two admission
-    // policies separate.
+    // policies separate. NOTE: the mutated chip is safe over the shared
+    // caches — every cache key embeds the chip fingerprint.
     let mut sys = WaferSystem::paper();
     sys.chip.hbm.capacity_gib_per_stack = 12;
     let horizon = if fast { 3.0 } else { 10.0 };
@@ -857,8 +869,6 @@ fn serve_policies(fast: bool) -> Report {
         "policy", "done", "backlog", "preempt", "TTFT p99 (ms)", "TPOT p99 (ms)", "tok/s", "goodput",
         "KV peak",
     ]);
-    let kernels = KernelCache::new();
-    let stages = StageTimeCache::new();
     for (name, policy) in [
         ("reserve-full", AdmissionPolicy::ReserveFull),
         ("on-demand+preempt", AdmissionPolicy::OnDemandPreempt),
@@ -867,7 +877,8 @@ fn serve_policies(fast: bool) -> Report {
             scheduler: crate::serve::scheduler::SchedulerConfig { policy, ..Default::default() },
             ..Default::default()
         };
-        let (o, _) = simulate(&sys, &ds, &trace, &cfg, horizon, name, rate, &kernels, &stages);
+        let (o, _) =
+            simulate(&sys, &ds, &trace, &cfg, horizon, name, rate, &caches.kernels, &caches.stages);
         assert!(o.conserves_requests());
         assert!(!o.kv_over_capacity);
         r.row(vec![
@@ -915,15 +926,23 @@ fn cluster_outcome_row(o: &ClusterOutcome) -> Vec<String> {
         format!("{:.0}", o.goodput_rps),
         o.migrated.to_string(),
         fmt_pct(o.transfer_overhead_share),
+        o.router_spills.to_string(),
+        fmt_pct(o.link_busy_frac),
     ]
 }
+
+/// Column headers matching [`cluster_outcome_row`].
+const CLUSTER_ROW_HEADER: [&str; 15] = [
+    "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
+    "tok/s", "goodput", "migrated", "transfer", "spills", "link busy",
+];
 
 /// `cluster_pools`: sweep the prefill:decode pool ratio at fixed fleet size
 /// over offered load, against the colocated baseline. Coupled thinning of
 /// one master trace makes the load axis a true refinement, and the whole
 /// table (including the crossover notes) replays bit-exactly at the fixed
 /// seed — the acceptance criterion's determinism anchor.
-fn cluster_pools(fast: bool) -> Report {
+fn cluster_pools(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let horizon = if fast { 3.0 } else { 10.0 };
@@ -933,31 +952,31 @@ fn cluster_pools(fast: bool) -> Report {
     let master = generate_trace(
         &TraceConfig::new(seed, TrafficPattern::Poisson, max_rate, horizon).with_prefixes(PrefixProfile::agentic()),
     );
-    let kernels = KernelCache::new();
-    let stages = StageTimeCache::new();
     let modes = [
         FleetMode::Colocated { instances: CLUSTER_FLEET },
         FleetMode::Disaggregated { prefill: 1, decode: 3 },
         FleetMode::Disaggregated { prefill: 2, decode: 2 },
         FleetMode::Disaggregated { prefill: 3, decode: 1 },
     ];
-    let mut r = Report::new("Cluster — prefill:decode pool ratios across a 4-instance wafer fleet");
+    let mut r = Report::new("Cluster — prefill:decode pool ratios across a 4-instance interleaved wafer fleet");
     r.preamble(format!(
-        "4× EP32-PP2 wafer instances, poisson traffic (70% shared prompts), horizon {horizon} s, seed {seed}; \
-         prefix-affinity arrival routing, least-outstanding decode routing, inter-node KV handoff"
+        "4× EP32-PP2 wafer instances on one event clock, poisson traffic (70% shared prompts), horizon {horizon} s, \
+         seed {seed}; prefix-affinity arrival routing (live spill guard), least-outstanding decode routing, \
+         inter-node KV handoff over the shared contended link"
     ));
-    r.preamble("transfer = exposed KV-handoff share of migrated requests' end-to-end latency");
-    r.header(&[
-        "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
-        "tok/s", "goodput", "migrated", "transfer",
-    ]);
+    r.preamble(
+        "transfer = exposed KV-handoff share of migrated requests' end-to-end latency; \
+         spills = affinity-overload rebalance events; link busy = shared-fabric serialization share",
+    );
+    r.header(&CLUSTER_ROW_HEADER);
     let mut curves: Vec<Vec<ClusterOutcome>> = Vec::new();
     for mode in modes {
         let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(CLUSTER_FLEET, &ds) };
         let mut curve = Vec::new();
         for &rate in &rates {
             let trace = thin_trace(&master, rate / max_rate, seed ^ 0xC0FF_EE00);
-            let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &kernels, &stages);
+            let (o, _) =
+                simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages);
             assert!(o.conserves_requests(), "request conservation violated in {} @ {rate}", o.label);
             assert!(!o.kv_over_capacity, "KV overflow in {} @ {rate}", o.label);
             r.row(cluster_outcome_row(&o));
@@ -989,26 +1008,34 @@ fn cluster_pools(fast: bool) -> Report {
 /// (shared: full-fleet parallelism, but co-resident weights shrink the KV
 /// budget and the per-chip batch ceiling is split between the models).
 ///
-/// Shared pools are a *static* co-residency model: each model's traffic is
-/// simulated in its own fleet pass, with the other model charged as
-/// reserved HBM plus half the batch ceiling (the slot split is the compute
-/// proxy). Cross-model tick interference — the 16B's chunks stretching the
-/// 671B's iterations on the same chips — is NOT billed; an interleaved
-/// single-clock fleet simulation is the ROADMAP follow-up, and the report
-/// says so in its notes.
-fn cluster_models(fast: bool) -> Report {
+/// Shared pools are simulated TWO ways. The *static bound* bills
+/// co-residency as reserved weights + the split batch ceiling only — each
+/// model runs its own isolated fleet pass, so cross-model tick interference
+/// is absent and the latencies are a lower bound (the pre-interleaving
+/// model). The *shared (interleaved)* rows run both models' engines on one
+/// chip clock per instance ([`simulate_shared_pool`]): a tick occupies the
+/// chip exclusively, so the 16B's iterations genuinely stretch the 671B's
+/// cadence and vice versa. The interference-dominance claim (interleaved
+/// latencies strictly above the static bound) is asserted here and pinned
+/// by a golden test.
+fn cluster_models(fast: bool, caches: &SimCaches) -> Report {
     let sys = WaferSystem::paper();
     let big = DeepSeekConfig::v3_671b();
     let small = DeepSeekConfig::v3_16b();
     let horizon = if fast { 3.0 } else { 10.0 };
     let (rate_big, rate_small) = if fast { (300.0, 600.0) } else { (1000.0, 2000.0) };
     let seed = 7100u64;
-    let kernels = KernelCache::new();
-    let stages = StageTimeCache::new();
+    let kernels = &caches.kernels;
+    let stages = &caches.stages;
     let trace_big = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate_big, horizon));
     let trace_small = generate_trace(&TraceConfig::new(seed ^ 0x51AA, TrafficPattern::Poisson, rate_small, horizon));
     let base = ServeConfig::default();
-    let co_weights = |other: &DeepSeekConfig| KvCacheModel::new(&sys, other, base.plan, base.dtype).weight_bytes_per_chip;
+    // The shared co-residency billing recipe (reserved co-resident weights
+    // + split batch ceiling) — identical in both shared arms, so the only
+    // delta between 'static bound' and 'interleaved' is tick interference.
+    // Routing is also held identical across ALL arms (live least-queue-
+    // depth), so no routing delta can masquerade as interference.
+    let shared_serve = |other: &DeepSeekConfig| crate::cluster::co_resident_serve(&sys, other, base);
 
     let mut r = Report::new("Cluster — two DeepSeek variants co-served: partitioned vs shared pools (4 instances)");
     r.preamble(format!(
@@ -1017,30 +1044,17 @@ fn cluster_models(fast: bool) -> Report {
     ));
     r.preamble(
         "partitioned: 3 dedicated instances for the 671B, 1 for the 16B; shared: both models resident on all 4 \
-         (halved batch ceiling, co-resident weights reserved out of the KV budget)",
+         (split batch ceiling, co-resident weights reserved out of the KV budget); 'static bound' omits tick \
+         interference, 'interleaved' serializes both models' ticks on each chip",
     );
     r.header(&[
         "scheme", "model", "done", "backlog", "TTFT p99 (ms)", "TPOT p99 (ms)", "tok/s", "goodput", "KV peak",
     ]);
-    let mut run = |scheme: &str,
-                   ds: &DeepSeekConfig,
-                   trace: &[crate::serve::request::Request],
-                   rate: f64,
-                   instances: u32,
-                   reserved: u64,
-                   split: bool| {
-        let mut ccfg = ClusterConfig::colocated(instances, ds);
-        ccfg.serve.reserved_hbm_bytes = reserved;
-        if split {
-            ccfg.serve.scheduler.max_batch_per_chip = (ccfg.serve.scheduler.max_batch_per_chip / 2).max(1);
-        }
-        let (o, _) = simulate_cluster(&sys, ds, trace, &ccfg, horizon, rate, &kernels, &stages);
-        assert!(o.conserves_requests(), "conservation violated: {scheme} {}", ds.name);
-        assert!(!o.kv_over_capacity, "KV overflow: {scheme} {}", ds.name);
+    let model_row = |r: &mut Report, scheme: &str, name: &str, o: &ClusterOutcome| {
         let kv_peak = o.instances.iter().map(|i| i.peak_kv_occupancy).fold(0.0f64, f64::max);
         r.row(vec![
             scheme.into(),
-            ds.name.clone(),
+            name.into(),
             o.completed.to_string(),
             o.in_flight.to_string(),
             format!("{:.0}", o.ttft_ms.p99),
@@ -1049,26 +1063,197 @@ fn cluster_models(fast: bool) -> Report {
             format!("{:.0}", o.goodput_rps),
             fmt_pct(kv_peak),
         ]);
+    };
+    let isolated = |scheme: &str,
+                    ds: &DeepSeekConfig,
+                    trace: &[crate::serve::request::Request],
+                    rate: f64,
+                    instances: u32,
+                    serve: ServeConfig| {
+        let mut ccfg = ClusterConfig::colocated(instances, ds);
+        ccfg.serve = serve;
+        // Same routing policy as the interleaved shared pool below, so the
+        // static-vs-interleaved comparison isolates interference.
+        ccfg.routing = RoutingPolicy::LeastQueueDepth;
+        let (o, _) = simulate_cluster(&sys, ds, trace, &ccfg, horizon, rate, kernels, stages);
+        assert!(o.conserves_requests(), "conservation violated: {scheme} {}", ds.name);
+        assert!(!o.kv_over_capacity, "KV overflow: {scheme} {}", ds.name);
         o
     };
-    run("partitioned", &big, &trace_big, rate_big, 3, 0, false);
-    run("partitioned", &small, &trace_small, rate_small, 1, 0, false);
-    run("shared", &big, &trace_big, rate_big, CLUSTER_FLEET, co_weights(&small), true);
-    run("shared", &small, &trace_small, rate_small, CLUSTER_FLEET, co_weights(&big), true);
+    let part_big = isolated("partitioned", &big, &trace_big, rate_big, 3, base);
+    model_row(&mut r, "partitioned", &big.name, &part_big);
+    let part_small = isolated("partitioned", &small, &trace_small, rate_small, 1, base);
+    model_row(&mut r, "partitioned", &small.name, &part_small);
+
+    // Static lower bound: reserved weights + split ceiling, no interference.
+    let static_big =
+        isolated("shared (static bound)", &big, &trace_big, rate_big, CLUSTER_FLEET, shared_serve(&small));
+    model_row(&mut r, "shared (static bound)", &big.name, &static_big);
+    let static_small =
+        isolated("shared (static bound)", &small, &trace_small, rate_small, CLUSTER_FLEET, shared_serve(&big));
+    model_row(&mut r, "shared (static bound)", &small.name, &static_small);
+
+    // Interleaved shared pool: both models' ticks serialize on each chip.
+    let specs = [
+        SharedPoolSpec { ds: &big, trace: &trace_big, serve: shared_serve(&small), offered_rps: rate_big },
+        SharedPoolSpec { ds: &small, trace: &trace_small, serve: shared_serve(&big), offered_rps: rate_small },
+    ];
+    let shared = simulate_shared_pool(
+        &sys,
+        &specs,
+        CLUSTER_FLEET,
+        RoutingPolicy::LeastQueueDepth,
+        Router::DEFAULT_DRAIN_RATE,
+        horizon,
+        kernels,
+        stages,
+    );
+    for ((o, _), name) in shared.iter().zip([&big.name, &small.name]) {
+        assert!(o.conserves_requests(), "conservation violated: shared interleaved {name}");
+        model_row(&mut r, "shared (interleaved)", name, o);
+    }
+    // The acceptance anchor: simulated interference strictly dominates the
+    // static lower bound for the big model (its ticks now wait out the
+    // 16B's chip time), and never undercuts it for the small one. At 4
+    // instances the arms' routing DECISIONS can still differ (live loads
+    // differ between an isolated and a co-resident fleet), so the strict
+    // ordering is asserted at the full-scale operating point only; the
+    // controlled 1-instance version — where the arms are identical except
+    // for interference — is pinned unconditionally by the golden test
+    // `golden_cluster_models_interference_dominates_static_bound`.
+    if !fast {
+        assert!(
+            shared[0].0.tpot_ms.p99 > static_big.tpot_ms.p99,
+            "interleaved co-residency must dominate the static bound: {} vs {}",
+            shared[0].0.tpot_ms.p99,
+            static_big.tpot_ms.p99
+        );
+        assert!(
+            shared[1].0.tpot_ms.p99 >= static_small.tpot_ms.p99,
+            "the 16B cannot be faster shared than isolated: {} vs {}",
+            shared[1].0.tpot_ms.p99,
+            static_small.tpot_ms.p99
+        );
+    }
+    r.note(format!(
+        "interference premium (p99 TPOT over the static bound): {} {:+.1}%, {} {:+.1}%",
+        big.name,
+        100.0 * (shared[0].0.tpot_ms.p99 - static_big.tpot_ms.p99) / static_big.tpot_ms.p99,
+        small.name,
+        100.0 * (shared[1].0.tpot_ms.p99 - static_small.tpot_ms.p99) / static_small.tpot_ms.p99,
+    ));
     r.note(
         "shared pools trade KV headroom and batch ceiling for full-fleet parallelism per model; \
          partitioned pools isolate the models at the cost of static capacity splits",
     );
     r.note(
-        "shared-pool caveat: co-residency is billed statically (reserved weights + halved batch ceiling); \
-         cross-model tick interference on a shared chip is not simulated, so shared-row latencies are a lower bound",
+        "co-residency interference is now SIMULATED: the interleaved rows serialize both models' ticks on one \
+         chip clock per instance, so the old static rows are exactly the lower bound they claimed to be",
     );
     r
 }
 
-/// One fleet simulation at a caller-chosen mode/routing/rate/horizon/seed
-/// (the `flatattention cluster --prefill/--decode/...` path).
-pub fn cluster_custom(mode: FleetMode, routing: RoutingPolicy, rate: f64, horizon: f64, seed: u64) -> Report {
+/// `cluster_dynamic`: static (arrival-sequence) vs live routing on the
+/// interleaved single-clock fleet. Static policies — round-robin and the
+/// fluid least-outstanding proxy — make every decision from the arrival
+/// sequence alone, exactly what the old two-phase simulation supported.
+/// Live least-queue-depth reads each instance's engine snapshot (queue +
+/// residents) at the decision time, a signal that only exists because all
+/// instances advance on one event clock. At and above the saturation knee
+/// the fluid proxy's belief diverges from actual per-instance progress
+/// (slot/KV pressure, decode residency), so live routing holds p99 TTFT
+/// strictly below static fluid routing — asserted here for both seeds.
+fn cluster_dynamic(fast: bool, caches: &SimCaches) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let horizon = if fast { 3.0 } else { 8.0 };
+    let rates: Vec<f64> = if fast { vec![1000.0, 8000.0] } else { vec![1000.0, 4000.0, 8000.0, 12000.0] };
+    let seeds: [u64; 2] = [2026, 909];
+    let policies = [
+        ("round-robin (static)", RoutingPolicy::RoundRobin),
+        ("fluid least-outstanding (static)", RoutingPolicy::LeastOutstanding),
+        ("live least-queue-depth", RoutingPolicy::LeastQueueDepth),
+    ];
+    let top = rates.iter().cloned().fold(0.0f64, f64::max);
+    let mut r = Report::new("Cluster — static vs live routing on the interleaved fleet (4 colocated instances)");
+    r.preamble(format!(
+        "4× EP32-PP2 colocated wafer instances on one event clock, poisson traffic, horizon {horizon} s, \
+         seeds {seeds:?}; the 4-instance fleet's knee sits near 8000 rps — the top points drive at/past it"
+    ));
+    r.preamble(
+        "static policies see only the arrival sequence (fluid work proxy); live least-queue-depth reads each \
+         instance's engine snapshot at the decision time",
+    );
+    r.header(&["seed", "routing", "rps", "done", "TTFT p50", "p99 (ms)", "TPOT p99", "goodput", "spills"]);
+    for &seed in &seeds {
+        let master = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, top, horizon));
+        let mut top_ttft_p99: Vec<f64> = Vec::new(); // per policy, at the top rate
+        for (name, policy) in policies {
+            let ccfg = ClusterConfig { routing: policy, ..ClusterConfig::colocated(CLUSTER_FLEET, &ds) };
+            for &rate in &rates {
+                let trace = thin_trace(&master, rate / top, seed ^ 0xC0FF_EE00);
+                let (o, _) =
+                    simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages);
+                assert!(o.conserves_requests(), "conservation violated: {name} seed {seed} @ {rate}");
+                assert!(!o.kv_over_capacity, "KV overflow: {name} seed {seed} @ {rate}");
+                r.row(vec![
+                    seed.to_string(),
+                    name.into(),
+                    format!("{rate:.0}"),
+                    o.completed.to_string(),
+                    format!("{:.0}", o.ttft_ms.p50),
+                    format!("{:.0}", o.ttft_ms.p99),
+                    format!("{:.1}", o.tpot_ms.p99),
+                    format!("{:.0}", o.goodput_rps),
+                    o.router_spills.to_string(),
+                ]);
+                if rate == top {
+                    top_ttft_p99.push(o.ttft_ms.p99);
+                }
+            }
+        }
+        let (fluid, live) = (top_ttft_p99[1], top_ttft_p99[2]);
+        // The acceptance anchor: live routing must beat the static fluid
+        // proxy on p99 TTFT at the overdriven point, on every seed. The
+        // ordering is a property of the full-scale operating point the
+        // preamble reasons about (the knee near 8000 rps over an 8 s
+        // horizon); the shrunken fast sweep reports the same comparison as
+        // a note without gating CI on a 3 s statistical window.
+        if !fast {
+            assert!(
+                live < fluid,
+                "live least-queue-depth must beat static fluid routing at {top:.0} rps (seed {seed}): \
+                 {live:.1} ms vs {fluid:.1} ms"
+            );
+        }
+        r.note(format!(
+            "seed {seed}: at {top:.0} rps live least-queue-depth p99 TTFT {live:.0} ms vs static fluid \
+             {fluid:.0} ms ({:+.1}%){}",
+            100.0 * (live - fluid) / fluid,
+            if fast { " [fast mode: informative only]" } else { "" }
+        ));
+    }
+    r.note(
+        "the fluid proxy balances deposited token work at an assumed drain rate; past the knee that belief \
+         diverges from actual per-instance progress (KV pressure, decode residency, queue aging), which only \
+         the live snapshot captures — the decode-side feedback the interleaved fleet makes possible",
+    );
+    r
+}
+
+/// One fleet simulation at a caller-chosen mode/routing/link/rate/horizon/
+/// seed (the `flatattention cluster --prefill/--decode/...` path).
+/// `d2d_link` swaps the inter-node KV-handoff fabric for the D2D-class one
+/// (instances on a single wafer carrier).
+pub fn cluster_custom(
+    mode: FleetMode,
+    routing: RoutingPolicy,
+    d2d_link: bool,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    caches: &SimCaches,
+) -> Report {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let trace = generate_trace(
@@ -1076,18 +1261,20 @@ pub fn cluster_custom(mode: FleetMode, routing: RoutingPolicy, rate: f64, horizo
     );
     let mut ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(mode.instances(), &ds) };
     ccfg.routing = routing;
-    let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &KernelCache::new(), &StageTimeCache::new());
+    if d2d_link {
+        ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
+    }
+    let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages);
     assert!(o.conserves_requests(), "request conservation violated");
     let mut r = Report::new("Cluster — custom fleet simulation (DeepSeek-v3-671B wafer instances)");
     r.preamble(format!(
-        "{} fleet, {} arrival routing, poisson {rate:.0} rps (70% shared prompts) over {horizon} s, seed {seed}",
+        "{} fleet, {} arrival routing, {} KV link, poisson {rate:.0} rps (70% shared prompts) over {horizon} s, \
+         seed {seed}",
         mode.label(),
-        routing.label()
+        routing.label(),
+        if d2d_link { "d2d-class" } else { "inter-node" },
     ));
-    r.header(&[
-        "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
-        "tok/s", "goodput", "migrated", "transfer",
-    ]);
+    r.header(&CLUSTER_ROW_HEADER);
     r.row(cluster_outcome_row(&o));
     for (i, s) in o.instances.iter().enumerate() {
         r.note(format!(
@@ -1101,6 +1288,13 @@ pub fn cluster_custom(mode: FleetMode, routing: RoutingPolicy, rate: f64, horizo
             s.prefix_hit_tokens
         ));
     }
+    r.note(format!(
+        "router: {} affinity spills; link: {} busy, {:.1} ms queued across {} migrations",
+        o.router_spills,
+        fmt_pct(o.link_busy_frac),
+        o.link_wait_s * 1e3,
+        o.migrated
+    ));
     r
 }
 

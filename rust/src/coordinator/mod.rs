@@ -1,4 +1,6 @@
-//! Experiment coordinator: registry, sweeps, reports, CLI parsing.
+//! Experiment coordinator: registry, sweeps, reports, CLI parsing, and the
+//! on-disk simulation-cache persistence behind `--cache-dir`.
+pub mod cache;
 pub mod cli;
 pub mod experiments;
 pub mod report;

@@ -26,25 +26,31 @@
 //! - [`multichip`] — the wafer-scale multi-die system model: D2D mesh,
 //!   PP / EP / hybrid parallelism, throughput + TPOT estimation.
 //! - [`serve`] — the request-level serving simulator layered on the decode
-//!   model: synthetic arrival traces (Poisson/bursty/diurnal, with shared
-//!   system-prompt populations and priority classes), KV-cache admission
-//!   from the MLA cache layout, prefix-cache KV reuse via a per-column
-//!   token-block trie (keyed exactly or by hashed token blocks), continuous
-//!   batching with chunked prefill billed by the *actual prefill dataflow
-//!   simulation* (per-chunk causal attention shapes at the request's
-//!   context offset), FCFS/SJF/priority queue policies, preemption, and
-//!   offered-load sweeps reporting TTFT/TPOT percentiles, prefix hit rates
-//!   and SLO goodput.
-//! - [`cluster`] — the fleet layer above `serve`: N wafer instances behind
-//!   a cluster router (round-robin / least-outstanding-work /
-//!   prefix-affinity), colocated or disaggregated into prefill and decode
-//!   pools with the MLA latent-KV handoff billed over an inter-instance
-//!   link model. Each instance runs the unmodified `serve` event loop, so
-//!   fleet TTFT/TPOT/goodput numbers stay dataflow-grounded.
+//!   model, built around the steppable `ServeEngine` (one `step()` per wave
+//!   iteration, mid-simulation `inject()`, live snapshots): synthetic
+//!   arrival traces (Poisson/bursty/diurnal, with shared system-prompt
+//!   populations and priority classes), KV-cache admission from the MLA
+//!   cache layout, prefix-cache KV reuse via a per-column token-block trie
+//!   (keyed exactly or by hashed token blocks), continuous batching with
+//!   chunked prefill billed by the *actual prefill dataflow simulation*
+//!   (per-chunk causal attention shapes at the request's context offset),
+//!   FCFS/SJF/priority queue policies, preemption, and offered-load sweeps
+//!   reporting TTFT/TPOT percentiles, prefix hit rates and SLO goodput.
+//! - [`cluster`] — the fleet layer above `serve`: N serving engines
+//!   interleaved on ONE global event clock behind a cluster router
+//!   (round-robin / fluid least-outstanding / prefix-affinity with a
+//!   live spill guard / live least-queue-depth), colocated or
+//!   disaggregated into prefill and decode pools with the MLA latent-KV
+//!   handoff serialized over a contended shared link (busy-until
+//!   queueing), and shared multi-model pools whose co-resident models'
+//!   ticks interleave on each chip (simulated interference). Every
+//!   instance is an unmodified `serve` engine, so fleet TTFT/TPOT/goodput
+//!   numbers stay dataflow-grounded.
 //! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
 //! - [`coordinator`] — the experiment registry (one entry per paper
-//!   figure/table, plus the `serve_*` serving experiments), sweep runner and
-//!   report emitters.
+//!   figure/table, plus the `serve_*`/`cluster_*` experiments), sweep
+//!   runner, report emitters, CLI parsers, and the on-disk kernel/stage
+//!   cache persistence behind `--cache-dir` (cross-process memoization).
 //!
 //! Python (JAX + Pallas) is build-time only: `make artifacts` lowers the
 //! attention models to HLO text once; the Rust binary then runs standalone.

@@ -4,12 +4,13 @@
 //!
 //! ```text
 //! flatattention list                         # list experiments
-//! flatattention experiment <id> [--fast]     # regenerate a paper figure/table
-//! flatattention all [--fast]                 # run every experiment
+//! flatattention experiment <id> [--fast] [--cache-dir DIR]
+//! flatattention all [--fast] [--cache-dir DIR]
 //! flatattention simulate [options]           # simulate one attention kernel
-//! flatattention serve [--fast] [--policies] [--prefix]
+//! flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]
 //!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
-//! flatattention cluster [--fast] [--models] [--routing P]
+//! flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]
+//!                       [--routing P] [--link inter-node|d2d]
 //!                       [--prefill N --decode N | --instances N]
 //!                       [--rate R] [--horizon S] [--seed N]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
@@ -23,14 +24,23 @@
 //! FCFS/SJF/priority queue policies.
 //!
 //! `cluster` drives the fleet layer above `serve` (experiment ids
-//! `cluster_pools` / `cluster_models`): multiple wafer instances behind a
-//! cluster router, colocated or disaggregated into prefill/decode pools
-//! with the MLA latent-KV handoff billed over an inter-instance link.
+//! `cluster_pools` / `cluster_models` / `cluster_dynamic`): multiple wafer
+//! instances interleaved on one event clock behind a cluster router (static
+//! or live least-queue-depth policies), colocated or disaggregated into
+//! prefill/decode pools with the MLA latent-KV handoff serialized over a
+//! contended inter-instance link.
+//!
+//! `--cache-dir DIR` persists the kernel/stage-time memo caches to a JSON
+//! snapshot in DIR: loaded before the run, written back after, so repeated
+//! invocations never re-simulate a kernel shape (cross-process
+//! memoization). Caching never changes a result — every entry is keyed by
+//! its full config identity.
 
 use anyhow::{bail, Context, Result};
 
 use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
-use flatattention::coordinator::cli::{ClusterArgs, ServeArgs};
+use flatattention::coordinator::cache::{self, SimCaches};
+use flatattention::coordinator::cli::{ClusterArgs, LinkClass, ServeArgs};
 use flatattention::coordinator::experiments;
 use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
 use flatattention::exec::functional;
@@ -64,15 +74,17 @@ fn run() -> Result<()> {
             println!();
             println!("usage:");
             println!("  flatattention list");
-            println!("  flatattention experiment <id> [--fast]");
-            println!("  flatattention all [--fast]");
+            println!("  flatattention experiment <id> [--fast] [--cache-dir DIR]");
+            println!("  flatattention all [--fast] [--cache-dir DIR]");
             println!("  flatattention simulate [--dataflow fa2|fa3|flat] [--phase prefill|decode]");
             println!("                         [--seq N] [--kv N] [--heads N] [--dim N] [--batch N]");
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
-            println!("  flatattention serve [--fast] [--policies] [--prefix]");
+            println!("  flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]");
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
-            println!("  flatattention cluster [--fast] [--models] [--routing round-robin|least-outstanding|prefix-affinity]");
-            println!("                        [--prefill N --decode N | --instances N] [--rate R] [--horizon S] [--seed N]");
+            println!("  flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]");
+            println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
+            println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
+            println!("                        [--rate R] [--horizon S] [--seed N]");
             println!("  flatattention verify");
             Ok(())
         }
@@ -84,17 +96,19 @@ fn run() -> Result<()> {
         }
         "experiment" => {
             let id = args.get(1).context("usage: flatattention experiment <id>")?;
-            let rep = experiments::run(id, flag("--fast"))?;
+            let (caches, cache_dir) = open_caches(opt("--cache-dir"))?;
+            let rep = experiments::run_with(id, flag("--fast"), &caches)?;
             rep.print();
-            Ok(())
+            persist_caches(cache_dir.as_deref(), &caches)
         }
         "all" => {
+            let (caches, cache_dir) = open_caches(opt("--cache-dir"))?;
             for (id, _) in experiments::list() {
-                let rep = experiments::run(id, flag("--fast"))?;
+                let rep = experiments::run_with(id, flag("--fast"), &caches)?;
                 rep.print();
                 println!();
             }
-            Ok(())
+            persist_caches(cache_dir.as_deref(), &caches)
         }
         "simulate" => {
             let chip = match opt("--chip").as_deref() {
@@ -151,38 +165,71 @@ fn run() -> Result<()> {
             // custom single sweep / the prefix-cache experiment), plus the
             // KV-policy comparison when --policies is given.
             let sargs = ServeArgs::parse(&args[1..])?;
+            let (caches, cache_dir) = open_caches(sargs.cache_dir.clone())?;
             if sargs.prefix {
-                experiments::run("serve_prefix", sargs.fast)?.print();
+                experiments::run_with("serve_prefix", sargs.fast, &caches)?.print();
             } else if sargs.is_custom() {
                 let rate = sargs.rate_rps.unwrap_or(1000.0);
                 let horizon = sargs.horizon_s.unwrap_or(if sargs.fast { 4.0 } else { 10.0 });
-                experiments::serve_custom(sargs.queue_policy, rate, horizon, sargs.seed).print();
+                experiments::serve_custom(sargs.queue_policy, rate, horizon, sargs.seed, &caches).print();
             } else {
-                experiments::run("serve_load", sargs.fast)?.print();
+                experiments::run_with("serve_load", sargs.fast, &caches)?.print();
             }
             if sargs.policies {
                 println!();
-                experiments::run("serve_policies", sargs.fast)?.print();
+                experiments::run_with("serve_policies", sargs.fast, &caches)?.print();
             }
-            Ok(())
+            persist_caches(cache_dir.as_deref(), &caches)
         }
         "cluster" => {
             // Shorthand for the fleet experiments: the pool-ratio sweep, the
-            // multi-model comparison (--models), or a single custom fleet.
+            // multi-model comparison (--models), the static-vs-live routing
+            // comparison (--dynamic), or a single custom fleet.
             let cargs = ClusterArgs::parse(&args[1..])?;
+            let (caches, cache_dir) = open_caches(cargs.cache_dir.clone())?;
             if cargs.models {
-                experiments::run("cluster_models", cargs.fast)?.print();
+                experiments::run_with("cluster_models", cargs.fast, &caches)?.print();
+            } else if cargs.dynamic {
+                experiments::run_with("cluster_dynamic", cargs.fast, &caches)?.print();
             } else if cargs.is_custom() {
                 let rate = cargs.rate_rps.unwrap_or(1000.0);
                 let horizon = cargs.horizon_s.unwrap_or(if cargs.fast { 4.0 } else { 10.0 });
-                experiments::cluster_custom(cargs.mode(), cargs.routing, rate, horizon, cargs.seed).print();
+                experiments::cluster_custom(
+                    cargs.mode(),
+                    cargs.routing,
+                    cargs.link == LinkClass::D2dClass,
+                    rate,
+                    horizon,
+                    cargs.seed,
+                    &caches,
+                )
+                .print();
             } else {
-                experiments::run("cluster_pools", cargs.fast)?.print();
+                experiments::run_with("cluster_pools", cargs.fast, &caches)?.print();
             }
-            Ok(())
+            persist_caches(cache_dir.as_deref(), &caches)
         }
         "verify" => verify(),
         other => bail!("unknown command '{other}'; try `flatattention help`"),
+    }
+}
+
+/// Load the on-disk caches when `--cache-dir` was given; fresh otherwise.
+fn open_caches(cache_dir: Option<String>) -> Result<(SimCaches, Option<String>)> {
+    match cache_dir {
+        Some(dir) => {
+            let caches = cache::load(std::path::Path::new(&dir))?;
+            Ok((caches, Some(dir)))
+        }
+        None => Ok((SimCaches::fresh(), None)),
+    }
+}
+
+/// Write the caches back when `--cache-dir` was given.
+fn persist_caches(cache_dir: Option<&str>, caches: &SimCaches) -> Result<()> {
+    match cache_dir {
+        Some(dir) => cache::save(std::path::Path::new(dir), caches),
+        None => Ok(()),
     }
 }
 

@@ -118,6 +118,21 @@ impl KernelCache {
         let m = f();
         self.inner.lock().unwrap().entry(key).or_insert(m).clone()
     }
+
+    /// Snapshot of every entry, sorted by key — the on-disk persistence
+    /// format (`coordinator::cache`) wants deterministic output.
+    pub fn entries(&self) -> Vec<(String, KernelMetrics)> {
+        let mut v: Vec<(String, KernelMetrics)> =
+            self.inner.lock().unwrap().iter().map(|(k, m)| (k.clone(), m.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Seed one entry (loading a persisted cache). Existing entries win —
+    /// a live simulation result is never overwritten by a disk value.
+    pub fn seed(&self, key: String, m: KernelMetrics) {
+        self.inner.lock().unwrap().entry(key).or_insert(m);
+    }
 }
 
 /// Decode evaluator with kernel-simulation memoization (identical kernel

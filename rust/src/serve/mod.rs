@@ -28,12 +28,24 @@
 //!   billed by the actual FlatAttention/FlashAttention dataflow simulation
 //!   of its causal attention shape at the request's context offset
 //!   (replacing PR 1's marginal-row approximation).
-//! - [`sim`] — the event loop combining memoized decode stage times from
+//! - [`sim`] — the steppable serving engine: [`sim::ServeEngine`] owns the
+//!   scheduler, the stage-time model (memoized decode stage times from
 //!   [`DecodeEvaluator`](crate::multichip::parallelism::DecodeEvaluator)
-//!   with [`prefill::PrefillEngine`] chunk billing, emitting TTFT/TPOT
-//!   p50/p95/p99, system tokens/s, SLO goodput and prefix-cache hit rates,
-//!   plus [`sim::load_sweep`] for goodput-vs-offered-load curves and
-//!   [`sim::saturation_knee`] detection.
+//!   plus [`prefill::PrefillEngine`] chunk billing), the clock and the
+//!   per-request records; `step()` advances exactly one wave iteration,
+//!   `inject()` accepts arrivals mid-simulation (the cluster fleet's hook
+//!   for routed arrivals and disaggregated KV handoffs), and `snapshot()`
+//!   exposes the live state (clock, queue depth, KV occupancy, active
+//!   users) that live routing policies read. [`sim::simulate`] is a thin
+//!   driver loop over the engine, emitting TTFT/TPOT p50/p95/p99, system
+//!   tokens/s, SLO goodput and prefix-cache hit rates; [`sim::load_sweep`]
+//!   produces goodput-vs-offered-load curves and [`sim::saturation_knee`]
+//!   finds the knee (robust to unsorted sweep inputs).
+//!
+//! The engine is the composition unit of the [`cluster`](crate::cluster)
+//! layer: the interleaved fleet is N engines on one global event clock,
+//! always stepping the one with the smallest local clock. The 1-instance
+//! equivalence (fleet == `simulate`, byte-identical) is pinned by test.
 //!
 //! Entry points: `flatattention serve` (CLI), experiment ids `serve_load`,
 //! `serve_policies` and `serve_prefix`, `examples/serving.rs`,
@@ -51,4 +63,7 @@ pub use request::{
     generate_trace, thin_trace, LengthProfile, PrefixProfile, Request, TraceConfig, TrafficPattern,
 };
 pub use scheduler::{AdmissionPolicy, PrefixKeying, QueuePolicy, Scheduler, SchedulerConfig};
-pub use sim::{load_sweep, saturation_knee, simulate, ServeConfig, ServeOutcome, StageTimeCache};
+pub use sim::{
+    load_sweep, saturation_knee, simulate, EngineSnapshot, ServeConfig, ServeEngine, ServeOutcome,
+    StageTimeCache, Step,
+};

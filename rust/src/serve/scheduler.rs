@@ -195,8 +195,11 @@ pub struct WaveEvents {
     pub decode_users: u32,
 }
 
-pub struct Scheduler<'t> {
-    trace: &'t [Request],
+pub struct Scheduler {
+    /// Owned request storage: the initial trace plus any requests injected
+    /// mid-simulation (`push_request`). Indices into it (`rec`) are stable —
+    /// the steppable `ServeEngine` relies on that to map its own records.
+    trace: Vec<Request>,
     cfg: SchedulerConfig,
     /// Expected tokens per decode iteration (MTP).
     tokens_per_iter: f64,
@@ -216,16 +219,16 @@ pub struct Scheduler<'t> {
     pub prefix_miss_tokens: u64,
 }
 
-impl<'t> Scheduler<'t> {
+impl Scheduler {
     pub fn new(
-        trace: &'t [Request],
+        trace: &[Request],
         kv: &KvCacheModel,
         waves: u32,
         cfg: SchedulerConfig,
         tokens_per_iter: f64,
     ) -> Self {
         Scheduler {
-            trace,
+            trace: trace.to_vec(),
             cfg,
             tokens_per_iter,
             columns: (0..kv.columns).map(|_| KvColumn::new(kv.column_capacity_tokens)).collect(),
@@ -240,6 +243,20 @@ impl<'t> Scheduler<'t> {
             prefix_hit_tokens: 0,
             prefix_miss_tokens: 0,
         }
+    }
+
+    /// Append a request to the owned storage (a mid-simulation injection —
+    /// a routed fleet arrival or a disaggregated KV handoff) and return its
+    /// record index. The request is NOT enqueued; the caller decides when
+    /// its arrival time has been reached.
+    pub fn push_request(&mut self, r: Request) -> usize {
+        self.trace.push(r);
+        self.trace.len() - 1
+    }
+
+    /// The stored request at record index `rec`.
+    pub fn request(&self, rec: usize) -> &Request {
+        &self.trace[rec]
     }
 
     pub fn enqueue_arrival(&mut self, rec: usize) {
@@ -550,6 +567,12 @@ impl<'t> Scheduler<'t> {
     /// Highest KV occupancy fraction reached on any column so far.
     pub fn peak_kv_occupancy(&self) -> f64 {
         self.columns.iter().map(KvColumn::peak_frac).fold(0.0, f64::max)
+    }
+
+    /// Highest *current* KV occupancy fraction across columns — the live
+    /// pressure signal the engine snapshot (and fleet routing) observes.
+    pub fn kv_occupancy_frac(&self) -> f64 {
+        self.columns.iter().map(KvColumn::occupancy_frac).fold(0.0, f64::max)
     }
 
     /// True iff some column currently holds more than its capacity (must

@@ -1,6 +1,17 @@
-//! The serving event loop: iteration-level simulation of continuous
-//! batching on the wafer-scale decode model, plus the offered-load sweep
-//! that produces the goodput / TTFT / TPOT curves.
+//! The serving engine: a resumable, steppable iteration-level simulation of
+//! continuous batching on the wafer-scale decode model, plus the thin
+//! `simulate` driver and the offered-load sweep that produces the goodput /
+//! TTFT / TPOT curves.
+//!
+//! [`ServeEngine`] owns the scheduler, the stage-time model, the clock and
+//! the per-request records. `step()` advances exactly one wave iteration
+//! (or idle-jumps the clock to the next pending arrival), `inject()`
+//! accepts arrivals mid-simulation — the hook the interleaved cluster fleet
+//! uses to deliver routed arrivals and disaggregated KV handoffs at their
+//! actual event times — and [`ServeEngine::snapshot`] exposes the live
+//! state (clock, queue depth, KV occupancy, active users) that live routing
+//! policies observe. `simulate()` is a driver loop over the engine and
+//! reproduces the pre-engine monolithic loop byte-identically.
 //!
 //! Time advances one *stage-step* per tick (every pipeline wave advances one
 //! stage; the wave wrapping from the last stage completes its iteration).
@@ -15,7 +26,8 @@
 //! [`KernelCache`] — the serving loop never re-simulates an identical
 //! kernel shape.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::arch::config::{Dtype, SimFidelity};
@@ -99,6 +111,21 @@ impl StageTimeCache {
         }
         let s = f();
         *self.inner.lock().unwrap().entry(key).or_insert(s)
+    }
+
+    /// Snapshot of every entry, sorted by key — the on-disk persistence
+    /// format (`coordinator::cache`) wants deterministic output.
+    pub fn entries(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> =
+            self.inner.lock().unwrap().iter().map(|(k, &s)| (k.clone(), s)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Seed one entry (loading a persisted cache). Existing entries win —
+    /// a live simulation result is never overwritten by a disk value.
+    pub fn seed(&self, key: String, seconds: f64) {
+        self.inner.lock().unwrap().entry(key).or_insert(seconds);
     }
 }
 
@@ -292,9 +319,308 @@ impl ServeOutcome {
     }
 }
 
-/// Run one serving simulation of `trace` against the wafer system. Stops at
-/// `horizon_s` (in-flight work is reported, not drained), so overload
-/// manifests as queue growth rather than unbounded simulation time.
+/// A not-yet-enqueued arrival the engine knows about: either preloaded from
+/// a trace or injected mid-simulation. Min-heap order: (arrival, seq) —
+/// seq is the injection order, so a preloaded (sorted) trace is consumed in
+/// exactly the order the pre-engine loop walked it.
+#[derive(Debug, Clone, Copy)]
+struct PendingArrival {
+    arrival_s: f64,
+    seq: u64,
+    rec: usize,
+}
+
+impl PartialEq for PendingArrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for PendingArrival {}
+impl PartialOrd for PendingArrival {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingArrival {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.arrival_s.total_cmp(&other.arrival_s).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// What one [`ServeEngine::step`] call did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Executed one wave iteration; record indices of first tokens and
+    /// completions stamped at the engine's (new) clock.
+    Ticked { first_tokens: Vec<usize>, completions: Vec<usize> },
+    /// No resident or queued work existed — the clock idle-jumped to the
+    /// next pending arrival inside the horizon (no iteration executed).
+    Jumped,
+    /// Nothing to do: past the horizon / tick budget, or fully drained and
+    /// awaiting an injection.
+    Idle,
+}
+
+impl Step {
+    /// True when the engine made progress (a driver loop keeps stepping).
+    pub fn advanced(&self) -> bool {
+        !matches!(self, Step::Idle)
+    }
+}
+
+/// Observable live state of a [`ServeEngine`] — what a cluster router's
+/// live policies (and the fleet event loop) read between steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineSnapshot {
+    pub clock_s: f64,
+    pub tick: u64,
+    /// Requests waiting in the scheduler queue.
+    pub queue_depth: usize,
+    /// Requests resident in (column, wave) cells (prefilling or decoding).
+    pub active_users: usize,
+    /// Highest current KV occupancy fraction across EP columns.
+    pub kv_occupancy_frac: f64,
+    /// Arrivals the engine has reached (enqueued) so far.
+    pub arrived: usize,
+    pub completed: usize,
+    /// Known future arrivals not yet enqueued.
+    pub pending_arrivals: usize,
+}
+
+/// Resumable, steppable serving simulation of ONE wafer instance.
+///
+/// The engine is the unit the interleaved cluster fleet composes: every
+/// instance is a `ServeEngine`, the fleet always steps the instance with
+/// the smallest local clock, and routed arrivals / KV handoffs are
+/// [`inject`](ServeEngine::inject)ed at their event times. A standalone
+/// simulation ([`simulate`]) preloads the whole trace and drives `step()`
+/// to completion.
+pub struct ServeEngine<'a> {
+    cfg: ServeConfig,
+    horizon_s: f64,
+    stage: StageTimes<'a>,
+    sched: Scheduler,
+    records: Vec<RequestRecord>,
+    pending: BinaryHeap<Reverse<PendingArrival>>,
+    next_seq: u64,
+    clock: f64,
+    tick: u64,
+    total_tokens: f64,
+    kv_violation: bool,
+    /// Arrivals enqueued so far (the simulation reached their arrival time).
+    arrived: usize,
+    completed: usize,
+}
+
+impl<'a> ServeEngine<'a> {
+    /// A fresh engine with no requests; feed it via [`inject`].
+    ///
+    /// [`inject`]: ServeEngine::inject
+    pub fn new(
+        sys: &'a WaferSystem,
+        ds: &'a DeepSeekConfig,
+        cfg: ServeConfig,
+        horizon_s: f64,
+        kernels: &KernelCache,
+        stages: &StageTimeCache,
+    ) -> Self {
+        let kv = KvCacheModel::with_reserved(sys, ds, cfg.plan, cfg.dtype, cfg.reserved_hbm_bytes);
+        let tpi = ds.tokens_per_iteration();
+        ServeEngine {
+            cfg,
+            horizon_s,
+            stage: StageTimes::new(sys, ds, cfg, kernels.clone(), stages.clone()),
+            sched: Scheduler::new(&[], &kv, cfg.plan.pp, cfg.scheduler, tpi),
+            records: Vec::new(),
+            pending: BinaryHeap::new(),
+            next_seq: 0,
+            clock: 0.0,
+            tick: 0,
+            total_tokens: 0.0,
+            kv_violation: false,
+            arrived: 0,
+            completed: 0,
+        }
+    }
+
+    /// Accept a request (at construction or mid-simulation) and return its
+    /// record index. The arrival may lie before the current clock — it is
+    /// then enqueued at the next tick boundary, exactly as a trace arrival
+    /// falling inside a tick would be. Pre-filled requests (disaggregated
+    /// KV handoffs) go through this same path; `Request::prefilled` tells
+    /// the scheduler to skip prefill on admission.
+    pub fn inject(&mut self, r: Request) -> usize {
+        let rec = self.sched.push_request(r);
+        debug_assert_eq!(rec, self.records.len());
+        self.records.push(RequestRecord {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.output_tokens,
+            first_token_s: None,
+            completion_s: None,
+        });
+        self.pending.push(Reverse(PendingArrival { arrival_s: r.arrival_s, seq: self.next_seq, rec }));
+        self.next_seq += 1;
+        rec
+    }
+
+    /// Advance exactly one iteration: enqueue due arrivals, admit/grow the
+    /// current wave, bill the tick by the memoized stage-time model, and
+    /// execute it — or idle-jump the clock to the next pending arrival.
+    /// Returns [`Step::Idle`] when the engine can do nothing (drained,
+    /// horizon reached, or awaiting injection).
+    pub fn step(&mut self) -> Step {
+        if self.clock >= self.horizon_s || self.tick >= self.cfg.max_ticks {
+            return Step::Idle;
+        }
+        while let Some(&Reverse(p)) = self.pending.peek() {
+            if p.arrival_s <= self.clock {
+                self.sched.enqueue_arrival(p.rec);
+                self.arrived += 1;
+                self.pending.pop();
+            } else {
+                break;
+            }
+        }
+        if self.sched.active_total() == 0 && self.sched.queue.is_empty() {
+            return match self.pending.peek() {
+                Some(&Reverse(p)) if p.arrival_s < self.horizon_s => {
+                    self.clock = p.arrival_s;
+                    Step::Jumped
+                }
+                _ => Step::Idle,
+            };
+        }
+        let pp = self.cfg.plan.pp.max(1) as u64;
+        let w = (self.tick % pp) as usize;
+        self.sched.admit_wave(w);
+        self.sched.grow_wave(w);
+        let (decode_users, prefill_tokens) = self.sched.peak_cell_load();
+        let prefill_ctx = self.sched.peak_prefill_context() as f64;
+        let kv_len = self.sched.max_context_tokens().max(1.0);
+        self.clock += self.stage.stage_seconds(decode_users, kv_len, prefill_tokens, prefill_ctx);
+        let ev = self.sched.execute_wave(w);
+        self.total_tokens += ev.tokens_produced;
+        for &rec in &ev.first_tokens {
+            self.records[rec].first_token_s.get_or_insert(self.clock);
+        }
+        for &rec in &ev.completions {
+            self.records[rec].completion_s = Some(self.clock);
+        }
+        self.completed += ev.completions.len();
+        self.kv_violation |= self.sched.kv_over_capacity();
+        self.tick += 1;
+        Step::Ticked { first_tokens: ev.first_tokens, completions: ev.completions }
+    }
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock
+    }
+
+    /// Push the local clock forward to `t` (no-op when `t` is in the past).
+    /// The multi-model shared-pool fleet uses this to model chip-exclusive
+    /// tick serialization: time a co-resident model spent on the chip has
+    /// passed for this engine too.
+    pub fn advance_clock_to(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// When this engine would next do something, on its own clock:
+    /// `Some(clock)` while work is resident or queued, the next pending
+    /// arrival time while drained but expecting one inside the horizon,
+    /// `None` when it is finished (or can only wait for an injection).
+    /// The interleaved fleet always steps the engine with the smallest
+    /// next-event time.
+    pub fn next_event_s(&self) -> Option<f64> {
+        if self.clock >= self.horizon_s || self.tick >= self.cfg.max_ticks {
+            return None;
+        }
+        if self.sched.active_total() > 0 || !self.sched.queue.is_empty() {
+            return Some(self.clock);
+        }
+        match self.pending.peek() {
+            Some(&Reverse(p)) if p.arrival_s < self.horizon_s => Some(p.arrival_s.max(self.clock)),
+            _ => None,
+        }
+    }
+
+    /// Live observable state (see [`EngineSnapshot`]).
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            clock_s: self.clock,
+            tick: self.tick,
+            queue_depth: self.sched.queue.len(),
+            active_users: self.sched.active_total(),
+            kv_occupancy_frac: self.sched.kv_occupancy_frac(),
+            arrived: self.arrived,
+            completed: self.completed,
+            pending_arrivals: self.pending.len(),
+        }
+    }
+
+    /// Requests ever injected (the engine's "offered" population).
+    pub fn offered(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Finalize into a [`ServeOutcome`] plus the per-request records.
+    pub fn finish(self, pattern_label: &str, offered_rps: f64) -> (ServeOutcome, Vec<RequestRecord>) {
+        let cfg = self.cfg;
+        let horizon_s = self.horizon_s;
+        let records = self.records;
+        let completed: Vec<&RequestRecord> = records.iter().filter(|r| r.completion_s.is_some()).collect();
+        // TTFT samples every request that got a first token — restricting to
+        // completed requests would survivorship-bias the overload points,
+        // where thousands start but don't finish inside the horizon.
+        let ttft: Vec<f64> = records.iter().filter_map(|r| r.ttft_ms()).collect();
+        let tpot: Vec<f64> = completed.iter().filter_map(|r| r.tpot_ms()).collect();
+        let within_slo = completed
+            .iter()
+            .filter(|r| {
+                r.ttft_ms().is_some_and(|t| t <= cfg.slo_ttft_ms)
+                    && r.tpot_ms().map_or(true, |t| t <= cfg.slo_tpot_ms)
+            })
+            .count();
+        let outcome = ServeOutcome {
+            pattern: pattern_label.to_string(),
+            offered_rps,
+            horizon_s,
+            offered: records.len(),
+            arrived: self.arrived,
+            completed: completed.len(),
+            rejected: self.sched.rejected.len(),
+            in_flight: self.sched.active_total(),
+            queued: self.sched.queue.len(),
+            completed_within_slo: within_slo,
+            ttft_ms: Percentiles::from_values(&ttft),
+            tpot_ms: Percentiles::from_values(&tpot),
+            system_tokens_per_s: if horizon_s > 0.0 { self.total_tokens / horizon_s } else { 0.0 },
+            goodput_rps: if horizon_s > 0.0 { within_slo as f64 / horizon_s } else { 0.0 },
+            peak_kv_occupancy: self.sched.peak_kv_occupancy(),
+            kv_over_capacity: self.kv_violation,
+            preemptions: self.sched.preemptions,
+            prefix_hit_tokens: self.sched.prefix_hit_tokens,
+            prefix_miss_tokens: self.sched.prefix_miss_tokens,
+            prefix_evictions: self.sched.prefix_evictions(),
+            ticks: self.tick,
+            elapsed_s: self.clock,
+        };
+        (outcome, records)
+    }
+}
+
+/// Run one serving simulation of `trace` against the wafer system: a thin
+/// driver loop over [`ServeEngine`] (preload the trace, step to quiescence).
+/// Stops at `horizon_s` (in-flight work is reported, not drained), so
+/// overload manifests as queue growth rather than unbounded simulation
+/// time.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate(
     sys: &WaferSystem,
@@ -307,100 +633,12 @@ pub fn simulate(
     kernels: &KernelCache,
     stages: &StageTimeCache,
 ) -> (ServeOutcome, Vec<RequestRecord>) {
-    let kv = KvCacheModel::with_reserved(sys, ds, cfg.plan, cfg.dtype, cfg.reserved_hbm_bytes);
-    let tpi = ds.tokens_per_iteration();
-    let pp = cfg.plan.pp.max(1) as u64;
-    let mut sched = Scheduler::new(trace, &kv, cfg.plan.pp, cfg.scheduler, tpi);
-    let mut stage = StageTimes::new(sys, ds, *cfg, kernels.clone(), stages.clone());
-    let mut records: Vec<RequestRecord> = trace
-        .iter()
-        .map(|r| RequestRecord {
-            id: r.id,
-            arrival_s: r.arrival_s,
-            prompt_tokens: r.prompt_tokens,
-            output_tokens: r.output_tokens,
-            first_token_s: None,
-            completion_s: None,
-        })
-        .collect();
-
-    let mut clock = 0.0f64;
-    let mut next_arrival = 0usize;
-    let mut tick = 0u64;
-    let mut total_tokens = 0.0f64;
-    let mut kv_violation = false;
-
-    while clock < horizon_s && tick < cfg.max_ticks {
-        while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-            sched.enqueue_arrival(next_arrival);
-            next_arrival += 1;
-        }
-        if sched.active_total() == 0 && sched.queue.is_empty() {
-            match trace.get(next_arrival) {
-                Some(r) if r.arrival_s < horizon_s => {
-                    clock = r.arrival_s;
-                    continue;
-                }
-                _ => break,
-            }
-        }
-        let w = (tick % pp) as usize;
-        sched.admit_wave(w);
-        sched.grow_wave(w);
-        let (decode_users, prefill_tokens) = sched.peak_cell_load();
-        let prefill_ctx = sched.peak_prefill_context() as f64;
-        let kv_len = sched.max_context_tokens().max(1.0);
-        clock += stage.stage_seconds(decode_users, kv_len, prefill_tokens, prefill_ctx);
-        let ev = sched.execute_wave(w);
-        total_tokens += ev.tokens_produced;
-        for rec in ev.first_tokens {
-            records[rec].first_token_s.get_or_insert(clock);
-        }
-        for rec in ev.completions {
-            records[rec].completion_s = Some(clock);
-        }
-        kv_violation |= sched.kv_over_capacity();
-        tick += 1;
+    let mut engine = ServeEngine::new(sys, ds, *cfg, horizon_s, kernels, stages);
+    for r in trace {
+        engine.inject(*r);
     }
-
-    let completed: Vec<&RequestRecord> = records.iter().filter(|r| r.completion_s.is_some()).collect();
-    // TTFT samples every request that got a first token — restricting to
-    // completed requests would survivorship-bias the overload points, where
-    // thousands start but don't finish inside the horizon.
-    let ttft: Vec<f64> = records.iter().filter_map(|r| r.ttft_ms()).collect();
-    let tpot: Vec<f64> = completed.iter().filter_map(|r| r.tpot_ms()).collect();
-    let within_slo = completed
-        .iter()
-        .filter(|r| {
-            r.ttft_ms().is_some_and(|t| t <= cfg.slo_ttft_ms)
-                && r.tpot_ms().map_or(true, |t| t <= cfg.slo_tpot_ms)
-        })
-        .count();
-    let outcome = ServeOutcome {
-        pattern: pattern_label.to_string(),
-        offered_rps,
-        horizon_s,
-        offered: trace.len(),
-        arrived: next_arrival,
-        completed: completed.len(),
-        rejected: sched.rejected.len(),
-        in_flight: sched.active_total(),
-        queued: sched.queue.len(),
-        completed_within_slo: within_slo,
-        ttft_ms: Percentiles::from_values(&ttft),
-        tpot_ms: Percentiles::from_values(&tpot),
-        system_tokens_per_s: if horizon_s > 0.0 { total_tokens / horizon_s } else { 0.0 },
-        goodput_rps: if horizon_s > 0.0 { within_slo as f64 / horizon_s } else { 0.0 },
-        peak_kv_occupancy: sched.peak_kv_occupancy(),
-        kv_over_capacity: kv_violation,
-        preemptions: sched.preemptions,
-        prefix_hit_tokens: sched.prefix_hit_tokens,
-        prefix_miss_tokens: sched.prefix_miss_tokens,
-        prefix_evictions: sched.prefix_evictions(),
-        ticks: tick,
-        elapsed_s: clock,
-    };
-    (outcome, records)
+    while engine.step().advanced() {}
+    engine.finish(pattern_label, offered_rps)
 }
 
 /// Sweep offered load for one traffic pattern. A single master trace at the
@@ -452,11 +690,15 @@ pub fn load_sweep(
     })
 }
 
-/// First offered load whose p99 TPOT violates the SLO — the saturation knee
-/// of a goodput curve (None if the sweep never saturates).
+/// Lowest offered load whose p99 TPOT violates the SLO — the saturation
+/// knee of a goodput curve (None if the sweep never saturates). Robust to
+/// unsorted or arbitrarily ordered sweep inputs: points are ranked by
+/// offered rate before the scan, so a shuffled curve yields the same knee.
 pub fn saturation_knee(outcomes: &[ServeOutcome], slo_tpot_ms: f64) -> Option<f64> {
-    outcomes
-        .iter()
+    let mut by_rate: Vec<&ServeOutcome> = outcomes.iter().collect();
+    by_rate.sort_by(|a, b| a.offered_rps.total_cmp(&b.offered_rps));
+    by_rate
+        .into_iter()
         .find(|o| o.completed > 0 && o.tpot_ms.p99 > slo_tpot_ms)
         .map(|o| o.offered_rps)
 }
@@ -577,6 +819,112 @@ mod tests {
     }
 
     #[test]
+    fn engine_step_driver_matches_manual_stepping() {
+        // The simulate() driver and a hand-rolled step loop over a second
+        // engine agree exactly — step() IS the simulation.
+        let trace = quick_trace(30.0, 1.5, 9);
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let (a, ra) = simulate(&sys, &ds, &trace, &cfg, 30.0, "p", 30.0, &kernels, &stages);
+        let mut eng = ServeEngine::new(&sys, &ds, cfg, 30.0, &kernels, &stages);
+        for r in &trace {
+            eng.inject(*r);
+        }
+        let mut ticks = 0u64;
+        let mut jumps = 0u64;
+        loop {
+            match eng.step() {
+                Step::Ticked { .. } => ticks += 1,
+                Step::Jumped => jumps += 1,
+                Step::Idle => break,
+            }
+        }
+        assert!(jumps >= 1, "a sparse trace must exercise the idle-jump path");
+        assert_eq!(ticks, a.ticks);
+        let (b, rb) = eng.finish("p", 30.0);
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn engine_inject_mid_simulation_is_processed() {
+        // Drain a small preloaded trace, then inject a request mid-flight:
+        // the engine resumes, serves it, and the snapshot tracks the whole
+        // life cycle.
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let mut eng = ServeEngine::new(&sys, &ds, cfg, 60.0, &kernels, &stages);
+        eng.inject(Request::new(0, 0.0, 256, 4));
+        while eng.step().advanced() {}
+        let s = eng.snapshot();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.active_users, 0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.pending_arrivals, 0);
+        let drained_clock = s.clock_s;
+        assert_eq!(eng.step(), Step::Idle, "a drained engine idles awaiting injection");
+
+        // Inject one request in the engine's past and one in its future.
+        let past = eng.inject(Request::new(1, drained_clock * 0.5, 128, 4));
+        let future = eng.inject(Request::new(2, drained_clock + 1.0, 128, 4));
+        while eng.step().advanced() {}
+        let s = eng.snapshot();
+        assert_eq!(s.completed, 3, "both injected requests must complete");
+        assert!(s.clock_s > drained_clock + 1.0);
+        let recs = eng.records();
+        assert!(recs[past].completion_s.is_some());
+        let f = recs[future].first_token_s.unwrap();
+        assert!(f > drained_clock + 1.0, "future arrival cannot start before its arrival time");
+        // A pre-filled injection (disaggregated handoff) completes without
+        // re-emitting its first token.
+        let prefilled = eng.inject(Request {
+            prefilled: true,
+            ..Request::new(3, eng.clock_s() + 0.1, 512, 8)
+        });
+        while eng.step().advanced() {}
+        let recs = eng.records();
+        assert!(recs[prefilled].completion_s.is_some());
+        assert!(recs[prefilled].first_token_s.is_none(), "token #1 was emitted upstream");
+    }
+
+    #[test]
+    fn engine_next_event_and_advance_clock() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let mut eng = ServeEngine::new(&sys, &ds, cfg, 10.0, &kernels, &stages);
+        assert_eq!(eng.next_event_s(), None, "an empty engine has no next event");
+        eng.inject(Request::new(0, 2.0, 128, 4));
+        assert_eq!(eng.next_event_s(), Some(2.0), "drained engine waits for its pending arrival");
+        assert_eq!(eng.step(), Step::Jumped);
+        assert_eq!(eng.clock_s(), 2.0);
+        assert_eq!(eng.next_event_s(), Some(2.0), "runnable engine fires at its own clock");
+        // Chip-exclusive serialization: the co-resident model held the chip
+        // until t=3; this engine's next tick cannot start earlier.
+        eng.advance_clock_to(3.0);
+        assert_eq!(eng.next_event_s(), Some(3.0));
+        eng.advance_clock_to(2.5);
+        assert_eq!(eng.clock_s(), 3.0, "advance_clock_to never rewinds");
+        while eng.step().advanced() {}
+        assert!(eng.snapshot().completed == 1);
+        // An arrival pinned beyond the horizon is never an event.
+        eng.inject(Request::new(1, 11.0, 128, 4));
+        assert_eq!(eng.next_event_s(), None);
+        assert_eq!(eng.step(), Step::Idle);
+        let (o, _) = eng.finish("p", 0.0);
+        assert_eq!(o.offered, 2);
+        assert_eq!(o.arrived, 1, "the beyond-horizon arrival is offered but never arrives");
+    }
+
+    #[test]
     fn saturation_knee_detection() {
         let mk = |rate: f64, p99: f64| {
             let mut o = run(&[], 1.0);
@@ -588,5 +936,14 @@ mod tests {
         let curve = vec![mk(100.0, 12.0), mk(200.0, 30.0), mk(400.0, 61.0), mk(800.0, 90.0)];
         assert_eq!(saturation_knee(&curve, 50.0), Some(400.0));
         assert_eq!(saturation_knee(&curve[..2], 50.0), None);
+        // Robustness: a shuffled curve yields the same knee — the scan
+        // ranks by offered rate instead of trusting input order.
+        let shuffled = vec![mk(800.0, 90.0), mk(100.0, 12.0), mk(400.0, 61.0), mk(200.0, 30.0)];
+        assert_eq!(saturation_knee(&shuffled, 50.0), Some(400.0));
+        // A violating point with no completions is skipped, not reported.
+        let mut ghost = mk(50.0, 99.0);
+        ghost.completed = 0;
+        let with_ghost = vec![ghost, mk(100.0, 12.0), mk(400.0, 61.0)];
+        assert_eq!(saturation_knee(&with_ghost, 50.0), Some(400.0));
     }
 }

@@ -1,19 +1,86 @@
-//! Cluster-layer invariants: fleet-wide request conservation across pools,
-//! fixed-seed determinism of the `cluster_pools` experiment (the acceptance
-//! criterion's byte-identical replay), the KV-transfer-bytes == latent-KV
-//! layout identity for every migrated request, and causal per-request
-//! timelines through prefill → transfer → decode.
+//! Cluster-layer invariants: the interleaved-fleet equivalence anchor
+//! (1 colocated instance == `serve::simulate`, byte-identical), fleet-wide
+//! request conservation across pools, fixed-seed determinism of the
+//! `cluster_pools` experiment (the acceptance criterion's byte-identical
+//! replay), the KV-transfer-bytes == latent-KV layout identity for every
+//! migrated request, and causal per-request timelines through prefill →
+//! transfer (with link congestion) → decode.
 
 use flatattention::cluster::{simulate_cluster, ClusterConfig, FleetMode};
 use flatattention::coordinator::experiments;
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
-use flatattention::serve::request::{generate_trace, TraceConfig, TrafficPattern};
-use flatattention::serve::sim::StageTimeCache;
+use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::sim::{simulate, StageTimeCache};
 use flatattention::workload::deepseek::DeepSeekConfig;
 
 fn trace(rate: f64, horizon: f64, seed: u64) -> Vec<flatattention::serve::request::Request> {
     generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon))
+}
+
+#[test]
+fn interleaved_single_instance_fleet_equals_serve_simulate_byte_identically() {
+    // The tentpole's equivalence anchor: a 1-instance colocated fleet on
+    // the interleaved event clock must reproduce the standalone serving
+    // simulator's ServeOutcome byte-identically — every record timestamp,
+    // every percentile, every counter. The fleet layer may add NOTHING an
+    // isolated instance would notice. Exercised on shared-prefix traffic
+    // too, so the prefix-affinity router and prefix-cache paths are in
+    // play, and across two seeds.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    for (seed, prefixes) in [(3u64, false), (71u64, true)] {
+        let mut tc = TraceConfig::new(seed, TrafficPattern::Poisson, 150.0, 4.0);
+        if prefixes {
+            tc = tc.with_prefixes(PrefixProfile::agentic());
+        }
+        let t = generate_trace(&tc);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let ccfg = ClusterConfig::colocated(1, &ds);
+        let (co, crecs) = simulate_cluster(&sys, &ds, &t, &ccfg, 4.0, 150.0, &kernels, &stages);
+        // Role label matches the fleet's per-instance pattern label so the
+        // two ServeOutcomes compare structurally field-for-field.
+        let (so, srecs) = simulate(&sys, &ds, &t, &ccfg.serve, 4.0, "colocated", 0.0, &kernels, &stages);
+        assert_eq!(crecs.len(), srecs.len());
+        for (c, s) in crecs.iter().zip(&srecs) {
+            assert_eq!(c.id, s.id, "seed {seed}");
+            assert_eq!(c.arrival_s, s.arrival_s);
+            assert_eq!(c.first_token_s, s.first_token_s, "seed {seed} id {}", c.id);
+            assert_eq!(c.completion_s, s.completion_s, "seed {seed} id {}", c.id);
+            assert_eq!(c.prefill_instance, 0);
+            assert_eq!(c.decode_instance, 0);
+            assert_eq!(c.transfer_bytes, 0);
+        }
+        // The fleet's single InstanceSummary is a projection of exactly the
+        // serve outcome …
+        assert_eq!(co.instances.len(), 1);
+        let inst = &co.instances[0];
+        assert_eq!(inst.routed, so.offered);
+        assert_eq!(inst.completed, so.completed);
+        assert_eq!(inst.rejected, so.rejected);
+        assert_eq!(inst.backlog, so.in_flight + so.queued);
+        assert_eq!(inst.preemptions, so.preemptions);
+        assert_eq!(inst.prefix_hit_tokens, so.prefix_hit_tokens);
+        assert_eq!(inst.tokens_per_s, so.system_tokens_per_s);
+        assert_eq!(inst.peak_kv_occupancy, so.peak_kv_occupancy);
+        // … and the fleet aggregates agree bit-for-bit (f64 equality — no
+        // tolerance).
+        assert_eq!(co.arrived, so.arrived);
+        assert_eq!(co.completed, so.completed);
+        assert_eq!(co.rejected, so.rejected);
+        assert_eq!(co.in_flight, so.in_flight + so.queued);
+        assert_eq!(co.completed_within_slo, so.completed_within_slo);
+        assert_eq!(co.ttft_ms, so.ttft_ms);
+        assert_eq!(co.tpot_ms, so.tpot_ms);
+        assert_eq!(co.fleet_tokens_per_s, so.system_tokens_per_s);
+        assert_eq!(co.goodput_rps, so.goodput_rps);
+        assert_eq!(co.kv_over_capacity, so.kv_over_capacity);
+        assert_eq!(co.preemptions, so.preemptions);
+        assert_eq!(co.migrated, 0);
+        assert_eq!(co.in_transfer, 0);
+        assert_eq!(co.link_busy_frac, 0.0);
+    }
 }
 
 #[test]
