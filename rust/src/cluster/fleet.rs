@@ -52,6 +52,7 @@ use crate::cluster::transfer::{KvTransferModel, SharedLink};
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::KernelCache;
+use crate::obs::{EngineObs, ObsBundle, ObsConfig, SeriesRow};
 use crate::serve::request::Request;
 use crate::serve::sim::{RequestRecord, ServeConfig, ServeEngine, ServeOutcome, StageTimeCache, Step};
 use crate::workload::deepseek::DeepSeekConfig;
@@ -323,6 +324,27 @@ pub fn simulate_cluster(
     kernels: &KernelCache,
     stages: &StageTimeCache,
 ) -> (ClusterOutcome, Vec<ClusterRecord>) {
+    let (outcome, records, _) = simulate_cluster_observed(sys, ds, trace, cfg, horizon_s, offered_rps, kernels, stages, None);
+    (outcome, records)
+}
+
+/// [`simulate_cluster`] with an optional observability sink: identical
+/// simulation (same outcome and records, bit for bit), plus per-instance
+/// trace recorders / gauge series (pid `0..n_entry` entry pool, then the
+/// decode pool) and a fleet lane (last pid) carrying router decisions,
+/// KV-handoff link spans and the shared-link busy series.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cluster_observed(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ClusterConfig,
+    horizon_s: f64,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+    obs: Option<ObsConfig>,
+) -> (ClusterOutcome, Vec<ClusterRecord>, Option<ObsBundle>) {
     cfg.mode.validate();
     let disagg = matches!(cfg.mode, FleetMode::Disaggregated { .. });
     let (n_entry, n_decode) = match cfg.mode {
@@ -349,6 +371,18 @@ pub fn simulate_cluster(
         (0..n_entry).map(|_| ServeEngine::new(sys, ds, cfg.serve, horizon_s, kernels, stages)).collect();
     let mut dec: Vec<ServeEngine> =
         (0..n_decode).map(|_| ServeEngine::new(sys, ds, cfg.serve, horizon_s, kernels, stages)).collect();
+    if let Some(ocfg) = obs {
+        let entry_name = if disagg { "prefill" } else { "instance" };
+        for (i, e) in entry.iter_mut().enumerate() {
+            e.attach_obs(EngineObs::new(i as u32, &format!("{entry_name}-{i}"), ocfg));
+        }
+        for (i, e) in dec.iter_mut().enumerate() {
+            e.attach_obs(EngineObs::new((n_entry + i) as u32, &format!("decode-{i}"), ocfg));
+        }
+    }
+    // The fleet lane (last pid): router decisions and KV-link transfers —
+    // events no single instance can see.
+    let mut fleet_obs: Option<EngineObs> = obs.map(|ocfg| EngineObs::new((n_entry + n_decode) as u32, "fleet", ocfg));
     // Per-engine record index → position in `trace`/`records`.
     let mut entry_pos: Vec<Vec<usize>> = vec![Vec::new(); n_entry];
     let mut dec_pos: Vec<Vec<usize>> = vec![Vec::new(); n_decode];
@@ -408,8 +442,19 @@ pub fn simulate_cluster(
                     r.prompt_tokens as f64 + r.output_tokens as f64
                 };
                 let loads = cfg.routing.uses_live_state().then(|| live_loads(&entry));
+                let spills_before = router.spill_events();
                 let i = router.route_live(&r, r.arrival_s, work, loads.as_deref());
                 records[next_arrival].prefill_instance = i as u32;
+                if let Some(f) = fleet_obs.as_mut() {
+                    f.counters.inc("routed");
+                    let spilled = router.spill_events() > spills_before;
+                    let mut args = vec![("req", r.id.to_string()), ("instance", i.to_string())];
+                    if spilled {
+                        f.counters.inc("router_spills");
+                        args.push(("spill", "affinity-overload".to_string()));
+                    }
+                    f.trace.instant(0, "route", "router", r.arrival_s, args);
+                }
                 if disagg {
                     // Truncate to prefill + first token; the KV then leaves.
                     entry[i].inject(Request { output_tokens: 1, ..r });
@@ -430,12 +475,44 @@ pub fn simulate_cluster(
                 let Reverse(h) = handoffs.pop().expect("peeked handoff vanished");
                 let orig = trace[h.pos];
                 let ctx = orig.prompt_tokens as u64;
+                let wait_before = link.wait_s;
                 let exposed = link.schedule(h.ready_s, ctx, &cfg.transfer);
                 let loads = cfg.decode_routing.uses_live_state().then(|| live_loads(&dec));
+                let spills_before = drouter.spill_events();
                 let di = drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads.as_deref());
                 records[h.pos].decode_instance = di as u32;
                 records[h.pos].transfer_bytes = cfg.transfer.bytes_for(ctx);
                 records[h.pos].transfer_s = exposed;
+                if let Some(f) = fleet_obs.as_mut() {
+                    f.counters.inc("handoffs");
+                    let spilled = drouter.spill_events() > spills_before;
+                    let mut args = vec![
+                        ("req", orig.id.to_string()),
+                        ("decode_instance", di.to_string()),
+                        ("bytes", records[h.pos].transfer_bytes.to_string()),
+                        ("link_wait_s", format!("{:.6}", link.wait_s - wait_before)),
+                    ];
+                    if spilled {
+                        f.counters.inc("router_spills");
+                        args.push(("spill", "affinity-overload".to_string()));
+                    }
+                    // The handoff span starts at prefill completion (the
+                    // source engine's clock when token #1 left) and ends at
+                    // the decode-pool landing — serialization + queue wait.
+                    f.trace.complete(h.pos as u64 + 1, "handoff", "link", h.ready_s, h.ready_s + exposed, args);
+                    if f.series.ready(h.ready_s) {
+                        f.series.record(SeriesRow {
+                            t_s: h.ready_s,
+                            pid: f.trace.pid(),
+                            queue_depth: handoffs.len(),
+                            active_users: 0,
+                            kv_frac: 0.0,
+                            kv_col_frac: Vec::new(),
+                            prefix_hit_rate: 0.0,
+                            link_busy_frac: link.busy_fraction(horizon_s),
+                        });
+                    }
+                }
                 // The user sees token #1 once the handoff lands. Sampling
                 // rule (mirrors the colocated side): every request whose
                 // prefill finished inside the simulated window contributes
@@ -476,6 +553,28 @@ pub fn simulate_cluster(
         }
     }
 
+    // Detach sinks before `finish` consumes the engines; engine recorders
+    // land in pid order (entry, decode), the fleet lane last. Cache
+    // counters are process-wide (the caches are shared), snapshotted here.
+    let bundle = obs.map(|_| {
+        let mut b = ObsBundle::new();
+        for e in entry.iter_mut().chain(dec.iter_mut()) {
+            if let Some(sink) = e.take_obs() {
+                b.push_engine(*sink);
+            }
+        }
+        if let Some(mut f) = fleet_obs.take() {
+            f.counters.add("migrated", migrated as u64);
+            f.trace.close_open(horizon_s);
+            b.push_engine(f);
+        }
+        b.counters.add("stage_cache_hits", stages.hits());
+        b.counters.add("stage_cache_misses", stages.misses());
+        b.counters.add("kernel_cache_hits", kernels.hits());
+        b.counters.add("kernel_cache_misses", kernels.misses());
+        b
+    });
+
     let entry_role: &'static str = if disagg { "prefill" } else { "colocated" };
     let entry_results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
         entry.into_iter().map(|e| e.finish(entry_role, 0.0)).collect();
@@ -512,7 +611,7 @@ pub fn simulate_cluster(
         entry_role,
         telemetry,
     );
-    (outcome, records)
+    (outcome, records, bundle)
 }
 
 /// Per-model serve config for co-residency on a shared instance: the

@@ -54,8 +54,8 @@ pub mod router;
 pub mod transfer;
 
 pub use fleet::{
-    co_resident_serve, simulate_cluster, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome,
-    ClusterRecord, FleetMode, InstanceSummary, SharedPoolSpec,
+    co_resident_serve, simulate_cluster, simulate_cluster_observed, simulate_shared_pool, tpot_crossover,
+    ClusterConfig, ClusterOutcome, ClusterRecord, FleetMode, InstanceSummary, SharedPoolSpec,
 };
 pub use router::{LiveLoad, Router, RoutingPolicy};
 pub use transfer::{KvTransferModel, SharedLink};

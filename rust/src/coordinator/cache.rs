@@ -32,6 +32,14 @@ use crate::serve::sim::StageTimeCache;
 /// Bump when the serialized layout changes; mismatched files are ignored.
 pub const SCHEMA_VERSION: u32 = 1;
 
+/// Per-section snapshot cap: at most this many stage entries and this many
+/// kernel entries are persisted. Long-lived cache dirs accumulating sweeps
+/// over many configs stay bounded instead of growing without limit; the
+/// in-memory caches are unaffected. Eviction is deterministic — entries
+/// are sorted by key, the first [`MAX_SNAPSHOT_ENTRIES`] survive — so two
+/// saves of the same caches still produce identical bytes.
+pub const MAX_SNAPSHOT_ENTRIES: usize = 4096;
+
 /// The shared cache pair every serving/cluster experiment draws on.
 #[derive(Clone, Default)]
 pub struct SimCaches {
@@ -87,14 +95,20 @@ pub fn load(dir: &Path) -> Result<SimCaches> {
 
 /// Persist the caches under `dir` (created if needed). Output is
 /// deterministic: entries are sorted by key, floats in shortest `{:e}`
-/// form. The write is atomic (temp file + rename in the same directory),
-/// so an interrupted or concurrent save can never leave a truncated file
-/// that would fail every subsequent `load`.
+/// form, at most [`MAX_SNAPSHOT_ENTRIES`] per section. The write is
+/// atomic (temp file + rename in the same directory), so an interrupted
+/// or concurrent save can never leave a truncated file that would fail
+/// every subsequent `load`.
 pub fn save(dir: &Path, caches: &SimCaches) -> Result<()> {
+    save_with_cap(dir, caches, MAX_SNAPSHOT_ENTRIES)
+}
+
+/// [`save`] with an explicit per-section entry cap (tests shrink it).
+fn save_with_cap(dir: &Path, caches: &SimCaches, cap: usize) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating cache dir {}", dir.display()))?;
     let mut out = String::new();
     out.push_str(&format!("{{\"schema\":{SCHEMA_VERSION},\"stages\":{{"));
-    for (i, (k, s)) in caches.stages.entries().iter().enumerate() {
+    for (i, (k, s)) in caches.stages.entries().iter().take(cap).enumerate() {
         if i > 0 {
             out.push(',');
         }
@@ -102,7 +116,7 @@ pub fn save(dir: &Path, caches: &SimCaches) -> Result<()> {
         let _ = write!(out, ":{s:e}");
     }
     out.push_str("},\"kernels\":{");
-    for (i, (k, m)) in caches.kernels.entries().iter().enumerate() {
+    for (i, (k, m)) in caches.kernels.entries().iter().take(cap).enumerate() {
         if i > 0 {
             out.push(',');
         }
@@ -474,6 +488,58 @@ mod tests {
         let loaded = load(&dir).unwrap();
         loaded.stages.seed("a".into(), 99.0);
         assert_eq!(loaded.stages.entries()[0], ("a".to_string(), 1.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_cap_evicts_deterministically_and_survivors_round_trip() {
+        let dir = temp_dir("cap");
+        let caches = SimCaches::fresh();
+        // 10 stage entries with keys whose lexicographic order differs from
+        // insertion order; survivors must be the first `cap` SORTED keys.
+        for i in (0..10u32).rev() {
+            caches.stages.seed(format!("stage-{i:02}"), 1.0 + f64::from(i) * 0.125);
+        }
+        save_with_cap(&dir, &caches, 4).expect("save");
+        let loaded = load(&dir).expect("load");
+        assert_eq!(loaded.stages.len(), 4, "cap must bound the snapshot");
+        let keys: Vec<String> = loaded.stages.entries().iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, ["stage-00", "stage-01", "stage-02", "stage-03"]);
+        // Survivors round-trip bit-exactly.
+        for (k, v) in loaded.stages.entries() {
+            let orig = caches.stages.entries().iter().find(|(ko, _)| *ko == k).unwrap().1;
+            assert!(v.to_bits() == orig.to_bits(), "'{k}' drifted: {orig} vs {v}");
+        }
+        // Two capped saves of the same caches produce identical bytes.
+        let first = std::fs::read_to_string(cache_path(&dir)).unwrap();
+        save_with_cap(&dir, &caches, 4).expect("save again");
+        assert_eq!(first, std::fs::read_to_string(cache_path(&dir)).unwrap());
+        // The default cap is generous: a normal save keeps everything.
+        save(&dir, &caches).expect("default save");
+        assert_eq!(load(&dir).unwrap().stages.len(), 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_cap_bounds_kernel_entries_too() {
+        let dir = temp_dir("cap-kernels");
+        let caches = SimCaches::fresh();
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::with_cache(SimFidelity::Analytic, caches.kernels.clone());
+        ev.evaluate(&sys, &ds, ParallelismPlan::new(32, 2), 128, 4096, AttentionChoice::Flat);
+        let total = caches.kernels.len();
+        assert!(total > 1, "need multiple kernel entries to exercise the cap");
+        save_with_cap(&dir, &caches, 1).expect("save");
+        let loaded = load(&dir).expect("load");
+        assert_eq!(loaded.kernels.len(), 1);
+        // The survivor is the lexicographically first key, bit-exact.
+        let (k, m) = &loaded.kernels.entries()[0];
+        let (ko, mo) = &caches.kernels.entries()[0];
+        assert_eq!(k, ko);
+        assert_eq!(m.cycles, mo.cycles);
+        assert!(m.seconds.to_bits() == mo.seconds.to_bits());
+        assert_eq!(m.exposed, mo.exposed);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -32,6 +32,14 @@ pub struct ServeArgs {
     /// startup, written back after the run. Orthogonal to custom-run
     /// dispatch — caching never changes a result.
     pub cache_dir: Option<String>,
+    /// Chrome-trace JSON output path (`--trace-out`). Orthogonal to
+    /// custom-run dispatch — observability never changes a result.
+    pub trace_out: Option<String>,
+    /// Gauge-series output path (`--series-out`; CSV, or JSON when the
+    /// path ends in `.json`).
+    pub series_out: Option<String>,
+    /// Prometheus text-format counter output path (`--metrics-out`).
+    pub metrics_out: Option<String>,
 }
 
 impl Default for ServeArgs {
@@ -45,6 +53,9 @@ impl Default for ServeArgs {
             horizon_s: None,
             seed: 2026,
             cache_dir: None,
+            trace_out: None,
+            series_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -57,6 +68,11 @@ impl ServeArgs {
             || self.rate_rps.is_some()
             || self.horizon_s.is_some()
             || self.seed != 2026
+    }
+
+    /// True when any observability export was requested.
+    pub fn obs_requested(&self) -> bool {
+        self.trace_out.is_some() || self.series_out.is_some() || self.metrics_out.is_some()
     }
 
     /// Parse the argument tail after `serve`. Unknown flags, bad policy
@@ -103,6 +119,18 @@ impl ServeArgs {
                 }
                 "--cache-dir" => {
                     out.cache_dir = Some(value(args, i, "--cache-dir")?.to_string());
+                    i += 1;
+                }
+                "--trace-out" => {
+                    out.trace_out = Some(value(args, i, "--trace-out")?.to_string());
+                    i += 1;
+                }
+                "--series-out" => {
+                    out.series_out = Some(value(args, i, "--series-out")?.to_string());
+                    i += 1;
+                }
+                "--metrics-out" => {
+                    out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
                     i += 1;
                 }
                 other => bail!("unknown serve option '{other}'; see `flatattention help`"),
@@ -171,6 +199,14 @@ pub struct ClusterArgs {
     /// startup, written back after the run. Orthogonal to custom-run
     /// dispatch — caching never changes a result.
     pub cache_dir: Option<String>,
+    /// Chrome-trace JSON output path (`--trace-out`). Orthogonal to
+    /// custom-run dispatch — observability never changes a result.
+    pub trace_out: Option<String>,
+    /// Gauge-series output path (`--series-out`; CSV, or JSON when the
+    /// path ends in `.json`).
+    pub series_out: Option<String>,
+    /// Prometheus text-format counter output path (`--metrics-out`).
+    pub metrics_out: Option<String>,
     /// Set when ANY custom-fleet flag was given, even with a value equal to
     /// its default — `--seed 2026` is still a request for a custom run.
     custom: bool,
@@ -191,6 +227,9 @@ impl Default for ClusterArgs {
             horizon_s: None,
             seed: 2026,
             cache_dir: None,
+            trace_out: None,
+            series_out: None,
+            metrics_out: None,
             custom: false,
         }
     }
@@ -203,6 +242,11 @@ impl ClusterArgs {
     /// appeared — explicitly-passed default values count).
     pub fn is_custom(&self) -> bool {
         self.custom
+    }
+
+    /// True when any observability export was requested.
+    pub fn obs_requested(&self) -> bool {
+        self.trace_out.is_some() || self.series_out.is_some() || self.metrics_out.is_some()
     }
 
     /// Fleet mode of a custom run (colocated 4 when nothing was specified).
@@ -285,6 +329,18 @@ impl ClusterArgs {
                 }
                 "--cache-dir" => {
                     out.cache_dir = Some(value(args, i, "--cache-dir")?.to_string());
+                    i += 1;
+                }
+                "--trace-out" => {
+                    out.trace_out = Some(value(args, i, "--trace-out")?.to_string());
+                    i += 1;
+                }
+                "--series-out" => {
+                    out.series_out = Some(value(args, i, "--series-out")?.to_string());
+                    i += 1;
+                }
+                "--metrics-out" => {
+                    out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
                     i += 1;
                 }
                 other => bail!("unknown cluster option '{other}'; see `flatattention help`"),
@@ -454,6 +510,28 @@ mod tests {
         assert!(b.models && !b.is_custom());
         assert!(ServeArgs::parse(&argv(&["--cache-dir"])).is_err(), "missing value");
         assert!(ClusterArgs::parse(&argv(&["--cache-dir"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn obs_flags_are_orthogonal_to_custom_dispatch() {
+        // Like --cache-dir, the observability exports are pure plumbing:
+        // they must neither flip a run to custom nor conflict with the
+        // canned experiments.
+        let a = ServeArgs::parse(&argv(&["--trace-out", "/tmp/t.json", "--metrics-out", "/tmp/m.prom"])).unwrap();
+        assert_eq!(a.trace_out.as_deref(), Some("/tmp/t.json"));
+        assert_eq!(a.metrics_out.as_deref(), Some("/tmp/m.prom"));
+        assert!(a.obs_requested());
+        assert!(!a.is_custom());
+        assert!(!ServeArgs::parse(&argv(&[])).unwrap().obs_requested());
+        let b = ClusterArgs::parse(&argv(&["--models", "--series-out", "/tmp/s.csv"])).unwrap();
+        assert_eq!(b.series_out.as_deref(), Some("/tmp/s.csv"));
+        assert!(b.models && b.obs_requested() && !b.is_custom());
+        let c = ClusterArgs::parse(&argv(&["--trace-out", "/tmp/t.json", "--rate", "500"])).unwrap();
+        assert!(c.is_custom() && c.obs_requested());
+        for bad in ["--trace-out", "--series-out", "--metrics-out"] {
+            assert!(ServeArgs::parse(&argv(&[bad])).is_err(), "{bad} missing value");
+            assert!(ClusterArgs::parse(&argv(&[bad])).is_err(), "{bad} missing value");
+        }
     }
 
     #[test]

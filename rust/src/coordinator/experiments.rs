@@ -15,8 +15,8 @@ use crate::arch::tile::{gemm_cycles, gemm_utilization};
 use crate::baseline::gh200::{self, Bound, Gh200};
 use crate::baseline::soa::SoaSystem;
 use crate::cluster::{
-    simulate_cluster, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome, FleetMode, Router,
-    RoutingPolicy, SharedPoolSpec,
+    simulate_cluster, simulate_cluster_observed, simulate_shared_pool, tpot_crossover, ClusterConfig,
+    ClusterOutcome, FleetMode, Router, RoutingPolicy, SharedPoolSpec,
 };
 use crate::coordinator::cache::SimCaches;
 use crate::coordinator::report::{fmt_time, stacked_bar, Report};
@@ -26,9 +26,10 @@ use crate::metrics::{fmt_pct, KernelMetrics};
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
 use crate::multichip::wafer::{best_under_tpot, ep_plans, parallel_batch_sweeps};
+use crate::obs::{ObsBundle, ObsConfig, ObsExports};
 use crate::serve::request::{generate_trace, thin_trace, PrefixProfile, TraceConfig, TrafficPattern};
 use crate::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
-use crate::serve::sim::{load_sweep, saturation_knee, simulate, ServeConfig};
+use crate::serve::sim::{load_sweep, saturation_knee, simulate, simulate_observed, ServeConfig};
 use crate::sim::Graph;
 use crate::workload::attention::{AttentionShape, Phase};
 use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
@@ -736,6 +737,20 @@ fn serve_load(fast: bool, caches: &SimCaches) -> Report {
 /// Serving sweep at a caller-chosen queue policy / rate / horizon / seed
 /// (the `flatattention serve --policy/--rate/...` path).
 pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64, caches: &SimCaches) -> Report {
+    serve_custom_observed(policy, rate, horizon, seed, caches, None).0
+}
+
+/// [`serve_custom`] with an optional observability sink: same simulation
+/// and report, plus the Chrome-trace / gauge-series / Prometheus exports
+/// when `obs` is set (the `flatattention serve --trace-out/...` path).
+pub fn serve_custom_observed(
+    policy: QueuePolicy,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    caches: &SimCaches,
+    obs: Option<ObsConfig>,
+) -> (Report, Option<ObsExports>) {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let cfg = ServeConfig {
@@ -752,17 +767,43 @@ pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64, cac
         "policy", "rps", "done", "backlog", "TTFT mean", "p99 (ms)", "TPOT p99 (ms)", "tok/s",
         "goodput",
     ]);
-    let (o, _) = simulate(
-        &sys,
-        &ds,
-        &trace,
-        &cfg,
-        horizon,
-        policy.label(),
-        rate,
-        &caches.kernels,
-        &caches.stages,
-    );
+    let (o, exports) = match obs {
+        Some(ocfg) => {
+            let (o, _, sink) = simulate_observed(
+                &sys,
+                &ds,
+                &trace,
+                &cfg,
+                horizon,
+                policy.label(),
+                rate,
+                &caches.kernels,
+                &caches.stages,
+                ocfg,
+            );
+            let mut bundle = ObsBundle::new();
+            bundle.push_engine(*sink);
+            bundle.counters.add("stage_cache_hits", caches.stages.hits());
+            bundle.counters.add("stage_cache_misses", caches.stages.misses());
+            bundle.counters.add("kernel_cache_hits", caches.kernels.hits());
+            bundle.counters.add("kernel_cache_misses", caches.kernels.misses());
+            (o, Some(bundle.exports()))
+        }
+        None => {
+            let (o, _) = simulate(
+                &sys,
+                &ds,
+                &trace,
+                &cfg,
+                horizon,
+                policy.label(),
+                rate,
+                &caches.kernels,
+                &caches.stages,
+            );
+            (o, None)
+        }
+    };
     r.row(vec![
         policy.label().into(),
         format!("{:.0}", o.offered_rps),
@@ -774,7 +815,7 @@ pub fn serve_custom(policy: QueuePolicy, rate: f64, horizon: f64, seed: u64, cac
         format!("{:.0}", o.system_tokens_per_s),
         format!("{:.0}", o.goodput_rps),
     ]);
-    r
+    (r, exports)
 }
 
 /// Prefix-cache KV reuse + scheduling policies on shared-prompt traffic:
@@ -928,13 +969,14 @@ fn cluster_outcome_row(o: &ClusterOutcome) -> Vec<String> {
         fmt_pct(o.transfer_overhead_share),
         o.router_spills.to_string(),
         fmt_pct(o.link_busy_frac),
+        format!("{:.1}", o.link_wait_s * 1e3),
     ]
 }
 
 /// Column headers matching [`cluster_outcome_row`].
-const CLUSTER_ROW_HEADER: [&str; 15] = [
+const CLUSTER_ROW_HEADER: [&str; 16] = [
     "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
-    "tok/s", "goodput", "migrated", "transfer", "spills", "link busy",
+    "tok/s", "goodput", "migrated", "transfer", "spills", "link busy", "wait (ms)",
 ];
 
 /// `cluster_pools`: sweep the prefill:decode pool ratio at fixed fleet size
@@ -1049,6 +1091,7 @@ fn cluster_models(fast: bool, caches: &SimCaches) -> Report {
     );
     r.header(&[
         "scheme", "model", "done", "backlog", "TTFT p99 (ms)", "TPOT p99 (ms)", "tok/s", "goodput", "KV peak",
+        "spills", "link busy",
     ]);
     let model_row = |r: &mut Report, scheme: &str, name: &str, o: &ClusterOutcome| {
         let kv_peak = o.instances.iter().map(|i| i.peak_kv_occupancy).fold(0.0f64, f64::max);
@@ -1062,6 +1105,8 @@ fn cluster_models(fast: bool, caches: &SimCaches) -> Report {
             format!("{:.0}", o.fleet_tokens_per_s),
             format!("{:.0}", o.goodput_rps),
             fmt_pct(kv_peak),
+            o.router_spills.to_string(),
+            fmt_pct(o.link_busy_frac),
         ]);
     };
     let isolated = |scheme: &str,
@@ -1184,7 +1229,10 @@ fn cluster_dynamic(fast: bool, caches: &SimCaches) -> Report {
         "static policies see only the arrival sequence (fluid work proxy); live least-queue-depth reads each \
          instance's engine snapshot at the decision time",
     );
-    r.header(&["seed", "routing", "rps", "done", "TTFT p50", "p99 (ms)", "TPOT p99", "goodput", "spills"]);
+    r.header(&[
+        "seed", "routing", "rps", "done", "TTFT p50", "p99 (ms)", "TPOT p99", "goodput", "spills",
+        "link busy", "wait (ms)",
+    ]);
     for &seed in &seeds {
         let master = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, top, horizon));
         let mut top_ttft_p99: Vec<f64> = Vec::new(); // per policy, at the top rate
@@ -1206,6 +1254,8 @@ fn cluster_dynamic(fast: bool, caches: &SimCaches) -> Report {
                     format!("{:.1}", o.tpot_ms.p99),
                     format!("{:.0}", o.goodput_rps),
                     o.router_spills.to_string(),
+                    fmt_pct(o.link_busy_frac),
+                    format!("{:.1}", o.link_wait_s * 1e3),
                 ]);
                 if rate == top {
                     top_ttft_p99.push(o.ttft_ms.p99);
@@ -1254,6 +1304,24 @@ pub fn cluster_custom(
     seed: u64,
     caches: &SimCaches,
 ) -> Report {
+    cluster_custom_observed(mode, routing, d2d_link, rate, horizon, seed, caches, None).0
+}
+
+/// [`cluster_custom`] with an optional observability sink: same fleet
+/// simulation and report, plus the Chrome-trace / gauge-series /
+/// Prometheus exports when `obs` is set (the `flatattention cluster
+/// --trace-out/...` path).
+#[allow(clippy::too_many_arguments)]
+pub fn cluster_custom_observed(
+    mode: FleetMode,
+    routing: RoutingPolicy,
+    d2d_link: bool,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    caches: &SimCaches,
+    obs: Option<ObsConfig>,
+) -> (Report, Option<ObsExports>) {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     let trace = generate_trace(
@@ -1264,7 +1332,9 @@ pub fn cluster_custom(
     if d2d_link {
         ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
     }
-    let (o, _) = simulate_cluster(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages);
+    let (o, _, bundle) =
+        simulate_cluster_observed(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages, obs);
+    let exports = bundle.map(|b| b.exports());
     assert!(o.conserves_requests(), "request conservation violated");
     let mut r = Report::new("Cluster — custom fleet simulation (DeepSeek-v3-671B wafer instances)");
     r.preamble(format!(
@@ -1295,7 +1365,7 @@ pub fn cluster_custom(
         o.link_wait_s * 1e3,
         o.migrated
     ));
-    r
+    (r, exports)
 }
 
 #[cfg(test)]

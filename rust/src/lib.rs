@@ -46,6 +46,15 @@
 //!   ticks interleave on each chip (simulated interference). Every
 //!   instance is an unmodified `serve` engine, so fleet TTFT/TPOT/goodput
 //!   numbers stay dataflow-grounded.
+//! - [`obs`] — deterministic observability threaded through `serve` and
+//!   `cluster`: a simulated-clock span/event recorder (request lifecycles,
+//!   engine waves, router decisions, KV-link transfers) exported as Chrome
+//!   `trace_event` JSON loadable in Perfetto, a fixed-interval gauge
+//!   sampler (queue depth, batch occupancy, per-EP-column KV utilization,
+//!   prefix hit rate, link busy fraction) with CSV/JSON export, and
+//!   monotonic counters rendered in Prometheus text format — off by
+//!   default and zero-cost when disabled (`--trace-out` / `--series-out` /
+//!   `--metrics-out` on the CLI).
 //! - [`baseline`] — GH200 roofline/efficiency baselines and SoA system rows.
 //! - [`coordinator`] — the experiment registry (one entry per paper
 //!   figure/table, plus the `serve_*`/`cluster_*` experiments), sweep
@@ -64,6 +73,7 @@ pub mod runtime;
 pub mod multichip;
 pub mod serve;
 pub mod cluster;
+pub mod obs;
 pub mod baseline;
 pub mod coordinator;
 pub mod metrics;

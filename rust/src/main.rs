@@ -9,10 +9,12 @@
 //! flatattention simulate [options]           # simulate one attention kernel
 //! flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]
 //!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
+//!                     [--trace-out F] [--series-out F] [--metrics-out F]
 //! flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]
 //!                       [--routing P] [--link inter-node|d2d]
 //!                       [--prefill N --decode N | --instances N]
 //!                       [--rate R] [--horizon S] [--seed N]
+//!                       [--trace-out F] [--series-out F] [--metrics-out F]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
 //!
@@ -35,6 +37,16 @@
 //! invocations never re-simulate a kernel shape (cross-process
 //! memoization). Caching never changes a result — every entry is keyed by
 //! its full config identity.
+//!
+//! `--trace-out F` / `--series-out F` / `--metrics-out F` export the
+//! deterministic observability layer ([`flatattention::obs`]): a Chrome
+//! `trace_event` JSON (load F in <https://ui.perfetto.dev>), a
+//! fixed-interval gauge series (CSV, or JSON when F ends in `.json`) and
+//! Prometheus text-format counters. On the custom `serve`/`cluster` paths
+//! the whole simulation is instrumented; the canned experiment paths still
+//! write valid (empty-trace) files carrying the real cache counters.
+//! Observability never changes a result — the instrumented run's outcome
+//! is bit-identical to the plain one.
 
 use anyhow::{bail, Context, Result};
 
@@ -45,6 +57,7 @@ use flatattention::coordinator::experiments;
 use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams};
 use flatattention::exec::functional;
 use flatattention::exec::tensor::Mat;
+use flatattention::obs::{ObsBundle, ObsConfig, ObsExports};
 use flatattention::runtime::artifacts::{artifact_path, Artifact};
 use flatattention::runtime::pjrt::HloExecutable;
 use flatattention::util::SplitMix64;
@@ -81,11 +94,17 @@ fn run() -> Result<()> {
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
             println!("  flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]");
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
+            println!("                      [--trace-out F] [--series-out F] [--metrics-out F]");
             println!("  flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]");
             println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
             println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
             println!("                        [--rate R] [--horizon S] [--seed N]");
+            println!("                        [--trace-out F] [--series-out F] [--metrics-out F]");
             println!("  flatattention verify");
+            println!();
+            println!("  --trace-out F    Chrome trace_event JSON (open in ui.perfetto.dev)");
+            println!("  --series-out F   per-instance gauge series (CSV; JSON when F ends in .json)");
+            println!("  --metrics-out F  Prometheus text-format counters");
             Ok(())
         }
         "list" => {
@@ -166,18 +185,30 @@ fn run() -> Result<()> {
             // KV-policy comparison when --policies is given.
             let sargs = ServeArgs::parse(&args[1..])?;
             let (caches, cache_dir) = open_caches(sargs.cache_dir.clone())?;
+            let obs_cfg = sargs.obs_requested().then(ObsConfig::default);
+            let mut obs_written = false;
             if sargs.prefix {
                 experiments::run_with("serve_prefix", sargs.fast, &caches)?.print();
             } else if sargs.is_custom() {
                 let rate = sargs.rate_rps.unwrap_or(1000.0);
                 let horizon = sargs.horizon_s.unwrap_or(if sargs.fast { 4.0 } else { 10.0 });
-                experiments::serve_custom(sargs.queue_policy, rate, horizon, sargs.seed, &caches).print();
+                let (rep, exports) = experiments::serve_custom_observed(sargs.queue_policy, rate, horizon, sargs.seed, &caches, obs_cfg);
+                rep.print();
+                if let Some(e) = exports {
+                    write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &e)?;
+                    obs_written = true;
+                }
             } else {
                 experiments::run_with("serve_load", sargs.fast, &caches)?.print();
             }
             if sargs.policies {
                 println!();
                 experiments::run_with("serve_policies", sargs.fast, &caches)?.print();
+            }
+            if sargs.obs_requested() && !obs_written {
+                // Canned experiment path: still honor the flags with valid
+                // (empty-trace) files carrying the real cache counters.
+                write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &fallback_exports(&caches))?;
             }
             persist_caches(cache_dir.as_deref(), &caches)
         }
@@ -187,6 +218,8 @@ fn run() -> Result<()> {
             // comparison (--dynamic), or a single custom fleet.
             let cargs = ClusterArgs::parse(&args[1..])?;
             let (caches, cache_dir) = open_caches(cargs.cache_dir.clone())?;
+            let obs_cfg = cargs.obs_requested().then(ObsConfig::default);
+            let mut obs_written = false;
             if cargs.models {
                 experiments::run_with("cluster_models", cargs.fast, &caches)?.print();
             } else if cargs.dynamic {
@@ -194,7 +227,7 @@ fn run() -> Result<()> {
             } else if cargs.is_custom() {
                 let rate = cargs.rate_rps.unwrap_or(1000.0);
                 let horizon = cargs.horizon_s.unwrap_or(if cargs.fast { 4.0 } else { 10.0 });
-                experiments::cluster_custom(
+                let (rep, exports) = experiments::cluster_custom_observed(
                     cargs.mode(),
                     cargs.routing,
                     cargs.link == LinkClass::D2dClass,
@@ -202,10 +235,18 @@ fn run() -> Result<()> {
                     horizon,
                     cargs.seed,
                     &caches,
-                )
-                .print();
+                    obs_cfg,
+                );
+                rep.print();
+                if let Some(e) = exports {
+                    write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &e)?;
+                    obs_written = true;
+                }
             } else {
                 experiments::run_with("cluster_pools", cargs.fast, &caches)?.print();
+            }
+            if cargs.obs_requested() && !obs_written {
+                write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &fallback_exports(&caches))?;
             }
             persist_caches(cache_dir.as_deref(), &caches)
         }
@@ -231,6 +272,41 @@ fn persist_caches(cache_dir: Option<&str>, caches: &SimCaches) -> Result<()> {
         Some(dir) => cache::save(std::path::Path::new(dir), caches),
         None => Ok(()),
     }
+}
+
+/// Write whichever observability exports were requested.
+fn write_obs(
+    trace_out: &Option<String>,
+    series_out: &Option<String>,
+    metrics_out: &Option<String>,
+    exports: &ObsExports,
+) -> Result<()> {
+    if let Some(p) = trace_out {
+        std::fs::write(p, &exports.trace_json).with_context(|| format!("writing trace to {p}"))?;
+        println!("trace   → {p}");
+    }
+    if let Some(p) = series_out {
+        let body = if p.ends_with(".json") { &exports.series_json } else { &exports.series_csv };
+        std::fs::write(p, body).with_context(|| format!("writing series to {p}"))?;
+        println!("series  → {p}");
+    }
+    if let Some(p) = metrics_out {
+        std::fs::write(p, &exports.metrics_text).with_context(|| format!("writing metrics to {p}"))?;
+        println!("metrics → {p}");
+    }
+    Ok(())
+}
+
+/// Counters-only exports for the canned experiment paths: a valid (empty)
+/// Chrome trace and gauge series plus the real kernel/stage cache
+/// counters, so the requested files always exist and always parse.
+fn fallback_exports(caches: &SimCaches) -> ObsExports {
+    let mut b = ObsBundle::new();
+    b.counters.add("stage_cache_hits", caches.stages.hits());
+    b.counters.add("stage_cache_misses", caches.stages.misses());
+    b.counters.add("kernel_cache_hits", caches.kernels.hits());
+    b.counters.add("kernel_cache_misses", caches.kernels.misses());
+    b.exports()
 }
 
 /// Functional + PJRT verification: the Rust FlatAttention executor (the

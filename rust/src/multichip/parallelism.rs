@@ -92,6 +92,9 @@ pub struct DecodeOutcome {
 #[derive(Clone, Default)]
 pub struct KernelCache {
     inner: Arc<Mutex<HashMap<String, KernelMetrics>>>,
+    /// Shared (hits, misses) lookup counters — all clones report into one
+    /// pair, so the observability snapshot sees the whole process.
+    stats: Arc<Mutex<(u64, u64)>>,
 }
 
 impl KernelCache {
@@ -113,10 +116,22 @@ impl KernelCache {
     /// memo with the decode evaluator.
     pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> KernelMetrics) -> KernelMetrics {
         if let Some(m) = self.inner.lock().unwrap().get(&key) {
+            self.stats.lock().unwrap().0 += 1;
             return m.clone();
         }
+        self.stats.lock().unwrap().1 += 1;
         let m = f();
         self.inner.lock().unwrap().entry(key).or_insert(m).clone()
+    }
+
+    /// Lookups served from the memo (shared across clones).
+    pub fn hits(&self) -> u64 {
+        self.stats.lock().unwrap().0
+    }
+
+    /// Lookups that had to simulate (shared across clones).
+    pub fn misses(&self) -> u64 {
+        self.stats.lock().unwrap().1
     }
 
     /// Snapshot of every entry, sorted by key — the on-disk persistence

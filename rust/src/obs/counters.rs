@@ -1,0 +1,98 @@
+//! Monotonic event counters with a Prometheus text-exposition snapshot.
+//!
+//! Counter names are static identifiers (`admitted`, `preempted`,
+//! `stage_cache_hits`, …) rendered as `flatattention_<name>_total`. A
+//! `BTreeMap` keeps the snapshot sorted — exports are byte-deterministic.
+
+use std::collections::BTreeMap;
+
+/// A set of monotonic counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    inner: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, v: u64) {
+        *self.inner.entry(name).or_insert(0) += v;
+    }
+
+    /// Current value (0 for a counter never touched).
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Fold another counter set in (per-instance sinks merge into the
+    /// bundle's fleet-wide totals).
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.inner {
+            self.add(k, *v);
+        }
+    }
+
+    /// Prometheus text exposition format snapshot, sorted by name.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.inner {
+            out.push_str(&format!("# TYPE flatattention_{k}_total counter\nflatattention_{k}_total {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_merge() {
+        let mut a = Counters::new();
+        a.inc("admitted");
+        a.add("admitted", 2);
+        a.inc("completed");
+        let mut b = Counters::new();
+        b.add("admitted", 10);
+        b.inc("preempted");
+        a.merge(&b);
+        assert_eq!(a.get("admitted"), 13);
+        assert_eq!(a.get("completed"), 1);
+        assert_eq!(a.get("preempted"), 1);
+        assert_eq!(a.get("never_touched"), 0);
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn prometheus_snapshot_is_sorted_and_typed() {
+        let mut c = Counters::new();
+        c.add("waves", 7);
+        c.add("admitted", 42);
+        let text = c.to_prometheus();
+        assert_eq!(
+            text,
+            "# TYPE flatattention_admitted_total counter\nflatattention_admitted_total 42\n\
+             # TYPE flatattention_waves_total counter\nflatattention_waves_total 7\n"
+        );
+        // Deterministic regardless of insertion order.
+        let mut d = Counters::new();
+        d.add("admitted", 42);
+        d.add("waves", 7);
+        assert_eq!(d.to_prometheus(), text);
+    }
+}

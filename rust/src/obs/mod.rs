@@ -1,0 +1,211 @@
+//! Deterministic observability: simulated-clock tracing, fixed-interval
+//! time series and monotonic counters, threaded through the serving engine
+//! ([`ServeEngine`](crate::serve::sim::ServeEngine)) and the interleaved
+//! cluster fleet ([`simulate_cluster_observed`](crate::cluster::fleet::simulate_cluster_observed)).
+//!
+//! Every end-of-run aggregate (`ServeOutcome`, `ClusterOutcome`) answers
+//! "how much"; this layer answers "when" and "which request": when the KV
+//! link congested, which requests ate the p99, why live routing beat the
+//! fluid proxy. All timestamps are **simulated seconds** — the crate's
+//! no-`Date::now` discipline holds, so two same-seed runs export
+//! byte-identical artifacts (pinned by `tests/integration_obs.rs`).
+//!
+//! # Trace schema ([`trace`])
+//!
+//! Chrome `trace_event` JSON (Perfetto-loadable). Lanes:
+//!
+//! - **pid** = instance. Standalone serving uses pid 0 ("serve"). A fleet
+//!   uses pid `0..n_entry` for the entry pool ("instance-i" colocated,
+//!   "prefill-i" disaggregated), `n_entry..n_entry+n_decode` for the decode
+//!   pool ("decode-i"), and one extra pid ("fleet") for router/link events.
+//! - **tid** 0 = the engine lane (wave spans; router instants on the fleet
+//!   pid); **tid k ≥ 1** = request lane for record index `k - 1`.
+//!
+//! Span names (cat `lifecycle`): `queued` (arrival → admission; closed with
+//! `outcome=rejected` when admission can never fit the request, reopened on
+//! preemption), `prefill` (admission → first token; carries `col` and any
+//! `prefix_hit_tokens`), `decode` (first token → completion; opened
+//! directly for pre-filled disaggregated handoffs). The terminal span
+//! closes with `outcome` ∈ {`completed`, `rejected`, `preempted`,
+//! `unfinished`} — `unfinished` marks in-flight work at the horizon.
+//! Instants: `arrive`, `first_token`. Engine lane (cat `engine`): one
+//! `wave` span per tick with `wave`, `decode_users`, `prefill_tokens`.
+//! Fleet lane: `route` instants (cat `router`; `instance`, `spill` when the
+//! affinity guard steered away) and `handoff` spans (cat `link`; transfer
+//! serialization + queue wait, `bytes`, `link_wait_s`, `decode_instance`).
+//!
+//! The recorder is bounded by [`ObsConfig::span_cap`]; events beyond the
+//! cap are counted in `dropped_events` (exported under `otherData` and the
+//! `flatattention_trace_events_dropped_total` counter), never silently lost.
+//!
+//! # Series schema ([`series`])
+//!
+//! Fixed-interval ([`ObsConfig::series_interval_s`]) per-instance gauges,
+//! sampled at the first wave boundary past each grid point: `queue_depth`,
+//! `active_users` (batch occupancy), `kv_frac` (worst column),
+//! `kv_col_frac` (per EP column), `prefix_hit_rate`, `link_busy_frac`
+//! (fleet pid only). CSV (one row per sample, `kv_col_frac`
+//! semicolon-joined) or JSON (full per-column arrays).
+//!
+//! # Counters schema ([`counters`])
+//!
+//! Monotonic event counts rendered in Prometheus text exposition format as
+//! `flatattention_<name>_total`: `arrivals`, `admitted`, `rejected`,
+//! `preempted`, `first_tokens`, `completed`, `waves`, `routed`,
+//! `router_spills`, `handoffs`, `migrated`, plus the shared simulation
+//! caches' `stage_cache_hits`/`misses` and `kernel_cache_hits`/`misses`.
+//!
+//! # Zero-cost when disabled
+//!
+//! The engine holds `Option<Box<EngineObs>>` — `None` by default, no
+//! allocation, no per-tick work beyond one pointer test — and the scheduler
+//! only fills its decision log once a sink is attached. Default runs are
+//! byte-identical to pre-observability builds (pinned by the existing
+//! equivalence tests).
+//!
+//! # Perfetto how-to
+//!
+//! `flatattention serve --rate 800 --trace-out trace.json`, then open
+//! <https://ui.perfetto.dev> and drag `trace.json` in (or load it in
+//! `chrome://tracing`).
+
+pub mod counters;
+pub mod series;
+pub mod trace;
+
+pub use counters::Counters;
+pub use series::{export_series_csv, export_series_json, SeriesRow, SeriesSampler};
+pub use trace::{export_chrome_trace, Span, TraceInstant, TraceRecorder};
+
+/// Recorder sizing knobs (the CLI uses the defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsConfig {
+    /// Upper bound on recorded events (spans + instants) per recorder;
+    /// events beyond it are dropped and counted, never silently lost.
+    pub span_cap: usize,
+    /// Gauge sampling grid in simulated seconds.
+    pub series_interval_s: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { span_cap: 262_144, series_interval_s: 0.05 }
+    }
+}
+
+/// The per-engine observability sink: one trace recorder, one gauge
+/// sampler and one counter set, attached to a `ServeEngine` via
+/// `attach_obs` and detached with `take_obs`.
+#[derive(Debug, Clone)]
+pub struct EngineObs {
+    pub trace: TraceRecorder,
+    pub series: SeriesSampler,
+    pub counters: Counters,
+}
+
+impl EngineObs {
+    pub fn new(pid: u32, process_name: &str, cfg: ObsConfig) -> Self {
+        EngineObs {
+            trace: TraceRecorder::new(pid, process_name, cfg.span_cap),
+            series: SeriesSampler::new(pid, cfg.series_interval_s),
+            counters: Counters::new(),
+        }
+    }
+}
+
+/// Everything one observed run produced, across all instances: the export
+/// unit behind `--trace-out` / `--series-out` / `--metrics-out`.
+#[derive(Debug, Clone, Default)]
+pub struct ObsBundle {
+    /// One recorder per instance (pid order), plus the fleet recorder last
+    /// for cluster runs.
+    pub traces: Vec<TraceRecorder>,
+    pub series: Vec<SeriesSampler>,
+    pub counters: Counters,
+}
+
+impl ObsBundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one engine's sink into the bundle (counters merge; trace and
+    /// series append in pid order).
+    pub fn push_engine(&mut self, o: EngineObs) {
+        self.counters.merge(&o.counters);
+        self.traces.push(o.trace);
+        self.series.push(o.series);
+    }
+
+    /// Render every export format. Deterministic: same bundle, same bytes.
+    pub fn exports(&self) -> ObsExports {
+        let trefs: Vec<&TraceRecorder> = self.traces.iter().collect();
+        let srefs: Vec<&SeriesSampler> = self.series.iter().collect();
+        let mut counters = self.counters.clone();
+        let dropped: u64 = self.traces.iter().map(TraceRecorder::dropped).sum();
+        if dropped > 0 {
+            counters.add("trace_events_dropped", dropped);
+        }
+        ObsExports {
+            trace_json: export_chrome_trace(&trefs),
+            series_csv: export_series_csv(&srefs),
+            series_json: export_series_json(&srefs),
+            metrics_text: counters.to_prometheus(),
+        }
+    }
+}
+
+/// Rendered export artifacts (the CLI writes whichever files were asked
+/// for; `--series-out` picks CSV unless the path ends in `.json`).
+#[derive(Debug, Clone)]
+pub struct ObsExports {
+    pub trace_json: String,
+    pub series_csv: String,
+    pub series_json: String,
+    pub metrics_text: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_exports_are_deterministic_and_account_drops() {
+        let build = || {
+            let mut o = EngineObs::new(0, "serve", ObsConfig { span_cap: 2, series_interval_s: 0.1 });
+            o.trace.begin(1, "queued", "lifecycle", 0.0, vec![("req", "7".to_string())]);
+            o.trace.end(1, 0.5, &[("outcome", "completed")]);
+            o.trace.instant(1, "first_token", "lifecycle", 0.25, Vec::new());
+            o.trace.instant(1, "arrive", "lifecycle", 0.0, Vec::new()); // over cap → dropped
+            o.counters.inc("completed");
+            o.series.record(SeriesRow {
+                t_s: 0.1,
+                pid: 0,
+                queue_depth: 1,
+                active_users: 2,
+                kv_frac: 0.5,
+                kv_col_frac: vec![0.5, 0.25],
+                prefix_hit_rate: 0.0,
+                link_busy_frac: 0.0,
+            });
+            let mut b = ObsBundle::new();
+            b.push_engine(o);
+            b.exports()
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.trace_json, b.trace_json);
+        assert_eq!(a.series_csv, b.series_csv);
+        assert_eq!(a.series_json, b.series_json);
+        assert_eq!(a.metrics_text, b.metrics_text);
+        assert!(a.trace_json.contains("\"dropped_events\":\"1\""), "{}", a.trace_json);
+        assert!(a.metrics_text.contains("flatattention_trace_events_dropped_total 1"), "{}", a.metrics_text);
+        assert!(a.metrics_text.contains("flatattention_completed_total 1"));
+    }
+
+    #[test]
+    fn default_config_is_generous() {
+        let cfg = ObsConfig::default();
+        assert!(cfg.span_cap >= 100_000);
+        assert!(cfg.series_interval_s > 0.0);
+    }
+}

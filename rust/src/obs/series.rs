@@ -1,0 +1,182 @@
+//! Fixed-interval gauge sampler: per-instance time series of queue depth,
+//! batch occupancy, KV utilization (worst and per EP column), prefix-cache
+//! hit rate and link busy fraction, on the simulated clock.
+//!
+//! The engine samples at wave boundaries, so the sampler works on a grid:
+//! [`SeriesSampler::ready`] is true once the clock passed the next grid
+//! point, and [`SeriesSampler::record`] advances the grid past the sampled
+//! time — one row per interval regardless of tick duration jitter.
+
+/// One gauge sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesRow {
+    /// Sample time (simulated seconds — the wave boundary that crossed the
+    /// grid point).
+    pub t_s: f64,
+    /// Instance lane (matches the trace pid).
+    pub pid: u32,
+    /// Requests waiting in the scheduler queue.
+    pub queue_depth: usize,
+    /// Requests resident in (column, wave) cells — batch occupancy.
+    pub active_users: usize,
+    /// Worst current KV occupancy fraction across EP columns.
+    pub kv_frac: f64,
+    /// Per-EP-column KV occupancy fractions (empty on the fleet lane).
+    pub kv_col_frac: Vec<f64>,
+    /// Cumulative prefix-cache hit rate (0 without shared prefixes).
+    pub prefix_hit_rate: f64,
+    /// Shared KV-link busy fraction (fleet lane only; 0 elsewhere).
+    pub link_busy_frac: f64,
+}
+
+/// Grid-based sampler for one instance.
+#[derive(Debug, Clone)]
+pub struct SeriesSampler {
+    pid: u32,
+    interval_s: f64,
+    next_s: f64,
+    rows: Vec<SeriesRow>,
+}
+
+impl SeriesSampler {
+    pub fn new(pid: u32, interval_s: f64) -> Self {
+        SeriesSampler { pid, interval_s: interval_s.max(1e-6), next_s: 0.0, rows: Vec::new() }
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.interval_s
+    }
+
+    /// True when the clock reached the next grid point — time to sample.
+    pub fn ready(&self, t_s: f64) -> bool {
+        t_s >= self.next_s
+    }
+
+    /// Record a sample and advance the grid past it.
+    pub fn record(&mut self, row: SeriesRow) {
+        while self.next_s <= row.t_s {
+            self.next_s += self.interval_s;
+        }
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[SeriesRow] {
+        &self.rows
+    }
+}
+
+/// Rows of every sampler merged and sorted by (time, instance) —
+/// deterministic regardless of per-instance sampling cadence.
+fn merged<'a>(samplers: &'a [&'a SeriesSampler]) -> Vec<&'a SeriesRow> {
+    let mut rows: Vec<&SeriesRow> = samplers.iter().flat_map(|s| s.rows().iter()).collect();
+    rows.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.pid.cmp(&b.pid)));
+    rows
+}
+
+/// CSV export: one row per sample; `kv_col_frac` is semicolon-joined so the
+/// per-EP-column breakdown survives the flat format.
+pub fn export_series_csv(samplers: &[&SeriesSampler]) -> String {
+    let mut out = String::from("t_s,instance,queue_depth,active_users,kv_frac,prefix_hit_rate,link_busy_frac,kv_col_frac\n");
+    for r in merged(samplers) {
+        let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
+        out.push_str(&format!(
+            "{:.6},{},{},{},{:.6},{:.6},{:.6},{}\n",
+            r.t_s,
+            r.pid,
+            r.queue_depth,
+            r.active_users,
+            r.kv_frac,
+            r.prefix_hit_rate,
+            r.link_busy_frac,
+            cols.join(";")
+        ));
+    }
+    out
+}
+
+/// JSON export with full per-column arrays (for plotting pipelines).
+pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
+    let mut out = String::from("{\"rows\":[");
+    for (i, r) in merged(samplers).iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
+        out.push_str(&format!(
+            "{{\"t_s\":{:.6},\"instance\":{},\"queue_depth\":{},\"active_users\":{},\"kv_frac\":{:.6},\
+             \"prefix_hit_rate\":{:.6},\"link_busy_frac\":{:.6},\"kv_col_frac\":[{}]}}",
+            r.t_s,
+            r.pid,
+            r.queue_depth,
+            r.active_users,
+            r.kv_frac,
+            r.prefix_hit_rate,
+            r.link_busy_frac,
+            cols.join(",")
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(t_s: f64, pid: u32, q: usize) -> SeriesRow {
+        SeriesRow {
+            t_s,
+            pid,
+            queue_depth: q,
+            active_users: 2 * q,
+            kv_frac: 0.5,
+            kv_col_frac: vec![0.5, 0.25],
+            prefix_hit_rate: 0.0,
+            link_busy_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn grid_takes_one_sample_per_interval() {
+        let mut s = SeriesSampler::new(0, 0.1);
+        assert!(s.ready(0.0));
+        s.record(row(0.0, 0, 1));
+        assert!(!s.ready(0.05), "grid advanced past the sample");
+        assert!(s.ready(0.1));
+        s.record(row(0.13, 0, 2));
+        assert!(!s.ready(0.19));
+        assert!(s.ready(0.2));
+        // A long idle gap yields one sample, not a backlog of catch-ups.
+        s.record(row(1.0, 0, 3));
+        assert!(!s.ready(1.05));
+        assert_eq!(s.rows().len(), 3);
+    }
+
+    #[test]
+    fn csv_and_json_merge_sorted_by_time_then_instance() {
+        let mut a = SeriesSampler::new(0, 0.1);
+        let mut b = SeriesSampler::new(1, 0.1);
+        b.record(row(0.05, 1, 9));
+        a.record(row(0.05, 0, 4));
+        a.record(row(0.2, 0, 5));
+        let csv = export_series_csv(&[&a, &b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("t_s,instance,"));
+        assert!(lines[1].starts_with("0.050000,0,4,8,"), "{csv}");
+        assert!(lines[2].starts_with("0.050000,1,9,18,"), "{csv}");
+        assert!(lines[3].starts_with("0.200000,0,5,10,"), "{csv}");
+        assert!(lines[1].ends_with("0.500000;0.250000"), "{csv}");
+        let json = export_series_json(&[&a, &b]);
+        assert!(json.starts_with("{\"rows\":[") && json.ends_with("]}"));
+        assert!(json.contains("\"kv_col_frac\":[0.500000,0.250000]"), "{json}");
+        assert_eq!(json.matches("\"t_s\"").count(), 3);
+        // Determinism.
+        assert_eq!(csv, export_series_csv(&[&a, &b]));
+        assert_eq!(json, export_series_json(&[&a, &b]));
+    }
+}

@@ -1,0 +1,364 @@
+//! Span/instant recorder on the simulated clock, exported as Chrome
+//! `trace_event` JSON (the format Perfetto and `chrome://tracing` load).
+//!
+//! One [`TraceRecorder`] per process lane (pid = instance): spans live on
+//! `(pid, tid)` lanes, at most one *open* span per tid at a time — request
+//! lifecycles are sequential (`queued` → `prefill` → `decode`), never
+//! nested within a lane. `begin` defensively closes a forgotten open span,
+//! and `end` clamps `end_s ≥ start_s`, so exported spans are always
+//! well-formed. The recorder is bounded: events beyond `cap` increment
+//! [`TraceRecorder::dropped`] instead of growing memory without bound.
+
+use std::collections::HashMap;
+
+/// A closed span on one `(pid, tid)` lane, in simulated seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    /// Category: `lifecycle`, `engine`, `router` or `link`.
+    pub cat: &'static str,
+    pub pid: u32,
+    pub tid: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// A point event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceInstant {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub pid: u32,
+    pub tid: u64,
+    pub t_s: f64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+#[derive(Debug, Clone)]
+struct OpenSpan {
+    name: &'static str,
+    cat: &'static str,
+    start_s: f64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Bounded, deterministic span/instant recorder for one process lane.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    pid: u32,
+    process_name: String,
+    cap: usize,
+    spans: Vec<Span>,
+    instants: Vec<TraceInstant>,
+    open: HashMap<u64, OpenSpan>,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(pid: u32, process_name: &str, cap: usize) -> Self {
+        TraceRecorder {
+            pid,
+            process_name: process_name.to_string(),
+            cap: cap.max(1),
+            spans: Vec::new(),
+            instants: Vec::new(),
+            open: HashMap::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    pub fn process_name(&self) -> &str {
+        &self.process_name
+    }
+
+    /// Closed spans, in recording order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[TraceInstant] {
+        &self.instants
+    }
+
+    /// Events discarded because the recorder hit its cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn has_room(&self) -> bool {
+        self.spans.len() + self.instants.len() < self.cap
+    }
+
+    /// Open a span on `tid`. A span already open there is closed at `t_s`
+    /// first (defensive — lifecycles are sequential per lane).
+    pub fn begin(&mut self, tid: u64, name: &'static str, cat: &'static str, t_s: f64, args: Vec<(&'static str, String)>) {
+        if let Some(open) = self.open.remove(&tid) {
+            self.push_span(tid, open, t_s, &[]);
+        }
+        self.open.insert(tid, OpenSpan { name, cat, start_s: t_s, args });
+    }
+
+    /// Name of the span currently open on `tid`, if any.
+    pub fn open_name(&self, tid: u64) -> Option<&'static str> {
+        self.open.get(&tid).map(|o| o.name)
+    }
+
+    /// Close the span open on `tid` at `t_s`, appending `extra` args.
+    /// Returns false when no span was open there.
+    pub fn end(&mut self, tid: u64, t_s: f64, extra: &[(&'static str, &str)]) -> bool {
+        match self.open.remove(&tid) {
+            Some(open) => {
+                self.push_span(tid, open, t_s, extra);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn push_span(&mut self, tid: u64, open: OpenSpan, end_s: f64, extra: &[(&'static str, &str)]) {
+        if !self.has_room() {
+            self.dropped += 1;
+            return;
+        }
+        let mut args = open.args;
+        args.extend(extra.iter().map(|&(k, v)| (k, v.to_string())));
+        self.spans.push(Span {
+            name: open.name,
+            cat: open.cat,
+            pid: self.pid,
+            tid,
+            start_s: open.start_s,
+            end_s: end_s.max(open.start_s),
+            args,
+        });
+    }
+
+    /// Record an already-delimited span (e.g. an engine `wave` tick or a
+    /// link `handoff` whose start and end are both known at record time).
+    pub fn complete(
+        &mut self,
+        tid: u64,
+        name: &'static str,
+        cat: &'static str,
+        start_s: f64,
+        end_s: f64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        if !self.has_room() {
+            self.dropped += 1;
+            return;
+        }
+        self.spans.push(Span { name, cat, pid: self.pid, tid, start_s, end_s: end_s.max(start_s), args });
+    }
+
+    /// Record a point event.
+    pub fn instant(&mut self, tid: u64, name: &'static str, cat: &'static str, t_s: f64, args: Vec<(&'static str, String)>) {
+        if !self.has_room() {
+            self.dropped += 1;
+            return;
+        }
+        self.instants.push(TraceInstant { name, cat, pid: self.pid, tid, t_s, args });
+    }
+
+    /// Close every dangling open span at `t_s` with `outcome=unfinished`
+    /// (in-flight requests at the horizon). Sorted tid order — exports stay
+    /// deterministic regardless of `HashMap` iteration order.
+    pub fn close_open(&mut self, t_s: f64) {
+        let mut tids: Vec<u64> = self.open.keys().copied().collect();
+        tids.sort_unstable();
+        for tid in tids {
+            self.end(tid, t_s, &[("outcome", "unfinished")]);
+        }
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Microsecond timestamp with fixed precision — deterministic formatting.
+fn ts_us(t_s: f64) -> String {
+    format!("{:.3}", t_s * 1e6)
+}
+
+fn args_json(args: &[(&'static str, String)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":\"{}\"", esc(k), esc(v)));
+    }
+    out.push('}');
+    out
+}
+
+fn push_event(out: &mut String, first: &mut bool, ev: String) {
+    if *first {
+        *first = false;
+    } else {
+        out.push(',');
+    }
+    out.push_str(&ev);
+}
+
+/// Merge recorders (callers pass them in pid order) into one Chrome
+/// `trace_event` JSON document. Within a recorder, events appear in
+/// recording order after the pid's `process_name`/`thread_name` metadata;
+/// total drop count lands in `otherData.dropped_events`.
+pub fn export_chrome_trace(recorders: &[&TraceRecorder]) -> String {
+    let dropped: u64 = recorders.iter().map(|r| r.dropped).sum();
+    let mut out = String::new();
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"otherData\":{\"dropped_events\":\"");
+    out.push_str(&dropped.to_string());
+    out.push_str("\"},\"traceEvents\":[");
+    let mut first = true;
+    for r in recorders {
+        push_event(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":\"{}\"}}}}",
+                r.pid,
+                esc(&r.process_name)
+            ),
+        );
+        push_event(
+            &mut out,
+            &mut first,
+            format!("{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":\"engine\"}}}}", r.pid),
+        );
+        for s in &r.spans {
+            push_event(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{},\"args\":{}}}",
+                    esc(s.name),
+                    esc(s.cat),
+                    ts_us(s.start_s),
+                    ts_us(s.end_s - s.start_s),
+                    s.pid,
+                    s.tid,
+                    args_json(&s.args)
+                ),
+            );
+        }
+        for i in &r.instants {
+            push_event(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\"s\":\"t\",\"pid\":{},\"tid\":{},\"args\":{}}}",
+                    esc(i.name),
+                    esc(i.cat),
+                    ts_us(i.t_s),
+                    i.pid,
+                    i.tid,
+                    args_json(&i.args)
+                ),
+            );
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_close_in_lifecycle_order_and_clamp() {
+        let mut r = TraceRecorder::new(0, "serve", 1024);
+        r.begin(1, "queued", "lifecycle", 0.0, vec![("req", "0".to_string())]);
+        assert_eq!(r.open_name(1), Some("queued"));
+        assert!(r.end(1, 0.5, &[]));
+        r.begin(1, "prefill", "lifecycle", 0.5, Vec::new());
+        r.begin(1, "decode", "lifecycle", 1.0, Vec::new()); // defensive close of prefill
+        assert!(r.end(1, 0.25, &[("outcome", "completed")])); // before start → clamped
+        assert!(!r.end(1, 2.0, &[]), "nothing left open");
+        let s = r.spans();
+        assert_eq!(s.len(), 3);
+        assert_eq!((s[0].name, s[0].start_s, s[0].end_s), ("queued", 0.0, 0.5));
+        assert_eq!((s[1].name, s[1].start_s, s[1].end_s), ("prefill", 0.5, 1.0));
+        assert_eq!((s[2].name, s[2].start_s, s[2].end_s), ("decode", 1.0, 1.0), "end clamps to start");
+        assert_eq!(s[2].args, vec![("outcome", "completed".to_string())]);
+        assert!(s.iter().all(|sp| sp.end_s >= sp.start_s));
+    }
+
+    #[test]
+    fn cap_drops_are_counted_not_silent() {
+        let mut r = TraceRecorder::new(0, "p", 2);
+        r.complete(0, "wave", "engine", 0.0, 0.1, Vec::new());
+        r.instant(1, "arrive", "lifecycle", 0.0, Vec::new());
+        r.complete(0, "wave", "engine", 0.1, 0.2, Vec::new());
+        r.begin(2, "queued", "lifecycle", 0.0, Vec::new());
+        r.end(2, 0.3, &[]);
+        assert_eq!(r.spans().len() + r.instants().len(), 2);
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn close_open_marks_unfinished_in_tid_order() {
+        let mut r = TraceRecorder::new(3, "p", 64);
+        r.begin(9, "decode", "lifecycle", 1.0, Vec::new());
+        r.begin(2, "queued", "lifecycle", 0.5, Vec::new());
+        r.close_open(4.0);
+        let s = r.spans();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].tid, 2, "sorted tid order");
+        assert_eq!(s[1].tid, 9);
+        assert!(s.iter().all(|sp| sp.end_s == 4.0 && sp.args.contains(&(("outcome"), "unfinished".to_string()))));
+    }
+
+    #[test]
+    fn chrome_export_shape_and_escaping() {
+        let mut r = TraceRecorder::new(0, "inst\"0\"", 64);
+        r.complete(0, "wave", "engine", 0.0, 0.001, vec![("wave", "0".to_string())]);
+        r.instant(1, "arrive", "lifecycle", 0.0005, Vec::new());
+        let json = export_chrome_trace(&[&r]);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"name\":\"inst\\\"0\\\"\""), "process name escaped: {json}");
+        assert!(json.contains("\"ph\":\"X\",\"ts\":0.000,\"dur\":1000.000"), "{json}");
+        assert!(json.contains("\"ph\":\"i\",\"ts\":500.000"), "{json}");
+        assert!(json.contains("\"dropped_events\":\"0\""));
+        // Balanced braces/brackets — a cheap well-formedness proxy the
+        // integration tests strengthen with a real parser in CI.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let build = || {
+            let mut r = TraceRecorder::new(1, "decode-0", 64);
+            r.begin(4, "queued", "lifecycle", 0.125, vec![("req", "3".to_string())]);
+            r.end(4, 0.5, &[("outcome", "rejected")]);
+            r.begin(5, "prefill", "lifecycle", 0.25, Vec::new());
+            r.close_open(1.0);
+            export_chrome_trace(&[&r])
+        };
+        assert_eq!(build(), build());
+    }
+}

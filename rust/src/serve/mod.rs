@@ -62,8 +62,8 @@ pub use prefill::PrefillEngine;
 pub use request::{
     generate_trace, thin_trace, LengthProfile, PrefixProfile, Request, TraceConfig, TrafficPattern,
 };
-pub use scheduler::{AdmissionPolicy, PrefixKeying, QueuePolicy, Scheduler, SchedulerConfig};
+pub use scheduler::{AdmissionPolicy, PrefixKeying, QueuePolicy, SchedEvent, Scheduler, SchedulerConfig};
 pub use sim::{
-    load_sweep, saturation_knee, simulate, EngineSnapshot, ServeConfig, ServeEngine, ServeOutcome,
-    StageTimeCache, Step,
+    load_sweep, saturation_knee, simulate, simulate_observed, EngineSnapshot, ServeConfig, ServeEngine,
+    ServeOutcome, StageTimeCache, Step,
 };

@@ -180,6 +180,22 @@ pub struct Waiting {
     pub generated: f64,
 }
 
+/// One scheduler decision, pushed to the optional event log the
+/// observability layer drains after each wave (`take_events`). The log is
+/// `None` by default — no allocation, no per-decision work — and only
+/// fills once a sink is attached (`enable_event_log`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Admitted into column `column` of the wave; `hit_tokens` prefix-cache
+    /// tokens were reused, and `decode_only` marks a pre-filled
+    /// disaggregated handoff that skips prefill entirely.
+    Admitted { rec: usize, column: usize, hit_tokens: u32, decode_only: bool },
+    /// Rejected at admission (can never fit a column).
+    Rejected { rec: usize },
+    /// Evicted back to the queue head (recomputation preemption).
+    Preempted { rec: usize },
+}
+
 /// What happened during one wave iteration.
 #[derive(Debug, Clone, Default)]
 pub struct WaveEvents {
@@ -217,6 +233,8 @@ pub struct Scheduler {
     pub prefix_hit_tokens: u64,
     /// Shareable prefix tokens that had to be prefilled (cold or evicted).
     pub prefix_miss_tokens: u64,
+    /// Decision log for the observability layer (`None` = disabled).
+    log: Option<Vec<SchedEvent>>,
 }
 
 impl Scheduler {
@@ -242,6 +260,23 @@ impl Scheduler {
             rejected: Vec::new(),
             prefix_hit_tokens: 0,
             prefix_miss_tokens: 0,
+            log: None,
+        }
+    }
+
+    /// Start logging admission / rejection / preemption decisions for the
+    /// observability layer.
+    pub fn enable_event_log(&mut self) {
+        if self.log.is_none() {
+            self.log = Some(Vec::new());
+        }
+    }
+
+    /// Drain the decision log (empty when logging is disabled).
+    pub fn take_events(&mut self) -> Vec<SchedEvent> {
+        match self.log.as_mut() {
+            Some(l) => std::mem::take(l),
+            None => Vec::new(),
         }
     }
 
@@ -309,6 +344,9 @@ impl Scheduler {
             if self.final_need(&r) > self.columns[0].capacity_tokens {
                 self.queue.remove(qi);
                 self.rejected.push(head.rec);
+                if let Some(l) = self.log.as_mut() {
+                    l.push(SchedEvent::Rejected { rec: head.rec });
+                }
                 continue;
             }
             // A pre-filled arrival (disaggregated handoff: KV already
@@ -385,6 +423,9 @@ impl Scheduler {
                 prefix_share_to: share_to,
             });
             self.admit_seq += 1;
+            if let Some(l) = self.log.as_mut() {
+                l.push(SchedEvent::Admitted { rec: head.rec, column: c, hit_tokens: hit, decode_only: fresh_prefilled });
+            }
         }
     }
 
@@ -440,6 +481,9 @@ impl Scheduler {
         self.prefix[c].unpin(victim.prefix_key, victim.prefix_pinned);
         self.queue.push_front(Waiting { rec: victim.rec, generated: victim.generated });
         self.preemptions += 1;
+        if let Some(l) = self.log.as_mut() {
+            l.push(SchedEvent::Preempted { rec: victim.rec });
+        }
         true
     }
 

@@ -34,10 +34,11 @@ use crate::arch::config::{Dtype, SimFidelity};
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
+use crate::obs::{EngineObs, ObsConfig, SeriesRow};
 use crate::serve::kv::KvCacheModel;
 use crate::serve::prefill::PrefillEngine;
 use crate::serve::request::{generate_trace, thin_trace, Request, TraceConfig, TrafficPattern};
-use crate::serve::scheduler::{Scheduler, SchedulerConfig};
+use crate::serve::scheduler::{SchedEvent, Scheduler, SchedulerConfig};
 use crate::workload::deepseek::DeepSeekConfig;
 
 /// Serving-simulation configuration (system/plan side; traffic comes from
@@ -86,6 +87,9 @@ impl Default for ServeConfig {
 #[derive(Clone, Default)]
 pub struct StageTimeCache {
     inner: Arc<Mutex<HashMap<String, f64>>>,
+    /// Shared (hits, misses) lookup counters — all clones report into one
+    /// pair, so the observability snapshot sees the whole process.
+    stats: Arc<Mutex<(u64, u64)>>,
 }
 
 impl StageTimeCache {
@@ -107,10 +111,22 @@ impl StageTimeCache {
     /// the decode path.
     pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> f64) -> f64 {
         if let Some(&s) = self.inner.lock().unwrap().get(&key) {
+            self.stats.lock().unwrap().0 += 1;
             return s;
         }
+        self.stats.lock().unwrap().1 += 1;
         let s = f();
         *self.inner.lock().unwrap().entry(key).or_insert(s)
+    }
+
+    /// Lookups served from the memo (shared across clones).
+    pub fn hits(&self) -> u64 {
+        self.stats.lock().unwrap().0
+    }
+
+    /// Lookups that had to simulate (shared across clones).
+    pub fn misses(&self) -> u64 {
+        self.stats.lock().unwrap().1
     }
 
     /// Snapshot of every entry, sorted by key — the on-disk persistence
@@ -410,6 +426,9 @@ pub struct ServeEngine<'a> {
     /// Arrivals enqueued so far (the simulation reached their arrival time).
     arrived: usize,
     completed: usize,
+    /// Observability sink — `None` (the default) allocates nothing and
+    /// costs one pointer test per hook site.
+    obs: Option<Box<EngineObs>>,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -440,6 +459,58 @@ impl<'a> ServeEngine<'a> {
             kv_violation: false,
             arrived: 0,
             completed: 0,
+            obs: None,
+        }
+    }
+
+    /// Attach an observability sink (trace recorder + gauge sampler +
+    /// counters) and enable the scheduler's decision log. Attach before
+    /// stepping — spans open when requests are enqueued, so a late attach
+    /// only observes lifecycles from that point on.
+    pub fn attach_obs(&mut self, obs: EngineObs) {
+        self.sched.enable_event_log();
+        self.obs = Some(Box::new(obs));
+    }
+
+    /// Detach the observability sink, closing still-open spans (in-flight
+    /// requests at the horizon) at the current clock with
+    /// `outcome=unfinished`. Call before [`ServeEngine::finish`] consumes
+    /// the engine.
+    pub fn take_obs(&mut self) -> Option<Box<EngineObs>> {
+        let mut obs = self.obs.take()?;
+        obs.trace.close_open(self.clock);
+        Some(obs)
+    }
+
+    /// Translate this wave's scheduler decisions into lifecycle span
+    /// transitions at `t0` — the wave's start: admission, rejection and
+    /// preemption all happen before the wave's stage time elapses.
+    fn note_sched_events(&mut self, events: &[SchedEvent], t0: f64) {
+        let Some(obs) = self.obs.as_deref_mut() else { return };
+        for e in events {
+            match *e {
+                SchedEvent::Admitted { rec, column, hit_tokens, decode_only } => {
+                    let tid = rec as u64 + 1;
+                    obs.counters.inc("admitted");
+                    obs.trace.end(tid, t0, &[]);
+                    let name = if decode_only { "decode" } else { "prefill" };
+                    let mut args = vec![("req", self.records[rec].id.to_string()), ("col", column.to_string())];
+                    if hit_tokens > 0 {
+                        args.push(("prefix_hit_tokens", hit_tokens.to_string()));
+                    }
+                    obs.trace.begin(tid, name, "lifecycle", t0, args);
+                }
+                SchedEvent::Rejected { rec } => {
+                    obs.counters.inc("rejected");
+                    obs.trace.end(rec as u64 + 1, t0, &[("outcome", "rejected")]);
+                }
+                SchedEvent::Preempted { rec } => {
+                    let tid = rec as u64 + 1;
+                    obs.counters.inc("preempted");
+                    obs.trace.end(tid, t0, &[("outcome", "preempted")]);
+                    obs.trace.begin(tid, "queued", "lifecycle", t0, Vec::new());
+                }
+            }
         }
     }
 
@@ -478,6 +549,13 @@ impl<'a> ServeEngine<'a> {
             if p.arrival_s <= self.clock {
                 self.sched.enqueue_arrival(p.rec);
                 self.arrived += 1;
+                if let Some(obs) = self.obs.as_deref_mut() {
+                    let tid = p.rec as u64 + 1;
+                    let id = self.records[p.rec].id.to_string();
+                    obs.counters.inc("arrivals");
+                    obs.trace.instant(tid, "arrive", "lifecycle", p.arrival_s, vec![("req", id.clone())]);
+                    obs.trace.begin(tid, "queued", "lifecycle", p.arrival_s, vec![("req", id)]);
+                }
                 self.pending.pop();
             } else {
                 break;
@@ -494,22 +572,75 @@ impl<'a> ServeEngine<'a> {
         }
         let pp = self.cfg.plan.pp.max(1) as u64;
         let w = (self.tick % pp) as usize;
+        let t0 = self.clock;
         self.sched.admit_wave(w);
         self.sched.grow_wave(w);
+        if self.obs.is_some() {
+            let events = self.sched.take_events();
+            self.note_sched_events(&events, t0);
+        }
         let (decode_users, prefill_tokens) = self.sched.peak_cell_load();
         let prefill_ctx = self.sched.peak_prefill_context() as f64;
         let kv_len = self.sched.max_context_tokens().max(1.0);
         self.clock += self.stage.stage_seconds(decode_users, kv_len, prefill_tokens, prefill_ctx);
+        let t1 = self.clock;
         let ev = self.sched.execute_wave(w);
         self.total_tokens += ev.tokens_produced;
         for &rec in &ev.first_tokens {
+            let fresh = self.records[rec].first_token_s.is_none();
             self.records[rec].first_token_s.get_or_insert(self.clock);
+            if let Some(obs) = self.obs.as_deref_mut() {
+                let tid = rec as u64 + 1;
+                if fresh {
+                    obs.counters.inc("first_tokens");
+                    obs.trace.instant(tid, "first_token", "lifecycle", t1, Vec::new());
+                }
+                // Prefill finished (possibly a re-prefill after preemption):
+                // the lifecycle transitions into its decode span.
+                if obs.trace.open_name(tid) == Some("prefill") {
+                    obs.trace.end(tid, t1, &[]);
+                    obs.trace.begin(tid, "decode", "lifecycle", t1, Vec::new());
+                }
+            }
         }
         for &rec in &ev.completions {
             self.records[rec].completion_s = Some(self.clock);
+            if let Some(obs) = self.obs.as_deref_mut() {
+                obs.counters.inc("completed");
+                obs.trace.end(rec as u64 + 1, t1, &[("outcome", "completed")]);
+            }
         }
         self.completed += ev.completions.len();
         self.kv_violation |= self.sched.kv_over_capacity();
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.counters.inc("waves");
+            obs.trace.complete(
+                0,
+                "wave",
+                "engine",
+                t0,
+                t1,
+                vec![
+                    ("wave", w.to_string()),
+                    ("decode_users", decode_users.to_string()),
+                    ("prefill_tokens", prefill_tokens.to_string()),
+                ],
+            );
+            if obs.series.ready(t1) {
+                let (hit, miss) = (self.sched.prefix_hit_tokens, self.sched.prefix_miss_tokens);
+                let total = hit + miss;
+                obs.series.record(SeriesRow {
+                    t_s: t1,
+                    pid: obs.trace.pid(),
+                    queue_depth: self.sched.queue.len(),
+                    active_users: self.sched.active_total(),
+                    kv_frac: self.sched.kv_occupancy_frac(),
+                    kv_col_frac: self.sched.columns.iter().map(|c| c.occupancy_frac()).collect(),
+                    prefix_hit_rate: if total == 0 { 0.0 } else { hit as f64 / total as f64 },
+                    link_busy_frac: 0.0,
+                });
+            }
+        }
         self.tick += 1;
         Step::Ticked { first_tokens: ev.first_tokens, completions: ev.completions }
     }
@@ -639,6 +770,34 @@ pub fn simulate(
     }
     while engine.step().advanced() {}
     engine.finish(pattern_label, offered_rps)
+}
+
+/// [`simulate`] with an observability sink attached: identical simulation
+/// (same outcome and records, bit for bit), plus the run's trace recorder,
+/// gauge series and counters. Standalone serving records under pid 0
+/// ("serve").
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_observed(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ServeConfig,
+    horizon_s: f64,
+    pattern_label: &str,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+    obs: ObsConfig,
+) -> (ServeOutcome, Vec<RequestRecord>, Box<EngineObs>) {
+    let mut engine = ServeEngine::new(sys, ds, *cfg, horizon_s, kernels, stages);
+    engine.attach_obs(EngineObs::new(0, "serve", obs));
+    for r in trace {
+        engine.inject(*r);
+    }
+    while engine.step().advanced() {}
+    let sink = engine.take_obs().expect("sink was attached above");
+    let (outcome, records) = engine.finish(pattern_label, offered_rps);
+    (outcome, records, sink)
 }
 
 /// Sweep offered load for one traffic pattern. A single master trace at the

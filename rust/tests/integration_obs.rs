@@ -1,0 +1,358 @@
+//! Observability-layer invariants: well-nested causal request lifecycles,
+//! the handoff-follows-prefill causality anchor on disaggregated fleets,
+//! span/counter conservation against the end-of-run aggregates, fixed-seed
+//! byte-identical exports (the acceptance criterion), and the guarantee
+//! that attaching a sink never changes a simulation result.
+
+use flatattention::cluster::{simulate_cluster, simulate_cluster_observed, ClusterConfig};
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::obs::{ObsBundle, ObsConfig, Span, TraceRecorder};
+use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::sim::{simulate, simulate_observed, ServeConfig, StageTimeCache};
+use flatattention::workload::deepseek::DeepSeekConfig;
+
+const EPS: f64 = 1e-9;
+
+fn trace(rate: f64, horizon: f64, seed: u64) -> Vec<flatattention::serve::request::Request> {
+    generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon))
+}
+
+fn arg<'a>(s: &'a Span, key: &str) -> Option<&'a str> {
+    s.args.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+}
+
+/// Spans and instants must be well-formed, and the lifecycle spans on each
+/// request lane must tile time without overlap (queued → prefill → decode
+/// are sequential — the recorder's one-open-span-per-tid discipline).
+fn assert_well_nested(r: &TraceRecorder) {
+    for s in r.spans() {
+        assert!(s.end_s >= s.start_s, "span {} on pid {} tid {} ends before it starts", s.name, s.pid, s.tid);
+        assert!(s.start_s >= 0.0 && s.end_s.is_finite());
+    }
+    let mut tids: Vec<u64> = r.spans().iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        // Recording order is chronological within a lane.
+        let lane: Vec<&Span> = r.spans().iter().filter(|s| s.tid == tid && s.cat == "lifecycle").collect();
+        for w in lane.windows(2) {
+            assert!(
+                w[1].start_s >= w[0].end_s - EPS,
+                "overlapping lifecycle spans on pid {} tid {tid}: {} [{}, {}] then {} [{}, {}]",
+                r.pid(),
+                w[0].name,
+                w[0].start_s,
+                w[0].end_s,
+                w[1].name,
+                w[1].start_s,
+                w[1].end_s
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_spans_are_well_nested_and_causal() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let t = trace(400.0, 3.0, 11);
+    let cfg = ServeConfig::default();
+    let (o, records, obs) = simulate_observed(
+        &sys,
+        &ds,
+        &t,
+        &cfg,
+        3.0,
+        "poisson",
+        400.0,
+        &kernels,
+        &stages,
+        ObsConfig::default(),
+    );
+    assert!(o.completed > 0, "need completions to make the test meaningful");
+    assert_well_nested(&obs.trace);
+    // Wave spans on the engine lane advance monotonically.
+    let waves: Vec<_> = obs.trace.spans().iter().filter(|s| s.name == "wave").collect();
+    assert_eq!(waves.len() as u64, o.ticks);
+    for w in waves.windows(2) {
+        assert!(w[1].start_s >= w[0].end_s - EPS, "wave ticks must not overlap");
+    }
+    // Every request lane's spans sit between arrival and completion (or the
+    // horizon), and first_token instants land inside the request lifetime.
+    for (rec, r) in records.iter().enumerate() {
+        let tid = rec as u64 + 1;
+        for s in obs.trace.spans().iter().filter(|s| s.tid == tid) {
+            assert!(s.start_s >= r.arrival_s - EPS, "req {} span {} starts before arrival", r.id, s.name);
+            if let Some(c) = r.completion_s {
+                assert!(s.end_s <= c + EPS, "req {} span {} outlives completion", r.id, s.name);
+            }
+        }
+        if let Some(f) = r.first_token_s {
+            let inst = obs
+                .trace
+                .instants()
+                .iter()
+                .find(|i| i.tid == tid && i.name == "first_token")
+                .unwrap_or_else(|| panic!("req {} got a first token but no instant", r.id));
+            assert!((inst.t_s - f).abs() < EPS);
+        }
+    }
+    // No span lost: the recorder never hit its (generous) cap.
+    assert_eq!(obs.trace.dropped(), 0);
+}
+
+#[test]
+fn serve_span_outcomes_and_counters_match_the_aggregate() {
+    // The conservation anchor: spans closed with outcome=completed /
+    // rejected and the monotonic counters must agree exactly with the
+    // ServeOutcome the same run aggregates.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let t = trace(700.0, 3.0, 2026);
+    let cfg = ServeConfig::default();
+    let (o, _, obs) = simulate_observed(
+        &sys,
+        &ds,
+        &t,
+        &cfg,
+        3.0,
+        "poisson",
+        700.0,
+        &kernels,
+        &stages,
+        ObsConfig::default(),
+    );
+    let outcome_count = |which: &str| obs.trace.spans().iter().filter(|s| arg(s, "outcome") == Some(which)).count();
+    assert_eq!(outcome_count("completed"), o.completed, "completed spans vs aggregate");
+    assert_eq!(outcome_count("rejected"), o.rejected, "rejected spans vs aggregate");
+    // In-flight + queued work at the horizon is exactly what close_open
+    // marked unfinished (preempted-and-requeued lanes land here too).
+    assert_eq!(outcome_count("unfinished"), o.in_flight + o.queued, "unfinished spans vs backlog");
+    assert_eq!(obs.counters.get("completed"), o.completed as u64);
+    assert_eq!(obs.counters.get("rejected"), o.rejected as u64);
+    assert_eq!(obs.counters.get("arrivals"), o.arrived as u64);
+    assert_eq!(obs.counters.get("preempted"), o.preemptions);
+    assert_eq!(obs.counters.get("waves"), o.ticks);
+    assert_eq!(
+        obs.counters.get("first_tokens"),
+        obs.trace.instants().iter().filter(|i| i.name == "first_token").count() as u64
+    );
+    // Gauges: sample times advance monotonically, fractions stay in [0, 1].
+    for w in obs.series.rows().windows(2) {
+        assert!(w[1].t_s >= w[0].t_s);
+    }
+    for row in obs.series.rows() {
+        assert!((0.0..=1.0).contains(&row.prefix_hit_rate));
+        assert!(row.kv_frac >= 0.0);
+    }
+}
+
+#[test]
+fn cluster_handoffs_follow_prefill_and_bundle_conserves() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let t = trace(300.0, 3.0, 5);
+    let ccfg = ClusterConfig::disaggregated(1, 1, &ds);
+    let (o, _, bundle) = simulate_cluster_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        3.0,
+        300.0,
+        &kernels,
+        &stages,
+        Some(ObsConfig::default()),
+    );
+    let bundle = bundle.expect("a sink was requested");
+    // pid layout: entry pool, decode pool, then the fleet lane.
+    assert_eq!(bundle.traces.len(), 3);
+    assert_eq!(bundle.traces[0].process_name(), "prefill-0");
+    assert_eq!(bundle.traces[1].process_name(), "decode-0");
+    assert_eq!(bundle.traces[2].process_name(), "fleet");
+    for r in &bundle.traces {
+        assert_well_nested(r);
+    }
+    let fleet = &bundle.traces[2];
+    let handoffs: Vec<&Span> = fleet.spans().iter().filter(|s| s.name == "handoff").collect();
+    assert!(o.migrated > 0, "disaggregated run must migrate KV");
+    assert_eq!(handoffs.len(), o.migrated, "one handoff span per migration");
+    // Causality: every KV handoff starts at/after the end of a finished
+    // prefill span for the same request on the entry pool.
+    for h in &handoffs {
+        let req = arg(h, "req").expect("handoff spans carry the request id");
+        let prefill_done = bundle.traces[0]
+            .spans()
+            .iter()
+            .any(|s| s.name == "prefill" && arg(s, "req") == Some(req) && s.end_s <= h.start_s + EPS);
+        assert!(prefill_done, "handoff for req {req} starts before its prefill ended");
+        assert!(arg(h, "bytes").is_some() && arg(h, "link_wait_s").is_some());
+    }
+    // Router telemetry: one route instant per processed arrival, spill
+    // count mirrored into the counters.
+    let routes = fleet.instants().iter().filter(|i| i.name == "route").count();
+    assert_eq!(routes as u64, bundle.counters.get("routed"));
+    assert!(bundle.counters.get("routed") > 0);
+    assert_eq!(bundle.counters.get("handoffs"), o.migrated as u64);
+    assert_eq!(bundle.counters.get("migrated"), o.migrated as u64);
+
+    // Conservation on a colocated fleet, where entry completions ARE the
+    // end-to-end completions: completed/rejected spans across every
+    // instance recorder match the ClusterOutcome exactly.
+    let ccfg = ClusterConfig::colocated(2, &ds);
+    let (o, _, bundle) = simulate_cluster_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        3.0,
+        300.0,
+        &kernels,
+        &stages,
+        Some(ObsConfig::default()),
+    );
+    let bundle = bundle.expect("a sink was requested");
+    let count = |which: &str| {
+        bundle
+            .traces
+            .iter()
+            .flat_map(|r| r.spans())
+            .filter(|s| arg(s, "outcome") == Some(which))
+            .count()
+    };
+    assert!(o.conserves_requests());
+    assert_eq!(count("completed"), o.completed);
+    assert_eq!(count("rejected"), o.rejected);
+    assert_eq!(bundle.counters.get("completed"), o.completed as u64);
+}
+
+#[test]
+fn same_seed_runs_export_byte_identical_artifacts() {
+    // The acceptance criterion: no wall clock, no map-order dependence —
+    // two fresh same-seed runs render byte-identical artifacts, for both
+    // the standalone engine and the disaggregated fleet.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let serve_run = || {
+        let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+        let t = trace(500.0, 2.5, 77);
+        let cfg = ServeConfig::default();
+        let (_, _, obs) = simulate_observed(
+            &sys,
+            &ds,
+            &t,
+            &cfg,
+            2.5,
+            "poisson",
+            500.0,
+            &kernels,
+            &stages,
+            ObsConfig::default(),
+        );
+        let mut b = ObsBundle::new();
+        b.push_engine(*obs);
+        b.exports()
+    };
+    let (a, b) = (serve_run(), serve_run());
+    assert_eq!(a.trace_json, b.trace_json, "serve trace must replay byte-identically");
+    assert_eq!(a.series_csv, b.series_csv);
+    assert_eq!(a.series_json, b.series_json);
+    assert_eq!(a.metrics_text, b.metrics_text);
+    assert!(a.trace_json.contains("\"traceEvents\":["));
+    assert!(a.metrics_text.contains("flatattention_completed_total"));
+
+    let cluster_run = || {
+        let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+        let t = generate_trace(
+            &TraceConfig::new(77, TrafficPattern::Poisson, 300.0, 2.5).with_prefixes(PrefixProfile::agentic()),
+        );
+        let ccfg = ClusterConfig::disaggregated(1, 2, &ds);
+        let (_, _, bundle) = simulate_cluster_observed(
+            &sys,
+            &ds,
+            &t,
+            &ccfg,
+            2.5,
+            300.0,
+            &kernels,
+            &stages,
+            Some(ObsConfig::default()),
+        );
+        bundle.expect("a sink was requested").exports()
+    };
+    let (a, b) = (cluster_run(), cluster_run());
+    assert_eq!(a.trace_json, b.trace_json, "cluster trace must replay byte-identically");
+    assert_eq!(a.series_csv, b.series_csv);
+    assert_eq!(a.series_json, b.series_json);
+    assert_eq!(a.metrics_text, b.metrics_text);
+}
+
+#[test]
+fn attaching_a_sink_never_changes_the_simulation() {
+    // Observability must be a pure observer: the instrumented run's outcome
+    // and per-request records equal the plain run's bit for bit.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let t = trace(450.0, 3.0, 9);
+    let cfg = ServeConfig::default();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let (plain, plain_recs) = simulate(&sys, &ds, &t, &cfg, 3.0, "poisson", 450.0, &kernels, &stages);
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let (observed, observed_recs, _) = simulate_observed(
+        &sys,
+        &ds,
+        &t,
+        &cfg,
+        3.0,
+        "poisson",
+        450.0,
+        &kernels,
+        &stages,
+        ObsConfig::default(),
+    );
+    assert_eq!(plain, observed, "the sink changed the serve outcome");
+    assert_eq!(plain_recs, observed_recs);
+
+    let ccfg = ClusterConfig::disaggregated(1, 1, &ds);
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let (plain, plain_recs) = simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 450.0, &kernels, &stages);
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let (observed, observed_recs, bundle) = simulate_cluster_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        3.0,
+        450.0,
+        &kernels,
+        &stages,
+        Some(ObsConfig::default()),
+    );
+    assert!(bundle.is_some());
+    assert_eq!(plain, observed, "the sink changed the cluster outcome");
+    assert_eq!(plain_recs, observed_recs);
+}
+
+#[test]
+fn span_cap_drops_are_accounted_in_every_export() {
+    // A tiny cap forces drops; the count must surface in the trace header
+    // and the Prometheus counters rather than vanish.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let t = trace(400.0, 2.0, 3);
+    let cfg = ServeConfig::default();
+    let tiny = ObsConfig { span_cap: 8, ..ObsConfig::default() };
+    let (_, _, obs) = simulate_observed(&sys, &ds, &t, &cfg, 2.0, "poisson", 400.0, &kernels, &stages, tiny);
+    assert!(obs.trace.dropped() > 0, "the tiny cap must actually drop events");
+    let dropped = obs.trace.dropped();
+    let mut b = ObsBundle::new();
+    b.push_engine(*obs);
+    let e = b.exports();
+    assert!(e.trace_json.contains(&format!("\"dropped_events\":\"{dropped}\"")));
+    assert!(e.metrics_text.contains(&format!("flatattention_trace_events_dropped_total {dropped}")));
+}
