@@ -1,9 +1,19 @@
 //! Bench harness for the fleet layer: the full prefill:decode pool-ratio
-//! sweep (4 configurations × load points on a 4-instance interleaved
-//! fleet), the multi-model co-serving comparison (interleaved shared pools
-//! vs the static bound), and the static-vs-live routing comparison.
-//! (criterion is unavailable in the offline build; this is a plain
-//! `harness = false` driver with std timing.)
+//! sweep (4 configurations × load points on a 4-instance fleet), the
+//! multi-model co-serving comparison (interleaved shared pools vs the
+//! static bound), the static-vs-live routing comparison, and the
+//! shard-count scaling sweep of the conservative-lookahead engine (a fixed
+//! large colocated fleet at 1/2/4/8 shards, reporting
+//! simulated-seconds-per-wall-second). (criterion is unavailable in the
+//! offline build; this is a plain `harness = false` driver with std
+//! timing.)
+
+use flatattention::cluster::{simulate_cluster, ClusterConfig};
+use flatattention::multichip::d2d::WaferSystem;
+use flatattention::multichip::parallelism::KernelCache;
+use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::sim::StageTimeCache;
+use flatattention::workload::deepseek::DeepSeekConfig;
 
 fn main() {
     // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
@@ -14,5 +24,51 @@ fn main() {
         let rep = flatattention::coordinator::experiments::run(id, fast).expect("experiment");
         rep.print();
         println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+    }
+    shard_sweep(fast);
+}
+
+/// Shard-count scaling of the sharded conservative-lookahead fleet engine:
+/// one fixed saturated colocated fleet replayed at 1/2/4/8 shards. Every
+/// run must agree with the serial reference (the engine is bit-identical
+/// at any shard count); the interesting number is
+/// simulated-seconds-per-wall-second.
+fn shard_sweep(fast: bool) {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    // Full scale: a 64-instance fleet driven at the per-instance saturation
+    // point of `cluster_pools` (2000 rps/instance overdrives 4 instances at
+    // 8000 rps; 125 rps/instance keeps 64 instances busy without an
+    // unbounded backlog).
+    let (instances, rate, horizon) = if fast { (8u32, 400.0, 2.0) } else { (64u32, 8000.0, 10.0) };
+    let trace = generate_trace(
+        &TraceConfig::new(2026, TrafficPattern::Poisson, rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let mut cfg = ClusterConfig::colocated(instances, &ds);
+    // Warm the shared kernel/stage memo caches so the timed runs measure
+    // the fleet engine, not first-touch kernel simulation.
+    let (reference, _) = simulate_cluster(&sys, &ds, &trace, &cfg, horizon, rate, &kernels, &stages);
+    println!(
+        "[bench shard_sweep] {instances} colocated instances, {rate:.0} rps over {horizon} s ({} requests)",
+        trace.len()
+    );
+    let mut serial_wall = f64::NAN;
+    for shards in [1u32, 2, 4, 8] {
+        cfg.shards = shards;
+        let t0 = std::time::Instant::now();
+        let (o, _) = simulate_cluster(&sys, &ds, &trace, &cfg, horizon, rate, &kernels, &stages);
+        let wall = t0.elapsed().as_secs_f64();
+        if shards == 1 {
+            serial_wall = wall;
+        }
+        assert_eq!(o.completed, reference.completed, "sharded run diverged from serial");
+        assert_eq!(o.arrived, reference.arrived, "sharded run diverged from serial");
+        println!(
+            "[bench shard_sweep] shards={shards}: wall {wall:.3} s, {:.1} sim-s/wall-s, {:.2}x vs serial",
+            horizon / wall,
+            serial_wall / wall
+        );
     }
 }

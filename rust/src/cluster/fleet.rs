@@ -1,48 +1,75 @@
-//! Fleet-level simulation: N wafer instances on ONE interleaved event
-//! clock, with live routing, pool roles and congested KV handoff.
+//! Fleet-level simulation: N wafer instances advanced by a sharded
+//! conservative-lookahead discrete-event engine, with live routing, pool
+//! roles and congested KV handoff — bit-identical at every shard count.
 //!
 //! The fleet simulator composes the *steppable* request-level serving
 //! engine (`serve::sim::ServeEngine`) — every instance is one engine
 //! running the same iteration-level continuous-batching simulation against
 //! the shared `StageTimeCache`/`KernelCache`, so all latencies stay
 //! grounded in the FlatAttention dataflow simulations. The cluster layer
-//! adds exactly the parts one instance cannot see:
+//! adds exactly the parts one instance cannot see (routing, disaggregated
+//! pools, KV handoff over a contended [`SharedLink`]), and advances the
+//! whole fleet with a classic conservative parallel-DES scheme:
 //!
-//! - **Single global event clock**: the fleet always advances the earliest
-//!   pending event — an external arrival, a KV-handoff becoming ready, or
-//!   the instance whose local clock is smallest taking its next iteration.
-//!   Nothing is simulated out of causal order, which is what makes *live*
-//!   routing state meaningful.
-//! - **Routing** ([`Router`]): each arrival is routed *at its arrival
-//!   time*, with every instance's live engine snapshot (queue depth,
-//!   residents, KV occupancy) in hand — the `LeastQueueDepth` policy and
-//!   the prefix-affinity spill guard consume it (decode-side feedback);
-//!   static policies (round-robin, fluid least-outstanding) ignore it and
-//!   reproduce the arrival-sequence-pure decisions of the old two-phase
-//!   simulation. Migrated requests are routed to a decode instance at
-//!   handoff-ready time, again against live decode-pool state.
-//! - **Disaggregation**: prefill-pool instances serve truncated requests
-//!   (`output_tokens = 1` — prefill + first token, then the KV leaves);
-//!   decode-pool instances receive `prefilled` injections that skip
-//!   prefill and resume from one generated token. Decode iterations
-//!   therefore never carry chunked-prefill interference — the mechanism
-//!   behind the colocated-vs-disaggregated TPOT crossover.
-//! - **KV handoff** ([`KvTransferModel`] + [`SharedLink`]): the migrated
-//!   prompt's latent-KV layout bytes ship over the shared inter-pool
-//!   fabric with busy-until serialization — concurrent migrations queue
-//!   instead of overlapping for free, and the queue wait joins the exposed
-//!   share of the transfer in delaying both the user-visible first token
-//!   and the decode arrival (TetriInfer/DistServe-style accounting, plus
-//!   congestion).
+//! # Epochs and the lookahead window
+//!
+//! The only way instances affect each other is through *cluster events* —
+//! routed trace arrivals and prefill→decode KV handoffs. A handoff that
+//! becomes ready at `t` lands on its decode instance no earlier than
+//! `t + L`, where `L = KvTransferModel::lookahead_s()` (the link's base
+//! latency — a floor under every exposed handoff delay). So simulated time
+//! is cut into epochs of length `L`: within one epoch no instance can
+//! observe another's in-flight events, which makes it safe for every
+//! shard to advance its engines through the epoch *independently*
+//! (`ServeEngine::step_until` — epoch-bounded, never crosses the horizon).
+//! Cluster events are exchanged at the epoch **barriers**:
+//!
+//! - trace arrivals landing inside the upcoming epoch are routed and
+//!   injected before the epoch runs;
+//! - handoffs that became ready *before* the epoch start are serialized on
+//!   the shared link (in global (ready, id) order — ticks never produce a
+//!   handoff earlier than their own epoch, so the order is total), routed,
+//!   and injected as future decode arrivals (≥ one epoch away, by the
+//!   lookahead bound);
+//! - empty stretches are skipped: the next barrier jumps straight to the
+//!   epoch of the globally earliest pending event.
+//!
+//! # The event-ordering comparator and bit-identity
+//!
+//! One shared comparator ([`event_order`]) fixes the global order: time
+//! first (`f64::total_cmp`), then kind (arrival < handoff < engine tick),
+//! then the stable tie-breaks (trace order for arrivals, request id for
+//! handoffs, the engine's own FIFO `seq` for same-time injections). It is
+//! applied identically at the barrier merge and inside every engine, and
+//! none of the barrier logic ever reads *which worker* produced an event:
+//! injections are emitted per engine in barrier order, handoffs drain
+//! from one heap with a strict total order, live loads are written by
+//! engine id, and the merged obs export orders by pid. A run at ANY shard
+//! count — including `shards = 1`, which executes the very same barrier
+//! code inline without threads — is therefore bit-identical: outcomes,
+//! records, and obs exports (pinned by `integration_cluster`).
+//!
+//! # The epoch-start snapshot contract (live routing)
+//!
+//! Live policies read instance state at routing decisions. Mid-epoch
+//! state is a race under sharding, so the contract (see
+//! [`router`](crate::cluster::router)) is: every routed event resolves
+//! against the pool snapshot frozen at the start of the epoch it lands
+//! in — arrivals against the entry-pool state at their epoch's barrier,
+//! handoffs against the decode-pool state at the start of the epoch their
+//! prefill completed in. The serial path applies the identical rule, so
+//! snapshots are at most one lookahead (≤ 1 ms inter-node) older than the
+//! decision time — far fresher than an engine iteration (tens of ms).
 //!
 //! Shared multi-model pools ([`simulate_shared_pool`]) interleave BOTH
 //! models' engines on one chip clock per instance: a tick occupies the
 //! chip exclusively, so a co-resident model's iterations genuinely stretch
-//! the other's cadence instead of being statically billed.
+//! the other's cadence instead of being statically billed. (This path is
+//! serial: chip-exclusive serialization has no lookahead to exploit.)
 //!
-//! Everything is deterministic: ties on the event clock break by a fixed
-//! (kind, waiting-time, index) order, so two identical invocations return
-//! identical outcomes and records.
+//! Everything is deterministic: two identical invocations return identical
+//! outcomes and records, at any `ClusterConfig::shards` and any
+//! `--threads` budget.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -105,6 +132,12 @@ pub struct ClusterConfig {
     pub transfer: KvTransferModel,
     /// Fluid drain rate of the router's outstanding-work proxy.
     pub drain_rate: f64,
+    /// Shards the fleet's engines are partitioned into (`gid % shards`).
+    /// 1 (the default) runs the barrier loop inline without threads; any
+    /// value yields bit-identical results — shards only control how much
+    /// of the epoch work can run concurrently (capped by the
+    /// `--threads`/`FLATATTENTION_THREADS` worker budget).
+    pub shards: u32,
 }
 
 impl ClusterConfig {
@@ -119,6 +152,7 @@ impl ClusterConfig {
             decode_routing: RoutingPolicy::LeastOutstanding,
             transfer: KvTransferModel::inter_node(ds, serve.dtype),
             drain_rate: Router::DEFAULT_DRAIN_RATE,
+            shards: 1,
         }
     }
 
@@ -250,6 +284,10 @@ pub struct ClusterOutcome {
     /// Summed link-queue wait across migrations — the congestion cost the
     /// old overlap-for-free model never billed.
     pub link_wait_s: f64,
+    /// Shard count the run used (self-describing artifacts; never affects
+    /// any other field — bit-identity across shard counts is pinned by
+    /// test).
+    pub shards: u32,
     pub instances: Vec<InstanceSummary>,
 }
 
@@ -270,9 +308,37 @@ struct FleetTelemetry {
     link_wait_s: f64,
 }
 
+/// THE global event-ordering contract, factored into one comparator so
+/// shards and merge points cannot drift apart.
+///
+/// Fleet events order by time first (`f64::total_cmp` — a total order, so
+/// NaN can never poison a heap), then by kind: **arrival < handoff <
+/// engine tick**. The remaining tie-breaks are stable and owner-local:
+/// arrivals follow trace order, handoffs the request id
+/// ([`HandoffEv`]'s `Ord`), and same-time injections into one engine its
+/// FIFO `seq` counter (`serve::sim::PendingArrival`). Engine ticks no
+/// longer need a global arbiter — within an epoch no tick can observe
+/// another instance, so each engine's local clock is the only tick order
+/// that exists; cross-engine "smallest local clock first" of the old
+/// serial loop is subsumed by the epoch cut.
+pub(crate) mod event_order {
+    /// Routed trace arrival (entry pool).
+    pub const ARRIVAL: u8 = 0;
+    /// KV handoff ready (link serialization + decode routing).
+    pub const HANDOFF: u8 = 1;
+
+    /// Compare two (time, kind) event keys. Applied identically at the
+    /// barrier merge of due arrivals and handoffs and inside the handoff
+    /// heap; an equal result defers to the per-kind stable tie-break.
+    pub fn cmp(a: (f64, u8), b: (f64, u8)) -> std::cmp::Ordering {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+    }
+}
+
 /// A KV handoff waiting to be routed and transferred. Min-heap order:
-/// (ready time, id) — matching the old two-phase sort, so static decode
-/// routing reproduces the exact handoff sequence.
+/// ([`event_order`] on ready time, then id) — a strict total order (ids
+/// are unique), so the pop sequence is independent of push order and
+/// therefore of how engines are grouped onto workers.
 #[derive(Debug, Clone, Copy)]
 struct HandoffEv {
     ready_s: f64,
@@ -293,24 +359,337 @@ impl PartialOrd for HandoffEv {
 }
 impl Ord for HandoffEv {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.ready_s.total_cmp(&other.ready_s).then(self.id.cmp(&other.id))
+        event_order::cmp((self.ready_s, event_order::HANDOFF), (other.ready_s, event_order::HANDOFF))
+            .then(self.id.cmp(&other.id))
     }
 }
 
-/// Sample every engine's live state for a routing decision.
-fn live_loads(engines: &[ServeEngine]) -> Vec<LiveLoad> {
-    engines
-        .iter()
-        .map(|e| {
-            let s = e.snapshot();
-            LiveLoad { queued: s.queue_depth, active: s.active_users }
-        })
-        .collect()
+/// Index of the epoch containing time `t` under epoch length `lookahead`.
+/// Saturating at the ends; barrier processing compares against the epoch
+/// *bounds* (`k * lookahead`), so a float edge here can only cost an empty
+/// round, never correctness.
+fn epoch_index(t: f64, lookahead: f64) -> u64 {
+    (t / lookahead).floor().max(0.0) as u64
 }
 
-/// Simulate `trace` on the fleet described by `cfg` on one interleaved
-/// event clock. Deterministic: two identical invocations return identical
-/// outcomes and records. A 1-instance colocated fleet reproduces
+/// One worker's marching orders for one epoch phase.
+struct PhaseCmd {
+    /// Exclusive end of the epoch window (`step_until` bound).
+    end_s: f64,
+    /// Barrier-emitted injections, in global barrier order:
+    /// (slot in this worker's engine list, request).
+    injections: Vec<(usize, Request)>,
+}
+
+/// What a worker reports back from one epoch phase. Everything is keyed by
+/// engine id (`gid`), never by worker, so folding replies in worker order
+/// is order-insensitive — the engine→worker assignment cannot leak into
+/// results.
+struct PhaseReply {
+    /// Disaggregated entry-engine completions: (ready time, gid,
+    /// engine-local record index) — future handoffs.
+    completions: Vec<(f64, usize, usize)>,
+    /// Post-phase live loads of the engines whose role the routers read.
+    loads: Vec<(usize, LiveLoad)>,
+    /// Earliest next event across this worker's engines (None: all idle).
+    next_event_s: Option<f64>,
+}
+
+/// Run one epoch phase over one worker's engines: apply the barrier's
+/// injections (already in global order; per-engine order is what the
+/// engines' FIFO `seq` tie-break sees), advance every engine through the
+/// window, and collect the cross-shard outputs. The ONE code path both the
+/// inline (`shards = 1` / single worker) and threaded transports execute —
+/// bit-identity across shard counts is by construction, not by parallel
+/// reimplementation.
+fn run_worker_phase(
+    engines: &mut [(usize, &mut ServeEngine)],
+    n_entry: usize,
+    disagg: bool,
+    want_entry_loads: bool,
+    want_dec_loads: bool,
+    cmd: PhaseCmd,
+) -> PhaseReply {
+    for (slot, r) in cmd.injections {
+        engines[slot].1.inject(r);
+    }
+    let mut completions = Vec::new();
+    let mut loads = Vec::new();
+    let mut next: Option<f64> = None;
+    for (gid, e) in engines.iter_mut() {
+        let done = e.step_until(cmd.end_s);
+        if disagg && *gid < n_entry {
+            completions.extend(done.into_iter().map(|(t, rec)| (t, *gid, rec)));
+        }
+        if let Some(t) = e.next_event_s() {
+            next = Some(match next {
+                Some(n) if n <= t => n,
+                _ => t,
+            });
+        }
+        let want = if *gid < n_entry { want_entry_loads } else { want_dec_loads };
+        if want {
+            loads.push((*gid, LiveLoad::of(&e.snapshot())));
+        }
+    }
+    PhaseReply { completions, loads, next_event_s: next }
+}
+
+/// The barrier-side state of one fleet run: everything the epoch loop
+/// mutates *between* phases (routers, link, handoff heap, records, obs
+/// fleet lane, epoch-start load snapshots). Engines live on the workers
+/// during the loop; the driver only ever sees them through [`PhaseReply`]s.
+struct EpochDriver<'a> {
+    trace: &'a [Request],
+    cfg: &'a ClusterConfig,
+    horizon_s: f64,
+    disagg: bool,
+    n_entry: usize,
+    /// Epoch length: [`KvTransferModel::lookahead_s`], floored to a tiny
+    /// positive value so a degenerate zero-latency link cannot stall the
+    /// epoch ladder.
+    lookahead: f64,
+    /// Engine id → (worker, slot in the worker's engine list).
+    whereis: Vec<(usize, usize)>,
+    records: Vec<ClusterRecord>,
+    entry_pos: Vec<Vec<usize>>,
+    dec_pos: Vec<Vec<usize>>,
+    router: Router,
+    drouter: Router,
+    link: SharedLink,
+    fleet_obs: Option<EngineObs>,
+    handoffs: BinaryHeap<Reverse<HandoffEv>>,
+    next_arrival: usize,
+    migrated: usize,
+    /// Entry-pool loads at the CURRENT barrier (state with every event
+    /// before the upcoming epoch committed) — the epoch-start snapshot for
+    /// arrivals landing in the upcoming epoch.
+    entry_loads: Vec<LiveLoad>,
+    /// Decode-pool loads at the current barrier / at the previous barrier.
+    /// A handoff ready at `t < prev_end` landed inside the *previous*
+    /// phase's window, so its epoch-start snapshot is the previous
+    /// barrier's state (`prev_dec_loads`); later handoffs resolve against
+    /// the current state.
+    dec_loads: Vec<LiveLoad>,
+    prev_dec_loads: Vec<LiveLoad>,
+    prev_end: f64,
+    /// Earliest engine event reported by the last phase's replies.
+    engines_next: Option<f64>,
+}
+
+impl EpochDriver<'_> {
+    /// The epoch loop. `exec` runs one phase: it hands each worker its
+    /// injection list and the window end, and returns the replies (any
+    /// order-insensitive transport — inline calls or channels to
+    /// `std::thread` workers — produces identical results; see
+    /// [`PhaseReply`]).
+    fn run<F>(&mut self, workers: usize, exec: &mut F)
+    where
+        F: FnMut(f64, Vec<Vec<(usize, Request)>>) -> Vec<PhaseReply>,
+    {
+        fn merge(t: f64, m: &mut Option<f64>) {
+            let lower = match *m {
+                None => true,
+                Some(cur) => t < cur,
+            };
+            if lower {
+                *m = Some(t);
+            }
+        }
+        let mut next_k: u64 = 0;
+        loop {
+            // The globally earliest pending event decides the next epoch;
+            // empty stretches are skipped in one jump. `next_k` forces
+            // strict progress: when the only due event is a handoff inside
+            // the current epoch (its barrier cutoff is the epoch START),
+            // the bump costs one pass and the following barrier admits it.
+            let mut t_min: Option<f64> = None;
+            if let Some(r) = self.trace.get(self.next_arrival) {
+                merge(r.arrival_s, &mut t_min);
+            }
+            if let Some(&Reverse(h)) = self.handoffs.peek() {
+                merge(h.ready_s, &mut t_min);
+            }
+            if let Some(t) = self.engines_next {
+                merge(t, &mut t_min);
+            }
+            let Some(t_min) = t_min else { break };
+            let k = epoch_index(t_min, self.lookahead).max(next_k);
+            next_k = k + 1;
+            let t_start = k as f64 * self.lookahead;
+            let t_end = (k + 1) as f64 * self.lookahead;
+
+            // Barrier: merge due arrivals (landing inside the upcoming
+            // window) and due handoffs (ready before its start — they can
+            // only inject ≥ one lookahead later, so the window stays safe)
+            // in shared-comparator order.
+            let mut injections: Vec<Vec<(usize, Request)>> = vec![Vec::new(); workers];
+            loop {
+                let arr = self
+                    .trace
+                    .get(self.next_arrival)
+                    .filter(|r| r.arrival_s < t_end)
+                    .map(|r| r.arrival_s);
+                let hof = match self.handoffs.peek() {
+                    Some(&Reverse(h)) if h.ready_s < t_start => Some(h.ready_s),
+                    _ => None,
+                };
+                match (arr, hof) {
+                    (None, None) => break,
+                    (Some(a), Some(h))
+                        if event_order::cmp((a, event_order::ARRIVAL), (h, event_order::HANDOFF))
+                            .is_gt() =>
+                    {
+                        self.process_handoff(&mut injections)
+                    }
+                    (Some(_), _) => self.route_arrival(&mut injections),
+                    (None, Some(_)) => self.process_handoff(&mut injections),
+                }
+            }
+
+            self.prev_dec_loads.clone_from(&self.dec_loads);
+            let replies = exec(t_end, injections);
+            self.engines_next = None;
+            for rep in replies {
+                for (ready, gid, rec) in rep.completions {
+                    let pos = self.entry_pos[gid][rec];
+                    self.handoffs.push(Reverse(HandoffEv { ready_s: ready, id: self.trace[pos].id, pos }));
+                }
+                for (gid, l) in rep.loads {
+                    if gid < self.n_entry {
+                        self.entry_loads[gid] = l;
+                    } else {
+                        self.dec_loads[gid - self.n_entry] = l;
+                    }
+                }
+                if let Some(t) = rep.next_event_s {
+                    merge(t, &mut self.engines_next);
+                }
+            }
+            self.prev_end = t_end;
+        }
+    }
+
+    /// Route the next trace arrival at its arrival time against the
+    /// epoch-start entry-pool snapshot; the entry pool is priced in its
+    /// own currency — prompt + output tokens for a colocated pool, prompt
+    /// tokens only for a prefill pool (whose instances never decode).
+    fn route_arrival(&mut self, injections: &mut [Vec<(usize, Request)>]) {
+        let r = self.trace[self.next_arrival];
+        let work = if self.disagg {
+            r.prompt_tokens as f64
+        } else {
+            r.prompt_tokens as f64 + r.output_tokens as f64
+        };
+        let loads = self.cfg.routing.uses_live_state().then_some(self.entry_loads.as_slice());
+        let spills_before = self.router.spill_events();
+        let i = self.router.route_live(&r, r.arrival_s, work, loads);
+        self.records[self.next_arrival].prefill_instance = i as u32;
+        if let Some(f) = self.fleet_obs.as_mut() {
+            f.counters.inc("routed");
+            let spilled = self.router.spill_events() > spills_before;
+            let mut args = vec![("req", r.id.to_string()), ("instance", i.to_string())];
+            if spilled {
+                f.counters.inc("router_spills");
+                args.push(("spill", "affinity-overload".to_string()));
+            }
+            f.trace.instant(0, "route", "router", r.arrival_s, args);
+        }
+        let (w, slot) = self.whereis[i];
+        if self.disagg {
+            // Truncate to prefill + first token; the KV then leaves.
+            injections[w].push((slot, Request { output_tokens: 1, ..r }));
+        } else {
+            self.records[self.next_arrival].decode_instance = i as u32;
+            injections[w].push((slot, r));
+        }
+        self.entry_pos[i].push(self.next_arrival);
+        self.next_arrival += 1;
+    }
+
+    /// A handoff became ready: serialize it on the shared link (queueing
+    /// behind concurrent migrations), route the decode destination against
+    /// the epoch-start decode-pool snapshot, and deliver the pre-filled
+    /// request at the landing time. The migrated context is the prompt KV
+    /// (token #1's cache entry is produced decode-side).
+    fn process_handoff(&mut self, injections: &mut [Vec<(usize, Request)>]) {
+        let Reverse(h) = self.handoffs.pop().expect("peeked handoff vanished");
+        let orig = self.trace[h.pos];
+        let ctx = orig.prompt_tokens as u64;
+        let wait_before = self.link.wait_s;
+        let exposed = self.link.schedule(h.ready_s, ctx, &self.cfg.transfer);
+        let loads = self.cfg.decode_routing.uses_live_state().then_some(if h.ready_s < self.prev_end {
+            self.prev_dec_loads.as_slice()
+        } else {
+            self.dec_loads.as_slice()
+        });
+        let spills_before = self.drouter.spill_events();
+        let di = self.drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads);
+        self.records[h.pos].decode_instance = di as u32;
+        self.records[h.pos].transfer_bytes = self.cfg.transfer.bytes_for(ctx);
+        self.records[h.pos].transfer_s = exposed;
+        if let Some(f) = self.fleet_obs.as_mut() {
+            f.counters.inc("handoffs");
+            let spilled = self.drouter.spill_events() > spills_before;
+            let mut args = vec![
+                ("req", orig.id.to_string()),
+                ("decode_instance", di.to_string()),
+                ("bytes", self.records[h.pos].transfer_bytes.to_string()),
+                ("link_wait_s", format!("{:.6}", self.link.wait_s - wait_before)),
+            ];
+            if spilled {
+                f.counters.inc("router_spills");
+                args.push(("spill", "affinity-overload".to_string()));
+            }
+            // The handoff span starts at prefill completion (the source
+            // engine's clock when token #1 left) and ends at the
+            // decode-pool landing — serialization + queue wait.
+            f.trace.complete(h.pos as u64 + 1, "handoff", "link", h.ready_s, h.ready_s + exposed, args);
+            if f.series.ready(h.ready_s) {
+                f.series.record(SeriesRow {
+                    t_s: h.ready_s,
+                    pid: f.trace.pid(),
+                    queue_depth: self.handoffs.len(),
+                    active_users: 0,
+                    kv_frac: 0.0,
+                    kv_col_frac: Vec::new(),
+                    prefix_hit_rate: 0.0,
+                    link_busy_frac: self.link.busy_fraction(self.horizon_s),
+                });
+            }
+        }
+        // The user sees token #1 once the handoff lands. Sampling rule
+        // (mirrors the colocated side): every request whose prefill
+        // finished inside the simulated window contributes a TTFT sample —
+        // colocated first tokens stamped during the final tick may
+        // likewise overshoot the horizon by up to one tick, and here the
+        // overshoot bound is one tick plus the exposed transfer delay. A
+        // migrated request the decode pool later rejects keeps its sample
+        // too: its first token WAS delivered (post-prefill aborts in real
+        // disaggregated serving still stream token #1).
+        self.records[h.pos].first_token_s = Some(h.ready_s + exposed);
+        let (w, slot) = self.whereis[self.n_entry + di];
+        injections[w].push((
+            slot,
+            Request {
+                arrival_s: h.ready_s + exposed,
+                prefix_id: 0,
+                prefix_tokens: 0,
+                prefix_hash: 0,
+                prefilled: true,
+                ..orig
+            },
+        ));
+        self.dec_pos[di].push(h.pos);
+        self.migrated += 1;
+    }
+}
+
+/// Simulate `trace` on the fleet described by `cfg` with the sharded
+/// conservative-lookahead engine (`cfg.shards`; 1 = inline, no threads).
+/// Deterministic: two identical invocations return identical outcomes and
+/// records, and ANY shard count reproduces the serial path bit-identically
+/// (pinned by tests). A 1-instance colocated fleet reproduces
 /// `serve::sim::simulate` byte-identically (pinned by tests) — the fleet
 /// layer adds nothing an isolated instance would notice.
 #[allow(clippy::too_many_arguments)]
@@ -351,7 +730,7 @@ pub fn simulate_cluster_observed(
         FleetMode::Colocated { instances } => (instances as usize, 0usize),
         FleetMode::Disaggregated { prefill, decode } => (prefill as usize, decode as usize),
     };
-    let mut records: Vec<ClusterRecord> = trace
+    let records: Vec<ClusterRecord> = trace
         .iter()
         .map(|r| ClusterRecord {
             id: r.id,
@@ -382,176 +761,134 @@ pub fn simulate_cluster_observed(
     }
     // The fleet lane (last pid): router decisions and KV-link transfers —
     // events no single instance can see.
-    let mut fleet_obs: Option<EngineObs> = obs.map(|ocfg| EngineObs::new((n_entry + n_decode) as u32, "fleet", ocfg));
+    let fleet_obs: Option<EngineObs> = obs.map(|ocfg| EngineObs::new((n_entry + n_decode) as u32, "fleet", ocfg));
     // Per-engine record index → position in `trace`/`records`.
-    let mut entry_pos: Vec<Vec<usize>> = vec![Vec::new(); n_entry];
-    let mut dec_pos: Vec<Vec<usize>> = vec![Vec::new(); n_decode];
+    let entry_pos: Vec<Vec<usize>> = vec![Vec::new(); n_entry];
+    let dec_pos: Vec<Vec<usize>> = vec![Vec::new(); n_decode];
     let keying = cfg.serve.scheduler.prefix_keying;
-    let mut router = Router::new(cfg.routing, keying, n_entry, cfg.drain_rate);
-    let mut drouter = Router::new(cfg.decode_routing, keying, n_decode.max(1), cfg.drain_rate);
-    let mut link = SharedLink::new(cfg.transfer.parallel_flows);
-    let mut handoffs: BinaryHeap<Reverse<HandoffEv>> = BinaryHeap::new();
-    let mut next_arrival = 0usize;
-    let mut migrated = 0usize;
+    let n_engines = n_entry + n_decode;
+    // Shard partition (semantic, any value is bit-identical) folded onto
+    // the process-wide worker budget (wall-clock only).
+    let shards = cfg.shards.max(1) as usize;
+    let workers = shards.min(crate::util::worker_threads()).min(n_engines).max(1);
+    let lookahead = {
+        let l = cfg.transfer.lookahead_s();
+        if l > 0.0 {
+            l
+        } else {
+            1e-6
+        }
+    };
+    let want_entry_loads = cfg.routing.uses_live_state();
+    let want_dec_loads = disagg && cfg.decode_routing.uses_live_state();
+    let mut whereis = vec![(0usize, 0usize); n_engines];
 
-    // The interleaved loop: always advance the globally earliest event.
-    // Event kinds at equal times order arrival < handoff < entry tick <
-    // decode tick (arrivals due at an instance's clock must be enqueued
-    // before the instance ticks — the `<=` the engine itself applies), and
-    // equal-time engines tick in index order.
-    loop {
-        let mut best: Option<(f64, u8, usize)> = None;
-        let mut consider = |t: f64, kind: u8, idx: usize, best: &mut Option<(f64, u8, usize)>| {
-            let replace = match *best {
-                None => true,
-                Some((bt, bk, bi)) => {
-                    t.total_cmp(&bt).then(kind.cmp(&bk)).then(idx.cmp(&bi)) == std::cmp::Ordering::Less
-                }
-            };
-            if replace {
-                *best = Some((t, kind, idx));
-            }
-        };
-        if let Some(r) = trace.get(next_arrival) {
-            consider(r.arrival_s, 0, 0, &mut best);
+    let mut drv = EpochDriver {
+        trace,
+        cfg,
+        horizon_s,
+        disagg,
+        n_entry,
+        lookahead,
+        whereis: Vec::new(),
+        records,
+        entry_pos,
+        dec_pos,
+        router: Router::new(cfg.routing, keying, n_entry, cfg.drain_rate),
+        drouter: Router::new(cfg.decode_routing, keying, n_decode.max(1), cfg.drain_rate),
+        link: SharedLink::new(cfg.transfer.parallel_flows),
+        fleet_obs,
+        handoffs: BinaryHeap::new(),
+        next_arrival: 0,
+        migrated: 0,
+        entry_loads: vec![LiveLoad { queued: 0, active: 0 }; n_entry],
+        dec_loads: vec![LiveLoad { queued: 0, active: 0 }; n_decode],
+        prev_dec_loads: vec![LiveLoad { queued: 0, active: 0 }; n_decode],
+        prev_end: 0.0,
+        engines_next: None,
+    };
+
+    {
+        // Partition engines across workers: engine gid → shard (gid %
+        // shards) → worker. The grouping is invisible to results (see
+        // `PhaseReply`); it only decides which thread steps which engine.
+        let mut groups: Vec<Vec<(usize, &mut ServeEngine)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (gid, e) in entry.iter_mut().chain(dec.iter_mut()).enumerate() {
+            let w = (gid % shards) % workers;
+            whereis[gid] = (w, groups[w].len());
+            groups[w].push((gid, e));
         }
-        if let Some(&Reverse(h)) = handoffs.peek() {
-            consider(h.ready_s, 1, 0, &mut best);
-        }
-        for (i, e) in entry.iter().enumerate() {
-            if let Some(t) = e.next_event_s() {
-                consider(t, 2, i, &mut best);
-            }
-        }
-        for (i, e) in dec.iter().enumerate() {
-            if let Some(t) = e.next_event_s() {
-                consider(t, 3, i, &mut best);
-            }
-        }
-        let Some((_, kind, idx)) = best else { break };
-        match kind {
-            0 => {
-                // Route the arrival at its arrival time with live entry-pool
-                // state; the entry pool is priced in its own currency —
-                // prompt + output tokens for a colocated pool, prompt tokens
-                // only for a prefill pool (whose instances never decode).
-                let r = trace[next_arrival];
-                let work = if disagg {
-                    r.prompt_tokens as f64
-                } else {
-                    r.prompt_tokens as f64 + r.output_tokens as f64
-                };
-                let loads = cfg.routing.uses_live_state().then(|| live_loads(&entry));
-                let spills_before = router.spill_events();
-                let i = router.route_live(&r, r.arrival_s, work, loads.as_deref());
-                records[next_arrival].prefill_instance = i as u32;
-                if let Some(f) = fleet_obs.as_mut() {
-                    f.counters.inc("routed");
-                    let spilled = router.spill_events() > spills_before;
-                    let mut args = vec![("req", r.id.to_string()), ("instance", i.to_string())];
-                    if spilled {
-                        f.counters.inc("router_spills");
-                        args.push(("spill", "affinity-overload".to_string()));
-                    }
-                    f.trace.instant(0, "route", "router", r.arrival_s, args);
-                }
-                if disagg {
-                    // Truncate to prefill + first token; the KV then leaves.
-                    entry[i].inject(Request { output_tokens: 1, ..r });
-                } else {
-                    records[next_arrival].decode_instance = i as u32;
-                    entry[i].inject(r);
-                }
-                entry_pos[i].push(next_arrival);
-                next_arrival += 1;
-            }
-            1 => {
-                // A handoff became ready: serialize it on the shared link
-                // (queueing behind concurrent migrations), route the decode
-                // destination against live decode-pool state, and deliver
-                // the pre-filled request at the landing time. The migrated
-                // context is the prompt KV (token #1's cache entry is
-                // produced decode-side).
-                let Reverse(h) = handoffs.pop().expect("peeked handoff vanished");
-                let orig = trace[h.pos];
-                let ctx = orig.prompt_tokens as u64;
-                let wait_before = link.wait_s;
-                let exposed = link.schedule(h.ready_s, ctx, &cfg.transfer);
-                let loads = cfg.decode_routing.uses_live_state().then(|| live_loads(&dec));
-                let spills_before = drouter.spill_events();
-                let di = drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads.as_deref());
-                records[h.pos].decode_instance = di as u32;
-                records[h.pos].transfer_bytes = cfg.transfer.bytes_for(ctx);
-                records[h.pos].transfer_s = exposed;
-                if let Some(f) = fleet_obs.as_mut() {
-                    f.counters.inc("handoffs");
-                    let spilled = drouter.spill_events() > spills_before;
-                    let mut args = vec![
-                        ("req", orig.id.to_string()),
-                        ("decode_instance", di.to_string()),
-                        ("bytes", records[h.pos].transfer_bytes.to_string()),
-                        ("link_wait_s", format!("{:.6}", link.wait_s - wait_before)),
-                    ];
-                    if spilled {
-                        f.counters.inc("router_spills");
-                        args.push(("spill", "affinity-overload".to_string()));
-                    }
-                    // The handoff span starts at prefill completion (the
-                    // source engine's clock when token #1 left) and ends at
-                    // the decode-pool landing — serialization + queue wait.
-                    f.trace.complete(h.pos as u64 + 1, "handoff", "link", h.ready_s, h.ready_s + exposed, args);
-                    if f.series.ready(h.ready_s) {
-                        f.series.record(SeriesRow {
-                            t_s: h.ready_s,
-                            pid: f.trace.pid(),
-                            queue_depth: handoffs.len(),
-                            active_users: 0,
-                            kv_frac: 0.0,
-                            kv_col_frac: Vec::new(),
-                            prefix_hit_rate: 0.0,
-                            link_busy_frac: link.busy_fraction(horizon_s),
-                        });
-                    }
-                }
-                // The user sees token #1 once the handoff lands. Sampling
-                // rule (mirrors the colocated side): every request whose
-                // prefill finished inside the simulated window contributes
-                // a TTFT sample — colocated first tokens stamped during the
-                // final tick may likewise overshoot the horizon by up to
-                // one tick, and here the overshoot bound is one tick plus
-                // the exposed transfer delay. A migrated request the decode
-                // pool later rejects keeps its sample too: its first token
-                // WAS delivered (post-prefill aborts in real disaggregated
-                // serving still stream token #1).
-                records[h.pos].first_token_s = Some(h.ready_s + exposed);
-                dec[di].inject(Request {
-                    arrival_s: h.ready_s + exposed,
-                    prefix_id: 0,
-                    prefix_tokens: 0,
-                    prefix_hash: 0,
-                    prefilled: true,
-                    ..orig
-                });
-                dec_pos[di].push(h.pos);
-                migrated += 1;
-            }
-            2 => {
-                let step = entry[idx].step();
-                if disagg {
-                    if let Step::Ticked { completions, .. } = step {
-                        let ready = entry[idx].clock_s();
-                        for rec in completions {
-                            let pos = entry_pos[idx][rec];
-                            handoffs.push(Reverse(HandoffEv { ready_s: ready, id: trace[pos].id, pos }));
+        drv.whereis = whereis;
+
+        if workers <= 1 {
+            // Inline transport: the same phase code, no threads — this IS
+            // the serial path (`--shards 1`).
+            drv.run(workers, &mut |end_s, inj| {
+                groups
+                    .iter_mut()
+                    .zip(inj)
+                    .map(|(g, injections)| {
+                        run_worker_phase(
+                            g,
+                            n_entry,
+                            disagg,
+                            want_entry_loads,
+                            want_dec_loads,
+                            PhaseCmd { end_s, injections },
+                        )
+                    })
+                    .collect()
+            });
+        } else {
+            // Threaded transport: persistent scoped workers, one phase
+            // command/reply pair per epoch. Replies are collected in
+            // worker order, but nothing downstream depends on it.
+            std::thread::scope(|s| {
+                let mut txs = Vec::with_capacity(workers);
+                let mut rxs = Vec::with_capacity(workers);
+                for mut g in groups {
+                    let (ctx, crx) = std::sync::mpsc::channel::<PhaseCmd>();
+                    let (rtx, rrx) = std::sync::mpsc::channel::<PhaseReply>();
+                    s.spawn(move || {
+                        while let Ok(cmd) = crx.recv() {
+                            let rep = run_worker_phase(
+                                &mut g,
+                                n_entry,
+                                disagg,
+                                want_entry_loads,
+                                want_dec_loads,
+                                cmd,
+                            );
+                            if rtx.send(rep).is_err() {
+                                break;
+                            }
                         }
-                    }
+                    });
+                    txs.push(ctx);
+                    rxs.push(rrx);
                 }
-            }
-            _ => {
-                dec[idx].step();
-            }
+                drv.run(workers, &mut |end_s, inj| {
+                    for (tx, injections) in txs.iter().zip(inj) {
+                        tx.send(PhaseCmd { end_s, injections }).expect("fleet worker died");
+                    }
+                    rxs.iter().map(|rx| rx.recv().expect("fleet worker died")).collect()
+                });
+                drop(txs);
+            });
         }
     }
+
+    let EpochDriver {
+        mut records,
+        entry_pos,
+        dec_pos,
+        router,
+        drouter,
+        link,
+        mut fleet_obs,
+        migrated,
+        ..
+    } = drv;
 
     // Detach sinks before `finish` consumes the engines; engine recorders
     // land in pid order (entry, decode), the fleet lane last. Cache
@@ -786,6 +1123,7 @@ pub fn simulate_shared_pool(
             decode_routing: routing,
             transfer: KvTransferModel::inter_node(spec.ds, spec.serve.dtype),
             drain_rate,
+            shards: 1,
         };
         let telemetry = FleetTelemetry {
             router_spills: routers[m].spill_events(),
@@ -901,6 +1239,7 @@ fn aggregate(
         router_spills: telemetry.router_spills,
         link_busy_frac: telemetry.link_busy_frac,
         link_wait_s: telemetry.link_wait_s,
+        shards: cfg.shards.max(1),
         instances,
     }
 }

@@ -1,6 +1,7 @@
-//! Fleet-level cluster simulator: multiple wafer instances interleaved on
-//! one event clock, disaggregated prefill/decode pools, congested
-//! KV-transfer modeling and live (feedback-driven) routing.
+//! Fleet-level cluster simulator: multiple wafer instances advanced by a
+//! sharded conservative-lookahead event engine, disaggregated
+//! prefill/decode pools, congested KV-transfer modeling and live
+//! (feedback-driven) routing.
 //!
 //! # Layering: `serve` vs `cluster`
 //!
@@ -19,12 +20,19 @@
 //!
 //! The cluster layer owns exactly four concerns:
 //!
-//! - **the global event clock** ([`fleet`]): arrivals, KV handoffs and
-//!   engine iterations advance in causal order — always the earliest event,
-//!   always the instance with the smallest local clock. The old two-phase
-//!   (route → prefill-all → handoff → decode-all) mode is gone; its
-//!   behavior for static policies falls out of the interleaved loop as a
-//!   special case.
+//! - **the global event order** ([`fleet`]): arrivals, KV handoffs and
+//!   engine iterations advance in causal order under one shared comparator
+//!   (time, then arrival < handoff < tick, then stable tie-breaks). Since
+//!   the sharded-engine refactor the fleet no longer walks one interleaved
+//!   clock: simulated time is cut into epochs of the KV link's base
+//!   latency (the conservative *lookahead* — no cross-instance event can
+//!   land sooner), engines advance through each epoch independently on a
+//!   pool of shard workers (`ClusterConfig::shards`, `--threads` budget),
+//!   and cluster events are exchanged at the epoch barriers. Any shard
+//!   count is bit-identical to the serial loop — `shards = 1` runs the
+//!   very same barrier code inline. The old two-phase (route →
+//!   prefill-all → handoff → decode-all) mode is gone; its behavior for
+//!   static policies falls out of the epoch loop as a special case.
 //! - [`router`] — which instance a request (or a KV handoff) lands on:
 //!   round-robin, fluid least-outstanding-work, prefix-affinity keyed on
 //!   the per-instance `PrefixStore` fingerprints, or *live*

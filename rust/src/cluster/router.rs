@@ -20,6 +20,16 @@
 //! together with the per-instance routed/backlog numbers each engine
 //! already reports (`InstanceSummary`), routing experiments are
 //! explainable from the `ClusterOutcome` alone.
+//!
+//! # Epoch-start snapshot contract (sharded fleet)
+//!
+//! Live loads are sampled at epoch *barriers*, never mid-phase: every
+//! routed event resolves against the pool snapshot frozen at the start of
+//! the epoch it lands in. This is what keeps the sharded fleet engine
+//! bit-identical at every shard count — a load reading can never depend on
+//! how far some other shard happened to have advanced. The serial
+//! (`--shards 1`) path goes through the same barrier code, so the contract
+//! holds there too by construction.
 
 use std::collections::HashMap;
 
@@ -99,6 +109,11 @@ impl LiveLoad {
     /// live policies rank on.
     pub fn depth(&self) -> usize {
         self.queued + self.active
+    }
+
+    /// Sample one engine's snapshot into the routing view.
+    pub fn of(s: &crate::serve::sim::EngineSnapshot) -> LiveLoad {
+        LiveLoad { queued: s.queue_depth, active: s.active_users }
     }
 }
 

@@ -98,6 +98,22 @@ impl KvTransferModel {
         let hidden = self.overlap_fraction.clamp(0.0, 1.0);
         self.base_latency_s + (1.0 - hidden) * self.serialization_seconds(context_tokens)
     }
+
+    /// Safe conservative-lookahead window for the sharded fleet engine.
+    ///
+    /// Every cross-instance event in the fleet is a KV handoff, and its
+    /// decode-pool arrival lands at `ready_s + exposed`, where `exposed =
+    /// base_latency_s + wait + (1 - overlap) * serialization ≥
+    /// base_latency_s`. So a handoff that becomes ready inside epoch `k`
+    /// can only inject an arrival at or after the start of epoch `k + 1`
+    /// when epochs are `base_latency_s` long — shards may advance a full
+    /// epoch without seeing each other's in-flight events, and exchanging
+    /// them at the barrier is causally sufficient. This is the classic
+    /// conservative PDES lookahead, with the link's base latency as the
+    /// minimum event propagation delay.
+    pub fn lookahead_s(&self) -> f64 {
+        self.base_latency_s
+    }
 }
 
 /// Busy-until serialization state of the shared inter-pool KV fabric.

@@ -40,6 +40,10 @@ pub struct ServeArgs {
     pub series_out: Option<String>,
     /// Prometheus text-format counter output path (`--metrics-out`).
     pub metrics_out: Option<String>,
+    /// Worker-thread budget (`--threads`): pins
+    /// [`crate::util::set_worker_threads`]. Orthogonal to custom-run
+    /// dispatch — thread counts never change a result.
+    pub threads: Option<usize>,
 }
 
 impl Default for ServeArgs {
@@ -56,6 +60,7 @@ impl Default for ServeArgs {
             trace_out: None,
             series_out: None,
             metrics_out: None,
+            threads: None,
         }
     }
 }
@@ -133,6 +138,10 @@ impl ServeArgs {
                     out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
                     i += 1;
                 }
+                "--threads" => {
+                    out.threads = Some(parse_threads(args, i)?);
+                    i += 1;
+                }
                 other => bail!("unknown serve option '{other}'; see `flatattention help`"),
             }
             i += 1;
@@ -207,6 +216,15 @@ pub struct ClusterArgs {
     pub series_out: Option<String>,
     /// Prometheus text-format counter output path (`--metrics-out`).
     pub metrics_out: Option<String>,
+    /// Shard count of the custom fleet's conservative-lookahead engine
+    /// (`--shards`, default 1 = inline serial path). Bit-identical at any
+    /// value — shards only control concurrency — but it selects a custom
+    /// run because only the custom path takes a shard count.
+    pub shards: u32,
+    /// Worker-thread budget (`--threads`): pins
+    /// [`crate::util::set_worker_threads`]. Orthogonal to custom-run
+    /// dispatch — thread counts never change a result.
+    pub threads: Option<usize>,
     /// Set when ANY custom-fleet flag was given, even with a value equal to
     /// its default — `--seed 2026` is still a request for a custom run.
     custom: bool,
@@ -230,6 +248,8 @@ impl Default for ClusterArgs {
             trace_out: None,
             series_out: None,
             metrics_out: None,
+            shards: 1,
+            threads: None,
             custom: false,
         }
     }
@@ -343,6 +363,15 @@ impl ClusterArgs {
                     out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
                     i += 1;
                 }
+                "--shards" => {
+                    out.shards = parse_count(args, i, "--shards")?;
+                    out.custom = true;
+                    i += 1;
+                }
+                "--threads" => {
+                    out.threads = Some(parse_threads(args, i)?);
+                    i += 1;
+                }
                 other => bail!("unknown cluster option '{other}'; see `flatattention help`"),
             }
             i += 1;
@@ -367,7 +396,7 @@ impl ClusterArgs {
         }
         if (out.models || out.dynamic) && out.is_custom() {
             let which = if out.models { "--models" } else { "--dynamic" };
-            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed");
+            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed/--shards");
         }
         Ok(out)
     }
@@ -381,6 +410,17 @@ fn parse_count(args: &[String], i: usize, flag: &str) -> Result<u32> {
         Ok(n) if (1..=64).contains(&n) => Ok(n),
         Ok(n) => bail!("{flag} must be in 1..=64 instances, got {n}"),
         Err(_) => bail!("{flag} expects a positive integer, got '{v}'"),
+    }
+}
+
+/// Parse the `--threads` worker budget (bounded so a typo cannot spawn a
+/// thousand OS threads).
+fn parse_threads(args: &[String], i: usize) -> Result<usize> {
+    let v = value(args, i, "--threads")?;
+    match v.parse::<usize>() {
+        Ok(n) if (1..=1024).contains(&n) => Ok(n),
+        Ok(n) => bail!("--threads must be in 1..=1024, got {n}"),
+        Err(_) => bail!("--threads expects a positive integer, got '{v}'"),
     }
 }
 
@@ -554,6 +594,29 @@ mod tests {
         // … but --dynamic alone (with --fast) is a valid canned run.
         let d = ClusterArgs::parse(&argv(&["--dynamic", "--fast"])).unwrap();
         assert!(d.dynamic && d.fast && !d.is_custom());
+    }
+
+    #[test]
+    fn cluster_parses_shards_and_threads() {
+        // --shards selects the custom path (only the custom run takes a
+        // shard count); --threads is pure plumbing like --cache-dir.
+        let a = ClusterArgs::parse(&argv(&["--shards", "4"])).unwrap();
+        assert_eq!(a.shards, 4);
+        assert!(a.is_custom(), "--shards must request a custom run");
+        let b = ClusterArgs::parse(&argv(&["--threads", "3"])).unwrap();
+        assert_eq!(b.threads, Some(3));
+        assert!(!b.is_custom(), "--threads must stay orthogonal to dispatch");
+        let c = ClusterArgs::parse(&argv(&["--models", "--threads", "2"])).unwrap();
+        assert!(c.models && c.threads == Some(2), "canned runs accept --threads");
+        assert!(ClusterArgs::parse(&argv(&["--models", "--shards", "2"])).is_err());
+        for bad in [["--shards", "0"], ["--shards", "65"], ["--threads", "0"], ["--threads", "9999"]] {
+            assert!(ClusterArgs::parse(&argv(&bad)).is_err(), "{bad:?} must fail");
+        }
+        assert!(ClusterArgs::parse(&argv(&["--shards"])).is_err(), "missing value");
+        let s = ServeArgs::parse(&argv(&["--threads", "8", "--fast"])).unwrap();
+        assert_eq!(s.threads, Some(8));
+        assert!(!s.is_custom(), "--threads must stay orthogonal for serve too");
+        assert!(ServeArgs::parse(&argv(&["--threads", "x"])).is_err());
     }
 
     #[test]

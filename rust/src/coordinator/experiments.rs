@@ -970,13 +970,14 @@ fn cluster_outcome_row(o: &ClusterOutcome) -> Vec<String> {
         o.router_spills.to_string(),
         fmt_pct(o.link_busy_frac),
         format!("{:.1}", o.link_wait_s * 1e3),
+        o.shards.to_string(),
     ]
 }
 
 /// Column headers matching [`cluster_outcome_row`].
-const CLUSTER_ROW_HEADER: [&str; 16] = [
+const CLUSTER_ROW_HEADER: [&str; 17] = [
     "fleet", "rps", "done", "backlog", "TTFT p50", "p99 (ms)", "TPOT p50", "p95", "p99 (ms)",
-    "tok/s", "goodput", "migrated", "transfer", "spills", "link busy", "wait (ms)",
+    "tok/s", "goodput", "migrated", "transfer", "spills", "link busy", "wait (ms)", "shards",
 ];
 
 /// `cluster_pools`: sweep the prefill:decode pool ratio at fixed fleet size
@@ -1304,13 +1305,15 @@ pub fn cluster_custom(
     seed: u64,
     caches: &SimCaches,
 ) -> Report {
-    cluster_custom_observed(mode, routing, d2d_link, rate, horizon, seed, caches, None).0
+    cluster_custom_observed(mode, routing, d2d_link, rate, horizon, seed, 1, caches, None).0
 }
 
 /// [`cluster_custom`] with an optional observability sink: same fleet
 /// simulation and report, plus the Chrome-trace / gauge-series /
 /// Prometheus exports when `obs` is set (the `flatattention cluster
-/// --trace-out/...` path).
+/// --trace-out/...` path). `shards` selects the sharded
+/// conservative-lookahead engine (1 = inline serial path; any value is
+/// bit-identical).
 #[allow(clippy::too_many_arguments)]
 pub fn cluster_custom_observed(
     mode: FleetMode,
@@ -1319,6 +1322,7 @@ pub fn cluster_custom_observed(
     rate: f64,
     horizon: f64,
     seed: u64,
+    shards: u32,
     caches: &SimCaches,
     obs: Option<ObsConfig>,
 ) -> (Report, Option<ObsExports>) {
@@ -1329,6 +1333,7 @@ pub fn cluster_custom_observed(
     );
     let mut ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(mode.instances(), &ds) };
     ccfg.routing = routing;
+    ccfg.shards = shards.max(1);
     if d2d_link {
         ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
     }
@@ -1339,10 +1344,11 @@ pub fn cluster_custom_observed(
     let mut r = Report::new("Cluster — custom fleet simulation (DeepSeek-v3-671B wafer instances)");
     r.preamble(format!(
         "{} fleet, {} arrival routing, {} KV link, poisson {rate:.0} rps (70% shared prompts) over {horizon} s, \
-         seed {seed}",
+         seed {seed}, {} shard(s)",
         mode.label(),
         routing.label(),
         if d2d_link { "d2d-class" } else { "inter-node" },
+        ccfg.shards,
     ));
     r.header(&CLUSTER_ROW_HEADER);
     r.row(cluster_outcome_row(&o));

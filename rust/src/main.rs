@@ -9,12 +9,12 @@
 //! flatattention simulate [options]           # simulate one attention kernel
 //! flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]
 //!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
-//!                     [--trace-out F] [--series-out F] [--metrics-out F]
+//!                     [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]
 //! flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]
 //!                       [--routing P] [--link inter-node|d2d]
 //!                       [--prefill N --decode N | --instances N]
-//!                       [--rate R] [--horizon S] [--seed N]
-//!                       [--trace-out F] [--series-out F] [--metrics-out F]
+//!                       [--rate R] [--horizon S] [--seed N] [--shards N]
+//!                       [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
 //!
@@ -37,6 +37,13 @@
 //! invocations never re-simulate a kernel shape (cross-process
 //! memoization). Caching never changes a result — every entry is keyed by
 //! its full config identity.
+//!
+//! `--shards N` partitions a custom fleet across the sharded
+//! conservative-lookahead engine; `--threads N` pins the process-wide
+//! worker budget (also honored by the parallel batch sweeps; the
+//! `FLATATTENTION_THREADS` env var is the flag's equivalent). Neither ever
+//! changes a result — any shard count and any thread budget are
+//! bit-identical to the serial path.
 //!
 //! `--trace-out F` / `--series-out F` / `--metrics-out F` export the
 //! deterministic observability layer ([`flatattention::obs`]): a Chrome
@@ -94,17 +101,19 @@ fn run() -> Result<()> {
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
             println!("  flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]");
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
-            println!("                      [--trace-out F] [--series-out F] [--metrics-out F]");
+            println!("                      [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]");
             println!("  flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]");
             println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
             println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
-            println!("                        [--rate R] [--horizon S] [--seed N]");
-            println!("                        [--trace-out F] [--series-out F] [--metrics-out F]");
+            println!("                        [--rate R] [--horizon S] [--seed N] [--shards N]");
+            println!("                        [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]");
             println!("  flatattention verify");
             println!();
             println!("  --trace-out F    Chrome trace_event JSON (open in ui.perfetto.dev)");
             println!("  --series-out F   per-instance gauge series (CSV; JSON when F ends in .json)");
             println!("  --metrics-out F  Prometheus text-format counters");
+            println!("  --shards N       shard the custom fleet's lookahead engine (bit-identical at any N)");
+            println!("  --threads N      pin the worker-thread budget (= FLATATTENTION_THREADS)");
             Ok(())
         }
         "list" => {
@@ -184,6 +193,9 @@ fn run() -> Result<()> {
             // custom single sweep / the prefix-cache experiment), plus the
             // KV-policy comparison when --policies is given.
             let sargs = ServeArgs::parse(&args[1..])?;
+            if let Some(n) = sargs.threads {
+                flatattention::util::set_worker_threads(n);
+            }
             let (caches, cache_dir) = open_caches(sargs.cache_dir.clone())?;
             let obs_cfg = sargs.obs_requested().then(ObsConfig::default);
             let mut obs_written = false;
@@ -217,6 +229,9 @@ fn run() -> Result<()> {
             // multi-model comparison (--models), the static-vs-live routing
             // comparison (--dynamic), or a single custom fleet.
             let cargs = ClusterArgs::parse(&args[1..])?;
+            if let Some(n) = cargs.threads {
+                flatattention::util::set_worker_threads(n);
+            }
             let (caches, cache_dir) = open_caches(cargs.cache_dir.clone())?;
             let obs_cfg = cargs.obs_requested().then(ObsConfig::default);
             let mut obs_written = false;
@@ -234,6 +249,7 @@ fn run() -> Result<()> {
                     rate,
                     horizon,
                     cargs.seed,
+                    cargs.shards,
                     &caches,
                     obs_cfg,
                 );

@@ -114,14 +114,28 @@ impl KernelCache {
     /// workers overlap their kernel simulations instead of serializing.
     /// Crate-visible so the serving layer's prefill engine shares one kernel
     /// memo with the decode evaluator.
+    ///
+    /// Hit/miss counting is interleaving-independent: a lookup counts as a
+    /// miss only if ITS insert created the entry. When n threads race on one
+    /// absent key the totals are always 1 miss + (n-1) hits regardless of
+    /// scheduling, so the counters (exported into obs metrics) stay
+    /// bit-identical across worker counts. Serial totals are unchanged.
     pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> KernelMetrics) -> KernelMetrics {
         if let Some(m) = self.inner.lock().unwrap().get(&key) {
             self.stats.lock().unwrap().0 += 1;
             return m.clone();
         }
-        self.stats.lock().unwrap().1 += 1;
         let m = f();
-        self.inner.lock().unwrap().entry(key).or_insert(m).clone()
+        match self.inner.lock().unwrap().entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                self.stats.lock().unwrap().0 += 1;
+                e.get().clone()
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                self.stats.lock().unwrap().1 += 1;
+                e.insert(m).clone()
+            }
+        }
     }
 
     /// Lookups served from the memo (shared across clones).

@@ -52,11 +52,14 @@ pub fn batch_sweep_cached(
     BATCH_SWEEP.iter().map(|&b| ev.evaluate(sys, ds, plan, b, kv_len, choice)).collect()
 }
 
-/// Run several independent sweep series concurrently on `std::thread`
-/// workers sharing one kernel cache. Results come back in `specs` order, and
-/// each series is identical to what a sequential [`batch_sweep`] produces
-/// (the cache stores deterministic simulation results, so completion order
-/// cannot change any value).
+/// Run several independent sweep series concurrently on a pool of
+/// `std::thread` workers sharing one kernel cache. The pool size follows
+/// the process-wide [`crate::util::worker_threads`] budget (the
+/// `--threads`/`FLATATTENTION_THREADS` knob, same as the sharded fleet
+/// engine) capped at `specs.len()`. Results come back in `specs` order,
+/// and each series is identical to what a sequential [`batch_sweep`]
+/// produces (the cache stores deterministic simulation results, so worker
+/// count and completion order cannot change any value).
 pub fn parallel_batch_sweeps(
     sys: &WaferSystem,
     ds: &DeepSeekConfig,
@@ -65,16 +68,32 @@ pub fn parallel_batch_sweeps(
     fidelity: SimFidelity,
     cache: &KernelCache,
 ) -> Vec<Vec<DecodeOutcome>> {
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    let workers = crate::util::worker_threads().min(specs.len()).max(1);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<Vec<DecodeOutcome>>>> =
+        specs.iter().map(|_| std::sync::Mutex::new(None)).collect();
     std::thread::scope(|scope| {
-        let handles: Vec<_> = specs
-            .iter()
-            .map(|&(plan, choice)| {
-                let cache = cache.clone();
-                scope.spawn(move || batch_sweep_cached(sys, ds, plan, kv_len, choice, fidelity, cache))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
-    })
+        for _ in 0..workers {
+            let next = &next;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let (plan, choice) = specs[i];
+                let out = batch_sweep_cached(sys, ds, plan, kv_len, choice, fidelity, cache.clone());
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("sweep worker panicked"))
+        .collect()
 }
 
 /// Best outcome under a TPOT constraint (the Table II operating point rule:

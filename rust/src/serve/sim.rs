@@ -109,14 +109,28 @@ impl StageTimeCache {
     /// `KernelCache`; keeps the lock discipline inside the type).
     /// Crate-visible so the prefill engine shares one stage-time memo with
     /// the decode path.
+    ///
+    /// Hit/miss counting is interleaving-independent: a lookup counts as a
+    /// miss only if ITS insert created the entry. When n threads race on one
+    /// absent key the totals are always 1 miss + (n-1) hits regardless of
+    /// scheduling, so the counters (exported into obs metrics) stay
+    /// bit-identical across worker counts. Serial totals are unchanged.
     pub(crate) fn get_or_insert_with(&self, key: String, f: impl FnOnce() -> f64) -> f64 {
         if let Some(&s) = self.inner.lock().unwrap().get(&key) {
             self.stats.lock().unwrap().0 += 1;
             return s;
         }
-        self.stats.lock().unwrap().1 += 1;
         let s = f();
-        *self.inner.lock().unwrap().entry(key).or_insert(s)
+        match self.inner.lock().unwrap().entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                self.stats.lock().unwrap().0 += 1;
+                *e.get()
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                self.stats.lock().unwrap().1 += 1;
+                *e.insert(s)
+            }
+        }
     }
 
     /// Lookups served from the memo (shared across clones).
@@ -643,6 +657,27 @@ impl<'a> ServeEngine<'a> {
         }
         self.tick += 1;
         Step::Ticked { first_tokens: ev.first_tokens, completions: ev.completions }
+    }
+
+    /// Epoch-bounded stepping for the sharded fleet: advance while the next
+    /// event lies strictly before `end_s`, collecting `(completion_time,
+    /// record_index)` pairs from every tick. Never crosses the horizon
+    /// (`step` gates on it), and — exactly like the serial interleaved loop —
+    /// a tick whose next-event time is inside the window may *finish* past
+    /// `end_s`: ticks commit atomically, so the overshoot is identical on
+    /// every path and the conservative-lookahead barrier stays bit-exact.
+    pub fn step_until(&mut self, end_s: f64) -> Vec<(f64, usize)> {
+        let mut done = Vec::new();
+        while let Some(t) = self.next_event_s() {
+            if t >= end_s {
+                break;
+            }
+            if let Step::Ticked { completions, .. } = self.step() {
+                let at = self.clock;
+                done.extend(completions.into_iter().map(|rec| (at, rec)));
+            }
+        }
+        done
     }
 
     pub fn clock_s(&self) -> f64 {

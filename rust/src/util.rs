@@ -1,5 +1,38 @@
 //! Small shared utilities: deterministic RNG (SplitMix64) for synthetic
-//! tensors and byte formatting.
+//! tensors, byte formatting, and the process-wide worker-thread budget.
+
+use std::sync::OnceLock;
+
+/// Process-wide worker-thread budget, shared by everything that fans work
+/// out across `std::thread` (the sharded fleet engine, the parallel batch
+/// sweeps). One knob, three sources in priority order: the `--threads` CLI
+/// flag (via [`set_worker_threads`]), the `FLATATTENTION_THREADS`
+/// environment variable, then `std::thread::available_parallelism()`.
+static WORKER_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Pin the worker-thread budget (the `--threads` CLI flag). First caller
+/// wins; later calls are ignored — the budget is process-global and read
+/// from many places, so it must not change mid-run. Clamped to ≥ 1.
+pub fn set_worker_threads(n: usize) {
+    let _ = WORKER_THREADS.set(n.max(1));
+}
+
+/// The worker-thread budget: the pinned value if [`set_worker_threads`]
+/// ran, else `FLATATTENTION_THREADS` (parsed, ≥ 1), else the machine's
+/// available parallelism (1 when unknown). Thread counts never affect
+/// results — every parallel consumer is bit-identical at any budget — so
+/// this is purely a wall-clock/footprint control.
+pub fn worker_threads() -> usize {
+    if let Some(&n) = WORKER_THREADS.get() {
+        return n;
+    }
+    if let Ok(v) = std::env::var("FLATATTENTION_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// SplitMix64: deterministic, seedable, dependency-free.
 #[derive(Debug, Clone)]

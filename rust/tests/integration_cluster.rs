@@ -1,16 +1,20 @@
 //! Cluster-layer invariants: the interleaved-fleet equivalence anchor
-//! (1 colocated instance == `serve::simulate`, byte-identical), fleet-wide
-//! request conservation across pools, fixed-seed determinism of the
-//! `cluster_pools` experiment (the acceptance criterion's byte-identical
-//! replay), the KV-transfer-bytes == latent-KV layout identity for every
-//! migrated request, and causal per-request timelines through prefill →
-//! transfer (with link congestion) → decode.
+//! (1 colocated instance == `serve::simulate`, byte-identical), the
+//! sharded-engine bit-identity anchor (ANY shard count == the serial loop:
+//! outcomes, records AND obs exports, on overdriven preempting/contended
+//! fleets), fleet-wide request conservation across pools, fixed-seed
+//! determinism of the `cluster_pools` experiment (the acceptance
+//! criterion's byte-identical replay), the KV-transfer-bytes == latent-KV
+//! layout identity for every migrated request, and causal per-request
+//! timelines through prefill → transfer (with link congestion) → decode.
 
-use flatattention::cluster::{simulate_cluster, ClusterConfig, FleetMode};
+use flatattention::cluster::{simulate_cluster, simulate_cluster_observed, ClusterConfig, FleetMode, RoutingPolicy};
 use flatattention::coordinator::experiments;
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
-use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::obs::ObsConfig;
+use flatattention::serve::request::{generate_trace, LengthProfile, PrefixProfile, TraceConfig, TrafficPattern};
+use flatattention::serve::scheduler::AdmissionPolicy;
 use flatattention::serve::sim::{simulate, StageTimeCache};
 use flatattention::workload::deepseek::DeepSeekConfig;
 
@@ -198,6 +202,96 @@ fn migrated_timelines_are_causal_and_pay_the_handoff() {
         }
     }
     assert!(o.kv_transfer_exposed_s > 0.0);
+}
+
+#[test]
+fn sharded_engine_is_bit_identical_to_serial_at_every_shard_count() {
+    // THE tentpole anchor: the sharded conservative-lookahead engine must
+    // reproduce the serial loop bit for bit at every shard count — same
+    // ClusterOutcome (modulo the self-describing `shards` stamp), same
+    // per-request records, and byte-identical observability exports
+    // (Chrome trace, gauge series, Prometheus counters). Exercised on two
+    // deliberately nasty regimes:
+    //
+    //  - an overdriven memory-starved colocated fleet (on-demand admission
+    //    on decode-heavy traffic ⇒ preemptions) under live prefix-affinity
+    //    routing (the epoch-start snapshot path);
+    //  - a disaggregated fleet on a one-flow starved link (handoff
+    //    contention ⇒ link queueing) with live least-queue-depth decode
+    //    routing (the decode-pool snapshot path).
+    let ds = DeepSeekConfig::v3_671b();
+
+    // Regime 1: preemptions. 10 GiB HBM/chip + decode-heavy traffic is the
+    // known pressure recipe (see integration_serve); two instances at
+    // 5000 rps keep each one past the single-instance preemption point.
+    let mut starved = WaferSystem::paper();
+    starved.chip.hbm.capacity_gib_per_stack = 10;
+    let mut tc = TraceConfig::new(5, TrafficPattern::Poisson, 5000.0, 4.0).with_prefixes(PrefixProfile::agentic());
+    tc.lengths = LengthProfile::decode_heavy();
+    let overdriven = generate_trace(&tc);
+    let mut colocated = ClusterConfig::colocated(2, &ds);
+    colocated.serve.scheduler.policy = AdmissionPolicy::OnDemandPreempt;
+
+    // Regime 2: handoff contention. One slow flow queues concurrent
+    // migrations (the link_congestion recipe), live decode routing.
+    let contended = generate_trace(
+        &TraceConfig::new(17, TrafficPattern::Poisson, 400.0, 3.0).with_prefixes(PrefixProfile::agentic()),
+    );
+    let mut disagg = ClusterConfig::disaggregated(1, 2, &ds);
+    disagg.decode_routing = RoutingPolicy::LeastQueueDepth;
+    disagg.transfer.parallel_flows = 1;
+    disagg.transfer.link_bandwidth_bytes_per_s = 2.0e9;
+
+    let cases = [
+        (WaferSystem::paper(), disagg, &contended, 400.0, 3.0),
+        (starved, colocated, &overdriven, 5000.0, 4.0),
+    ];
+    for (sys, base, trace, rate, horizon) in cases {
+        // Fresh caches per run: the kernel/stage hit/miss counters are
+        // process-cumulative and land in the exported metrics text, so a
+        // byte comparison needs every run to start from the same cache
+        // state. (Cache *contents* never change results.)
+        let run = |shards: u32| {
+            let cfg = ClusterConfig { shards, ..base };
+            let (o, recs, bundle) = simulate_cluster_observed(
+                &sys,
+                &ds,
+                trace,
+                &cfg,
+                horizon,
+                rate,
+                &KernelCache::new(),
+                &StageTimeCache::new(),
+                Some(ObsConfig::default()),
+            );
+            (o, recs, bundle.expect("obs requested").exports())
+        };
+        let (mut serial, serial_recs, serial_exp) = run(1);
+        assert!(serial.conserves_requests());
+        match base.mode {
+            FleetMode::Disaggregated { .. } => {
+                assert!(serial.migrated > 0, "contention regime must migrate KV");
+                assert!(serial.link_wait_s > 0.0, "contention regime must queue handoffs");
+            }
+            FleetMode::Colocated { .. } => {
+                assert!(serial.preemptions > 0, "pressure regime must preempt");
+            }
+        }
+        serial.shards = 1;
+        for shards in [2u32, 4, 7] {
+            let (mut o, recs, exp) = run(shards);
+            assert_eq!(o.shards, shards, "outcome must state the shard count used");
+            // Every other field must agree bit for bit — normalize the
+            // stamp, then compare structurally (f64 equality, no tolerance).
+            o.shards = 1;
+            assert_eq!(o, serial, "{} fleet: {shards} shards diverged from serial", base.mode.label());
+            assert_eq!(recs, serial_recs, "{} fleet: {shards} shards record divergence", base.mode.label());
+            assert_eq!(exp.trace_json, serial_exp.trace_json, "{shards} shards: trace export diverged");
+            assert_eq!(exp.series_csv, serial_exp.series_csv, "{shards} shards: series export diverged");
+            assert_eq!(exp.series_json, serial_exp.series_json, "{shards} shards: series JSON diverged");
+            assert_eq!(exp.metrics_text, serial_exp.metrics_text, "{shards} shards: metrics export diverged");
+        }
+    }
 }
 
 #[test]
