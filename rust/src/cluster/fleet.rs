@@ -61,6 +61,32 @@
 //! snapshots are at most one lookahead (≤ 1 ms inter-node) older than the
 //! decision time — far fresher than an engine iteration (tens of ms).
 //!
+//! # Fault events (kill / drain / restart)
+//!
+//! Instance faults ([`FaultPlan`]) are cluster events too, and they obey
+//! the same discipline: a fault scheduled at `t` applies at the first
+//! epoch barrier at or after `t` — the only instants at which cluster
+//! state may change. A **drain** masks the instance on its router
+//! (prefix-affinity families re-home on their next arrival) and lets
+//! resident work finish. A **kill** additionally runs a *zero-width
+//! phase* at the barrier: every engine steps to the barrier time (all
+//! transports execute the identical call sequence, so shard bit-identity
+//! is untouched), then the victims abort ([`ServeEngine::kill`]) and hand
+//! their queued / in-flight / un-arrived work back. Extracted work
+//! re-enters the ENTRY router as fresh arrivals no earlier than the
+//! barrier (re-prefill from scratch; the resident latent KV died with the
+//! HBM, and a re-migration ships it over the [`SharedLink`] again) —
+//! exactly like a handoff, a requeue can never inject into the *running*
+//! epoch, so the conservative-lookahead bound survives kills. An optional
+//! restart unmasks the instance after a cold-start delay; a killed
+//! instance first reloads its weights over the shared link (billed, so a
+//! restart congests concurrent handoffs), a drained one kept its weights.
+//! Extracted requests whose requeue time falls at/after the horizon are
+//! counted `lost`; the conservation identity becomes
+//! `arrived == completed + rejected + in_flight + extracted_from_decode`
+//! (decode-side extractions stay counted under `migrated`, hence the
+//! explicit term — it is 0 in any fault-free run).
+//!
 //! Shared multi-model pools ([`simulate_shared_pool`]) interleave BOTH
 //! models' engines on one chip clock per instance: a tick occupies the
 //! chip exclusively, so a co-resident model's iterations genuinely stretch
@@ -167,6 +193,110 @@ impl ClusterConfig {
     }
 }
 
+/// What a fault does to an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Abort at the epoch barrier: resident KV and decode progress die
+    /// with the HBM; queued, in-flight and not-yet-arrived work requeues
+    /// through the entry router as fresh arrivals.
+    Kill,
+    /// Graceful removal: the router stops sending new work (prefix
+    /// families re-home), resident work runs to completion.
+    Drain,
+}
+
+/// One scheduled fault against one instance, addressed by global engine
+/// id: `0..n_entry` is the entry pool (colocated or prefill), then the
+/// decode pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// When the fault fires. Faults snap to the next epoch barrier at or
+    /// after this time — the only instants at which cluster state may
+    /// change under the conservative-lookahead engine.
+    pub at_s: f64,
+    /// Global engine id the fault targets.
+    pub instance: usize,
+    pub kind: FaultKind,
+    /// Rejoin the pool this long after the fault applies. A killed
+    /// instance additionally reloads its weights over the shared KV link
+    /// first (billed — a restart congests concurrent handoffs); a drained
+    /// instance just unmasks (its weights never left).
+    pub restart_after_s: Option<f64>,
+}
+
+/// A deterministic schedule of instance faults for one fleet run. The
+/// empty plan is exactly the no-fault simulator, bit for bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Add a kill of `instance` at `at_s` (no restart).
+    pub fn kill(mut self, instance: usize, at_s: f64) -> Self {
+        self.events.push(FaultEvent { at_s, instance, kind: FaultKind::Kill, restart_after_s: None });
+        self
+    }
+
+    /// Add a drain of `instance` at `at_s` (no restart).
+    pub fn drain(mut self, instance: usize, at_s: f64) -> Self {
+        self.events.push(FaultEvent { at_s, instance, kind: FaultKind::Drain, restart_after_s: None });
+        self
+    }
+
+    /// Give the most recently added event a restart `delay_s` after it
+    /// applies.
+    pub fn with_restart(mut self, delay_s: f64) -> Self {
+        if let Some(e) = self.events.last_mut() {
+            e.restart_after_s = Some(delay_s);
+        }
+        self
+    }
+
+    /// `kills` seeded-random kill events across `instances` instances,
+    /// uniform over the horizon — the same SplitMix64 discipline as trace
+    /// generation, so a (seed, instances, horizon, kills) tuple names one
+    /// exact failure schedule forever.
+    pub fn seeded_random(seed: u64, instances: usize, horizon_s: f64, kills: usize) -> Self {
+        let mut rng = crate::util::SplitMix64::new(seed ^ 0xFA17_0FA1_7000_0007);
+        let mut plan = FaultPlan::none();
+        for _ in 0..kills {
+            let instance = rng.next_range(instances.max(1) as u64) as usize;
+            let at_s = rng.next_f64() * horizon_s;
+            plan = plan.kill(instance, at_s);
+        }
+        plan
+    }
+
+    /// Events in application order — (time, instance, kind), total and
+    /// deterministic — with out-of-window events dropped and targets
+    /// validated against the fleet size.
+    fn sorted(&self, n_engines: usize, horizon_s: f64) -> Vec<FaultEvent> {
+        let mut ev: Vec<FaultEvent> = self.events.iter().copied().filter(|e| e.at_s < horizon_s).collect();
+        for e in &ev {
+            assert!(
+                e.instance < n_engines,
+                "fault targets instance {} of a {n_engines}-engine fleet",
+                e.instance
+            );
+            assert!(e.at_s >= 0.0, "fault time must be non-negative");
+        }
+        ev.sort_by(|a, b| {
+            a.at_s.total_cmp(&b.at_s).then(a.instance.cmp(&b.instance)).then(a.kind.cmp(&b.kind))
+        });
+        ev
+    }
+}
+
 /// Fleet-level view of one request's life.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClusterRecord {
@@ -178,15 +308,20 @@ pub struct ClusterRecord {
     /// requests) the exposed KV-handoff delay including any link-queue wait.
     pub first_token_s: Option<f64>,
     pub completion_s: Option<f64>,
-    /// Entry-pool instance (colocated or prefill), `u32::MAX` if unrouted.
+    /// Entry-pool instance (colocated or prefill), `u32::MAX` if unrouted;
+    /// a requeued request reports its LAST home.
     pub prefill_instance: u32,
     /// Decode-pool instance (== entry instance when colocated).
     pub decode_instance: u32,
-    /// Latent-KV bytes shipped at handoff (0 when not migrated).
+    /// Latent-KV bytes shipped at handoff (0 when not migrated); a
+    /// requeued request accumulates every re-migration's bytes.
     pub transfer_bytes: u64,
     /// Exposed handoff delay in seconds, link-queue wait included
-    /// (0 when not migrated).
+    /// (0 when not migrated); accumulates across re-migrations.
     pub transfer_s: f64,
+    /// Times this request was extracted from a killed instance and
+    /// re-routed as a fresh arrival (0 in any fault-free run).
+    pub requeues: u32,
 }
 
 impl ClusterRecord {
@@ -284,6 +419,22 @@ pub struct ClusterOutcome {
     /// Summed link-queue wait across migrations — the congestion cost the
     /// old overlap-for-free model never billed.
     pub link_wait_s: f64,
+    /// Fault events applied within the horizon (kills + drains; restarts
+    /// are not counted).
+    pub faults: usize,
+    /// Extracted requests re-routed into the fleet as fresh arrivals.
+    pub requeued: usize,
+    /// Extracted requests abandoned because their requeue time fell at or
+    /// after the horizon.
+    pub lost: usize,
+    /// Of `requeued + lost`, the requests pulled out of decode-pool
+    /// engines — their original KV landings stay counted under
+    /// `migrated`/`arrived`, so the conservation identity carries this
+    /// term explicitly (0 in any fault-free run).
+    pub extracted_from_decode: usize,
+    /// Latent-KV bytes (resident context, landed and in-flight
+    /// migrations) destroyed by kills.
+    pub kv_lost_bytes: u64,
     /// Shard count the run used (self-describing artifacts; never affects
     /// any other field — bit-identity across shard counts is pinned by
     /// test).
@@ -294,18 +445,26 @@ pub struct ClusterOutcome {
 impl ClusterOutcome {
     /// Fleet-wide request conservation: every arrival is exactly one of
     /// completed / rejected / in-flight (pool backlogs + transfers en
-    /// route) at the horizon.
+    /// route) at the horizon, plus the decode-side kill extractions whose
+    /// first landing the arrival counters already saw (see the fault
+    /// section of the module docs). Reduces to the classic three-term
+    /// identity whenever the fault plan is empty.
     pub fn conserves_requests(&self) -> bool {
-        self.arrived == self.completed + self.rejected + self.in_flight
+        self.arrived == self.completed + self.rejected + self.in_flight + self.extracted_from_decode
     }
 }
 
-/// Router/link telemetry carried into [`ClusterOutcome`].
+/// Router/link/fault telemetry carried into [`ClusterOutcome`].
 #[derive(Debug, Clone, Copy, Default)]
 struct FleetTelemetry {
     router_spills: u64,
     link_busy_frac: f64,
     link_wait_s: f64,
+    faults: usize,
+    requeued: usize,
+    lost: usize,
+    extracted_from_decode: usize,
+    kv_lost_bytes: u64,
 }
 
 /// THE global event-ordering contract, factored into one comparator so
@@ -372,6 +531,18 @@ fn epoch_index(t: f64, lookahead: f64) -> u64 {
     (t / lookahead).floor().max(0.0) as u64
 }
 
+/// Lower `*m` to `t` (treating `None` as +inf) — the one reduction the
+/// epoch ladder and reply folding both use.
+fn merge_min(t: f64, m: &mut Option<f64>) {
+    let lower = match *m {
+        None => true,
+        Some(cur) => t < cur,
+    };
+    if lower {
+        *m = Some(t);
+    }
+}
+
 /// One worker's marching orders for one epoch phase.
 struct PhaseCmd {
     /// Exclusive end of the epoch window (`step_until` bound).
@@ -379,6 +550,10 @@ struct PhaseCmd {
     /// Barrier-emitted injections, in global barrier order:
     /// (slot in this worker's engine list, request).
     injections: Vec<(usize, Request)>,
+    /// Engine slots to abort AFTER the window runs (zero-width fault
+    /// phases only — `end_s` is then the barrier itself, so the victim
+    /// has seen every event before its death instant). Empty otherwise.
+    kills: Vec<usize>,
 }
 
 /// What a worker reports back from one epoch phase. Everything is keyed by
@@ -393,6 +568,37 @@ struct PhaseReply {
     loads: Vec<(usize, LiveLoad)>,
     /// Earliest next event across this worker's engines (None: all idle).
     next_event_s: Option<f64>,
+    /// Work extracted from engines this phase killed, keyed by gid (the
+    /// driver re-sorts globally before requeueing).
+    killed: Vec<(usize, KillReport)>,
+}
+
+/// Extracted work waiting to re-enter the fleet. Min-heap order:
+/// (requeue time under the shared comparator, then extraction sequence) —
+/// strict, total, and independent of the worker partition because kill
+/// reports are ingested in global gid order.
+#[derive(Debug, Clone, Copy)]
+struct RequeueEv {
+    at_s: f64,
+    seq: u64,
+    pos: usize,
+}
+
+impl PartialEq for RequeueEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for RequeueEv {}
+impl PartialOrd for RequeueEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RequeueEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_s.total_cmp(&other.at_s).then(self.seq.cmp(&other.seq))
+    }
 }
 
 /// Run one epoch phase over one worker's engines: apply the barrier's
@@ -414,13 +620,24 @@ fn run_worker_phase(
         engines[slot].1.inject(r);
     }
     let mut completions = Vec::new();
-    let mut loads = Vec::new();
-    let mut next: Option<f64> = None;
     for (gid, e) in engines.iter_mut() {
         let done = e.step_until(cmd.end_s);
         if disagg && *gid < n_entry {
             completions.extend(done.into_iter().map(|(t, rec)| (t, *gid, rec)));
         }
+    }
+    // Barrier kills execute after the window: the victim has processed
+    // every event strictly before the barrier, then its remaining work is
+    // extracted. Loads and next-event times are read afterwards, so a
+    // fresh corpse reports empty/idle like any drained shell.
+    let mut killed = Vec::new();
+    for &slot in &cmd.kills {
+        let (gid, e) = &mut engines[slot];
+        killed.push((*gid, e.kill()));
+    }
+    let mut loads = Vec::new();
+    let mut next: Option<f64> = None;
+    for (gid, e) in engines.iter_mut() {
         if let Some(t) = e.next_event_s() {
             next = Some(match next {
                 Some(n) if n <= t => n,
@@ -432,7 +649,7 @@ fn run_worker_phase(
             loads.push((*gid, LiveLoad::of(&e.snapshot())));
         }
     }
-    PhaseReply { completions, loads, next_event_s: next }
+    PhaseReply { completions, loads, next_event_s: next, killed }
 }
 
 /// The barrier-side state of one fleet run: everything the epoch loop
@@ -475,6 +692,22 @@ struct EpochDriver<'a> {
     prev_end: f64,
     /// Earliest engine event reported by the last phase's replies.
     engines_next: Option<f64>,
+    /// Fault machinery: the plan's events in application order and a
+    /// cursor into them.
+    faults: Vec<FaultEvent>,
+    next_fault: usize,
+    /// Scheduled rejoins, kept sorted by (time, gid).
+    restarts: Vec<(f64, usize)>,
+    /// Extracted work waiting to re-enter the entry router.
+    requeue: BinaryHeap<Reverse<RequeueEv>>,
+    requeue_seq: u64,
+    /// Weight bytes one instance reloads over the link on a cold start.
+    restart_weight_bytes: u64,
+    requeued: usize,
+    lost: usize,
+    extracted_from_decode: usize,
+    kv_lost_bytes: u64,
+    faults_applied: usize,
 }
 
 impl EpochDriver<'_> {
@@ -485,17 +718,8 @@ impl EpochDriver<'_> {
     /// [`PhaseReply`]).
     fn run<F>(&mut self, workers: usize, exec: &mut F)
     where
-        F: FnMut(f64, Vec<Vec<(usize, Request)>>) -> Vec<PhaseReply>,
+        F: FnMut(f64, Vec<Vec<(usize, Request)>>, Vec<Vec<usize>>) -> Vec<PhaseReply>,
     {
-        fn merge(t: f64, m: &mut Option<f64>) {
-            let lower = match *m {
-                None => true,
-                Some(cur) => t < cur,
-            };
-            if lower {
-                *m = Some(t);
-            }
-        }
         let mut next_k: u64 = 0;
         loop {
             // The globally earliest pending event decides the next epoch;
@@ -503,15 +727,27 @@ impl EpochDriver<'_> {
             // strict progress: when the only due event is a handoff inside
             // the current epoch (its barrier cutoff is the epoch START),
             // the bump costs one pass and the following barrier admits it.
+            // Faults and restarts work the same way — merging their times
+            // here guarantees a barrier with `t_start >= at_s` exists even
+            // when every queue is otherwise empty.
             let mut t_min: Option<f64> = None;
             if let Some(r) = self.trace.get(self.next_arrival) {
-                merge(r.arrival_s, &mut t_min);
+                merge_min(r.arrival_s, &mut t_min);
+            }
+            if let Some(&Reverse(q)) = self.requeue.peek() {
+                merge_min(q.at_s, &mut t_min);
             }
             if let Some(&Reverse(h)) = self.handoffs.peek() {
-                merge(h.ready_s, &mut t_min);
+                merge_min(h.ready_s, &mut t_min);
             }
             if let Some(t) = self.engines_next {
-                merge(t, &mut t_min);
+                merge_min(t, &mut t_min);
+            }
+            if let Some(e) = self.faults.get(self.next_fault) {
+                merge_min(e.at_s, &mut t_min);
+            }
+            if let Some(&(t, _)) = self.restarts.first() {
+                merge_min(t, &mut t_min);
             }
             let Some(t_min) = t_min else { break };
             let k = epoch_index(t_min, self.lookahead).max(next_k);
@@ -519,55 +755,260 @@ impl EpochDriver<'_> {
             let t_start = k as f64 * self.lookahead;
             let t_end = (k + 1) as f64 * self.lookahead;
 
-            // Barrier: merge due arrivals (landing inside the upcoming
-            // window) and due handoffs (ready before its start — they can
-            // only inject ≥ one lookahead later, so the window stays safe)
-            // in shared-comparator order.
+            // Cluster faults change state only at barriers. Due restarts
+            // rejoin first, then due faults mask their victims (so this
+            // barrier's routing already avoids them); kills run as a
+            // zero-width phase AT the barrier — every engine steps to
+            // `t_start` (all transports identically, preserving shard
+            // bit-identity) and the victims abort, landing their
+            // extracted work in the requeue pool before the merge below.
+            while let Some(&(t, gid)) = self.restarts.first() {
+                if t > t_start {
+                    break;
+                }
+                self.restarts.remove(0);
+                self.set_up_gid(gid, true);
+                if let Some(f) = self.fleet_obs.as_mut() {
+                    f.counters.inc("instance_restarts");
+                    f.trace.instant(0, "restart", "fault", t_start, vec![("instance", gid.to_string())]);
+                }
+            }
+            let mut kill_slots: Vec<Vec<usize>> = vec![Vec::new(); workers];
+            let mut any_kill = false;
+            while let Some(&ev) = self.faults.get(self.next_fault) {
+                if ev.at_s > t_start {
+                    break;
+                }
+                self.next_fault += 1;
+                any_kill |= self.apply_fault(ev, t_start, &mut kill_slots);
+            }
+            if any_kill {
+                let replies = exec(t_start, vec![Vec::new(); workers], kill_slots);
+                self.fold_replies(replies, t_start);
+            }
+
+            // Barrier: merge due arrivals and requeued re-arrivals
+            // (landing inside the upcoming window) and due handoffs
+            // (ready before its start — they can only inject ≥ one
+            // lookahead later, so the window stays safe) in
+            // shared-comparator order; a trace arrival beats a requeue at
+            // the same instant (fixed tie).
             let mut injections: Vec<Vec<(usize, Request)>> = vec![Vec::new(); workers];
             loop {
                 let arr = self
                     .trace
                     .get(self.next_arrival)
                     .filter(|r| r.arrival_s < t_end)
-                    .map(|r| r.arrival_s);
-                let hof = match self.handoffs.peek() {
-                    Some(&Reverse(h)) if h.ready_s < t_start => Some(h.ready_s),
+                    .map(|r| (r.arrival_s, event_order::ARRIVAL, 0u8));
+                let rq = match self.requeue.peek() {
+                    Some(&Reverse(q)) if q.at_s < t_end => Some((q.at_s, event_order::ARRIVAL, 1u8)),
                     _ => None,
                 };
-                match (arr, hof) {
-                    (None, None) => break,
-                    (Some(a), Some(h))
-                        if event_order::cmp((a, event_order::ARRIVAL), (h, event_order::HANDOFF))
-                            .is_gt() =>
-                    {
-                        self.process_handoff(&mut injections)
+                let hof = match self.handoffs.peek() {
+                    Some(&Reverse(h)) if h.ready_s < t_start => Some((h.ready_s, event_order::HANDOFF, 2u8)),
+                    _ => None,
+                };
+                let mut best: Option<(f64, u8, u8)> = None;
+                for cand in [arr, rq, hof].into_iter().flatten() {
+                    let replace = match best {
+                        None => true,
+                        Some(b) => event_order::cmp((cand.0, cand.1), (b.0, b.1))
+                            .then(cand.2.cmp(&b.2))
+                            .is_lt(),
+                    };
+                    if replace {
+                        best = Some(cand);
                     }
-                    (Some(_), _) => self.route_arrival(&mut injections),
-                    (None, Some(_)) => self.process_handoff(&mut injections),
+                }
+                match best {
+                    None => break,
+                    Some((_, _, 0)) => self.route_arrival(&mut injections),
+                    Some((_, _, 1)) => self.route_requeue(&mut injections),
+                    Some(_) => self.process_handoff(&mut injections),
                 }
             }
 
             self.prev_dec_loads.clone_from(&self.dec_loads);
-            let replies = exec(t_end, injections);
-            self.engines_next = None;
-            for rep in replies {
-                for (ready, gid, rec) in rep.completions {
-                    let pos = self.entry_pos[gid][rec];
-                    self.handoffs.push(Reverse(HandoffEv { ready_s: ready, id: self.trace[pos].id, pos }));
-                }
-                for (gid, l) in rep.loads {
-                    if gid < self.n_entry {
-                        self.entry_loads[gid] = l;
-                    } else {
-                        self.dec_loads[gid - self.n_entry] = l;
-                    }
-                }
-                if let Some(t) = rep.next_event_s {
-                    merge(t, &mut self.engines_next);
-                }
-            }
+            let replies = exec(t_end, injections, vec![Vec::new(); workers]);
+            self.fold_replies(replies, t_start);
             self.prev_end = t_end;
         }
+    }
+
+    /// Fold one phase's replies into driver state: completions become
+    /// handoffs, loads refresh the epoch-start snapshots, next-event times
+    /// merge, and kill reports (fault phases only) are ingested in global
+    /// gid order so the requeue sequence cannot depend on the worker
+    /// partition.
+    fn fold_replies(&mut self, replies: Vec<PhaseReply>, barrier_s: f64) {
+        self.engines_next = None;
+        let mut killed: Vec<(usize, KillReport)> = Vec::new();
+        for rep in replies {
+            for (ready, gid, rec) in rep.completions {
+                let pos = self.entry_pos[gid][rec];
+                self.handoffs.push(Reverse(HandoffEv { ready_s: ready, id: self.trace[pos].id, pos }));
+            }
+            for (gid, l) in rep.loads {
+                if gid < self.n_entry {
+                    self.entry_loads[gid] = l;
+                } else {
+                    self.dec_loads[gid - self.n_entry] = l;
+                }
+            }
+            if let Some(t) = rep.next_event_s {
+                merge_min(t, &mut self.engines_next);
+            }
+            killed.extend(rep.killed);
+        }
+        killed.sort_by_key(|&(gid, _)| gid);
+        for (gid, report) in killed {
+            self.ingest_kill(gid, report, barrier_s);
+        }
+    }
+
+    /// Mask (or unmask) instance `gid` on whichever router owns it.
+    fn set_up_gid(&mut self, gid: usize, up: bool) {
+        if gid < self.n_entry {
+            self.router.set_up(gid, up);
+        } else {
+            self.drouter.set_up(gid - self.n_entry, up);
+        }
+    }
+
+    /// Apply one due fault at the barrier: mask the victim, schedule its
+    /// optional rejoin (a kill bills a weight reload over the shared link
+    /// first), and return whether a kill phase is needed for it.
+    fn apply_fault(&mut self, ev: FaultEvent, barrier_s: f64, kill_slots: &mut [Vec<usize>]) -> bool {
+        self.faults_applied += 1;
+        self.set_up_gid(ev.instance, false);
+        let kill = matches!(ev.kind, FaultKind::Kill);
+        if let Some(f) = self.fleet_obs.as_mut() {
+            f.counters.inc("faults");
+            f.trace.instant(
+                0,
+                "fault",
+                "fault",
+                barrier_s,
+                vec![
+                    ("instance", ev.instance.to_string()),
+                    ("kind", if kill { "kill".to_string() } else { "drain".to_string() }),
+                ],
+            );
+        }
+        if kill {
+            let (w, slot) = self.whereis[ev.instance];
+            kill_slots[w].push(slot);
+        }
+        if let Some(delay) = ev.restart_after_s {
+            let rejoin = if kill {
+                // Cold start: the replacement reloads this instance's
+                // weights over the same contended fabric the KV handoffs
+                // use — concurrent migrations queue behind it.
+                barrier_s + delay + self.link.schedule_bytes(barrier_s, self.restart_weight_bytes, &self.cfg.transfer)
+            } else {
+                barrier_s + delay
+            };
+            if rejoin < self.horizon_s {
+                self.restarts.push((rejoin, ev.instance));
+                self.restarts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            }
+        }
+        kill
+    }
+
+    /// Fold one victim's extracted work into the requeue pool and the
+    /// loss ledgers. Queued and in-flight work requeues at the kill
+    /// barrier; not-yet-arrived work no earlier than its original arrival
+    /// time. KV lost: the full resident context for in-flight work, and
+    /// on the decode side also the landed / in-transit latent-KV of
+    /// queued and pending migrations. Anything whose requeue time falls
+    /// at/after the horizon is `lost` instead of requeued.
+    fn ingest_kill(&mut self, gid: usize, report: KillReport, barrier_s: f64) {
+        let decode_side = gid >= self.n_entry;
+        let di = gid.saturating_sub(self.n_entry);
+        let mut items: Vec<(usize, f64, u64)> = Vec::new();
+        for &(rec, _) in &report.queued {
+            let pos = if decode_side { self.dec_pos[di][rec] } else { self.entry_pos[gid][rec] };
+            let kv =
+                if decode_side { self.cfg.transfer.bytes_for(self.trace[pos].prompt_tokens as u64) } else { 0 };
+            items.push((pos, barrier_s, kv));
+        }
+        for &(rec, generated) in &report.in_flight {
+            let pos = if decode_side { self.dec_pos[di][rec] } else { self.entry_pos[gid][rec] };
+            let ctx = self.trace[pos].prompt_tokens as u64 + generated as u64;
+            items.push((pos, barrier_s, self.cfg.transfer.bytes_for(ctx)));
+        }
+        for &(rec, arrival_s) in &report.pending {
+            let pos = if decode_side { self.dec_pos[di][rec] } else { self.entry_pos[gid][rec] };
+            let kv =
+                if decode_side { self.cfg.transfer.bytes_for(self.trace[pos].prompt_tokens as u64) } else { 0 };
+            items.push((pos, arrival_s.max(barrier_s), kv));
+        }
+        if decode_side {
+            self.extracted_from_decode += items.len();
+        }
+        let mut lost_bytes = 0u64;
+        for (pos, at_s, kv) in items {
+            lost_bytes += kv;
+            if at_s >= self.horizon_s {
+                self.lost += 1;
+                if let Some(f) = self.fleet_obs.as_mut() {
+                    f.counters.inc("requests_lost");
+                }
+                continue;
+            }
+            self.requeue.push(Reverse(RequeueEv { at_s, seq: self.requeue_seq, pos }));
+            self.requeue_seq += 1;
+        }
+        self.kv_lost_bytes += lost_bytes;
+        if lost_bytes > 0 {
+            if let Some(f) = self.fleet_obs.as_mut() {
+                f.counters.add("kv_lost_bytes", lost_bytes);
+            }
+        }
+    }
+
+    /// Route one extracted request back into the entry pool as a fresh
+    /// arrival: prefill re-runs from scratch (the latent KV and any
+    /// decode progress died with the instance, and a re-migration ships
+    /// the KV over the link again), while the prefix identity is kept — a
+    /// survivor holding the family's blocks still serves its hits.
+    fn route_requeue(&mut self, injections: &mut [Vec<(usize, Request)>]) {
+        let Reverse(q) = self.requeue.pop().expect("peeked requeue vanished");
+        let r = Request { arrival_s: q.at_s, prefilled: false, ..self.trace[q.pos] };
+        let work = if self.disagg {
+            r.prompt_tokens as f64
+        } else {
+            r.prompt_tokens as f64 + r.output_tokens as f64
+        };
+        let loads = self.cfg.routing.uses_live_state().then_some(self.entry_loads.as_slice());
+        let spills_before = self.router.spill_events();
+        let i = self.router.route_live(&r, q.at_s, work, loads);
+        self.records[q.pos].prefill_instance = i as u32;
+        self.records[q.pos].requeues += 1;
+        self.requeued += 1;
+        if let Some(f) = self.fleet_obs.as_mut() {
+            f.counters.inc("requests_requeued");
+            let spilled = self.router.spill_events() > spills_before;
+            let mut args = vec![
+                ("req", r.id.to_string()),
+                ("instance", i.to_string()),
+                ("requeued", "1".to_string()),
+            ];
+            if spilled {
+                f.counters.inc("router_spills");
+                args.push(("spill", "affinity-overload".to_string()));
+            }
+            f.trace.instant(0, "route", "router", q.at_s, args);
+        }
+        let (w, slot) = self.whereis[i];
+        if self.disagg {
+            injections[w].push((slot, Request { output_tokens: 1, ..r }));
+        } else {
+            self.records[q.pos].decode_instance = i as u32;
+            injections[w].push((slot, r));
+        }
+        self.entry_pos[i].push(q.pos);
     }
 
     /// Route the next trace arrival at its arrival time against the
@@ -625,16 +1066,20 @@ impl EpochDriver<'_> {
         });
         let spills_before = self.drouter.spill_events();
         let di = self.drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads);
+        let bytes = self.cfg.transfer.bytes_for(ctx);
         self.records[h.pos].decode_instance = di as u32;
-        self.records[h.pos].transfer_bytes = self.cfg.transfer.bytes_for(ctx);
-        self.records[h.pos].transfer_s = exposed;
+        // Accumulate, don't overwrite: a requeued request that re-migrates
+        // ships its latent KV over the link AGAIN, and the record reports
+        // the total it cost.
+        self.records[h.pos].transfer_bytes += bytes;
+        self.records[h.pos].transfer_s += exposed;
         if let Some(f) = self.fleet_obs.as_mut() {
             f.counters.inc("handoffs");
             let spilled = self.drouter.spill_events() > spills_before;
             let mut args = vec![
                 ("req", orig.id.to_string()),
                 ("decode_instance", di.to_string()),
-                ("bytes", self.records[h.pos].transfer_bytes.to_string()),
+                ("bytes", bytes.to_string()),
                 ("link_wait_s", format!("{:.6}", self.link.wait_s - wait_before)),
             ];
             if spilled {
@@ -666,8 +1111,14 @@ impl EpochDriver<'_> {
         // overshoot bound is one tick plus the exposed transfer delay. A
         // migrated request the decode pool later rejects keeps its sample
         // too: its first token WAS delivered (post-prefill aborts in real
-        // disaggregated serving still stream token #1).
-        self.records[h.pos].first_token_s = Some(h.ready_s + exposed);
+        // disaggregated serving still stream token #1). A requeued request
+        // keeps the EARLIEST stamp — the user really saw token #1 before
+        // the instance died; the stall shows up in its per-token cadence.
+        let t1 = h.ready_s + exposed;
+        self.records[h.pos].first_token_s = Some(match self.records[h.pos].first_token_s {
+            Some(f) => f.min(t1),
+            None => t1,
+        });
         let (w, slot) = self.whereis[self.n_entry + di];
         injections[w].push((
             slot,
@@ -711,13 +1162,47 @@ pub fn simulate_cluster(
 /// simulation (same outcome and records, bit for bit), plus per-instance
 /// trace recorders / gauge series (pid `0..n_entry` entry pool, then the
 /// decode pool) and a fleet lane (last pid) carrying router decisions,
-/// KV-handoff link spans and the shared-link busy series.
+/// KV-handoff link spans, fault instants and the shared-link busy series.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_cluster_observed(
     sys: &WaferSystem,
     ds: &DeepSeekConfig,
     trace: &[Request],
     cfg: &ClusterConfig,
+    horizon_s: f64,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+    obs: Option<ObsConfig>,
+) -> (ClusterOutcome, Vec<ClusterRecord>, Option<ObsBundle>) {
+    simulate_cluster_faulted_observed(
+        sys,
+        ds,
+        trace,
+        cfg,
+        &FaultPlan::none(),
+        horizon_s,
+        offered_rps,
+        kernels,
+        stages,
+        obs,
+    )
+}
+
+/// [`simulate_cluster_observed`] under a [`FaultPlan`]: kill/drain events
+/// execute at epoch barriers (see the module docs' fault section), dead
+/// instances' work requeues through the router, and optional restarts
+/// rejoin after a cold start billed over the shared link. With the empty
+/// plan this IS `simulate_cluster_observed` — same code path, bit for
+/// bit. Deterministic and bit-identical at every shard count, fault plan
+/// active or not (pinned by `integration_cluster`).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cluster_faulted_observed(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ClusterConfig,
+    faults: &FaultPlan,
     horizon_s: f64,
     offered_rps: f64,
     kernels: &KernelCache,
@@ -743,6 +1228,7 @@ pub fn simulate_cluster_observed(
             decode_instance: u32::MAX,
             transfer_bytes: 0,
             transfer_s: 0.0,
+            requeues: 0,
         })
         .collect();
 
@@ -782,6 +1268,12 @@ pub fn simulate_cluster_observed(
     let want_entry_loads = cfg.routing.uses_live_state();
     let want_dec_loads = disagg && cfg.decode_routing.uses_live_state();
     let mut whereis = vec![(0usize, 0usize); n_engines];
+    // A cold-started replacement reloads the full per-instance weight
+    // footprint (every chip of the EP×PP plan) over the shared fabric.
+    let restart_weight_bytes = {
+        let kvm = crate::serve::kv::KvCacheModel::new(sys, ds, cfg.serve.plan, cfg.serve.dtype);
+        kvm.weight_bytes_per_chip * cfg.serve.plan.ep as u64 * cfg.serve.plan.pp as u64
+    };
 
     let mut drv = EpochDriver {
         trace,
@@ -806,6 +1298,17 @@ pub fn simulate_cluster_observed(
         prev_dec_loads: vec![LiveLoad { queued: 0, active: 0 }; n_decode],
         prev_end: 0.0,
         engines_next: None,
+        faults: faults.sorted(n_engines, horizon_s),
+        next_fault: 0,
+        restarts: Vec::new(),
+        requeue: BinaryHeap::new(),
+        requeue_seq: 0,
+        restart_weight_bytes,
+        requeued: 0,
+        lost: 0,
+        extracted_from_decode: 0,
+        kv_lost_bytes: 0,
+        faults_applied: 0,
     };
 
     {
@@ -823,18 +1326,18 @@ pub fn simulate_cluster_observed(
         if workers <= 1 {
             // Inline transport: the same phase code, no threads — this IS
             // the serial path (`--shards 1`).
-            drv.run(workers, &mut |end_s, inj| {
+            drv.run(workers, &mut |end_s, inj, kills| {
                 groups
                     .iter_mut()
-                    .zip(inj)
-                    .map(|(g, injections)| {
+                    .zip(inj.into_iter().zip(kills))
+                    .map(|(g, (injections, kills))| {
                         run_worker_phase(
                             g,
                             n_entry,
                             disagg,
                             want_entry_loads,
                             want_dec_loads,
-                            PhaseCmd { end_s, injections },
+                            PhaseCmd { end_s, injections, kills },
                         )
                     })
                     .collect()
@@ -867,9 +1370,9 @@ pub fn simulate_cluster_observed(
                     txs.push(ctx);
                     rxs.push(rrx);
                 }
-                drv.run(workers, &mut |end_s, inj| {
-                    for (tx, injections) in txs.iter().zip(inj) {
-                        tx.send(PhaseCmd { end_s, injections }).expect("fleet worker died");
+                drv.run(workers, &mut |end_s, inj, kills| {
+                    for (tx, (injections, kills)) in txs.iter().zip(inj.into_iter().zip(kills)) {
+                        tx.send(PhaseCmd { end_s, injections, kills }).expect("fleet worker died");
                     }
                     rxs.iter().map(|rx| rx.recv().expect("fleet worker died")).collect()
                 });
@@ -887,6 +1390,11 @@ pub fn simulate_cluster_observed(
         link,
         mut fleet_obs,
         migrated,
+        requeued,
+        lost,
+        extracted_from_decode,
+        kv_lost_bytes,
+        faults_applied,
         ..
     } = drv;
 
@@ -917,24 +1425,43 @@ pub fn simulate_cluster_observed(
         entry.into_iter().map(|e| e.finish(entry_role, 0.0)).collect();
     let decode_results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
         dec.into_iter().map(|e| e.finish("decode", 0.0)).collect();
+    // A requeued request maps from TWO engines (the corpse and the
+    // survivor), so stamps merge instead of overwrite: the earliest first
+    // token wins (the user really saw it before the instance died), and
+    // completion comes from whichever engine actually finished — at most
+    // one, since completed requests are never extracted.
     for (i, (_, recs)) in entry_results.iter().enumerate() {
         for (k, rec) in recs.iter().enumerate() {
             if !disagg {
                 let p = entry_pos[i][k];
-                records[p].first_token_s = rec.first_token_s;
-                records[p].completion_s = rec.completion_s;
+                if let Some(t) = rec.first_token_s {
+                    records[p].first_token_s = Some(match records[p].first_token_s {
+                        Some(f) => f.min(t),
+                        None => t,
+                    });
+                }
+                if rec.completion_s.is_some() {
+                    records[p].completion_s = rec.completion_s;
+                }
             }
         }
     }
     for (i, (_, recs)) in decode_results.iter().enumerate() {
         for (k, rec) in recs.iter().enumerate() {
-            records[dec_pos[i][k]].completion_s = rec.completion_s;
+            if rec.completion_s.is_some() {
+                records[dec_pos[i][k]].completion_s = rec.completion_s;
+            }
         }
     }
     let telemetry = FleetTelemetry {
         router_spills: router.spill_events() + drouter.spill_events(),
         link_busy_frac: link.busy_fraction(horizon_s),
         link_wait_s: link.wait_s,
+        faults: faults_applied,
+        requeued,
+        lost,
+        extracted_from_decode,
+        kv_lost_bytes,
     };
     let outcome = aggregate(
         cfg,
@@ -1103,6 +1630,7 @@ pub fn simulate_shared_pool(
                 decode_instance: u32::MAX,
                 transfer_bytes: 0,
                 transfer_s: 0.0,
+                requeues: 0,
             })
             .collect();
         let results: Vec<(ServeOutcome, Vec<RequestRecord>)> =
@@ -1172,7 +1700,13 @@ fn aggregate(
     let entry_backlog: usize = entry.iter().map(|(o, _)| o.in_flight + o.queued).sum();
     let decode_backlog: usize = decode.iter().map(|(o, _)| o.in_flight + o.queued).sum();
     let decode_arrived: usize = decode.iter().map(|(o, _)| o.arrived).sum();
-    let in_transfer = if disagg { migrated - decode_arrived } else { 0 };
+    // Migrations still en route at the horizon: of everything that left a
+    // prefill instance, subtract what landed (net of kill extractions —
+    // an extracted landing left `arrived` again via `ServeEngine::kill`)
+    // and what was extracted from the decode side entirely (landed or
+    // in-flight, its migration is dead, not en route).
+    let in_transfer =
+        if disagg { migrated - decode_arrived - telemetry.extracted_from_decode } else { 0 };
     let in_flight = entry_backlog + in_transfer + decode_backlog;
 
     let ttft: Vec<f64> = records.iter().filter_map(ClusterRecord::ttft_ms).collect();
@@ -1239,6 +1773,11 @@ fn aggregate(
         router_spills: telemetry.router_spills,
         link_busy_frac: telemetry.link_busy_frac,
         link_wait_s: telemetry.link_wait_s,
+        faults: telemetry.faults,
+        requeued: telemetry.requeued,
+        lost: telemetry.lost,
+        extracted_from_decode: telemetry.extracted_from_decode,
+        kv_lost_bytes: telemetry.kv_lost_bytes,
         shards: cfg.shards.max(1),
         instances,
     }
@@ -1387,6 +1926,198 @@ mod tests {
             assert_eq!(a, b, "{mode:?} must replay identically");
             assert_eq!(ra, rb);
         }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_the_unfaulted_simulator() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let t = trace(80.0, 3.0, 29);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        for ccfg in [ClusterConfig::colocated(2, &ds), ClusterConfig::disaggregated(1, 1, &ds)] {
+            let (o, recs) = simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 80.0, &kernels, &stages);
+            let (fo, frecs, _) = simulate_cluster_faulted_observed(
+                &sys,
+                &ds,
+                &t,
+                &ccfg,
+                &FaultPlan::none(),
+                3.0,
+                80.0,
+                &kernels,
+                &stages,
+                None,
+            );
+            assert_eq!(o, fo, "the empty plan must be bit-identical to the no-fault path");
+            assert_eq!(recs, frecs);
+            assert_eq!(fo.faults, 0);
+            assert_eq!(fo.requeued, 0);
+            assert_eq!(fo.kv_lost_bytes, 0);
+            assert!(recs.iter().all(|r| r.requeues == 0));
+        }
+    }
+
+    #[test]
+    fn colocated_kill_requeues_to_the_survivor_and_conserves() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig { routing: RoutingPolicy::RoundRobin, ..ClusterConfig::colocated(2, &ds) };
+        let t = trace(80.0, 4.0, 31);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let plan = FaultPlan::none().kill(0, 1.5);
+        let (o, recs, _) =
+            simulate_cluster_faulted_observed(&sys, &ds, &t, &ccfg, &plan, 4.0, 80.0, &kernels, &stages, None);
+        assert_eq!(o.faults, 1);
+        assert!(o.requeued > 0, "a loaded instance dying mid-run must strand work: {o:?}");
+        assert!(o.conserves_requests(), "{o:?}");
+        assert_eq!(o.extracted_from_decode, 0, "a colocated fleet has no decode pool");
+        assert!(o.completed > 0);
+        assert_eq!(recs.iter().map(|r| r.requeues as usize).sum::<usize>(), o.requeued);
+        for r in recs.iter().filter(|r| r.requeues > 0) {
+            assert_eq!(r.prefill_instance, 1, "requeues must re-home to the survivor: {r:?}");
+            if let (Some(f), Some(c)) = (r.first_token_s, r.completion_s) {
+                assert!(f >= r.arrival_s && c >= f, "causality violated after requeue: {r:?}");
+            }
+        }
+        assert!(
+            recs.iter().any(|r| r.requeues > 0 && r.completion_s.is_some()),
+            "under light load some requeued request must complete on the survivor"
+        );
+    }
+
+    #[test]
+    fn disaggregated_decode_kill_loses_kv_and_reships_on_requeue() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        // Entry pool is gid 0; the two decode instances are gids 1 and 2.
+        let ccfg = ClusterConfig::disaggregated(1, 2, &ds);
+        let t = trace(80.0, 4.0, 7);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let plan = FaultPlan::none().kill(1, 1.5);
+        let (o, recs, _) =
+            simulate_cluster_faulted_observed(&sys, &ds, &t, &ccfg, &plan, 4.0, 80.0, &kernels, &stages, None);
+        assert_eq!(o.faults, 1);
+        assert!(o.conserves_requests(), "{o:?}");
+        assert!(o.extracted_from_decode > 0, "the dead decode instance must strand landed KV");
+        assert_eq!(
+            o.extracted_from_decode,
+            o.requeued + o.lost,
+            "every decode extraction either requeues or falls past the horizon"
+        );
+        assert!(o.requeued > 0);
+        assert!(o.kv_lost_bytes > 0, "landed and in-transit KV dies with decode HBM");
+        assert!(o.completed > 0);
+        let layout = KvTransferModel::layout_bytes_per_token(&ds, ccfg.serve.dtype);
+        for r in recs.iter().filter(|r| r.requeues > 0) {
+            // Transfer bytes accumulate one full latent-KV layout per
+            // migration — never a fraction of one.
+            assert_eq!(r.transfer_bytes % (r.prompt_tokens as u64 * layout), 0, "{r:?}");
+        }
+        assert!(
+            recs.iter().any(|r| r.requeues > 0
+                && r.transfer_bytes == 2 * r.prompt_tokens as u64 * layout
+                && r.decode_instance == 1),
+            "some victim must re-prefill and re-ship its KV to the surviving decode instance"
+        );
+    }
+
+    #[test]
+    fn drain_masks_new_work_but_finishes_residents() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig { routing: RoutingPolicy::RoundRobin, ..ClusterConfig::colocated(2, &ds) };
+        let t = trace(60.0, 4.0, 37);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let plan = FaultPlan::none().drain(0, 1.0);
+        let (o, recs, _) =
+            simulate_cluster_faulted_observed(&sys, &ds, &t, &ccfg, &plan, 4.0, 60.0, &kernels, &stages, None);
+        assert_eq!(o.faults, 1);
+        assert_eq!(o.requeued, 0, "a drain must never strand work");
+        assert_eq!(o.extracted_from_decode, 0);
+        assert_eq!(o.kv_lost_bytes, 0);
+        assert!(o.conserves_requests(), "{o:?}");
+        // The drain snaps to the next epoch barrier (at most one ~1 ms
+        // lookahead past 1.0 s); past a safety margin every arrival must
+        // land on the survivor.
+        assert!(recs.iter().any(|r| r.arrival_s > 1.05), "trace must outlive the drain");
+        for r in recs.iter().filter(|r| r.arrival_s > 1.05) {
+            assert_eq!(r.prefill_instance, 1, "drained instance took new work: {r:?}");
+        }
+        // Residents admitted before the drain still run to completion.
+        assert!(
+            recs.iter().any(|r| r.prefill_instance == 0 && r.completion_s.is_some()),
+            "pre-drain residents of instance 0 must finish in place"
+        );
+    }
+
+    #[test]
+    fn restarted_instance_rejoins_and_takes_traffic_again() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let ccfg = ClusterConfig { routing: RoutingPolicy::RoundRobin, ..ClusterConfig::colocated(2, &ds) };
+        let t = trace(60.0, 4.0, 41);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let run = |plan: &FaultPlan| {
+            simulate_cluster_faulted_observed(&sys, &ds, &t, &ccfg, plan, 4.0, 60.0, &kernels, &stages, None)
+        };
+        let (o_stay, stay, _) = run(&FaultPlan::none().drain(0, 1.0));
+        let (o_back, back, _) = run(&FaultPlan::none().drain(0, 1.0).with_restart(0.5));
+        assert!(o_stay.conserves_requests() && o_back.conserves_requests());
+        // A drain rejoins delay seconds after its barrier (no weight
+        // reload); with round-robin it must take arrivals again well
+        // before 4.0 s, while the plain drain never does.
+        assert!(stay.iter().filter(|r| r.arrival_s > 1.6).all(|r| r.prefill_instance == 1));
+        assert!(
+            back.iter().any(|r| r.arrival_s > 1.6 && r.prefill_instance == 0),
+            "restarted instance must rejoin the rotation"
+        );
+    }
+
+    #[test]
+    fn faulted_run_is_shard_invariant() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let t = trace(100.0, 3.0, 43);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        // Mixed plan across both pools of a 2+2 disaggregated fleet: a
+        // drained prefill instance, plus a killed-then-restarted decode
+        // instance (gid 3 = decode 1) whose weight reload bills the link.
+        let plan = FaultPlan::none().drain(0, 0.8).kill(3, 1.2).with_restart(0.4);
+        let run = |shards: u32| {
+            let ccfg = ClusterConfig { shards, ..ClusterConfig::disaggregated(2, 2, &ds) };
+            let (mut o, recs, _) =
+                simulate_cluster_faulted_observed(&sys, &ds, &t, &ccfg, &plan, 3.0, 100.0, &kernels, &stages, None);
+            o.shards = 1;
+            (o, recs)
+        };
+        let base = run(1);
+        assert!(base.0.faults == 2 && base.0.conserves_requests(), "{:?}", base.0);
+        for s in [2, 4] {
+            assert_eq!(run(s), base, "shard count {s} must be bit-identical under faults");
+        }
+    }
+
+    #[test]
+    fn seeded_random_fault_plans_are_reproducible() {
+        let a = FaultPlan::seeded_random(9, 4, 10.0, 6);
+        let b = FaultPlan::seeded_random(9, 4, 10.0, 6);
+        assert_eq!(a, b, "one (seed, instances, horizon, kills) tuple names one schedule");
+        assert_eq!(a.events.len(), 6);
+        for e in &a.events {
+            assert!(e.instance < 4);
+            assert!(e.at_s >= 0.0 && e.at_s < 10.0);
+            assert_eq!(e.kind, FaultKind::Kill);
+            assert!(e.restart_after_s.is_none());
+        }
+        let c = FaultPlan::seeded_random(10, 4, 10.0, 6);
+        assert_ne!(a, c, "different seeds must draw different schedules");
+        assert!(FaultPlan::seeded_random(9, 4, 10.0, 0).is_empty());
     }
 
     #[test]

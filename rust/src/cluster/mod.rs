@@ -53,17 +53,28 @@
 //!   interference-free decode cadence — the colocated-vs-disaggregated
 //!   crossover the `cluster_pools` experiment sweeps.
 //!
-//! Entry points: `flatattention cluster` (CLI), experiment ids
-//! `cluster_pools`, `cluster_models` and `cluster_dynamic`,
-//! `examples/cluster.rs`, `benches/cluster_pools.rs`.
+//! A fifth, cross-cutting concern rides on the barrier engine: **fault
+//! injection** ([`fleet::FaultPlan`]). Kill/drain/restart events snap to
+//! the epoch barriers — the only instants cluster state may change — so a
+//! fleet with a fault schedule stays bit-identical at every shard count.
+//! Kills abort an instance and requeue its stranded work through the entry
+//! router as fresh arrivals (lost KV re-billed end to end); drains mask
+//! the instance and let residents finish; restarts rejoin after a delay,
+//! with a killed instance's weight reload billed over the shared link.
+//!
+//! Entry points: `flatattention cluster` (CLI, `--kill`/`--drain`
+//! fault flags), experiment ids `cluster_pools`, `cluster_models`,
+//! `cluster_dynamic` and `cluster_failures`, `examples/cluster.rs`,
+//! `benches/cluster_pools.rs`.
 
 pub mod fleet;
 pub mod router;
 pub mod transfer;
 
 pub use fleet::{
-    co_resident_serve, simulate_cluster, simulate_cluster_observed, simulate_shared_pool, tpot_crossover,
-    ClusterConfig, ClusterOutcome, ClusterRecord, FleetMode, InstanceSummary, SharedPoolSpec,
+    co_resident_serve, simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed,
+    simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FaultEvent, FaultKind,
+    FaultPlan, FleetMode, InstanceSummary, SharedPoolSpec,
 };
 pub use router::{LiveLoad, Router, RoutingPolicy};
 pub use transfer::{KvTransferModel, SharedLink};

@@ -127,6 +127,10 @@ pub struct Router {
     rr_next: usize,
     /// Fluid undrained token work per instance.
     outstanding: Vec<f64>,
+    /// Routability mask — `false` for draining or dead instances. Every
+    /// selection path skips masked instances; the fleet's fault injection
+    /// flips entries via [`Router::set_up`].
+    up: Vec<bool>,
     last_t: f64,
     drain_rate: f64,
     /// Prefix-family fingerprint → owning instance (mirrors which
@@ -156,6 +160,7 @@ impl Router {
             keying,
             rr_next: 0,
             outstanding: vec![0.0; n],
+            up: vec![true; n],
             last_t: 0.0,
             drain_rate: drain_rate.max(1.0),
             affinity: HashMap::new(),
@@ -172,54 +177,119 @@ impl Router {
         self.spills
     }
 
-    /// Lightest current backlog (read-only; the affinity guard's yardstick).
-    fn min_outstanding(&self) -> f64 {
-        self.outstanding.iter().cloned().fold(f64::INFINITY, f64::min)
+    /// Mark instance `i` routable (`true`) or unroutable (`false` — it is
+    /// draining or dead). Masking down also forgets the instance's fluid
+    /// backlog: its extracted work is redeposited wherever the fleet
+    /// requeues it, and a later restart joins with an empty ledger.
+    pub fn set_up(&mut self, i: usize, up: bool) {
+        assert!(i < self.up.len(), "instance {i} outside the pool");
+        self.up[i] = up;
+        if !up {
+            self.outstanding[i] = 0.0;
+        }
     }
 
-    /// Pick the least-loaded instance, breaking (near-)ties by rotating
+    /// Is instance `i` currently routable?
+    pub fn is_up(&self, i: usize) -> bool {
+        self.up[i]
+    }
+
+    /// Routable instances remaining.
+    pub fn up_instances(&self) -> usize {
+        self.up.iter().filter(|&&u| u).count()
+    }
+
+    /// Live depth of instance `i` as the selection loops see it: `None`
+    /// when the instance is masked down **or** the live slice has no entry
+    /// for it. The slice-length contract ("one `LiveLoad` per instance")
+    /// is thus enforced structurally — a short slice makes the uncovered
+    /// instances unroutable-by-live-signal instead of an out-of-bounds
+    /// panic, and the caller degrades to the fluid proxy if nothing is
+    /// covered at all.
+    fn live_depth(&self, live: &[LiveLoad], i: usize) -> Option<usize> {
+        if !self.up[i] {
+            return None;
+        }
+        live.get(i).map(LiveLoad::depth)
+    }
+
+    /// Lightest current backlog among up instances (read-only; the affinity
+    /// guard's yardstick).
+    fn min_outstanding(&self) -> f64 {
+        self.outstanding
+            .iter()
+            .zip(&self.up)
+            .filter(|&(_, &u)| u)
+            .map(|(&w, _)| w)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Pick the least-loaded up instance, breaking (near-)ties by rotating
     /// preference — otherwise a fully-drained fleet would funnel every
-    /// light-load arrival to instance 0.
+    /// light-load arrival to instance 0. With every instance masked down
+    /// (a fully faulted pool) it degrades to the rotation slot rather than
+    /// panicking; the fleet accounts such requests as lost either way.
     fn least_outstanding(&mut self) -> usize {
         let n = self.outstanding.len();
         let start = self.rr_next;
-        let mut best = start;
-        for k in 1..n {
+        let mut best: Option<usize> = None;
+        for k in 0..n {
             let i = (start + k) % n;
-            if self.outstanding[i] + 1e-9 < self.outstanding[best] {
-                best = i;
+            if !self.up[i] {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if self.outstanding[i] + 1e-9 < self.outstanding[b] {
+                        best = Some(i);
+                    }
+                }
             }
         }
-        self.rr_next = (best + 1) % n;
-        best
+        let i = best.unwrap_or(start);
+        self.rr_next = (i + 1) % n;
+        i
     }
 
-    /// Pick the instance with the lowest live queue depth (rotating
-    /// tie-break, mirroring [`Router::least_outstanding`]).
+    /// Pick the up instance with the lowest live queue depth (rotating
+    /// tie-break, mirroring [`Router::least_outstanding`]). Instances the
+    /// live slice does not cover are skipped; if it covers none, the fluid
+    /// proxy decides.
     fn least_depth(&mut self, live: &[LiveLoad]) -> usize {
         let n = self.outstanding.len();
-        debug_assert_eq!(live.len(), n, "one LiveLoad per instance");
         let start = self.rr_next;
-        let mut best = start;
-        for k in 1..n {
+        let mut best: Option<(usize, usize)> = None; // (depth, instance)
+        for k in 0..n {
             let i = (start + k) % n;
-            if live[i].depth() < live[best].depth() {
-                best = i;
+            let Some(d) = self.live_depth(live, i) else { continue };
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, i));
             }
         }
-        self.rr_next = (best + 1) % n;
-        best
+        match best {
+            Some((_, i)) => {
+                self.rr_next = (i + 1) % n;
+                i
+            }
+            None => self.least_outstanding(),
+        }
     }
 
     /// True when routing to the family home would pile onto a visibly
     /// overloaded instance. With live state: the home holds more than twice
-    /// the lightest instance's requests plus a slack. Without: the fluid
-    /// proxy's ~1 s-of-backlog rule.
+    /// the lightest up instance's requests plus a slack. Without: the fluid
+    /// proxy's ~1 s-of-backlog rule. A home the live slice does not cover
+    /// counts as overloaded — with no signal, spilling to a covered
+    /// instance is the safe move.
     fn home_overloaded(&self, home: usize, live: Option<&[LiveLoad]>) -> bool {
         match live {
             Some(l) => {
-                let lightest = l.iter().map(LiveLoad::depth).min().unwrap_or(0);
-                l[home].depth() > 2 * lightest + Self::SPILL_DEPTH_SLACK
+                let lightest = (0..self.up.len())
+                    .filter_map(|i| self.live_depth(l, i))
+                    .min()
+                    .unwrap_or(0);
+                l.get(home).map_or(true, |h| h.depth() > 2 * lightest + Self::SPILL_DEPTH_SLACK)
             }
             None => {
                 let light = self.min_outstanding();
@@ -255,8 +325,18 @@ impl Router {
         }
         let i = match self.policy {
             RoutingPolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.outstanding.len();
+                // Cycle to the next up instance (identical to the plain
+                // rotation while the whole pool is up).
+                let n = self.outstanding.len();
+                let mut i = self.rr_next;
+                for k in 0..n {
+                    let c = (self.rr_next + k) % n;
+                    if self.up[c] {
+                        i = c;
+                        break;
+                    }
+                }
+                self.rr_next = (i + 1) % n;
                 i
             }
             RoutingPolicy::LeastOutstanding => self.least_outstanding(),
@@ -270,7 +350,7 @@ impl Router {
                     self.least_outstanding()
                 } else {
                     match self.affinity.get(&key) {
-                        Some(&home) => {
+                        Some(&home) if self.up[home] => {
                             // Overload guard: spill (this request only, the
                             // fingerprint stays home) once affinity would
                             // visibly overload the home instance.
@@ -284,7 +364,12 @@ impl Router {
                                 home
                             }
                         }
-                        None => {
+                        // Unknown family — or its home is draining/dead,
+                        // whose blocks are gone (or going) with it: the
+                        // fingerprint re-homes permanently on the least
+                        // loaded up instance, where the family's blocks
+                        // will be re-prefilled.
+                        _ => {
                             let home = self.least_outstanding();
                             self.affinity.insert(key, home);
                             home
@@ -439,6 +524,76 @@ mod tests {
         let e3 = exact.route(&mk(0, 3), 0.0, 500.0);
         let e9 = exact.route(&mk(1, 9), 0.0, 500.0);
         assert_ne!(e3, e9, "distinct ids must home separately under ExactId");
+    }
+
+    #[test]
+    fn short_live_slice_degrades_instead_of_panicking() {
+        // Regression: a LiveLoad slice shorter than the pool (what a masked
+        // dead instance's missing sample produces) used to index
+        // out-of-bounds in release builds. Uncovered instances must simply
+        // be unroutable-by-live-signal.
+        let mut r = Router::new(RoutingPolicy::LeastQueueDepth, PrefixKeying::TokenHash, 3, 1000.0);
+        let short = [load(5, 0), load(0, 0)]; // no entry for instance 2
+        for i in 0..4 {
+            let pick = r.route_live(&plain(i, 0.0), 0.0, 100.0, Some(&short));
+            assert!(pick < 2, "uncovered instance 2 must not be picked, got {pick}");
+        }
+        // An empty slice covers nothing: the fluid proxy decides, and every
+        // instance stays reachable.
+        let picks: Vec<usize> =
+            (4..10).map(|i| r.route_live(&plain(i, 0.0), 0.0, 0.0, Some(&[]))).collect();
+        assert!(picks.iter().all(|&p| p < 3));
+        // The affinity guard tolerates a short slice too: whether the home
+        // is covered (depth 0, healthy) or uncovered (counts as overloaded,
+        // spills to the covered instance), the pick lands on instance 0.
+        let mut a = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 3, 1e9);
+        let _home = a.route_live(&fam(0, 0.0, 7), 0.0, 10.0, Some(&[load(0, 0); 3]));
+        let next = a.route_live(&fam(1, 0.0, 7), 0.0, 10.0, Some(&[load(0, 0)]));
+        assert_eq!(next, 0, "mismatched slice must degrade, not panic");
+    }
+
+    #[test]
+    fn masked_instances_are_skipped_by_every_policy() {
+        // Round-robin hops over the down instance and resumes on restart.
+        let mut rr = Router::new(RoutingPolicy::RoundRobin, PrefixKeying::TokenHash, 3, 1e9);
+        rr.set_up(1, false);
+        assert!(!rr.is_up(1));
+        assert_eq!(rr.up_instances(), 2);
+        let picks: Vec<usize> = (0..4).map(|i| rr.route(&plain(i, 0.0), 0.0, 1.0)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        rr.set_up(1, true);
+        let picks: Vec<usize> = (4..10).map(|i| rr.route(&plain(i, 0.0), 0.0, 1.0)).collect();
+        assert!(picks.contains(&1), "a restarted instance rejoins the rotation");
+
+        // Fluid least-outstanding never lands on a masked instance even
+        // though it is (artificially) the lightest.
+        let mut lo = Router::new(RoutingPolicy::LeastOutstanding, PrefixKeying::TokenHash, 3, 1e9);
+        assert_eq!(lo.route(&plain(0, 0.0), 0.0, 10.0), 0);
+        lo.set_up(2, false);
+        for i in 1..6 {
+            assert_ne!(lo.route(&plain(i, 0.0), 0.0, 10.0), 2);
+        }
+
+        // Live least-depth: the masked instance's zero depth is invisible.
+        let mut lqd = Router::new(RoutingPolicy::LeastQueueDepth, PrefixKeying::TokenHash, 3, 1e9);
+        lqd.set_up(0, false);
+        let l = [load(0, 0), load(4, 4), load(9, 9)];
+        assert_eq!(lqd.route_live(&plain(0, 0.0), 0.0, 1.0, Some(&l)), 1);
+    }
+
+    #[test]
+    fn affinity_rehomes_family_when_home_goes_down() {
+        let mut r = Router::new(RoutingPolicy::PrefixAffinity, PrefixKeying::TokenHash, 3, 1e9);
+        let home = r.route(&fam(0, 0.0, 7), 0.0, 500.0);
+        assert_eq!(r.route(&fam(1, 0.0, 7), 0.0, 500.0), home);
+        r.set_up(home, false);
+        let new_home = r.route(&fam(2, 0.0, 7), 0.0, 500.0);
+        assert_ne!(new_home, home, "family must leave its dead home");
+        // The re-homing is permanent: even after the old home restarts (its
+        // blocks are gone), the family sticks to the new home.
+        r.set_up(home, true);
+        assert_eq!(r.route(&fam(3, 0.0, 7), 0.0, 500.0), new_home);
+        assert_eq!(r.route(&fam(4, 0.0, 7), 0.0, 500.0), new_home);
     }
 
     #[test]

@@ -127,6 +127,10 @@ impl KvTransferModel {
 pub struct SharedLink {
     /// Per-channel busy-until times.
     free_at: Vec<f64>,
+    /// `(start, serialization)` of every scheduled transfer, in schedule
+    /// order — the exact-occupancy ledger [`SharedLink::busy_fraction`]
+    /// integrates over.
+    intervals: Vec<(f64, f64)>,
     /// Transfers scheduled so far.
     pub transfers: u64,
     /// Summed serialization time occupying the fabric.
@@ -139,6 +143,7 @@ impl SharedLink {
     pub fn new(parallel_flows: u32) -> Self {
         SharedLink {
             free_at: vec![0.0; parallel_flows.max(1) as usize],
+            intervals: Vec::new(),
             transfers: 0,
             busy_s: 0.0,
             wait_s: 0.0,
@@ -151,7 +156,15 @@ impl SharedLink {
     /// Deterministic: the earliest-free channel wins, ties to the lowest
     /// index.
     pub fn schedule(&mut self, ready_s: f64, context_tokens: u64, model: &KvTransferModel) -> f64 {
-        let ser = model.serialization_seconds(context_tokens);
+        self.schedule_bytes(ready_s, model.bytes_for(context_tokens), model)
+    }
+
+    /// [`SharedLink::schedule`] for an arbitrary byte payload — the cluster
+    /// layer bills cold-start weight reloads (a restarting instance pulling
+    /// its shard of weights back into HBM) through the same contended
+    /// fabric as KV handoffs.
+    pub fn schedule_bytes(&mut self, ready_s: f64, bytes: u64, model: &KvTransferModel) -> f64 {
+        let ser = bytes as f64 / model.link_bandwidth_bytes_per_s.max(1.0);
         let mut ch = 0usize;
         for (i, &t) in self.free_at.iter().enumerate().skip(1) {
             if t < self.free_at[ch] {
@@ -161,6 +174,7 @@ impl SharedLink {
         let start = ready_s.max(self.free_at[ch]);
         let wait = start - ready_s;
         self.free_at[ch] = start + ser;
+        self.intervals.push((start, ser));
         self.transfers += 1;
         self.busy_s += ser;
         self.wait_s += wait;
@@ -170,17 +184,20 @@ impl SharedLink {
 
     /// Fraction of the fabric's capacity (all channels × horizon) spent
     /// serializing transfers — the router-telemetry congestion signal.
-    /// Counts each transfer's FULL serialization time: a handoff becoming
-    /// ready near the end of the window books its whole transfer even
-    /// though part of it lands past the horizon, so under end-of-window
-    /// migration bursts this reads as an upper bound on within-horizon
-    /// occupancy (clamped at 1.0), not an exact time-in-window integral.
+    /// Exact time-in-window integral: each transfer's occupied interval
+    /// `[start, start + ser)` is clamped to `[0, horizon_s]` before
+    /// summing, so a handoff scheduled near the end of the window only
+    /// books the part of its serialization that actually lands inside it.
     pub fn busy_fraction(&self, horizon_s: f64) -> f64 {
         if horizon_s <= 0.0 {
-            0.0
-        } else {
-            (self.busy_s / (horizon_s * self.free_at.len() as f64)).min(1.0)
+            return 0.0;
         }
+        let in_window: f64 = self
+            .intervals
+            .iter()
+            .map(|&(start, ser)| (start + ser).min(horizon_s).max(0.0) - start.clamp(0.0, horizon_s))
+            .sum();
+        (in_window / (horizon_s * self.free_at.len() as f64)).min(1.0)
     }
 }
 
@@ -280,6 +297,38 @@ mod tests {
         let mut idle = SharedLink::new(full.parallel_flows);
         let e = idle.schedule(0.0, 4096, &full);
         assert!((e - full.exposed_seconds(4096)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn busy_fraction_clamps_transfers_to_the_window() {
+        let ds = DeepSeekConfig::v3_671b();
+        let model = KvTransferModel {
+            base_latency_s: 0.0,
+            overlap_fraction: 0.0,
+            parallel_flows: 1,
+            ..KvTransferModel::inter_node(&ds, Dtype::Fp8)
+        };
+        let ser = model.serialization_seconds(1024);
+        let horizon = 2.0 * ser;
+        let mut link = SharedLink::new(model.parallel_flows);
+        // One transfer entirely inside the window …
+        link.schedule(0.0, 1024, &model);
+        assert!((link.busy_fraction(horizon) - 0.5).abs() < 1e-12);
+        // … one straddling the horizon: only half of it is in-window …
+        link.schedule(1.5 * ser, 1024, &model);
+        assert!((link.busy_fraction(horizon) - 0.75).abs() < 1e-12, "straddling transfer books only its in-window share");
+        // … and one entirely past the horizon books nothing, even though
+        // `busy_s` (the all-time total) keeps counting it.
+        link.schedule(10.0 * ser, 1024, &model);
+        assert!((link.busy_fraction(horizon) - 0.75).abs() < 1e-12, "post-horizon transfer must not inflate occupancy");
+        assert!((link.busy_s - 3.0 * ser).abs() < 1e-12);
+        // schedule_bytes is the same ledger: a weight-load payload occupies
+        // the fabric exactly like a KV handoff of equal bytes.
+        let mut a = SharedLink::new(1);
+        let mut b = SharedLink::new(1);
+        a.schedule(0.0, 1024, &model);
+        b.schedule_bytes(0.0, model.bytes_for(1024), &model);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{FleetMode, RoutingPolicy};
+use crate::cluster::{FaultPlan, FleetMode, RoutingPolicy};
 use crate::serve::scheduler::QueuePolicy;
 
 /// Parsed `flatattention serve` options.
@@ -225,6 +225,17 @@ pub struct ClusterArgs {
     /// [`crate::util::set_worker_threads`]. Orthogonal to custom-run
     /// dispatch — thread counts never change a result.
     pub threads: Option<usize>,
+    /// Scheduled kills (`--kill <instance>@<seconds>`, repeatable): the
+    /// instance aborts at the next epoch barrier and its work requeues.
+    pub kills: Vec<(usize, f64)>,
+    /// Scheduled drains (`--drain <instance>@<seconds>`, repeatable): the
+    /// router masks the instance, residents run to completion.
+    pub drains: Vec<(usize, f64)>,
+    /// Rejoin delay applied to every scheduled fault (`--fault-restart`).
+    pub fault_restart_s: Option<f64>,
+    /// Seeded random-failure mode (`--random-kills N`): N kill times drawn
+    /// uniformly over the horizon from the trace seed.
+    pub random_kills: usize,
     /// Set when ANY custom-fleet flag was given, even with a value equal to
     /// its default — `--seed 2026` is still a request for a custom run.
     custom: bool,
@@ -250,6 +261,10 @@ impl Default for ClusterArgs {
             metrics_out: None,
             shards: 1,
             threads: None,
+            kills: Vec::new(),
+            drains: Vec::new(),
+            fault_restart_s: None,
+            random_kills: 0,
             custom: false,
         }
     }
@@ -267,6 +282,36 @@ impl ClusterArgs {
     /// True when any observability export was requested.
     pub fn obs_requested(&self) -> bool {
         self.trace_out.is_some() || self.series_out.is_some() || self.metrics_out.is_some()
+    }
+
+    /// True when any fault-injection flag was given.
+    pub fn has_faults(&self) -> bool {
+        !self.kills.is_empty() || !self.drains.is_empty() || self.random_kills > 0
+    }
+
+    /// Assemble the fault schedule of a custom run. Scheduled kills and
+    /// drains carry the `--fault-restart` rejoin delay when one was given;
+    /// `--random-kills` appends seeded kills (no restart) drawn over the
+    /// run's horizon from the trace seed.
+    pub fn fault_plan(&self, n_engines: usize, horizon_s: f64) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        for &(inst, at) in &self.kills {
+            plan = plan.kill(inst, at);
+            if let Some(d) = self.fault_restart_s {
+                plan = plan.with_restart(d);
+            }
+        }
+        for &(inst, at) in &self.drains {
+            plan = plan.drain(inst, at);
+            if let Some(d) = self.fault_restart_s {
+                plan = plan.with_restart(d);
+            }
+        }
+        if self.random_kills > 0 {
+            let random = FaultPlan::seeded_random(self.seed, n_engines, horizon_s, self.random_kills);
+            plan.events.extend(random.events);
+        }
+        plan
     }
 
     /// Fleet mode of a custom run (colocated 4 when nothing was specified).
@@ -372,6 +417,35 @@ impl ClusterArgs {
                     out.threads = Some(parse_threads(args, i)?);
                     i += 1;
                 }
+                "--kill" => {
+                    out.kills.push(parse_fault_spec(args, i, "--kill")?);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--drain" => {
+                    out.drains.push(parse_fault_spec(args, i, "--drain")?);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--fault-restart" => {
+                    let v = parse_num(args, i, "--fault-restart")?;
+                    if !(0.0..=3600.0).contains(&v) {
+                        bail!("--fault-restart must be in [0, 3600] seconds, got {v}");
+                    }
+                    out.fault_restart_s = Some(v);
+                    out.custom = true;
+                    i += 1;
+                }
+                "--random-kills" => {
+                    let v = value(args, i, "--random-kills")?;
+                    out.random_kills = match v.parse::<usize>() {
+                        Ok(n) if (1..=64).contains(&n) => n,
+                        Ok(n) => bail!("--random-kills must be in 1..=64, got {n}"),
+                        Err(_) => bail!("--random-kills expects a positive integer, got '{v}'"),
+                    };
+                    out.custom = true;
+                    i += 1;
+                }
                 other => bail!("unknown cluster option '{other}'; see `flatattention help`"),
             }
             i += 1;
@@ -396,7 +470,10 @@ impl ClusterArgs {
         }
         if (out.models || out.dynamic) && out.is_custom() {
             let which = if out.models { "--models" } else { "--dynamic" };
-            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed/--shards");
+            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed/--shards/--kill/--drain/--fault-restart/--random-kills");
+        }
+        if out.fault_restart_s.is_some() && out.kills.is_empty() && out.drains.is_empty() {
+            bail!("--fault-restart needs at least one --kill or --drain to apply to");
         }
         Ok(out)
     }
@@ -422,6 +499,28 @@ fn parse_threads(args: &[String], i: usize) -> Result<usize> {
         Ok(n) => bail!("--threads must be in 1..=1024, got {n}"),
         Err(_) => bail!("--threads expects a positive integer, got '{v}'"),
     }
+}
+
+/// Parse a `<instance>@<seconds>` fault spec (`--kill 0@1.5`). The
+/// instance is a *global engine id* — entry pool first, then decode —
+/// bounded like the pool sizes; range against the actual fleet is checked
+/// when the plan is applied.
+fn parse_fault_spec(args: &[String], i: usize, flag: &str) -> Result<(usize, f64)> {
+    let v = value(args, i, flag)?;
+    let (inst, at) = match v.split_once('@') {
+        Some(parts) => parts,
+        None => bail!("{flag} expects <instance>@<seconds> (e.g. {flag} 0@1.5), got '{v}'"),
+    };
+    let inst = match inst.parse::<usize>() {
+        Ok(n) if n < 128 => n,
+        Ok(n) => bail!("{flag}: instance {n} out of range (global engine id, < 128)"),
+        Err(_) => bail!("{flag} expects <instance>@<seconds>, got '{v}'"),
+    };
+    let at = match at.parse::<f64>() {
+        Ok(t) if t.is_finite() && t >= 0.0 => t,
+        _ => bail!("{flag}: fault time must be a non-negative finite number of seconds, got '{v}'"),
+    };
+    Ok((inst, at))
 }
 
 fn value<'a>(args: &'a [String], i: usize, flag: &str) -> Result<&'a str> {
@@ -631,5 +730,46 @@ mod tests {
         // And the --models guard catches them too.
         assert!(ClusterArgs::parse(&argv(&["--models", "--seed", "2026"])).is_err());
         assert!(ClusterArgs::parse(&argv(&["--models", "--routing", "prefix-affinity"])).is_err());
+    }
+
+    #[test]
+    fn cluster_fault_flags() {
+        let a = ClusterArgs::parse(&argv(&[
+            "--kill",
+            "0@1.5",
+            "--kill",
+            "2@2",
+            "--drain",
+            "1@0.75",
+            "--fault-restart",
+            "0.5",
+        ]))
+        .unwrap();
+        assert!(a.is_custom() && a.has_faults());
+        assert_eq!(a.kills, vec![(0, 1.5), (2, 2.0)]);
+        assert_eq!(a.drains, vec![(1, 0.75)]);
+        assert_eq!(a.fault_restart_s, Some(0.5));
+        let plan = a.fault_plan(4, 10.0);
+        assert_eq!(plan.events.len(), 3);
+        assert!(plan.events.iter().all(|e| e.restart_after_s == Some(0.5)));
+        // Seeded random-failure mode reproduces the library schedule.
+        let r = ClusterArgs::parse(&argv(&["--random-kills", "3"])).unwrap();
+        assert!(r.is_custom() && r.has_faults());
+        assert_eq!(r.fault_plan(4, 10.0), FaultPlan::seeded_random(r.seed, 4, 10.0, 3));
+        for bad in [
+            ["--kill", "0"],
+            ["--kill", "x@1"],
+            ["--kill", "0@-1"],
+            ["--kill", "999@1"],
+            ["--drain", "0@nan"],
+            ["--random-kills", "0"],
+            ["--fault-restart", "1.0"],
+        ] {
+            assert!(ClusterArgs::parse(&argv(&bad)).is_err(), "{bad:?} must fail");
+        }
+        // Fault flags select the custom path, so canned experiments
+        // reject them like every other custom flag.
+        assert!(ClusterArgs::parse(&argv(&["--models", "--kill", "0@1"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--dynamic", "--drain", "0@1"])).is_err());
     }
 }

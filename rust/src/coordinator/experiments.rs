@@ -15,8 +15,9 @@ use crate::arch::tile::{gemm_cycles, gemm_utilization};
 use crate::baseline::gh200::{self, Bound, Gh200};
 use crate::baseline::soa::SoaSystem;
 use crate::cluster::{
-    simulate_cluster, simulate_cluster_observed, simulate_shared_pool, tpot_crossover, ClusterConfig,
-    ClusterOutcome, FleetMode, Router, RoutingPolicy, SharedPoolSpec,
+    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, simulate_shared_pool,
+    tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FaultPlan, FleetMode, Router, RoutingPolicy,
+    SharedPoolSpec,
 };
 use crate::coordinator::cache::SimCaches;
 use crate::coordinator::report::{fmt_time, stacked_bar, Report};
@@ -57,6 +58,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("cluster_pools", "Cluster: prefill:decode pool ratios, KV-link congestion, colocated-vs-disaggregated crossover"),
         ("cluster_models", "Cluster: two DeepSeek variants co-served; interleaved shared pools vs the static bound"),
         ("cluster_dynamic", "Cluster: static (arrival-sequence) vs live routing on the interleaved single-clock fleet"),
+        ("cluster_failures", "Cluster: fault injection — decode kill/drain blast radius, requeue recovery, restart rejoin"),
     ]
 }
 
@@ -91,6 +93,7 @@ pub fn run_with(id: &str, fast: bool, caches: &SimCaches) -> Result<Report> {
         "cluster_pools" => cluster_pools(fast, caches),
         "cluster_models" => cluster_models(fast, caches),
         "cluster_dynamic" => cluster_dynamic(fast, caches),
+        "cluster_failures" => cluster_failures(fast, caches),
         _ => bail!("unknown experiment '{id}'; see `flatattention list`"),
     })
 }
@@ -1292,6 +1295,131 @@ fn cluster_dynamic(fast: bool, caches: &SimCaches) -> Report {
     r
 }
 
+/// Median per-token cadence of the requests that *arrived* at or after
+/// `cut_s` and completed — the post-recovery window comparator of
+/// `cluster_failures`. `None` when no such request finished.
+fn median_tpot_after(recs: &[ClusterRecord], cut_s: f64) -> Option<f64> {
+    let mut v: Vec<f64> = recs.iter().filter(|r| r.arrival_s >= cut_s).filter_map(|r| r.tpot_ms()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(f64::total_cmp);
+    Some(v[v.len() / 2])
+}
+
+/// `cluster_failures`: fault injection on the disaggregated fleet — kill or
+/// drain a decode instance mid-run and measure the blast radius against the
+/// no-failure baseline. Runs on the d2d-class carrier link so a killed
+/// instance's cold-start weight reload (~0.7 s for the 671B at 1 TB/s) can
+/// rejoin inside the horizon; over inter-node NIC links the same reload
+/// takes tens of seconds and a restart never lands in these windows.
+fn cluster_failures(fast: bool, caches: &SimCaches) -> Report {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let horizon = if fast { 3.0 } else { 8.0 };
+    let rate = if fast { 400.0 } else { 1000.0 };
+    let seed = 2026u64;
+    let t_fault = horizon * 0.5;
+    let restart_s = if fast { 0.25 } else { 0.5 };
+    let mut ccfg = ClusterConfig::disaggregated(2, 2, &ds);
+    ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
+    let trace = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon));
+    // Global engine id 3 = decode instance 1 (the entry pool is gids 0..2).
+    let victim = 3usize;
+    let scenarios: [(&str, FaultPlan); 4] = [
+        ("baseline (no faults)", FaultPlan::none()),
+        ("drain decode@mid", FaultPlan::none().drain(victim, t_fault)),
+        ("kill decode@mid", FaultPlan::none().kill(victim, t_fault)),
+        ("kill + restart", FaultPlan::none().kill(victim, t_fault).with_restart(restart_s)),
+    ];
+    let run = |plan: &FaultPlan, shards: u32| {
+        let cfg = ClusterConfig { shards, ..ccfg };
+        simulate_cluster_faulted_observed(
+            &sys,
+            &ds,
+            &trace,
+            &cfg,
+            plan,
+            horizon,
+            rate,
+            &caches.kernels,
+            &caches.stages,
+            None,
+        )
+    };
+    let mut r = Report::new("Cluster — fault injection: kill/drain a decode instance mid-run");
+    r.preamble(format!(
+        "2 prefill + 2 decode EP32-PP2 wafer instances on a d2d-class carrier link, poisson {rate:.0} rps over \
+         {horizon} s, seed {seed}; faults hit decode instance 1 (gid {victim}) at {t_fault:.1} s — a kill aborts \
+         at the epoch barrier and requeues stranded work through the entry router (lost KV re-prefilled and \
+         re-shipped); the restarted kill rejoins {restart_s} s later plus a weight reload billed over the link"
+    ));
+    r.header(&[
+        "scenario", "done", "requeued", "lost", "KV lost (GB)", "TTFT p50", "p99 (ms)", "TPOT p50",
+        "p99 (ms)", "goodput",
+    ]);
+    let mut results: Vec<(ClusterOutcome, Vec<ClusterRecord>)> = Vec::new();
+    for (name, plan) in &scenarios {
+        let (o, recs, _) = run(plan, 1);
+        assert!(o.conserves_requests(), "conservation violated under faults ({name}): {o:?}");
+        r.row(vec![
+            (*name).into(),
+            o.completed.to_string(),
+            o.requeued.to_string(),
+            o.lost.to_string(),
+            format!("{:.2}", o.kv_lost_bytes as f64 / 1e9),
+            format!("{:.0}", o.ttft_ms.p50),
+            format!("{:.0}", o.ttft_ms.p99),
+            format!("{:.1}", o.tpot_ms.p50),
+            format!("{:.1}", o.tpot_ms.p99),
+            format!("{:.0}", o.goodput_rps),
+        ]);
+        results.push((o, recs));
+    }
+    // Determinism anchor: the kill plan must be byte-identical at every
+    // shard count — faults only ever apply at the epoch barriers.
+    for shards in [2u32, 4] {
+        let (mut o, recs, _) = run(&scenarios[2].1, shards);
+        o.shards = 1;
+        assert_eq!(o, results[2].0, "shard count {shards} diverged under the kill plan");
+        assert_eq!(recs, results[2].1, "per-request records diverged at {shards} shards");
+    }
+    r.note("kill scenario replayed at 2 and 4 shards: byte-identical outcome and per-request records");
+    let base = &results[0].0;
+    let kill = &results[2].0;
+    let blast = kill.ttft_ms.p99 / base.ttft_ms.p99.max(1e-9);
+    r.note(format!(
+        "blast radius: kill p99 TTFT {:.0} ms vs baseline {:.0} ms ({blast:.1}x) — requeued prefills re-bill \
+         and the surviving decode instance absorbs the whole pool",
+        kill.ttft_ms.p99, base.ttft_ms.p99
+    ));
+    // Post-recovery cadence: arrivals two fault-free epochs after the
+    // restart rejoined, against the same window of the baseline.
+    let cut = t_fault + if fast { 1.0 } else { 2.0 };
+    let base_win = median_tpot_after(&results[0].1, cut);
+    let back_win = median_tpot_after(&results[3].1, cut);
+    if let (Some(b), Some(k)) = (base_win, back_win) {
+        r.note(format!(
+            "recovery: post-{cut:.1} s arrivals decode at p50 TPOT {k:.1} ms vs baseline {b:.1} ms ({:+.1}%)",
+            100.0 * (k - b) / b
+        ));
+        let n = results[3].1.iter().filter(|r| r.arrival_s >= cut && r.tpot_ms().is_some()).count();
+        if !fast && n >= 20 {
+            assert!(
+                k <= b * 1.10,
+                "post-recovery TPOT did not return to within 10% of baseline: {k:.2} vs {b:.2} ms"
+            );
+        }
+    }
+    if !fast {
+        assert!(kill.requeued > 0, "a mid-run decode kill must strand work: {kill:?}");
+        assert!(kill.kv_lost_bytes > 0, "a decode kill must lose landed KV: {kill:?}");
+        assert!(blast < 20.0, "p99 TTFT blast radius unbounded: {blast:.1}x");
+        assert_eq!(results[1].0.requeued, 0, "a drain must never strand work");
+    }
+    r
+}
+
 /// One fleet simulation at a caller-chosen mode/routing/link/rate/horizon/
 /// seed (the `flatattention cluster --prefill/--decode/...` path).
 /// `d2d_link` swaps the inter-node KV-handoff fabric for the D2D-class one
@@ -1305,15 +1433,16 @@ pub fn cluster_custom(
     seed: u64,
     caches: &SimCaches,
 ) -> Report {
-    cluster_custom_observed(mode, routing, d2d_link, rate, horizon, seed, 1, caches, None).0
+    cluster_custom_observed(mode, routing, d2d_link, rate, horizon, seed, &FaultPlan::none(), 1, caches, None).0
 }
 
-/// [`cluster_custom`] with an optional observability sink: same fleet
-/// simulation and report, plus the Chrome-trace / gauge-series /
+/// [`cluster_custom`] with an optional observability sink and fault plan:
+/// same fleet simulation and report, plus the Chrome-trace / gauge-series /
 /// Prometheus exports when `obs` is set (the `flatattention cluster
-/// --trace-out/...` path). `shards` selects the sharded
-/// conservative-lookahead engine (1 = inline serial path; any value is
-/// bit-identical).
+/// --trace-out/...` path) and scheduled kill/drain events when `faults` is
+/// non-empty (the `--kill`/`--drain`/`--random-kills` path). `shards`
+/// selects the sharded conservative-lookahead engine (1 = inline serial
+/// path; any value is bit-identical, faults included).
 #[allow(clippy::too_many_arguments)]
 pub fn cluster_custom_observed(
     mode: FleetMode,
@@ -1322,6 +1451,7 @@ pub fn cluster_custom_observed(
     rate: f64,
     horizon: f64,
     seed: u64,
+    faults: &FaultPlan,
     shards: u32,
     caches: &SimCaches,
     obs: Option<ObsConfig>,
@@ -1337,18 +1467,29 @@ pub fn cluster_custom_observed(
     if d2d_link {
         ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
     }
-    let (o, _, bundle) =
-        simulate_cluster_observed(&sys, &ds, &trace, &ccfg, horizon, rate, &caches.kernels, &caches.stages, obs);
+    let (o, _, bundle) = simulate_cluster_faulted_observed(
+        &sys,
+        &ds,
+        &trace,
+        &ccfg,
+        faults,
+        horizon,
+        rate,
+        &caches.kernels,
+        &caches.stages,
+        obs,
+    );
     let exports = bundle.map(|b| b.exports());
     assert!(o.conserves_requests(), "request conservation violated");
     let mut r = Report::new("Cluster — custom fleet simulation (DeepSeek-v3-671B wafer instances)");
     r.preamble(format!(
         "{} fleet, {} arrival routing, {} KV link, poisson {rate:.0} rps (70% shared prompts) over {horizon} s, \
-         seed {seed}, {} shard(s)",
+         seed {seed}, {} shard(s){}",
         mode.label(),
         routing.label(),
         if d2d_link { "d2d-class" } else { "inter-node" },
         ccfg.shards,
+        if faults.is_empty() { String::new() } else { format!(", {} scheduled fault(s)", faults.events.len()) },
     ));
     r.header(&CLUSTER_ROW_HEADER);
     r.row(cluster_outcome_row(&o));
@@ -1371,6 +1512,15 @@ pub fn cluster_custom_observed(
         o.link_wait_s * 1e3,
         o.migrated
     ));
+    if !faults.is_empty() {
+        r.note(format!(
+            "faults: {} applied, {} requests requeued, {} lost past the horizon, {:.2} GB KV lost",
+            o.faults,
+            o.requeued,
+            o.lost,
+            o.kv_lost_bytes as f64 / 1e9
+        ));
+    }
     (r, exports)
 }
 

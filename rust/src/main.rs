@@ -14,6 +14,7 @@
 //!                       [--routing P] [--link inter-node|d2d]
 //!                       [--prefill N --decode N | --instances N]
 //!                       [--rate R] [--horizon S] [--seed N] [--shards N]
+//!                       [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]
 //!                       [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
@@ -26,11 +27,19 @@
 //! FCFS/SJF/priority queue policies.
 //!
 //! `cluster` drives the fleet layer above `serve` (experiment ids
-//! `cluster_pools` / `cluster_models` / `cluster_dynamic`): multiple wafer
-//! instances interleaved on one event clock behind a cluster router (static
-//! or live least-queue-depth policies), colocated or disaggregated into
-//! prefill/decode pools with the MLA latent-KV handoff serialized over a
-//! contended inter-instance link.
+//! `cluster_pools` / `cluster_models` / `cluster_dynamic` /
+//! `cluster_failures`): multiple wafer instances interleaved on one event
+//! clock behind a cluster router (static or live least-queue-depth
+//! policies), colocated or disaggregated into prefill/decode pools with the
+//! MLA latent-KV handoff serialized over a contended inter-instance link.
+//! `--kill I@T` / `--drain I@T` schedule instance faults (global engine id
+//! `I`, seconds `T`, repeatable): a kill aborts at the next epoch barrier
+//! and requeues stranded work through the entry router, a drain masks the
+//! instance and lets residents finish. `--fault-restart S` rejoins every
+//! faulted instance `S` seconds later (a killed instance first reloads its
+//! weights over the shared link, billed); `--random-kills N` draws N
+//! seeded kill times over the horizon from the trace seed. Faults never
+//! break determinism — any shard count replays the same run byte for byte.
 //!
 //! `--cache-dir DIR` persists the kernel/stage-time memo caches to a JSON
 //! snapshot in DIR: loaded before the run, written back after, so repeated
@@ -106,6 +115,7 @@ fn run() -> Result<()> {
             println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
             println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
             println!("                        [--rate R] [--horizon S] [--seed N] [--shards N]");
+            println!("                        [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]");
             println!("                        [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]");
             println!("  flatattention verify");
             println!();
@@ -114,6 +124,10 @@ fn run() -> Result<()> {
             println!("  --metrics-out F  Prometheus text-format counters");
             println!("  --shards N       shard the custom fleet's lookahead engine (bit-identical at any N)");
             println!("  --threads N      pin the worker-thread budget (= FLATATTENTION_THREADS)");
+            println!("  --kill I@T       kill instance I at T s: abort at the barrier, requeue stranded work");
+            println!("  --drain I@T      drain instance I at T s: mask the router, residents finish in place");
+            println!("  --fault-restart S  rejoin every faulted instance S s later (kills reload weights first)");
+            println!("  --random-kills N   N seeded-random kills drawn over the horizon from the trace seed");
             Ok(())
         }
         "list" => {
@@ -242,6 +256,7 @@ fn run() -> Result<()> {
             } else if cargs.is_custom() {
                 let rate = cargs.rate_rps.unwrap_or(1000.0);
                 let horizon = cargs.horizon_s.unwrap_or(if cargs.fast { 4.0 } else { 10.0 });
+                let faults = cargs.fault_plan(cargs.mode().instances() as usize, horizon);
                 let (rep, exports) = experiments::cluster_custom_observed(
                     cargs.mode(),
                     cargs.routing,
@@ -249,6 +264,7 @@ fn run() -> Result<()> {
                     rate,
                     horizon,
                     cargs.seed,
+                    &faults,
                     cargs.shards,
                     &caches,
                     obs_cfg,

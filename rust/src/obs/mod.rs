@@ -31,8 +31,13 @@
 //! Instants: `arrive`, `first_token`. Engine lane (cat `engine`): one
 //! `wave` span per tick with `wave`, `decode_users`, `prefill_tokens`.
 //! Fleet lane: `route` instants (cat `router`; `instance`, `spill` when the
-//! affinity guard steered away) and `handoff` spans (cat `link`; transfer
+//! affinity guard steered away, `requeued=1` when the routed request came
+//! off a killed instance) and `handoff` spans (cat `link`; transfer
 //! serialization + queue wait, `bytes`, `link_wait_s`, `decode_instance`).
+//! Fault injection adds a `fault` track on the fleet pid: one `fault`
+//! instant per applied event (`instance`, `kind` ∈ {`kill`, `drain`}) at
+//! its epoch barrier, and a `restart` instant (`instance`) when a faulted
+//! instance rejoins the pool.
 //!
 //! The recorder is bounded by [`ObsConfig::span_cap`]; events beyond the
 //! cap are counted in `dropped_events` (exported under `otherData` and the
@@ -54,6 +59,10 @@
 //! `preempted`, `first_tokens`, `completed`, `waves`, `routed`,
 //! `router_spills`, `handoffs`, `migrated`, plus the shared simulation
 //! caches' `stage_cache_hits`/`misses` and `kernel_cache_hits`/`misses`.
+//! Fault injection adds `faults` (events applied), `instance_restarts`,
+//! `requests_requeued` (extracted from a killed instance and re-routed),
+//! `requests_lost` (extraction fell past the horizon) and `kv_lost_bytes`
+//! (resident + in-transit KV bytes destroyed by kills).
 //!
 //! # Zero-cost when disabled
 //!

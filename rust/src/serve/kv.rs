@@ -216,20 +216,33 @@ impl PrefixStore {
     }
 
     /// Pin the leading `tokens` (whole blocks, as returned by [`probe`]) of
-    /// `prefix_id` for an admitted request.
+    /// `prefix_id` for an admitted request. Returns the tokens *actually*
+    /// pinned: blocks evicted between the caller's `probe` and this `pin`
+    /// (admission pressure can run [`evict_for`] in between) truncate the
+    /// pinned chain at the first missing block — pinning past a hole would
+    /// break the prefix-closed trie invariant — and the caller must bill
+    /// the shortfall as private KV instead of a cache hit.
     ///
     /// [`probe`]: PrefixStore::probe
-    pub fn pin(&mut self, prefix_id: u64, tokens: u32) {
+    /// [`evict_for`]: PrefixStore::evict_for
+    #[must_use = "blocks may have been evicted since probe; reconcile the shortfall"]
+    pub fn pin(&mut self, prefix_id: u64, tokens: u32) -> u32 {
         if prefix_id == 0 || !self.is_enabled() || tokens == 0 {
-            return;
+            return 0;
         }
         self.clock += 1;
+        let mut pinned = 0u32;
         for b in 0..tokens / self.block_tokens {
-            if let Some(e) = self.blocks.get_mut(&(prefix_id, b)) {
-                e.refs += 1;
-                e.last_use = self.clock;
+            match self.blocks.get_mut(&(prefix_id, b)) {
+                Some(e) => {
+                    e.refs += 1;
+                    e.last_use = self.clock;
+                    pinned += self.block_tokens;
+                }
+                None => break,
             }
         }
+        pinned
     }
 
     /// Release the pins of a completed or preempted request that held the
@@ -404,7 +417,7 @@ mod tests {
         s.unpin(1, 512);
         s.unpin(2, 256);
         // Pin prefix 1 again (a hit): prefix 2 is now the LRU zero-ref.
-        s.pin(1, s.probe(1, 512));
+        assert_eq!(s.pin(1, s.probe(1, 512)), 512);
         let freed = s.evict_for(1.0);
         assert_eq!(freed, 256.0, "LRU zero-ref block (2,0) goes first");
         assert_eq!(s.probe(2, 256), 0);
@@ -417,6 +430,29 @@ mod tests {
         assert_eq!(s.resident_blocks(), 0);
         assert!(s.shared_tokens.abs() < 1e-9);
         assert_eq!(s.evictions, 3);
+    }
+
+    #[test]
+    fn pin_reports_blocks_evicted_between_probe_and_pin() {
+        let mut s = PrefixStore::new(256);
+        s.insert(1, 0, 768); // blocks (1,0),(1,1),(1,2)
+        s.unpin(1, 768); // all zero-ref: evictable
+        let hit = s.probe(1, 768);
+        assert_eq!(hit, 768);
+        // Admission pressure evicts the chain tail between probe and pin.
+        assert_eq!(s.evict_for(1.0), 256.0);
+        // pin must report the truncated chain, not silently skip the hole.
+        let pinned = s.pin(1, hit);
+        assert_eq!(pinned, 512, "one block evicted => 256 tokens short");
+        // The surviving leading chain really is pinned now.
+        assert_eq!(s.evict_for(1e9), 0.0, "pinned blocks are not evictable");
+        s.unpin(1, pinned);
+        assert_eq!(s.evict_for(1e9), 512.0);
+        // Everything evicted: pin of a stale probe pins nothing.
+        assert_eq!(s.pin(1, hit), 0);
+        // Disabled store / null prefix keep returning 0.
+        assert_eq!(PrefixStore::new(0).pin(1, 512), 0);
+        assert_eq!(s.pin(0, 512), 0);
     }
 
     #[test]

@@ -404,8 +404,34 @@ impl Scheduler {
             if !self.columns[c].reserve(need) {
                 break;
             }
+            // Blocks can vanish between the placement probe and this pin:
+            // the pressure eviction above (and any earlier admission this
+            // wave) runs `evict_for`, which is free to take zero-ref blocks
+            // the probe counted. `pin` reports what actually survived; the
+            // shortfall is no longer a cache hit, so those tokens are
+            // re-billed as private KV and recomputed like a miss.
+            let pinned = self.prefix[c].pin(key, hit);
+            let shortfall = hit - pinned;
+            if shortfall > 0 {
+                let extra = shortfall as f64;
+                if !self.columns[c].fits(extra) {
+                    let deficit = extra - self.columns[c].free_tokens();
+                    let freed = self.prefix[c].evict_for(deficit);
+                    if freed > 0.0 {
+                        self.columns[c].release(freed);
+                    }
+                }
+                if !self.columns[c].reserve(extra) {
+                    // Can't cover the recompute: undo and leave the request
+                    // queued — identical to a plain failed reserve.
+                    self.columns[c].release(need);
+                    self.prefix[c].unpin(key, pinned);
+                    break;
+                }
+            }
+            let hit = pinned;
+            let need = need + shortfall as f64;
             self.queue.remove(qi);
-            self.prefix[c].pin(key, hit);
             let share_to = if fresh_prefilled { 0 } else { self.prefix[c].shareable_tokens(key, r.prefix_tokens) };
             self.prefix_hit_tokens += hit as u64;
             self.prefix_miss_tokens += (share_to.saturating_sub(hit)) as u64;
@@ -485,6 +511,38 @@ impl Scheduler {
             l.push(SchedEvent::Preempted { rec: victim.rec });
         }
         true
+    }
+
+    /// Abort every queued and resident request — the fault-injection kill
+    /// path. All KV reservations and prefix pins are released (the
+    /// instance's KV is gone, so nothing stays resident), the queue drains,
+    /// and the aborted work comes back to the caller: `(queued, in_flight)`
+    /// where `queued` is the waiting queue in order and `in_flight` the
+    /// residents in admission order, each with the decode progress it loses.
+    pub fn abort_all(&mut self) -> (Vec<Waiting>, Vec<Waiting>) {
+        let queued: Vec<Waiting> = self.queue.drain(..).collect();
+        let mut resident: Vec<(u64, Waiting)> = Vec::new();
+        for per_col in self.actives.iter_mut() {
+            for (c, cell) in per_col.iter_mut().enumerate() {
+                for a in cell.drain(..) {
+                    self.columns[c].release(a.held_tokens);
+                    self.prefix[c].unpin(a.prefix_key, a.prefix_pinned);
+                    resident.push((a.admit_seq, Waiting { rec: a.rec, generated: a.generated }));
+                }
+            }
+        }
+        resident.sort_by_key(|&(seq, _)| seq);
+        // The shared prefix blocks die with the instance's HBM as well:
+        // every block is zero-ref after the unpins above, so a full
+        // pressure eviction clears the store and hands back the tokens the
+        // column ledger charged for it.
+        for (c, store) in self.prefix.iter_mut().enumerate() {
+            let freed = store.evict_for(f64::INFINITY);
+            if freed > 0.0 {
+                self.columns[c].release(freed);
+            }
+        }
+        (queued, resident.into_iter().map(|(_, w)| w).collect())
     }
 
     /// Execute one iteration of wave `w`: chunked prefill, prefix-block
@@ -1000,5 +1058,102 @@ mod tests {
         }
         assert_eq!(completed, 64);
         assert_eq!(s.active_total(), 0);
+    }
+
+    #[test]
+    fn abort_all_returns_work_and_zeroes_the_ledger() {
+        let trace = vec![preq(0, 512, 64, 7, 512), req(1, 500, 100), req(2, 500, 100), req(3, 50_000, 1)];
+        let kv = tiny_kv(1300, 1);
+        let mut s = Scheduler::new(
+            &trace,
+            &kv,
+            1,
+            SchedulerConfig { prefix_block_tokens: 256, ..Default::default() },
+            1.0,
+        );
+        for i in 0..4 {
+            s.enqueue_arrival(i);
+        }
+        s.admit_wave(0);
+        // Requests 0 and 1 fit; 2 blocks head-of-line on KV; 3 waits behind.
+        assert_eq!(s.active_total(), 2);
+        assert_eq!(s.queue.len(), 2);
+        // Run a few iterations so request 0 publishes its prefix blocks and
+        // both residents make decode progress.
+        for _ in 0..8 {
+            s.execute_wave(0);
+        }
+        assert!(s.prefix[0].resident_blocks() > 0, "shared blocks published before the kill");
+        let (queued, in_flight) = s.abort_all();
+        assert_eq!(queued.iter().map(|w| w.rec).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(in_flight.iter().map(|w| w.rec).collect::<Vec<_>>(), vec![0, 1], "residents in admission order");
+        assert!(in_flight.iter().any(|w| w.generated > 0.0), "decode progress is reported as lost");
+        // The instance's KV is gone: nothing resident, nothing queued, and
+        // the column ledger (private + shared) drops to zero.
+        assert_eq!(s.active_total(), 0);
+        assert!(s.queue.is_empty());
+        assert_eq!(s.prefix[0].resident_blocks(), 0, "prefix cache dies with the HBM");
+        assert!(s.columns[0].held_tokens.abs() < 1e-9, "ledger must be empty, holds {}", s.columns[0].held_tokens);
+        // The scheduler is reusable after the wipe (a restarted instance).
+        s.enqueue_arrival(1);
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 1);
+    }
+
+    #[test]
+    fn admission_pressure_eviction_between_probe_and_pin_is_reconciled() {
+        // Geometry that forces the probe→evict→pin interleaving: request 2
+        // probes a full 4-block hit on family 9, then its own admission
+        // pressure evicts the chain tail (9,3) before the pin. The pin must
+        // come back 256 tokens short and the scheduler must re-bill that
+        // shortfall as private KV (evicting family 8's sacrificial zero-ref
+        // block to make room) instead of skewing the ledger.
+        let trace = vec![
+            preq(0, 1024, 2, 9, 1024), // publishes family 9: blocks (9,0..3)
+            preq(1, 512, 2, 8, 512),   // publishes family 8: blocks (8,0..1), newer LRU
+            preq(2, 2048, 2, 9, 1024), // the victim of the interleaving
+        ];
+        let kv = tiny_kv(4000, 1);
+        let mut s = Scheduler::new(
+            &trace,
+            &kv,
+            1,
+            SchedulerConfig { prefix_block_tokens: 256, ..Default::default() },
+            1.0,
+        );
+        for rec in [0, 1] {
+            s.enqueue_arrival(rec);
+            s.admit_wave(0);
+            for _ in 0..3 {
+                s.execute_wave(0);
+            }
+        }
+        // Both publishers completed; 1536 zero-ref shared tokens resident.
+        assert_eq!(s.active_total(), 0);
+        assert_eq!(s.prefix[0].resident_blocks(), 6);
+        assert_eq!(s.prefix_evictions(), 0);
+        // Shrink free space so request 2's reservation (need = 2054 − 1024
+        // hit = 1030) runs 30 tokens short: free = 4000 − 1536 − 1464 =
+        // 1000. Pressure evicts exactly one LRU chain tail — (9,3), a block
+        // the probe just counted.
+        assert!(s.columns[0].reserve(1464.0));
+        s.enqueue_arrival(2);
+        s.admit_wave(0);
+        assert_eq!(s.active_total(), 1, "request must still admit, recomputing the evicted share");
+        // Two evictions: (9,3) under admission pressure, then (8,1) to make
+        // room for the re-billed 256-token shortfall.
+        assert_eq!(s.prefix_evictions(), 2);
+        // Hit/miss accounting uses the pinned (768), not probed (1024),
+        // figure: the evicted block counts as a miss.
+        assert_eq!(s.prefix_hit_tokens, 768);
+        assert_eq!(s.prefix_miss_tokens, 1024 + 512 + 256);
+        assert!(!s.kv_over_capacity());
+        // The admitted request can run to completion on the books it holds.
+        let mut completions = 0;
+        for _ in 0..8 {
+            completions += s.execute_wave(0).completions.len();
+        }
+        assert_eq!(completions, 1);
+        assert!(!s.kv_over_capacity());
     }
 }

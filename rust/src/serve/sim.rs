@@ -398,6 +398,23 @@ impl Step {
     }
 }
 
+/// What a [`ServeEngine::kill`] abort extracted from the instance, as
+/// engine-local record indices. The cluster layer maps these back to fleet
+/// trace positions and requeues them through the router.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KillReport {
+    /// `(rec, generated)` of requests that had arrived but were still
+    /// waiting in the scheduler queue, in queue order.
+    pub queued: Vec<(usize, f64)>,
+    /// `(rec, generated)` of resident requests (prefilling or decoding) in
+    /// admission order; `generated` is the decode progress they lose.
+    pub in_flight: Vec<(usize, f64)>,
+    /// `(rec, arrival_s)` of known future arrivals the dead instance will
+    /// never reach, in (arrival, injection) order — the cluster layer
+    /// requeues each no earlier than its original arrival time.
+    pub pending: Vec<(usize, f64)>,
+}
+
 /// Observable live state of a [`ServeEngine`] — what a cluster router's
 /// live policies (and the fleet event loop) read between steps.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -710,6 +727,36 @@ impl<'a> ServeEngine<'a> {
         match self.pending.peek() {
             Some(&Reverse(p)) if p.arrival_s < self.horizon_s => Some(p.arrival_s.max(self.clock)),
             _ => None,
+        }
+    }
+
+    /// Abort the instance at its current clock — the fault-injection kill
+    /// path. Everything resident dies with the HBM: queued and in-flight
+    /// requests are extracted (losing all KV and decode progress), known
+    /// future arrivals are handed back un-arrived, and the scheduler's
+    /// ledger drops to zero. The engine object itself survives, empty —
+    /// [`next_event_s`](ServeEngine::next_event_s) returns `None` until new
+    /// work is injected, which is exactly how a restarted instance rejoins
+    /// the pool. Open lifecycle spans end with `outcome=requeued` (the
+    /// cluster layer re-routes every extracted request).
+    pub fn kill(&mut self) -> KillReport {
+        let (queued, in_flight) = self.sched.abort_all();
+        let mut future: Vec<PendingArrival> = self.pending.drain().map(|Reverse(p)| p).collect();
+        future.sort();
+        // Extracted arrivals un-arrive: they leave this instance's
+        // population entirely, so `arrived == completed + rejected +
+        // in_flight + queued` keeps holding on the dead (and restarted)
+        // engine. The fleet layer counts their re-arrivals elsewhere.
+        self.arrived -= queued.len() + in_flight.len();
+        if let Some(obs) = self.obs.as_deref_mut() {
+            for w in queued.iter().chain(in_flight.iter()) {
+                obs.trace.end(w.rec as u64 + 1, self.clock, &[("outcome", "requeued")]);
+            }
+        }
+        KillReport {
+            queued: queued.into_iter().map(|w| (w.rec, w.generated)).collect(),
+            in_flight: in_flight.into_iter().map(|w| (w.rec, w.generated)).collect(),
+            pending: future.into_iter().map(|p| (p.rec, p.arrival_s)).collect(),
         }
     }
 
@@ -1116,6 +1163,48 @@ mod tests {
         let (o, _) = eng.finish("p", 0.0);
         assert_eq!(o.offered, 2);
         assert_eq!(o.arrived, 1, "the beyond-horizon arrival is offered but never arrives");
+    }
+
+    #[test]
+    fn engine_kill_extracts_work_and_leaves_a_restartable_shell() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let mut eng = ServeEngine::new(&sys, &ds, cfg, 60.0, &kernels, &stages);
+        // One request decoding, one queued far in the future.
+        let running = eng.inject(Request::new(0, 0.0, 256, 4000));
+        let future = eng.inject(Request::new(1, 50.0, 128, 4));
+        for _ in 0..5 {
+            assert!(eng.step().advanced());
+        }
+        let t_kill = eng.clock_s();
+        assert_eq!(eng.snapshot().active_users, 1);
+        let report = eng.kill();
+        assert_eq!(report.in_flight.len(), 1);
+        assert_eq!(report.in_flight[0].0, running);
+        assert!(report.in_flight[0].1 >= 0.0);
+        assert_eq!(report.pending, vec![(future, 50.0)]);
+        assert!(report.queued.is_empty());
+        // The shell is empty and inert until something is injected …
+        let s = eng.snapshot();
+        assert_eq!((s.active_users, s.queue_depth, s.pending_arrivals), (0, 0, 0));
+        assert_eq!(eng.next_event_s(), None);
+        assert_eq!(eng.step(), Step::Idle);
+        assert_eq!(eng.clock_s(), t_kill, "a dead engine's clock does not move");
+        // … and a post-restart injection brings it back to life.
+        let reborn = eng.inject(Request::new(2, t_kill + 1.0, 128, 4));
+        while eng.step().advanced() {}
+        assert!(eng.records()[reborn].completion_s.is_some());
+        assert!(eng.records()[running].completion_s.is_none(), "killed work never completed here");
+        let (o, _) = eng.finish("p", 0.0);
+        assert_eq!(o.completed, 1);
+        assert_eq!(o.in_flight + o.queued, 0);
+        // Kill un-arrived the extracted request, so the engine-local
+        // conservation identity survives the abort.
+        assert_eq!(o.arrived, 1);
+        assert!(o.conserves_requests());
     }
 
     #[test]

@@ -5,10 +5,16 @@
 //! fleets), fleet-wide request conservation across pools, fixed-seed
 //! determinism of the `cluster_pools` experiment (the acceptance
 //! criterion's byte-identical replay), the KV-transfer-bytes == latent-KV
-//! layout identity for every migrated request, and causal per-request
-//! timelines through prefill → transfer (with link congestion) → decode.
+//! layout identity for every migrated request, causal per-request
+//! timelines through prefill → transfer (with link congestion) → decode,
+//! and the fault-injection anchors: conservation under mid-run kills, the
+//! requeued-work-completes-on-a-survivor guarantee, and shard bit-identity
+//! with an active fault plan (outcome, records AND obs exports).
 
-use flatattention::cluster::{simulate_cluster, simulate_cluster_observed, ClusterConfig, FleetMode, RoutingPolicy};
+use flatattention::cluster::{
+    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, ClusterConfig, FaultPlan,
+    FleetMode, RoutingPolicy,
+};
 use flatattention::coordinator::experiments;
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
@@ -291,6 +297,127 @@ fn sharded_engine_is_bit_identical_to_serial_at_every_shard_count() {
             assert_eq!(exp.series_json, serial_exp.series_json, "{shards} shards: series JSON diverged");
             assert_eq!(exp.metrics_text, serial_exp.metrics_text, "{shards} shards: metrics export diverged");
         }
+    }
+}
+
+#[test]
+fn faulted_fleet_conserves_and_requeues_across_pools() {
+    // Fault-injection conservation anchor: killing an instance mid-run
+    // extracts its work and re-enters it through the entry router — the
+    // extended identity `arrived == completed + rejected + in_flight +
+    // extracted_from_decode` must hold in every fleet mode, every requeue
+    // must land in exactly one record, and requeued timelines stay causal.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let t = trace(600.0, 4.0, 23);
+    for (mode, victim) in [
+        (FleetMode::Colocated { instances: 2 }, 0usize),
+        (FleetMode::Disaggregated { prefill: 2, decode: 2 }, 3),
+    ] {
+        let ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(2, &ds) };
+        let plan = FaultPlan::none().kill(victim, 2.0);
+        let (o, recs, _) = simulate_cluster_faulted_observed(
+            &sys, &ds, &t, &ccfg, &plan, 4.0, 600.0, &kernels, &stages, None,
+        );
+        assert_eq!(o.faults, 1, "{mode:?}");
+        assert!(o.conserves_requests(), "{mode:?}: {o:?}");
+        assert!(o.requeued > 0, "{mode:?}: a loaded instance died with no stranded work");
+        assert_eq!(recs.iter().map(|r| r.requeues as usize).sum::<usize>(), o.requeued, "{mode:?}");
+        let completed = recs.iter().filter(|r| r.completion_s.is_some()).count();
+        assert_eq!(completed, o.completed, "{mode:?}");
+        for r in &recs {
+            if let (Some(f), Some(c)) = (r.first_token_s, r.completion_s) {
+                assert!(f >= r.arrival_s && c >= f, "{mode:?} causality after requeue: {r:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn requeued_requests_complete_on_a_survivor() {
+    // A decode-instance kill re-homes its victims: they re-enter the entry
+    // pool, re-prefill from scratch, re-ship their KV to the surviving
+    // decode instance and stream to completion there.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let ccfg = ClusterConfig::disaggregated(1, 2, &ds);
+    let t = trace(150.0, 4.0, 41);
+    // Gid 1 = decode instance 0 (the entry pool is gid 0 alone).
+    let plan = FaultPlan::none().kill(1, 1.5);
+    let (o, recs, _) = simulate_cluster_faulted_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        &plan,
+        4.0,
+        150.0,
+        &KernelCache::new(),
+        &StageTimeCache::new(),
+        None,
+    );
+    assert!(o.conserves_requests(), "{o:?}");
+    assert!(o.extracted_from_decode > 0, "the dead decode pool must strand landed work");
+    assert!(o.requeued > 0);
+    assert!(o.kv_lost_bytes > 0);
+    let survivors: Vec<_> = recs.iter().filter(|r| r.requeues > 0 && r.completion_s.is_some()).collect();
+    assert!(!survivors.is_empty(), "light load must finish its requeued work before the horizon");
+    for r in &survivors {
+        assert_eq!(r.decode_instance, 1, "completed victim must sit on the surviving decode instance: {r:?}");
+        assert!(r.transfer_s > 0.0, "a re-migrated victim must have paid the handoff: {r:?}");
+    }
+}
+
+#[test]
+fn faulted_sharded_engine_is_bit_identical_with_obs_exports() {
+    // The PR's golden anchor: a fault plan mixing a prefill drain with a
+    // mid-horizon decode kill + restart replays byte-identically at every
+    // shard count — same outcome, same per-request records, and the same
+    // four observability exports, fault instants and counters included.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let t = generate_trace(
+        &TraceConfig::new(17, TrafficPattern::Poisson, 400.0, 3.0).with_prefixes(PrefixProfile::agentic()),
+    );
+    let base = ClusterConfig::disaggregated(2, 2, &ds);
+    let plan = FaultPlan::none().drain(0, 0.8).kill(3, 1.5).with_restart(0.3);
+    let run = |shards: u32| {
+        let cfg = ClusterConfig { shards, ..base };
+        let (o, recs, bundle) = simulate_cluster_faulted_observed(
+            &sys,
+            &ds,
+            &t,
+            &cfg,
+            &plan,
+            3.0,
+            400.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+            Some(ObsConfig::default()),
+        );
+        (o, recs, bundle.expect("obs requested").exports())
+    };
+    let (mut serial, serial_recs, serial_exp) = run(1);
+    assert!(serial.conserves_requests(), "{serial:?}");
+    assert_eq!(serial.faults, 2);
+    assert!(serial.requeued > 0, "the decode kill must strand work");
+    assert!(serial.kv_lost_bytes > 0);
+    assert!(serial_exp.metrics_text.contains("flatattention_faults_total"));
+    assert!(serial_exp.metrics_text.contains("flatattention_requests_requeued_total"));
+    assert!(serial_exp.metrics_text.contains("flatattention_kv_lost_bytes_total"));
+    serial.shards = 1;
+    for shards in [2u32, 4] {
+        let (mut o, recs, exp) = run(shards);
+        assert_eq!(o.shards, shards);
+        o.shards = 1;
+        assert_eq!(o, serial, "{shards} shards diverged under the fault plan");
+        assert_eq!(recs, serial_recs, "{shards} shards: record divergence under faults");
+        assert_eq!(exp.trace_json, serial_exp.trace_json, "{shards} shards: trace export diverged");
+        assert_eq!(exp.series_csv, serial_exp.series_csv, "{shards} shards: series export diverged");
+        assert_eq!(exp.series_json, serial_exp.series_json, "{shards} shards: series JSON diverged");
+        assert_eq!(exp.metrics_text, serial_exp.metrics_text, "{shards} shards: metrics export diverged");
     }
 }
 

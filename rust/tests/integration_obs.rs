@@ -1,6 +1,7 @@
 //! Observability-layer invariants: well-nested causal request lifecycles,
 //! the handoff-follows-prefill causality anchor on disaggregated fleets,
-//! span/counter conservation against the end-of-run aggregates, fixed-seed
+//! span/counter conservation against the end-of-run aggregates, the exact
+//! link busy-fraction integral reconstructed from handoff spans, fixed-seed
 //! byte-identical exports (the acceptance criterion), and the guarantee
 //! that attaching a sink never changes a simulation result.
 
@@ -228,6 +229,55 @@ fn cluster_handoffs_follow_prefill_and_bundle_conserves() {
     assert_eq!(count("completed"), o.completed);
     assert_eq!(count("rejected"), o.rejected);
     assert_eq!(bundle.counters.get("completed"), o.completed as u64);
+}
+
+#[test]
+fn link_busy_fraction_is_the_exact_interval_integral() {
+    // The exact `SharedLink::busy_fraction` anchor: the reported link
+    // telemetry must equal the time-in-window integral of per-migration
+    // occupancy, reconstructed independently from the handoff spans
+    // (span start = prefill completion; occupancy = [start + queue wait,
+    // + serialization) clamped to the horizon). A single slow flow makes
+    // the reconstruction see real queueing and horizon-clipped transfers.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let horizon = 3.0;
+    let mut ccfg = ClusterConfig::disaggregated(1, 1, &ds);
+    ccfg.transfer.parallel_flows = 1;
+    ccfg.transfer.link_bandwidth_bytes_per_s = 2.0e9;
+    let t = trace(400.0, horizon, 17);
+    let (o, _, bundle) = simulate_cluster_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        horizon,
+        400.0,
+        &KernelCache::new(),
+        &StageTimeCache::new(),
+        Some(ObsConfig::default()),
+    );
+    let bundle = bundle.expect("a sink was requested");
+    assert!(o.migrated > 0 && o.link_wait_s > 0.0, "the regime must queue the link");
+    let fleet = bundle.traces.last().expect("fleet lane");
+    let mut in_window = 0.0f64;
+    let mut handoffs = 0usize;
+    for s in fleet.spans().iter().filter(|s| s.name == "handoff") {
+        handoffs += 1;
+        let bytes: f64 = arg(s, "bytes").unwrap().parse().unwrap();
+        let wait: f64 = arg(s, "link_wait_s").unwrap().parse().unwrap();
+        let ser = bytes / ccfg.transfer.link_bandwidth_bytes_per_s;
+        let start = s.start_s + wait;
+        in_window += (start + ser).min(horizon).max(0.0) - start.clamp(0.0, horizon);
+    }
+    assert_eq!(handoffs, o.migrated, "one handoff span per migration");
+    let expect = (in_window / (horizon * ccfg.transfer.parallel_flows as f64)).min(1.0);
+    assert!(
+        (o.link_busy_frac - expect).abs() < 1e-5,
+        "busy fraction {} disagrees with the reconstructed integral {expect}",
+        o.link_busy_frac
+    );
+    assert!(o.link_busy_frac > 0.0 && o.link_busy_frac <= 1.0);
 }
 
 #[test]
