@@ -11,6 +11,7 @@
 use flatattention::cluster::{simulate_cluster, ClusterConfig};
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
+use flatattention::obs::report::{bench_json, bench_json_path, BenchRow};
 use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
 use flatattention::serve::sim::StageTimeCache;
 use flatattention::workload::deepseek::DeepSeekConfig;
@@ -19,21 +20,30 @@ fn main() {
     // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
     // (the CI smoke job runs the drivers with tiny horizons this way).
     let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
+    let mut rows: Vec<BenchRow> = Vec::new();
     for id in ["cluster_pools", "cluster_models", "cluster_dynamic"] {
         let t0 = std::time::Instant::now();
         let rep = flatattention::coordinator::experiments::run(id, fast).expect("experiment");
         rep.print();
-        println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+        let wall = t0.elapsed();
+        println!("[bench {id}] regenerated in {wall:.2?}\n");
+        rows.push(BenchRow { label: id.into(), shards: 1, sim_s: 0.0, wall_s: wall.as_secs_f64(), speedup: 1.0 });
     }
-    shard_sweep(fast);
+    rows.extend(shard_sweep(fast));
+    if let Some(path) = bench_json_path("cluster_pools") {
+        let config = format!("fast={fast}");
+        std::fs::write(&path, bench_json("cluster_pools", &config, &rows)).expect("write bench json");
+        println!("[bench cluster_pools] json → {}", path.display());
+    }
 }
 
 /// Shard-count scaling of the sharded conservative-lookahead fleet engine:
 /// one fixed saturated colocated fleet replayed at 1/2/4/8 shards. Every
 /// run must agree with the serial reference (the engine is bit-identical
 /// at any shard count); the interesting number is
-/// simulated-seconds-per-wall-second.
-fn shard_sweep(fast: bool) {
+/// simulated-seconds-per-wall-second. Returns one [`BenchRow`] per shard
+/// count for the structured `BENCH_*.json` artifact.
+fn shard_sweep(fast: bool) -> Vec<BenchRow> {
     let sys = WaferSystem::paper();
     let ds = DeepSeekConfig::v3_671b();
     // Full scale: a 64-instance fleet driven at the per-instance saturation
@@ -55,6 +65,7 @@ fn shard_sweep(fast: bool) {
         trace.len()
     );
     let mut serial_wall = f64::NAN;
+    let mut rows = Vec::new();
     for shards in [1u32, 2, 4, 8] {
         cfg.shards = shards;
         let t0 = std::time::Instant::now();
@@ -70,5 +81,13 @@ fn shard_sweep(fast: bool) {
             horizon / wall,
             serial_wall / wall
         );
+        rows.push(BenchRow {
+            label: format!("shard_sweep instances={instances} rate={rate:.0}"),
+            shards,
+            sim_s: horizon,
+            wall_s: wall,
+            speedup: serial_wall / wall,
+        });
     }
+    rows
 }

@@ -3,15 +3,29 @@
 //! prefix-cache / scheduling-policy experiment on shared-prompt traffic.
 //! (criterion is unavailable in the offline build; this is a plain
 //! `harness = false` driver with std timing.)
+//!
+//! With `--json-out PATH` or `FLATATTENTION_BENCH_JSON=<dir>` set, the wall
+//! times also land in a `flatattention-bench-v1` JSON artifact so the perf
+//! trajectory is machine-comparable across runs.
+
+use flatattention::obs::report::{bench_json, bench_json_path, BenchRow};
 
 fn main() {
     // FLATATTENTION_FAST=1 shrinks every sweep to its test-scale parameters
     // (the CI smoke job runs the drivers with tiny horizons this way).
     let fast = std::env::var_os("FLATATTENTION_FAST").is_some();
+    let mut rows: Vec<BenchRow> = Vec::new();
     for id in ["serve_load", "serve_policies", "serve_prefix"] {
         let t0 = std::time::Instant::now();
         let rep = flatattention::coordinator::experiments::run(id, fast).expect("experiment");
         rep.print();
-        println!("[bench {id}] regenerated in {:.2?}\n", t0.elapsed());
+        let wall = t0.elapsed();
+        println!("[bench {id}] regenerated in {wall:.2?}\n");
+        rows.push(BenchRow { label: id.into(), shards: 1, sim_s: 0.0, wall_s: wall.as_secs_f64(), speedup: 1.0 });
+    }
+    if let Some(path) = bench_json_path("serve_load") {
+        let config = format!("fast={fast}");
+        std::fs::write(&path, bench_json("serve_load", &config, &rows)).expect("write bench json");
+        println!("[bench serve_load] json → {}", path.display());
     }
 }

@@ -105,7 +105,8 @@ use crate::cluster::transfer::{KvTransferModel, SharedLink};
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::KernelCache;
-use crate::obs::{EngineObs, ObsBundle, ObsConfig, SeriesRow};
+use crate::obs::attrib::{assemble_waterfall, ReqSlot};
+use crate::obs::{AttribExport, DesProfile, EngineObs, ObsBundle, ObsConfig, SeriesRow};
 use crate::serve::request::Request;
 use crate::serve::sim::{RequestRecord, ServeConfig, ServeEngine, ServeOutcome, StageTimeCache, Step};
 use crate::workload::deepseek::DeepSeekConfig;
@@ -708,6 +709,11 @@ struct EpochDriver<'a> {
     extracted_from_decode: usize,
     kv_lost_bytes: u64,
     faults_applied: usize,
+    /// Instances currently masked (killed or draining, not yet rejoined) —
+    /// drives the fleet lane's `instances_up` gauge.
+    down: usize,
+    /// Epoch-loop iterations (DES self-profile; wall-clock notes only).
+    epochs: u64,
 }
 
 impl EpochDriver<'_> {
@@ -750,6 +756,7 @@ impl EpochDriver<'_> {
                 merge_min(t, &mut t_min);
             }
             let Some(t_min) = t_min else { break };
+            self.epochs += 1;
             let k = epoch_index(t_min, self.lookahead).max(next_k);
             next_k = k + 1;
             let t_start = k as f64 * self.lookahead;
@@ -768,6 +775,7 @@ impl EpochDriver<'_> {
                 }
                 self.restarts.remove(0);
                 self.set_up_gid(gid, true);
+                self.down = self.down.saturating_sub(1);
                 if let Some(f) = self.fleet_obs.as_mut() {
                     f.counters.inc("instance_restarts");
                     f.trace.instant(0, "restart", "fault", t_start, vec![("instance", gid.to_string())]);
@@ -785,6 +793,29 @@ impl EpochDriver<'_> {
             if any_kill {
                 let replies = exec(t_start, vec![Vec::new(); workers], kill_slots);
                 self.fold_replies(replies, t_start);
+            }
+
+            // Fleet-lane gauge sample at the barrier: fault visibility
+            // (instances up, requeue backlog) plus pending handoffs and
+            // link business. Barrier times are shard-invariant, so the
+            // sampled series is too.
+            if let Some(f) = self.fleet_obs.as_mut() {
+                if f.series.ready(t_start) {
+                    f.series.record(SeriesRow {
+                        t_s: t_start,
+                        pid: f.trace.pid(),
+                        queue_depth: self.handoffs.len(),
+                        active_users: 0,
+                        kv_frac: 0.0,
+                        kv_col_frac: Vec::new(),
+                        prefix_hit_rate: 0.0,
+                        link_busy_frac: self.link.busy_fraction(self.horizon_s),
+                        util_frac: 0.0,
+                        hbm_bw_frac: 0.0,
+                        instances_up: (self.n_entry + self.dec_loads.len()).saturating_sub(self.down),
+                        requeue_depth: self.requeue.len(),
+                    });
+                }
             }
 
             // Barrier: merge due arrivals and requeued re-arrivals
@@ -881,6 +912,7 @@ impl EpochDriver<'_> {
     fn apply_fault(&mut self, ev: FaultEvent, barrier_s: f64, kill_slots: &mut [Vec<usize>]) -> bool {
         self.faults_applied += 1;
         self.set_up_gid(ev.instance, false);
+        self.down += 1;
         let kill = matches!(ev.kind, FaultKind::Kill);
         if let Some(f) = self.fleet_obs.as_mut() {
             f.counters.inc("faults");
@@ -1100,6 +1132,10 @@ impl EpochDriver<'_> {
                     kv_col_frac: Vec::new(),
                     prefix_hit_rate: 0.0,
                     link_busy_frac: self.link.busy_fraction(self.horizon_s),
+                    util_frac: 0.0,
+                    hbm_bw_frac: 0.0,
+                    instances_up: (self.n_entry + self.dec_loads.len()).saturating_sub(self.down),
+                    requeue_depth: self.requeue.len(),
                 });
             }
         }
@@ -1209,6 +1245,31 @@ pub fn simulate_cluster_faulted_observed(
     stages: &StageTimeCache,
     obs: Option<ObsConfig>,
 ) -> (ClusterOutcome, Vec<ClusterRecord>, Option<ObsBundle>) {
+    let (outcome, records, bundle, _) =
+        simulate_cluster_profiled(sys, ds, trace, cfg, faults, horizon_s, offered_rps, kernels, stages, obs);
+    (outcome, records, bundle)
+}
+
+/// [`simulate_cluster_faulted_observed`] plus the DES wall-clock
+/// self-profile: per-worker busy and barrier-stall host seconds, epoch
+/// count and total wall time. The profile is the ONLY non-deterministic
+/// output — it is confined to printed report notes and never enters a
+/// byte-pinned export; outcome, records and bundle are bit-identical to
+/// the unprofiled call.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_cluster_profiled(
+    sys: &WaferSystem,
+    ds: &DeepSeekConfig,
+    trace: &[Request],
+    cfg: &ClusterConfig,
+    faults: &FaultPlan,
+    horizon_s: f64,
+    offered_rps: f64,
+    kernels: &KernelCache,
+    stages: &StageTimeCache,
+    obs: Option<ObsConfig>,
+) -> (ClusterOutcome, Vec<ClusterRecord>, Option<ObsBundle>, DesProfile) {
+    let wall0 = std::time::Instant::now();
     cfg.mode.validate();
     let disagg = matches!(cfg.mode, FleetMode::Disaggregated { .. });
     let (n_entry, n_decode) = match cfg.mode {
@@ -1309,8 +1370,13 @@ pub fn simulate_cluster_faulted_observed(
         extracted_from_decode: 0,
         kv_lost_bytes: 0,
         faults_applied: 0,
+        down: 0,
+        epochs: 0,
     };
 
+    // Per-worker wall-clock accumulators for the DES self-profile.
+    let mut prof_busy = vec![0.0f64; workers];
+    let mut prof_stall = vec![0.0f64; workers];
     {
         // Partition engines across workers: engine gid → shard (gid %
         // shards) → worker. The grouping is invisible to results (see
@@ -1330,41 +1396,54 @@ pub fn simulate_cluster_faulted_observed(
                 groups
                     .iter_mut()
                     .zip(inj.into_iter().zip(kills))
-                    .map(|(g, (injections, kills))| {
-                        run_worker_phase(
+                    .enumerate()
+                    .map(|(w, (g, (injections, kills)))| {
+                        let t = std::time::Instant::now();
+                        let rep = run_worker_phase(
                             g,
                             n_entry,
                             disagg,
                             want_entry_loads,
                             want_dec_loads,
                             PhaseCmd { end_s, injections, kills },
-                        )
+                        );
+                        prof_busy[w] += t.elapsed().as_secs_f64();
+                        rep
                     })
                     .collect()
             });
         } else {
             // Threaded transport: persistent scoped workers, one phase
             // command/reply pair per epoch. Replies are collected in
-            // worker order, but nothing downstream depends on it.
+            // worker order, but nothing downstream depends on it. The
+            // atomics carry wall-clock busy / barrier-stall nanos for the
+            // DES self-profile only — never simulated state.
+            use std::sync::atomic::{AtomicU64, Ordering};
+            let busy_ns: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+            let stall_ns: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
             std::thread::scope(|s| {
                 let mut txs = Vec::with_capacity(workers);
                 let mut rxs = Vec::with_capacity(workers);
-                for mut g in groups {
+                for (w, mut g) in groups.into_iter().enumerate() {
                     let (ctx, crx) = std::sync::mpsc::channel::<PhaseCmd>();
                     let (rtx, rrx) = std::sync::mpsc::channel::<PhaseReply>();
-                    s.spawn(move || {
-                        while let Ok(cmd) = crx.recv() {
-                            let rep = run_worker_phase(
-                                &mut g,
-                                n_entry,
-                                disagg,
-                                want_entry_loads,
-                                want_dec_loads,
-                                cmd,
-                            );
-                            if rtx.send(rep).is_err() {
-                                break;
-                            }
+                    let (busy, stall) = (&busy_ns[w], &stall_ns[w]);
+                    s.spawn(move || loop {
+                        let t = std::time::Instant::now();
+                        let Ok(cmd) = crx.recv() else { break };
+                        stall.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        let t = std::time::Instant::now();
+                        let rep = run_worker_phase(
+                            &mut g,
+                            n_entry,
+                            disagg,
+                            want_entry_loads,
+                            want_dec_loads,
+                            cmd,
+                        );
+                        busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        if rtx.send(rep).is_err() {
+                            break;
                         }
                     });
                     txs.push(ctx);
@@ -1378,6 +1457,9 @@ pub fn simulate_cluster_faulted_observed(
                 });
                 drop(txs);
             });
+            for (dst, src) in prof_busy.iter_mut().chain(prof_stall.iter_mut()).zip(busy_ns.iter().chain(&stall_ns)) {
+                *dst = src.load(Ordering::Relaxed) as f64 * 1e-9;
+            }
         }
     }
 
@@ -1395,16 +1477,26 @@ pub fn simulate_cluster_faulted_observed(
         extracted_from_decode,
         kv_lost_bytes,
         faults_applied,
+        epochs,
         ..
     } = drv;
 
     // Detach sinks before `finish` consumes the engines; engine recorders
     // land in pid order (entry, decode), the fleet lane last. Cache
     // counters are process-wide (the caches are shared), snapshotted here.
-    let bundle = obs.map(|_| {
+    // Attribution recorders leave their sinks now: kernel aggregates fold
+    // into the export immediately, while the per-request capture slots
+    // wait for the merged record stamps below (waterfalls need the
+    // first-token / completion times that only exist after the merge).
+    let mut attrib_slots: Vec<Vec<ReqSlot>> = Vec::new();
+    let mut bundle = obs.map(|_| {
         let mut b = ObsBundle::new();
-        for e in entry.iter_mut().chain(dec.iter_mut()) {
-            if let Some(sink) = e.take_obs() {
+        let mut ax = AttribExport { offered: trace.len(), ..AttribExport::default() };
+        for (pid, e) in entry.iter_mut().chain(dec.iter_mut()).enumerate() {
+            if let Some(mut sink) = e.take_obs() {
+                let attrib = std::mem::take(&mut sink.attrib);
+                ax.push_engine(pid as u32, &attrib);
+                attrib_slots.push(attrib.slots);
                 b.push_engine(*sink);
             }
         }
@@ -1417,6 +1509,7 @@ pub fn simulate_cluster_faulted_observed(
         b.counters.add("stage_cache_misses", stages.misses());
         b.counters.add("kernel_cache_hits", kernels.hits());
         b.counters.add("kernel_cache_misses", kernels.misses());
+        b.attrib = ax;
         b
     });
 
@@ -1453,6 +1546,47 @@ pub fn simulate_cluster_faulted_observed(
             }
         }
     }
+    if let Some(b) = bundle.as_mut() {
+        // Waterfalls read the MERGED stamps: the entry slot comes from the
+        // engine that ran the (final) prefill, the completer slot from the
+        // engine that finished decode. A requeued request appears in
+        // several engines' position maps — the last occurrence on its
+        // final instance wins; its earlier lives land in the requeue-stall
+        // residual.
+        for (p, r) in records.iter().enumerate() {
+            let Some(first) = r.first_token_s else { continue };
+            let slot_at = |gid: usize, positions: &[usize]| {
+                positions
+                    .iter()
+                    .rposition(|&q| q == p)
+                    .and_then(|k| attrib_slots.get(gid).and_then(|s| s.get(k).copied()))
+            };
+            let entry_slot = if r.prefill_instance != u32::MAX {
+                let i = r.prefill_instance as usize;
+                slot_at(i, &entry_pos[i])
+            } else {
+                None
+            };
+            let completer = if !disagg {
+                entry_slot
+            } else if r.decode_instance != u32::MAX {
+                let d = r.decode_instance as usize;
+                slot_at(n_entry + d, &dec_pos[d])
+            } else {
+                None
+            };
+            b.attrib.waterfalls.push(assemble_waterfall(
+                r.id,
+                r.arrival_s,
+                first,
+                r.completion_s,
+                r.transfer_s,
+                r.requeues,
+                entry_slot.as_ref(),
+                completer.as_ref(),
+            ));
+        }
+    }
     let telemetry = FleetTelemetry {
         router_spills: router.spill_events() + drouter.spill_events(),
         link_busy_frac: link.busy_fraction(horizon_s),
@@ -1475,7 +1609,14 @@ pub fn simulate_cluster_faulted_observed(
         entry_role,
         telemetry,
     );
-    (outcome, records, bundle)
+    let profile = DesProfile {
+        workers,
+        epochs,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        worker_busy_s: prof_busy,
+        barrier_stall_s: prof_stall,
+    };
+    (outcome, records, bundle, profile)
 }
 
 /// Per-model serve config for co-residency on a shared instance: the

@@ -73,8 +73,8 @@ pub mod transfer;
 
 pub use fleet::{
     co_resident_serve, simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed,
-    simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FaultEvent, FaultKind,
-    FaultPlan, FleetMode, InstanceSummary, SharedPoolSpec,
+    simulate_cluster_profiled, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome,
+    ClusterRecord, FaultEvent, FaultKind, FaultPlan, FleetMode, InstanceSummary, SharedPoolSpec,
 };
 pub use router::{LiveLoad, Router, RoutingPolicy};
 pub use transfer::{KvTransferModel, SharedLink};

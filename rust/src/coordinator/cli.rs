@@ -40,6 +40,9 @@ pub struct ServeArgs {
     pub series_out: Option<String>,
     /// Prometheus text-format counter output path (`--metrics-out`).
     pub metrics_out: Option<String>,
+    /// Performance-attribution JSON output path (`--attrib-out`): kernel
+    /// rooflines + latency waterfalls (`flatattention-attrib-v1`).
+    pub attrib_out: Option<String>,
     /// Worker-thread budget (`--threads`): pins
     /// [`crate::util::set_worker_threads`]. Orthogonal to custom-run
     /// dispatch — thread counts never change a result.
@@ -60,6 +63,7 @@ impl Default for ServeArgs {
             trace_out: None,
             series_out: None,
             metrics_out: None,
+            attrib_out: None,
             threads: None,
         }
     }
@@ -77,7 +81,10 @@ impl ServeArgs {
 
     /// True when any observability export was requested.
     pub fn obs_requested(&self) -> bool {
-        self.trace_out.is_some() || self.series_out.is_some() || self.metrics_out.is_some()
+        self.trace_out.is_some()
+            || self.series_out.is_some()
+            || self.metrics_out.is_some()
+            || self.attrib_out.is_some()
     }
 
     /// Parse the argument tail after `serve`. Unknown flags, bad policy
@@ -136,6 +143,10 @@ impl ServeArgs {
                 }
                 "--metrics-out" => {
                     out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
+                    i += 1;
+                }
+                "--attrib-out" => {
+                    out.attrib_out = Some(value(args, i, "--attrib-out")?.to_string());
                     i += 1;
                 }
                 "--threads" => {
@@ -216,6 +227,9 @@ pub struct ClusterArgs {
     pub series_out: Option<String>,
     /// Prometheus text-format counter output path (`--metrics-out`).
     pub metrics_out: Option<String>,
+    /// Performance-attribution JSON output path (`--attrib-out`): kernel
+    /// rooflines + latency waterfalls (`flatattention-attrib-v1`).
+    pub attrib_out: Option<String>,
     /// Shard count of the custom fleet's conservative-lookahead engine
     /// (`--shards`, default 1 = inline serial path). Bit-identical at any
     /// value — shards only control concurrency — but it selects a custom
@@ -259,6 +273,7 @@ impl Default for ClusterArgs {
             trace_out: None,
             series_out: None,
             metrics_out: None,
+            attrib_out: None,
             shards: 1,
             threads: None,
             kills: Vec::new(),
@@ -281,7 +296,10 @@ impl ClusterArgs {
 
     /// True when any observability export was requested.
     pub fn obs_requested(&self) -> bool {
-        self.trace_out.is_some() || self.series_out.is_some() || self.metrics_out.is_some()
+        self.trace_out.is_some()
+            || self.series_out.is_some()
+            || self.metrics_out.is_some()
+            || self.attrib_out.is_some()
     }
 
     /// True when any fault-injection flag was given.
@@ -406,6 +424,10 @@ impl ClusterArgs {
                 }
                 "--metrics-out" => {
                     out.metrics_out = Some(value(args, i, "--metrics-out")?.to_string());
+                    i += 1;
+                }
+                "--attrib-out" => {
+                    out.attrib_out = Some(value(args, i, "--attrib-out")?.to_string());
                     i += 1;
                 }
                 "--shards" => {
@@ -667,7 +689,13 @@ mod tests {
         assert!(b.models && b.obs_requested() && !b.is_custom());
         let c = ClusterArgs::parse(&argv(&["--trace-out", "/tmp/t.json", "--rate", "500"])).unwrap();
         assert!(c.is_custom() && c.obs_requested());
-        for bad in ["--trace-out", "--series-out", "--metrics-out"] {
+        // --attrib-out rides the same plumbing as the other exports.
+        let d = ServeArgs::parse(&argv(&["--attrib-out", "/tmp/a.json"])).unwrap();
+        assert_eq!(d.attrib_out.as_deref(), Some("/tmp/a.json"));
+        assert!(d.obs_requested() && !d.is_custom());
+        let e = ClusterArgs::parse(&argv(&["--attrib-out", "/tmp/a.json", "--shards", "4"])).unwrap();
+        assert!(e.obs_requested() && e.is_custom());
+        for bad in ["--trace-out", "--series-out", "--metrics-out", "--attrib-out"] {
             assert!(ServeArgs::parse(&argv(&[bad])).is_err(), "{bad} missing value");
             assert!(ClusterArgs::parse(&argv(&[bad])).is_err(), "{bad} missing value");
         }

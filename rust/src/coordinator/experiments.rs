@@ -15,9 +15,9 @@ use crate::arch::tile::{gemm_cycles, gemm_utilization};
 use crate::baseline::gh200::{self, Bound, Gh200};
 use crate::baseline::soa::SoaSystem;
 use crate::cluster::{
-    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, simulate_shared_pool,
-    tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FaultPlan, FleetMode, Router, RoutingPolicy,
-    SharedPoolSpec,
+    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, simulate_cluster_profiled,
+    simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome, ClusterRecord, FaultPlan, FleetMode,
+    Router, RoutingPolicy, SharedPoolSpec,
 };
 use crate::coordinator::cache::SimCaches;
 use crate::coordinator::report::{fmt_time, stacked_bar, Report};
@@ -27,10 +27,11 @@ use crate::metrics::{fmt_pct, KernelMetrics};
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, ParallelismPlan};
 use crate::multichip::wafer::{best_under_tpot, ep_plans, parallel_batch_sweeps};
+use crate::obs::report::render_attrib_report;
 use crate::obs::{ObsBundle, ObsConfig, ObsExports};
 use crate::serve::request::{generate_trace, thin_trace, PrefixProfile, TraceConfig, TrafficPattern};
 use crate::serve::scheduler::{AdmissionPolicy, QueuePolicy, SchedulerConfig};
-use crate::serve::sim::{load_sweep, saturation_knee, simulate, simulate_observed, ServeConfig};
+use crate::serve::sim::{assemble_serve_attrib, load_sweep, saturation_knee, simulate, simulate_observed, ServeConfig};
 use crate::sim::Graph;
 use crate::workload::attention::{AttentionShape, Phase};
 use crate::workload::deepseek::{flop_breakdown_per_token, DeepSeekConfig, DenseModelConfig};
@@ -772,7 +773,7 @@ pub fn serve_custom_observed(
     ]);
     let (o, exports) = match obs {
         Some(ocfg) => {
-            let (o, _, sink) = simulate_observed(
+            let (o, records, sink) = simulate_observed(
                 &sys,
                 &ds,
                 &trace,
@@ -785,6 +786,7 @@ pub fn serve_custom_observed(
                 ocfg,
             );
             let mut bundle = ObsBundle::new();
+            bundle.attrib = assemble_serve_attrib(&records, &sink);
             bundle.push_engine(*sink);
             bundle.counters.add("stage_cache_hits", caches.stages.hits());
             bundle.counters.add("stage_cache_misses", caches.stages.misses());
@@ -1467,7 +1469,8 @@ pub fn cluster_custom_observed(
     if d2d_link {
         ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
     }
-    let (o, _, bundle) = simulate_cluster_faulted_observed(
+    let obs_on = obs.is_some();
+    let (o, _, bundle, profile) = simulate_cluster_profiled(
         &sys,
         &ds,
         &trace,
@@ -1521,7 +1524,98 @@ pub fn cluster_custom_observed(
             o.kv_lost_bytes as f64 / 1e9
         ));
     }
+    // Wall-clock diagnostic only: printed as a note when the obs layer is
+    // on, never part of the byte-pinned exports or the no-obs report.
+    if obs_on {
+        r.note(profile.note());
+    }
     (r, exports)
+}
+
+/// The `flatattention report serve` path: run the observed serving
+/// simulation, assemble the per-request waterfalls and kernel attribution,
+/// and return the rendered profile text plus its `flatattention-attrib-v1`
+/// JSON export.
+pub fn serve_report(
+    policy: QueuePolicy,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    caches: &SimCaches,
+) -> (String, String) {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let cfg = ServeConfig {
+        scheduler: SchedulerConfig { queue_policy: policy, ..Default::default() },
+        ..Default::default()
+    };
+    let trace = generate_trace(&TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon));
+    let (o, records, sink) = simulate_observed(
+        &sys,
+        &ds,
+        &trace,
+        &cfg,
+        horizon,
+        policy.label(),
+        rate,
+        &caches.kernels,
+        &caches.stages,
+        ObsConfig::default(),
+    );
+    assert!(o.conserves_requests(), "request conservation violated");
+    let attrib = assemble_serve_attrib(&records, &sink);
+    let title = format!("serve — {} @ {rate:.0} rps over {horizon} s, seed {seed}", policy.label());
+    (render_attrib_report(&title, &attrib, None), attrib.to_json())
+}
+
+/// The `flatattention report cluster` path: [`cluster_custom_observed`]'s
+/// simulation with the attribution export rendered as the profile instead
+/// of the outcome table. The DES self-profile rides along as a note
+/// (wall-clock by design; the returned JSON stays deterministic).
+#[allow(clippy::too_many_arguments)]
+pub fn cluster_report(
+    mode: FleetMode,
+    routing: RoutingPolicy,
+    d2d_link: bool,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    faults: &FaultPlan,
+    shards: u32,
+    caches: &SimCaches,
+) -> (String, String) {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let trace = generate_trace(
+        &TraceConfig::new(seed, TrafficPattern::Poisson, rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let mut ccfg = ClusterConfig { mode, ..ClusterConfig::colocated(mode.instances(), &ds) };
+    ccfg.routing = routing;
+    ccfg.shards = shards.max(1);
+    if d2d_link {
+        ccfg.transfer = crate::cluster::KvTransferModel::d2d_class(&ds, ccfg.serve.dtype);
+    }
+    let (o, _, bundle, profile) = simulate_cluster_profiled(
+        &sys,
+        &ds,
+        &trace,
+        &ccfg,
+        faults,
+        horizon,
+        rate,
+        &caches.kernels,
+        &caches.stages,
+        Some(ObsConfig::default()),
+    );
+    assert!(o.conserves_requests(), "request conservation violated");
+    let attrib = bundle.expect("obs was requested above").attrib;
+    let title = format!(
+        "cluster — {} fleet, {} routing @ {rate:.0} rps over {horizon} s, seed {seed}, {} shard(s)",
+        mode.label(),
+        routing.label(),
+        ccfg.shards
+    );
+    (render_attrib_report(&title, &attrib, Some(&profile)), attrib.to_json())
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@
 //!                       [--rate R] [--horizon S] [--seed N] [--shards N]
 //!                       [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]
 //!                       [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]
+//! flatattention report serve|cluster [serve/cluster options] [--json-out F]
 //! flatattention verify [--artifacts DIR]     # functional + PJRT verification
 //! ```
 //!
@@ -54,15 +55,25 @@
 //! changes a result — any shard count and any thread budget are
 //! bit-identical to the serial path.
 //!
-//! `--trace-out F` / `--series-out F` / `--metrics-out F` export the
-//! deterministic observability layer ([`flatattention::obs`]): a Chrome
-//! `trace_event` JSON (load F in <https://ui.perfetto.dev>), a
-//! fixed-interval gauge series (CSV, or JSON when F ends in `.json`) and
-//! Prometheus text-format counters. On the custom `serve`/`cluster` paths
-//! the whole simulation is instrumented; the canned experiment paths still
-//! write valid (empty-trace) files carrying the real cache counters.
-//! Observability never changes a result — the instrumented run's outcome
-//! is bit-identical to the plain one.
+//! `--trace-out F` / `--series-out F` / `--metrics-out F` / `--attrib-out F`
+//! export the deterministic observability layer ([`flatattention::obs`]): a
+//! Chrome `trace_event` JSON (load F in <https://ui.perfetto.dev>), a
+//! fixed-interval gauge series (CSV, or JSON when F ends in `.json`),
+//! Prometheus text-format counters, and the `flatattention-attrib-v1`
+//! performance-attribution JSON (per-kernel rooflines + per-request latency
+//! waterfalls). On the custom `serve`/`cluster` paths the whole simulation
+//! is instrumented; the canned experiment paths still write valid
+//! (empty-trace) files carrying the real cache counters. Observability
+//! never changes a result — the instrumented run's outcome is bit-identical
+//! to the plain one.
+//!
+//! `report` runs one observed `serve` or `cluster` simulation (same option
+//! tail as those subcommands) and prints the cross-layer attribution
+//! profile instead of the outcome table: top kernels by simulated time with
+//! roofline classification, latency-waterfall percentiles, the Fig. 9
+//! dataflow anchor and — on the cluster path — the DES self-profile
+//! (wall-clock, diagnostic only). `--json-out F` writes the same
+//! attribution as `flatattention-attrib-v1` JSON.
 
 use anyhow::{bail, Context, Result};
 
@@ -110,18 +121,21 @@ fn run() -> Result<()> {
             println!("                         [--chip table1|gh200|wafer] [--analytic]");
             println!("  flatattention serve [--fast] [--policies] [--prefix] [--cache-dir DIR]");
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
-            println!("                      [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]");
+            println!("                      [--trace-out F] [--series-out F] [--metrics-out F] [--attrib-out F] [--threads N]");
             println!("  flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]");
             println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
             println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
             println!("                        [--rate R] [--horizon S] [--seed N] [--shards N]");
             println!("                        [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]");
-            println!("                        [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]");
+            println!("                        [--trace-out F] [--series-out F] [--metrics-out F] [--attrib-out F] [--threads N]");
+            println!("  flatattention report serve|cluster [serve/cluster options] [--json-out F]");
             println!("  flatattention verify");
             println!();
             println!("  --trace-out F    Chrome trace_event JSON (open in ui.perfetto.dev)");
             println!("  --series-out F   per-instance gauge series (CSV; JSON when F ends in .json)");
             println!("  --metrics-out F  Prometheus text-format counters");
+            println!("  --attrib-out F   performance attribution: kernel rooflines + latency waterfalls (JSON)");
+            println!("  --json-out F     (report) write the attribution profile as flatattention-attrib-v1 JSON");
             println!("  --shards N       shard the custom fleet's lookahead engine (bit-identical at any N)");
             println!("  --threads N      pin the worker-thread budget (= FLATATTENTION_THREADS)");
             println!("  --kill I@T       kill instance I at T s: abort at the barrier, requeue stranded work");
@@ -221,7 +235,7 @@ fn run() -> Result<()> {
                 let (rep, exports) = experiments::serve_custom_observed(sargs.queue_policy, rate, horizon, sargs.seed, &caches, obs_cfg);
                 rep.print();
                 if let Some(e) = exports {
-                    write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &e)?;
+                    write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &sargs.attrib_out, &e)?;
                     obs_written = true;
                 }
             } else {
@@ -234,7 +248,7 @@ fn run() -> Result<()> {
             if sargs.obs_requested() && !obs_written {
                 // Canned experiment path: still honor the flags with valid
                 // (empty-trace) files carrying the real cache counters.
-                write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &fallback_exports(&caches))?;
+                write_obs(&sargs.trace_out, &sargs.series_out, &sargs.metrics_out, &sargs.attrib_out, &fallback_exports(&caches))?;
             }
             persist_caches(cache_dir.as_deref(), &caches)
         }
@@ -271,16 +285,75 @@ fn run() -> Result<()> {
                 );
                 rep.print();
                 if let Some(e) = exports {
-                    write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &e)?;
+                    write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &cargs.attrib_out, &e)?;
                     obs_written = true;
                 }
             } else {
                 experiments::run_with("cluster_pools", cargs.fast, &caches)?.print();
             }
             if cargs.obs_requested() && !obs_written {
-                write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &fallback_exports(&caches))?;
+                write_obs(&cargs.trace_out, &cargs.series_out, &cargs.metrics_out, &cargs.attrib_out, &fallback_exports(&caches))?;
             }
             persist_caches(cache_dir.as_deref(), &caches)
+        }
+        "report" => {
+            // Cross-layer performance attribution: run one observed serve
+            // or cluster simulation and print the profiler view (kernel
+            // rooflines + latency waterfalls) instead of the outcome table.
+            let target = args.get(1).map(|s| s.as_str()).unwrap_or("serve");
+            // `--json-out PATH` is report-only; strip it before handing the
+            // tail to the serve/cluster parsers.
+            let mut tail: Vec<String> = Vec::new();
+            let mut json_out: Option<String> = None;
+            let mut it = args.iter().skip(2);
+            while let Some(a) = it.next() {
+                if a == "--json-out" {
+                    json_out = Some(it.next().context("--json-out expects a value")?.clone());
+                } else {
+                    tail.push(a.clone());
+                }
+            }
+            match target {
+                "serve" => {
+                    let sargs = ServeArgs::parse(&tail)?;
+                    if let Some(n) = sargs.threads {
+                        flatattention::util::set_worker_threads(n);
+                    }
+                    let (caches, cache_dir) = open_caches(sargs.cache_dir.clone())?;
+                    let rate = sargs.rate_rps.unwrap_or(1000.0);
+                    let horizon = sargs.horizon_s.unwrap_or(if sargs.fast { 4.0 } else { 10.0 });
+                    let (text, json) =
+                        experiments::serve_report(sargs.queue_policy, rate, horizon, sargs.seed, &caches);
+                    println!("{text}");
+                    write_attrib(json_out.as_deref().or(sargs.attrib_out.as_deref()), &json)?;
+                    persist_caches(cache_dir.as_deref(), &caches)
+                }
+                "cluster" => {
+                    let cargs = ClusterArgs::parse(&tail)?;
+                    if let Some(n) = cargs.threads {
+                        flatattention::util::set_worker_threads(n);
+                    }
+                    let (caches, cache_dir) = open_caches(cargs.cache_dir.clone())?;
+                    let rate = cargs.rate_rps.unwrap_or(1000.0);
+                    let horizon = cargs.horizon_s.unwrap_or(if cargs.fast { 4.0 } else { 10.0 });
+                    let faults = cargs.fault_plan(cargs.mode().instances() as usize, horizon);
+                    let (text, json) = experiments::cluster_report(
+                        cargs.mode(),
+                        cargs.routing,
+                        cargs.link == LinkClass::D2dClass,
+                        rate,
+                        horizon,
+                        cargs.seed,
+                        &faults,
+                        cargs.shards,
+                        &caches,
+                    );
+                    println!("{text}");
+                    write_attrib(json_out.as_deref().or(cargs.attrib_out.as_deref()), &json)?;
+                    persist_caches(cache_dir.as_deref(), &caches)
+                }
+                other => bail!("unknown report target '{other}'; usage: flatattention report serve|cluster [options]"),
+            }
         }
         "verify" => verify(),
         other => bail!("unknown command '{other}'; try `flatattention help`"),
@@ -311,6 +384,7 @@ fn write_obs(
     trace_out: &Option<String>,
     series_out: &Option<String>,
     metrics_out: &Option<String>,
+    attrib_out: &Option<String>,
     exports: &ObsExports,
 ) -> Result<()> {
     if let Some(p) = trace_out {
@@ -325,6 +399,15 @@ fn write_obs(
     if let Some(p) = metrics_out {
         std::fs::write(p, &exports.metrics_text).with_context(|| format!("writing metrics to {p}"))?;
         println!("metrics → {p}");
+    }
+    write_attrib(attrib_out.as_deref(), &exports.attrib_json)
+}
+
+/// Write the `flatattention-attrib-v1` JSON when a path was requested.
+fn write_attrib(path: Option<&str>, json: &str) -> Result<()> {
+    if let Some(p) = path {
+        std::fs::write(p, json).with_context(|| format!("writing attribution to {p}"))?;
+        println!("attrib  → {p}");
     }
     Ok(())
 }

@@ -10,6 +10,7 @@ use crate::arch::config::{ChipConfig, Dtype, SimFidelity};
 use crate::dataflow::{simulate_kernel, AttentionDataflow};
 use crate::metrics::KernelMetrics;
 use crate::multichip::d2d::WaferSystem;
+use crate::obs::attrib::{AttribClass, StageAttrib};
 use crate::workload::deepseek::{decode_layer_kernels, DeepSeekConfig, KernelClass, MoePlacement};
 
 /// An EP×PP plan over the wafer's chips.
@@ -303,6 +304,73 @@ impl DecodeEvaluator {
             attention_utilization: attn_util,
         }
     }
+
+    /// Attribution re-walk of [`DecodeEvaluator::evaluate`]: the identical
+    /// kernel walk and per-stage scaling, but billed per kernel class with
+    /// the simulated FLOPs/HBM-bytes/utilizations attached. The returned
+    /// split is unsettled — the caller pins it to the memoized stage time
+    /// via [`StageAttrib::settle`], so any float-reassociation residual
+    /// lands loudly in the `other` class. Every kernel lookup hits the
+    /// shared [`KernelCache`], so the re-walk is pure arithmetic after the
+    /// first evaluation of an operating point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_attrib(
+        &mut self,
+        sys: &WaferSystem,
+        ds: &DeepSeekConfig,
+        plan: ParallelismPlan,
+        batch_per_chip: u32,
+        kv_len: u32,
+        choice: AttentionChoice,
+    ) -> StageAttrib {
+        let cfg = &sys.chip;
+        let chip_fp = cfg.fingerprint();
+        let dtype = Dtype::Fp8;
+        let sp = ds.mtp_spec_len.max(1) as u64;
+        let rows = batch_per_chip as u64 * sp;
+
+        let group_tokens = rows * plan.ep as u64;
+        let total_pairs = group_tokens * ds.experts_per_token as u64;
+        let active_total = total_pairs.min(ds.n_experts as u64).max(1);
+        let rows_per_expert = total_pairs.div_ceil(active_total);
+        let active_per_chip = (active_total.div_ceil(plan.ep as u64)).min((ds.n_experts / plan.ep).max(1) as u64);
+        let moe = MoePlacement { experts_on_chip: active_per_chip as u32, rows_per_expert };
+
+        let moe_layers = (ds.layers - ds.dense_layers) as f64;
+        let dense_layers = ds.dense_layers as f64;
+        let per_stage_moe = moe_layers / plan.pp as f64;
+        let per_stage_dense = dense_layers / plan.pp as f64;
+
+        let mut a = StageAttrib::default();
+        // MoE layers run every kernel `per_stage_moe` times per stage;
+        // dense layers re-run everything except the `moe.*` kernels.
+        for k in &decode_layer_kernels(ds, batch_per_chip, kv_len, dtype, moe) {
+            let m = self.kernel(cfg, &chip_fp, &k.class, choice);
+            let mult = if k.name.starts_with("moe.") { per_stage_moe } else { per_stage_moe + per_stage_dense };
+            let class = match &k.class {
+                KernelClass::Attention(_) => AttribClass::Attention,
+                KernelClass::Gemm { .. } => AttribClass::Gemm,
+                KernelClass::Vector { .. } => AttribClass::Vector,
+            };
+            a.add_kernel(class, mult, &m);
+        }
+        // Dense FFN replaces the MoE experts in the leading dense layers.
+        let d = ds.d_model as u64;
+        let di = ds.dense_inter as u64;
+        let up = self.kernel(cfg, &chip_fp, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 }, choice);
+        a.add_kernel(AttribClass::Gemm, per_stage_dense, &up);
+        let down = self.kernel(cfg, &chip_fp, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 }, choice);
+        a.add_kernel(AttribClass::Gemm, per_stage_dense, &down);
+        // Fabric: MoE all-to-all dispatch+combine per MoE layer, plus the
+        // PP boundary hop once per stage.
+        let dispatch_bytes = rows as f64 * ds.experts_per_token as f64 * ds.d_model as f64 * dtype.bytes() as f64;
+        a.add_seconds(AttribClass::Comm, per_stage_moe * 2.0 * sys.d2d.all_to_all_seconds(plan.ep, dispatch_bytes));
+        if plan.pp > 1 {
+            let boundary = sys.d2d.neighbor_transfer_seconds(rows as f64 * ds.d_model as f64 * dtype.bytes() as f64);
+            a.add_seconds(AttribClass::Comm, boundary);
+        }
+        a
+    }
 }
 
 #[cfg(test)]
@@ -369,6 +437,23 @@ mod tests {
         let b = eval(AttentionChoice::Flat, 1, 64, 8);
         let gain = b.system_tokens_per_s / a.system_tokens_per_s;
         assert!(gain < 3.0, "gain {gain} should be sublinear (4× batch)");
+    }
+
+    #[test]
+    fn attrib_rewalk_conserves_stage_seconds() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let mut ev = DecodeEvaluator::new(SimFidelity::Analytic);
+        let plan = ParallelismPlan::new(32, 2);
+        let o = ev.evaluate(&sys, &ds, plan, 128, 4096, AttentionChoice::Flat);
+        let a = ev.evaluate_attrib(&sys, &ds, plan, 128, 4096, AttentionChoice::Flat);
+        let rel = (a.billed_s() - o.stage_seconds).abs() / o.stage_seconds;
+        assert!(rel < 1e-9, "re-walk drifted from evaluate: {} vs {}", a.billed_s(), o.stage_seconds);
+        // The split is non-degenerate: attention, gemm and comm all billed.
+        assert!(a.by_class.iter().filter(|b| b.seconds > 0.0).count() >= 3, "{a:?}");
+        let mut settled = a.clone();
+        settled.settle(o.stage_seconds);
+        assert!((settled.billed_s() - o.stage_seconds).abs() < 1e-15 * o.stage_seconds.max(1.0));
     }
 
     #[test]

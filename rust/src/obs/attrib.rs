@@ -1,0 +1,712 @@
+//! Cross-layer performance attribution on the simulated clock.
+//!
+//! Two complementary decompositions of one observed run, both
+//! conservation-pinned (see `tests/integration_obs.rs`):
+//!
+//! - **Kernel attribution**: every engine wave bills its memoized stage
+//!   time against `(phase, class)` aggregates carrying seconds, FLOPs, HBM
+//!   bytes and time-weighted utilizations from the underlying dataflow
+//!   simulation. Summed over classes, the billed seconds equal the
+//!   engine's busy time exactly (any re-walk residual is billed to
+//!   [`AttribClass::Other`], never dropped). Rooflines follow from the
+//!   aggregates: a row is compute-bound iff its time-weighted compute
+//!   utilization is at least its HBM-bandwidth utilization.
+//! - **Per-request latency waterfalls**: each delivered request's
+//!   end-to-end latency decomposes into queue wait, prefill compute, KV
+//!   link wait (the prefill→decode handoff lands *before* the first
+//!   token, so it sits inside TTFT), fault-requeue stall (TTFT residual —
+//!   zero to rounding for requests that were never requeued),
+//!   solo-decode baseline and decode batch-interference slowdown (decode
+//!   residual). Segments sum to the measured TTFT and decode span by
+//!   construction; prefix-hit savings are a non-additive annotation (time
+//!   the prefill *didn't* spend).
+//!
+//! Everything here is simulated-clock data: same-seed runs export
+//! byte-identical attribution JSON. The one wall-clock type,
+//! [`DesProfile`], profiles the sharded DES itself (per-worker busy and
+//! barrier-stall wall time) and is confined to printed report notes —
+//! it never enters a byte-pinned artifact.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::metrics::{KernelMetrics, Percentiles};
+
+/// Kernel class a billed second belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AttribClass {
+    /// FlatAttention / FA-3 attention kernels.
+    Attention,
+    /// Dense and MoE GEMMs.
+    Gemm,
+    /// Vector / elementwise kernels.
+    Vector,
+    /// Fabric time: MoE all-to-all dispatch/combine and PP boundary hops.
+    Comm,
+    /// Conservation residual (re-walk vs memoized stage time) — kept loud.
+    Other,
+}
+
+impl AttribClass {
+    pub const ALL: [AttribClass; 5] =
+        [AttribClass::Attention, AttribClass::Gemm, AttribClass::Vector, AttribClass::Comm, AttribClass::Other];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AttribClass::Attention => "attention",
+            AttribClass::Gemm => "gemm",
+            AttribClass::Vector => "vector",
+            AttribClass::Comm => "comm",
+            AttribClass::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            AttribClass::Attention => 0,
+            AttribClass::Gemm => 1,
+            AttribClass::Vector => 2,
+            AttribClass::Comm => 3,
+            AttribClass::Other => 4,
+        }
+    }
+}
+
+/// Which serving phase billed the time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AttribPhase {
+    Prefill,
+    Decode,
+}
+
+impl AttribPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttribPhase::Prefill => "prefill",
+            AttribPhase::Decode => "decode",
+        }
+    }
+}
+
+/// Accumulated bill for one `(phase, class)` cell.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassBill {
+    /// Simulated seconds billed.
+    pub seconds: f64,
+    /// FLOPs executed (achieved rate × billed seconds).
+    pub flops: f64,
+    /// HBM bytes moved.
+    pub hbm_bytes: f64,
+    /// Σ seconds × compute utilization (fraction of chip peak FLOP/s).
+    pub util_w_s: f64,
+    /// Σ seconds × HBM-bandwidth utilization.
+    pub hbm_bw_w_s: f64,
+    /// Σ seconds × matrix-engine efficiency while active (Fig. 9 metric).
+    pub matrix_eff_w_s: f64,
+}
+
+impl ClassBill {
+    pub fn merge(&mut self, o: &ClassBill) {
+        self.seconds += o.seconds;
+        self.flops += o.flops;
+        self.hbm_bytes += o.hbm_bytes;
+        self.util_w_s += o.util_w_s;
+        self.hbm_bw_w_s += o.hbm_bw_w_s;
+        self.matrix_eff_w_s += o.matrix_eff_w_s;
+    }
+
+    /// Time-weighted average compute utilization.
+    pub fn compute_util(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.util_w_s / self.seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Time-weighted average HBM-bandwidth utilization.
+    pub fn hbm_bw_util(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.hbm_bw_w_s / self.seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Time-weighted matrix-engine efficiency while active.
+    pub fn matrix_eff_active(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.matrix_eff_w_s / self.seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Arithmetic intensity in FLOP/byte (0 when no HBM traffic).
+    pub fn intensity(&self) -> f64 {
+        if self.hbm_bytes > 0.0 {
+            self.flops / self.hbm_bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Roofline classification rule: a cell is compute-bound iff its
+    /// achieved compute utilization is at least its achieved HBM-bandwidth
+    /// utilization (the binding roof is the one it sits closer to).
+    pub fn bound(&self) -> &'static str {
+        if self.compute_util() >= self.hbm_bw_util() {
+            "compute"
+        } else {
+            "memory"
+        }
+    }
+}
+
+/// One memoized stage's attribution: the stage's total simulated seconds
+/// split across kernel classes, with the re-walk residual billed to
+/// [`AttribClass::Other`] so the split always sums to `total_s`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageAttrib {
+    pub total_s: f64,
+    pub by_class: [ClassBill; 5],
+}
+
+impl StageAttrib {
+    fn cell(&mut self, class: AttribClass) -> &mut ClassBill {
+        &mut self.by_class[class.index()]
+    }
+
+    /// Bill `mult` invocations of a simulated kernel to `class`.
+    pub fn add_kernel(&mut self, class: AttribClass, mult: f64, m: &KernelMetrics) {
+        let s = mult * m.seconds;
+        let b = self.cell(class);
+        b.seconds += s;
+        b.flops += m.tflops * 1e12 * s;
+        b.hbm_bytes += mult * m.hbm_bytes as f64;
+        b.util_w_s += s * m.compute_utilization;
+        b.hbm_bw_w_s += s * m.hbm_bw_utilization;
+        b.matrix_eff_w_s += s * m.matrix_efficiency_active;
+    }
+
+    /// Bill plain fabric/serialization seconds (no kernel metrics).
+    pub fn add_seconds(&mut self, class: AttribClass, seconds: f64) {
+        self.cell(class).seconds += seconds;
+    }
+
+    /// Sum of per-class billed seconds (before settling, the re-walk total).
+    pub fn billed_s(&self) -> f64 {
+        self.by_class.iter().map(|b| b.seconds).sum()
+    }
+
+    /// Pin the split to the memoized stage time: any difference between the
+    /// re-walk total and `measured_s` lands in [`AttribClass::Other`], so
+    /// the per-class seconds always sum to `total_s == measured_s`.
+    pub fn settle(&mut self, measured_s: f64) {
+        let residual = measured_s - self.billed_s();
+        self.cell(AttribClass::Other).seconds += residual;
+        self.total_s = measured_s;
+    }
+}
+
+/// Per-`(phase, class)` aggregates across every billed wave.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelAgg {
+    pub rows: BTreeMap<(AttribPhase, AttribClass), ClassBill>,
+}
+
+impl KernelAgg {
+    /// Bill one settled stage attribution under `phase`, scaled by `mult`
+    /// (how many times the memoized stage ran this wave — 1 per tick here).
+    pub fn bill(&mut self, phase: AttribPhase, a: &StageAttrib, mult: f64) {
+        for (i, b) in a.by_class.iter().enumerate() {
+            if b.seconds == 0.0 && b.flops == 0.0 {
+                continue;
+            }
+            let scaled = ClassBill {
+                seconds: mult * b.seconds,
+                flops: mult * b.flops,
+                hbm_bytes: mult * b.hbm_bytes,
+                util_w_s: mult * b.util_w_s,
+                hbm_bw_w_s: mult * b.hbm_bw_w_s,
+                matrix_eff_w_s: mult * b.matrix_eff_w_s,
+            };
+            self.rows.entry((phase, AttribClass::ALL[i])).or_default().merge(&scaled);
+        }
+    }
+
+    pub fn merge(&mut self, o: &KernelAgg) {
+        for (k, b) in &o.rows {
+            self.rows.entry(*k).or_default().merge(b);
+        }
+    }
+
+    /// Total billed seconds across all cells.
+    pub fn total_s(&self) -> f64 {
+        self.rows.values().map(|b| b.seconds).sum()
+    }
+
+    /// Σ seconds × HBM-bandwidth utilization across all cells.
+    pub fn hbm_bw_w_s(&self) -> f64 {
+        self.rows.values().map(|b| b.hbm_bw_w_s).sum()
+    }
+}
+
+/// Per-request capture slots, parallel to the engine's record vector.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReqSlot {
+    /// Request arrival as this engine saw it (re-injection time for
+    /// requeued or handed-off work).
+    pub arrival_s: Option<f64>,
+    /// First (or post-requeue) admission time on this engine.
+    pub admit_s: Option<f64>,
+    /// First token produced by this engine.
+    pub first_s: Option<f64>,
+    /// Completion on this engine.
+    pub completion_s: Option<f64>,
+    /// Prefix-cache tokens this request skipped at admission.
+    pub hit_tokens: u64,
+    /// Prefill seconds those hit tokens would have cost (annotation).
+    pub prefix_saved_s: f64,
+    /// Solo-decode baseline: decoded tokens × the batch-of-one stage time
+    /// at the request's final context (filled at completion).
+    pub solo_decode_s: f64,
+}
+
+/// Per-engine attribution recorder, carried inside `EngineObs`. Zero-cost
+/// when observability is off (the engine holds no recorder at all).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AttribRecorder {
+    /// Engine busy time: Σ per-wave stage seconds (idle jumps excluded).
+    pub busy_s: f64,
+    pub kernels: KernelAgg,
+    /// Request slots indexed by record position.
+    pub slots: Vec<ReqSlot>,
+    /// Settled stage attributions memoized per engine-local bucket key
+    /// (`d|b{}|kv{}` / `p|c{}|x{}`), mirroring the stage-time memo so the
+    /// attribution re-walk runs once per bucket, not once per tick.
+    pub memo: HashMap<String, StageAttrib>,
+    prev_sample_t: f64,
+    prev_busy_s: f64,
+    prev_hbm_w_s: f64,
+}
+
+impl AttribRecorder {
+    /// Bill one settled stage attribution and advance engine busy time.
+    pub fn bill(&mut self, phase: AttribPhase, a: &StageAttrib) {
+        self.busy_s += a.total_s;
+        self.kernels.bill(phase, a, 1.0);
+    }
+
+    /// Bill one wave's phase via the memoized settled attribution for
+    /// `key`, computing (and settling) it on first use — the engine's
+    /// per-bucket fast path.
+    pub fn bill_memoized(&mut self, phase: AttribPhase, key: String, f: impl FnOnce() -> StageAttrib) {
+        let a = self.memo.entry(key).or_insert_with(f);
+        self.busy_s += a.total_s;
+        self.kernels.bill(phase, a, 1.0);
+    }
+
+    pub fn slot(&mut self, pos: usize) -> &mut ReqSlot {
+        if pos >= self.slots.len() {
+            self.slots.resize(pos + 1, ReqSlot::default());
+        }
+        &mut self.slots[pos]
+    }
+
+    /// Gauge deltas since the previous series sample at time `t_s`:
+    /// `(util_frac, hbm_bw_frac)` — busy fraction of the elapsed interval
+    /// and average HBM-bandwidth fraction over it.
+    pub fn sample_gauges(&mut self, t_s: f64) -> (f64, f64) {
+        let dt = t_s - self.prev_sample_t;
+        let hbm_w_s = self.kernels.hbm_bw_w_s();
+        let (util, hbm) = if dt > 0.0 {
+            ((self.busy_s - self.prev_busy_s) / dt, (hbm_w_s - self.prev_hbm_w_s) / dt)
+        } else {
+            (0.0, 0.0)
+        };
+        self.prev_sample_t = t_s;
+        self.prev_busy_s = self.busy_s;
+        self.prev_hbm_w_s = hbm_w_s;
+        (util.clamp(0.0, 1.0), hbm.clamp(0.0, 1.0))
+    }
+}
+
+/// One delivered request's latency waterfall. All additive identities hold
+/// by construction (residual segments), so the conservation tests assert
+/// them exactly:
+///
+/// - `ttft_s = queue_wait_s + prefill_s + link_wait_s + requeue_stall_s`
+/// - `decode_span_s = decode_solo_s + interference_s`
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Waterfall {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// First token − arrival.
+    pub ttft_s: f64,
+    /// Local admission − local arrival on the delivering engine.
+    pub queue_wait_s: f64,
+    /// Local first token − local admission (includes prefill batching).
+    pub prefill_s: f64,
+    /// TTFT residual: time lost to faults/requeues before the final
+    /// admission. Zero (to rounding) for requests that were never requeued.
+    pub requeue_stall_s: f64,
+    /// Completion − first token (None fields collapse to 0 when the
+    /// request didn't finish inside the horizon).
+    pub decode_span_s: f64,
+    /// KV handoff serialization + queue wait on the shared link. Part of
+    /// the TTFT identity: in disaggregated serving the handoff delivers
+    /// token #1, so the exposed transfer delay precedes the first token.
+    pub link_wait_s: f64,
+    /// Batch-of-one decode baseline at the request's final context.
+    pub decode_solo_s: f64,
+    /// Decode residual vs the solo baseline: batch interference.
+    pub interference_s: f64,
+    /// Prefix-cache tokens skipped at admission (annotation).
+    pub prefix_hit_tokens: u64,
+    /// Prefill seconds the prefix hit saved (annotation, non-additive).
+    pub prefix_saved_s: f64,
+    pub requeues: u32,
+    pub completed: bool,
+}
+
+/// Build one waterfall from the merged record view plus the delivering
+/// engines' capture slots. `entry` is the slot on the engine that produced
+/// the first token; `completer` the slot on the engine that finished decode
+/// (the same slot when colocated).
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_waterfall(
+    id: u64,
+    arrival_s: f64,
+    first_token_s: f64,
+    completion_s: Option<f64>,
+    transfer_s: f64,
+    requeues: u32,
+    entry: Option<&ReqSlot>,
+    completer: Option<&ReqSlot>,
+) -> Waterfall {
+    let ttft = first_token_s - arrival_s;
+    let (queue, prefill) = match entry {
+        Some(s) => {
+            let local_arrival = s.arrival_s.unwrap_or(arrival_s);
+            let admit = s.admit_s.unwrap_or(local_arrival);
+            let first_local = s.first_s.unwrap_or(first_token_s);
+            (admit - local_arrival, first_local - admit)
+        }
+        None => (0.0, ttft),
+    };
+    let link = transfer_s;
+    let stall = ttft - queue - prefill - link;
+    let (span, solo) = match completion_s {
+        Some(c) => (c - first_token_s, completer.map(|s| s.solo_decode_s).unwrap_or(0.0)),
+        None => (0.0, 0.0),
+    };
+    Waterfall {
+        id,
+        arrival_s,
+        ttft_s: ttft,
+        queue_wait_s: queue,
+        prefill_s: prefill,
+        requeue_stall_s: stall,
+        decode_span_s: span,
+        link_wait_s: link,
+        decode_solo_s: solo,
+        interference_s: span - solo,
+        prefix_hit_tokens: entry.map(|s| s.hit_tokens).unwrap_or(0),
+        prefix_saved_s: entry.map(|s| s.prefix_saved_s).unwrap_or(0.0),
+        requeues,
+        completed: completion_s.is_some(),
+    }
+}
+
+/// One engine's contribution to the run-level attribution export.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineAttrib {
+    pub pid: u32,
+    pub busy_s: f64,
+    pub kernels: KernelAgg,
+}
+
+/// Run-level attribution: per-engine and merged kernel aggregates plus the
+/// per-request waterfalls, assembled by the serve/cluster drivers after the
+/// run and rendered by `obs::report`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AttribExport {
+    pub engines: Vec<EngineAttrib>,
+    pub kernels: KernelAgg,
+    pub waterfalls: Vec<Waterfall>,
+    /// Requests offered to the run (waterfalls only cover delivered ones).
+    pub offered: usize,
+}
+
+impl AttribExport {
+    /// Fold one engine's recorder in (pid order — deterministic).
+    pub fn push_engine(&mut self, pid: u32, rec: &AttribRecorder) {
+        self.kernels.merge(&rec.kernels);
+        self.engines.push(EngineAttrib { pid, busy_s: rec.busy_s, kernels: rec.kernels.clone() });
+    }
+
+    /// Total engine busy seconds across the run.
+    pub fn busy_s(&self) -> f64 {
+        self.engines.iter().map(|e| e.busy_s).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty() && self.waterfalls.is_empty()
+    }
+
+    /// Percentile summary of one waterfall segment in milliseconds.
+    pub fn segment_percentiles(&self, f: impl Fn(&Waterfall) -> f64) -> Percentiles {
+        let v: Vec<f64> = self.waterfalls.iter().map(|w| 1e3 * f(w)).collect();
+        Percentiles::from_values(&v)
+    }
+
+    /// Deterministic JSON export (`flatattention-attrib-v1`): merged and
+    /// per-engine kernel rooflines plus every per-request waterfall.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"schema\":\"flatattention-attrib-v1\"");
+        out.push_str(&format!(",\"offered\":{},\"busy_s\":{:.9}", self.offered, self.busy_s()));
+        out.push_str(",\"kernels\":");
+        push_kernels_json(&mut out, &self.kernels);
+        out.push_str(",\"engines\":[");
+        for (i, e) in self.engines.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{{\"pid\":{},\"busy_s\":{:.9},\"kernels\":", e.pid, e.busy_s));
+            push_kernels_json(&mut out, &e.kernels);
+            out.push('}');
+        }
+        out.push_str("],\"waterfalls\":[");
+        for (i, w) in self.waterfalls.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"id\":{},\"arrival_s\":{:.9},\"ttft_s\":{:.9},\"queue_wait_s\":{:.9},\"prefill_s\":{:.9},\
+                 \"requeue_stall_s\":{:.9},\"decode_span_s\":{:.9},\"link_wait_s\":{:.9},\"decode_solo_s\":{:.9},\
+                 \"interference_s\":{:.9},\"prefix_hit_tokens\":{},\"prefix_saved_s\":{:.9},\"requeues\":{},\"completed\":{}}}",
+                w.id,
+                w.arrival_s,
+                w.ttft_s,
+                w.queue_wait_s,
+                w.prefill_s,
+                w.requeue_stall_s,
+                w.decode_span_s,
+                w.link_wait_s,
+                w.decode_solo_s,
+                w.interference_s,
+                w.prefix_hit_tokens,
+                w.prefix_saved_s,
+                w.requeues,
+                w.completed
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn push_kernels_json(out: &mut String, agg: &KernelAgg) {
+    let total = agg.total_s();
+    out.push('[');
+    for (i, ((phase, class), b)) in agg.rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let pct = if total > 0.0 { b.seconds / total } else { 0.0 };
+        out.push_str(&format!(
+            "{{\"phase\":\"{}\",\"class\":\"{}\",\"seconds\":{:.9},\"pct_busy\":{:.6},\"flops\":{:.3e},\
+             \"hbm_bytes\":{:.3e},\"compute_util\":{:.6},\"hbm_bw_util\":{:.6},\"matrix_eff_active\":{:.6},\
+             \"intensity_flop_per_byte\":{:.6},\"bound\":\"{}\"}}",
+            phase.name(),
+            class.name(),
+            b.seconds,
+            pct,
+            b.flops,
+            b.hbm_bytes,
+            b.compute_util(),
+            b.hbm_bw_util(),
+            b.matrix_eff_active(),
+            b.intensity(),
+            b.bound()
+        ));
+    }
+    out.push(']');
+}
+
+/// Wall-clock self-profile of the sharded DES: how the fleet run itself
+/// spent host time. **Not deterministic** — confined to printed report
+/// notes, never to byte-pinned exports.
+#[derive(Debug, Clone, Default)]
+pub struct DesProfile {
+    pub workers: usize,
+    pub epochs: u64,
+    /// Total wall seconds for the fleet run.
+    pub wall_s: f64,
+    /// Per-worker wall seconds spent advancing engines.
+    pub worker_busy_s: Vec<f64>,
+    /// Per-worker wall seconds blocked at epoch barriers.
+    pub barrier_stall_s: Vec<f64>,
+}
+
+impl DesProfile {
+    /// Load imbalance: max over mean per-worker busy time (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        if self.worker_busy_s.is_empty() {
+            return 1.0;
+        }
+        let max = self.worker_busy_s.iter().cloned().fold(0.0_f64, f64::max);
+        let mean = self.worker_busy_s.iter().sum::<f64>() / self.worker_busy_s.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+
+    /// One-line human summary for cluster report notes.
+    pub fn note(&self) -> String {
+        let busy: f64 = self.worker_busy_s.iter().sum();
+        let stall: f64 = self.barrier_stall_s.iter().sum();
+        format!(
+            "DES self-profile: {} worker(s), {} epochs, wall {:.3} s (busy {:.3} s, barrier stall {:.3} s, imbalance {:.2}x)",
+            self.workers,
+            self.epochs,
+            self.wall_s,
+            busy,
+            stall,
+            self.imbalance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(seconds: f64, tflops: f64, cu: f64, hbm: f64, bytes: u64) -> KernelMetrics {
+        KernelMetrics {
+            cycles: 1,
+            seconds,
+            tflops,
+            compute_utilization: cu,
+            hbm_bw_utilization: hbm,
+            hbm_bytes: bytes,
+            noc_bytes: 0,
+            matrix_utilization_active: cu,
+            matrix_efficiency_active: cu,
+            exposed: [0; 5],
+        }
+    }
+
+    #[test]
+    fn stage_attrib_settles_residual_into_other() {
+        let mut a = StageAttrib::default();
+        a.add_kernel(AttribClass::Attention, 2.0, &metrics(0.5, 10.0, 0.9, 0.3, 1 << 20));
+        a.add_seconds(AttribClass::Comm, 0.25);
+        assert!((a.billed_s() - 1.25).abs() < 1e-12);
+        a.settle(1.5);
+        assert_eq!(a.total_s, 1.5);
+        assert!((a.billed_s() - 1.5).abs() < 1e-12);
+        assert!((a.by_class[AttribClass::Other.index()].seconds - 0.25).abs() < 1e-12);
+        // Attention bill carries flops at the achieved rate × billed time.
+        let att = &a.by_class[AttribClass::Attention.index()];
+        assert!((att.flops - 10.0 * 1e12).abs() < 1.0);
+        assert!((att.hbm_bytes - 2.0 * (1 << 20) as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn roofline_rule_splits_on_utilization_ratio() {
+        let mut compute = StageAttrib::default();
+        compute.add_kernel(AttribClass::Gemm, 1.0, &metrics(1.0, 100.0, 0.9, 0.2, 1000));
+        assert_eq!(compute.by_class[AttribClass::Gemm.index()].bound(), "compute");
+        let mut memory = StageAttrib::default();
+        memory.add_kernel(AttribClass::Attention, 1.0, &metrics(1.0, 5.0, 0.1, 0.8, 1000));
+        assert_eq!(memory.by_class[AttribClass::Attention.index()].bound(), "memory");
+    }
+
+    #[test]
+    fn recorder_bills_busy_time_and_conserves() {
+        let mut rec = AttribRecorder::default();
+        let mut a = StageAttrib::default();
+        a.add_kernel(AttribClass::Attention, 1.0, &metrics(0.3, 10.0, 0.9, 0.3, 100));
+        a.settle(0.4);
+        rec.bill(AttribPhase::Decode, &a);
+        rec.bill(AttribPhase::Decode, &a);
+        let mut p = StageAttrib::default();
+        p.add_kernel(AttribClass::Gemm, 1.0, &metrics(0.1, 50.0, 0.8, 0.1, 100));
+        p.settle(0.1);
+        rec.bill(AttribPhase::Prefill, &p);
+        assert!((rec.busy_s - 0.9).abs() < 1e-12);
+        assert!((rec.kernels.total_s() - rec.busy_s).abs() < 1e-12, "kernel bill must conserve busy time");
+        // Gauges advance on the sampled deltas.
+        let (u, _) = rec.sample_gauges(1.0);
+        assert!((u - 0.9).abs() < 1e-12);
+        let (u2, _) = rec.sample_gauges(2.0);
+        assert_eq!(u2, 0.0, "no new billing between samples");
+    }
+
+    #[test]
+    fn waterfall_segments_sum_by_construction() {
+        // Disaggregated shape: token #1 left the prefill engine at 1.4 and
+        // landed after a 0.1 s KV handoff — the link wait sits inside TTFT.
+        let entry = ReqSlot {
+            arrival_s: Some(1.0),
+            admit_s: Some(1.2),
+            first_s: Some(1.4),
+            completion_s: None,
+            hit_tokens: 128,
+            prefix_saved_s: 0.05,
+            solo_decode_s: 0.0,
+        };
+        let completer = ReqSlot { solo_decode_s: 0.8, ..ReqSlot::default() };
+        let w = assemble_waterfall(7, 1.0, 1.5, Some(3.0), 0.1, 0, Some(&entry), Some(&completer));
+        assert!((w.ttft_s - (w.queue_wait_s + w.prefill_s + w.link_wait_s + w.requeue_stall_s)).abs() < 1e-12);
+        assert!((w.decode_span_s - (w.decode_solo_s + w.interference_s)).abs() < 1e-12);
+        assert!((w.link_wait_s - 0.1).abs() < 1e-12);
+        assert!(w.requeue_stall_s.abs() < 1e-12, "clean request has no requeue stall: {w:?}");
+        assert_eq!(w.prefix_hit_tokens, 128);
+        assert!(w.completed);
+        // A requeued request's displaced first life lands in the stall.
+        let late = ReqSlot { arrival_s: Some(2.0), admit_s: Some(2.1), first_s: Some(2.4), ..entry };
+        let w2 = assemble_waterfall(7, 1.0, 2.4, None, 0.0, 1, Some(&late), None);
+        assert!((w2.requeue_stall_s - 1.0).abs() < 1e-12, "{w2:?}");
+        assert!(!w2.completed);
+        assert_eq!(w2.decode_span_s, 0.0);
+    }
+
+    #[test]
+    fn export_json_is_deterministic_and_tagged() {
+        let build = || {
+            let mut rec = AttribRecorder::default();
+            let mut a = StageAttrib::default();
+            a.add_kernel(AttribClass::Attention, 1.0, &metrics(0.3, 10.0, 0.9, 0.3, 100));
+            a.settle(0.3);
+            rec.bill(AttribPhase::Decode, &a);
+            let mut x = AttribExport { offered: 1, ..AttribExport::default() };
+            x.push_engine(0, &rec);
+            x.waterfalls.push(assemble_waterfall(0, 0.0, 0.5, Some(1.0), 0.0, 0, None, None));
+            x.to_json()
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\":\"flatattention-attrib-v1\""));
+        assert!(a.contains("\"class\":\"attention\""));
+        assert!(a.contains("\"bound\":"));
+        assert!(a.contains("\"waterfalls\":["));
+    }
+
+    #[test]
+    fn des_profile_note_reports_imbalance() {
+        let p = DesProfile {
+            workers: 2,
+            epochs: 10,
+            wall_s: 1.0,
+            worker_busy_s: vec![0.9, 0.3],
+            barrier_stall_s: vec![0.05, 0.65],
+        };
+        assert!((p.imbalance() - 1.5).abs() < 1e-12);
+        assert!(p.note().contains("2 worker(s)"));
+        assert!(DesProfile::default().note().contains("0 worker(s)"));
+    }
+}

@@ -49,8 +49,41 @@
 //! sampled at the first wave boundary past each grid point: `queue_depth`,
 //! `active_users` (batch occupancy), `kv_frac` (worst column),
 //! `kv_col_frac` (per EP column), `prefix_hit_rate`, `link_busy_frac`
-//! (fleet pid only). CSV (one row per sample, `kv_col_frac`
-//! semicolon-joined) or JSON (full per-column arrays).
+//! (fleet pid only), plus the attribution gauges `util_frac` (engine busy
+//! fraction of the elapsed interval), `hbm_bw_frac` (average
+//! HBM-bandwidth fraction over it) and the fault-visibility pair
+//! `instances_up` / `requeue_depth` (fleet pid only, sampled at every
+//! epoch barrier; zero on engine lanes). CSV (one row per sample,
+//! `kv_col_frac` semicolon-joined last) or JSON (full per-column arrays).
+//! The sampler is bounded by [`ObsConfig::series_cap`]; rows beyond it are
+//! dropped loudly (`dropped_points` in both exports and a
+//! `flatattention_series_points_dropped_total` counter).
+//!
+//! # Attribution schema ([`attrib`], [`report`])
+//!
+//! `--attrib-out` / `flatattention report` export
+//! `flatattention-attrib-v1` JSON with three sections:
+//!
+//! - `kernels` (merged) and `engines[].kernels` (per instance): one row
+//!   per `(phase ∈ {prefill, decode}, class ∈ {attention, gemm, vector,
+//!   comm, other})` with billed `seconds`, `pct_busy`, `flops`,
+//!   `hbm_bytes`, time-weighted `compute_util` / `hbm_bw_util` /
+//!   `matrix_eff_active`, `intensity_flop_per_byte` and the roofline
+//!   verdict `bound` — **compute-bound iff `compute_util >=
+//!   hbm_bw_util`**. Per-class seconds sum to the engine's busy time
+//!   (`busy_s`) exactly; any re-walk residual is billed to `other`.
+//! - `waterfalls`: one row per delivered request with the additive
+//!   segments `ttft_s = queue_wait_s + prefill_s + requeue_stall_s`
+//!   (requeue stall is the TTFT residual — zero to rounding unless the
+//!   request was requeued by a fault) and `decode_span_s = link_wait_s +
+//!   decode_solo_s + interference_s` (interference is the decode residual
+//!   vs a batch-of-one baseline at the request's final context).
+//!   `prefix_hit_tokens` / `prefix_saved_s` are non-additive annotations.
+//! - The text report additionally prints the Fig. 9 dataflow anchor
+//!   (matrix efficiency while active at the Table-II operating point) and,
+//!   for cluster runs, the wall-clock DES self-profile note (per-worker
+//!   busy/barrier-stall, load imbalance) — the only non-deterministic
+//!   line, kept out of every byte-pinned artifact.
 //!
 //! # Counters schema ([`counters`])
 //!
@@ -78,10 +111,13 @@
 //! <https://ui.perfetto.dev> and drag `trace.json` in (or load it in
 //! `chrome://tracing`).
 
+pub mod attrib;
 pub mod counters;
+pub mod report;
 pub mod series;
 pub mod trace;
 
+pub use attrib::{AttribClass, AttribExport, AttribPhase, AttribRecorder, DesProfile, StageAttrib, Waterfall};
 pub use counters::Counters;
 pub use series::{export_series_csv, export_series_json, SeriesRow, SeriesSampler};
 pub use trace::{export_chrome_trace, Span, TraceInstant, TraceRecorder};
@@ -94,11 +130,14 @@ pub struct ObsConfig {
     pub span_cap: usize,
     /// Gauge sampling grid in simulated seconds.
     pub series_interval_s: f64,
+    /// Upper bound on recorded gauge rows per sampler; rows beyond it are
+    /// dropped and counted (`dropped_points`), never silently lost.
+    pub series_cap: usize,
 }
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        ObsConfig { span_cap: 262_144, series_interval_s: 0.05 }
+        ObsConfig { span_cap: 262_144, series_interval_s: 0.05, series_cap: 65_536 }
     }
 }
 
@@ -110,14 +149,16 @@ pub struct EngineObs {
     pub trace: TraceRecorder,
     pub series: SeriesSampler,
     pub counters: Counters,
+    pub attrib: AttribRecorder,
 }
 
 impl EngineObs {
     pub fn new(pid: u32, process_name: &str, cfg: ObsConfig) -> Self {
         EngineObs {
             trace: TraceRecorder::new(pid, process_name, cfg.span_cap),
-            series: SeriesSampler::new(pid, cfg.series_interval_s),
+            series: SeriesSampler::new(pid, cfg.series_interval_s).with_cap(cfg.series_cap),
             counters: Counters::new(),
+            attrib: AttribRecorder::default(),
         }
     }
 }
@@ -131,6 +172,9 @@ pub struct ObsBundle {
     pub traces: Vec<TraceRecorder>,
     pub series: Vec<SeriesSampler>,
     pub counters: Counters,
+    /// Run-level attribution (kernel rooflines + latency waterfalls),
+    /// assembled by the serve/cluster drivers after the run.
+    pub attrib: AttribExport,
 }
 
 impl ObsBundle {
@@ -155,11 +199,16 @@ impl ObsBundle {
         if dropped > 0 {
             counters.add("trace_events_dropped", dropped);
         }
+        let series_dropped: u64 = self.series.iter().map(SeriesSampler::dropped).sum();
+        if series_dropped > 0 {
+            counters.add("series_points_dropped", series_dropped);
+        }
         ObsExports {
             trace_json: export_chrome_trace(&trefs),
             series_csv: export_series_csv(&srefs),
             series_json: export_series_json(&srefs),
             metrics_text: counters.to_prometheus(),
+            attrib_json: self.attrib.to_json(),
         }
     }
 }
@@ -172,6 +221,8 @@ pub struct ObsExports {
     pub series_csv: String,
     pub series_json: String,
     pub metrics_text: String,
+    /// `flatattention-attrib-v1` JSON (kernel rooflines + waterfalls).
+    pub attrib_json: String,
 }
 
 #[cfg(test)]
@@ -181,7 +232,7 @@ mod tests {
     #[test]
     fn bundle_exports_are_deterministic_and_account_drops() {
         let build = || {
-            let mut o = EngineObs::new(0, "serve", ObsConfig { span_cap: 2, series_interval_s: 0.1 });
+            let mut o = EngineObs::new(0, "serve", ObsConfig { span_cap: 2, series_interval_s: 0.1, series_cap: 1 });
             o.trace.begin(1, "queued", "lifecycle", 0.0, vec![("req", "7".to_string())]);
             o.trace.end(1, 0.5, &[("outcome", "completed")]);
             o.trace.instant(1, "first_token", "lifecycle", 0.25, Vec::new());
@@ -196,7 +247,13 @@ mod tests {
                 kv_col_frac: vec![0.5, 0.25],
                 prefix_hit_rate: 0.0,
                 link_busy_frac: 0.0,
+                util_frac: 0.75,
+                hbm_bw_frac: 0.25,
+                instances_up: 0,
+                requeue_depth: 0,
             });
+            // Over the series cap of 1 → dropped loudly, not grown.
+            o.series.record(SeriesRow { t_s: 0.25, ..o.series.rows()[0].clone() });
             let mut b = ObsBundle::new();
             b.push_engine(o);
             b.exports()
@@ -206,9 +263,14 @@ mod tests {
         assert_eq!(a.series_csv, b.series_csv);
         assert_eq!(a.series_json, b.series_json);
         assert_eq!(a.metrics_text, b.metrics_text);
+        assert_eq!(a.attrib_json, b.attrib_json);
         assert!(a.trace_json.contains("\"dropped_events\":\"1\""), "{}", a.trace_json);
         assert!(a.metrics_text.contains("flatattention_trace_events_dropped_total 1"), "{}", a.metrics_text);
+        assert!(a.metrics_text.contains("flatattention_series_points_dropped_total 1"), "{}", a.metrics_text);
         assert!(a.metrics_text.contains("flatattention_completed_total 1"));
+        assert!(a.series_csv.contains("# dropped_points 1"), "{}", a.series_csv);
+        assert!(a.series_json.contains("\"dropped_points\":1"), "{}", a.series_json);
+        assert!(a.attrib_json.contains("\"schema\":\"flatattention-attrib-v1\""), "{}", a.attrib_json);
     }
 
     #[test]
@@ -216,5 +278,6 @@ mod tests {
         let cfg = ObsConfig::default();
         assert!(cfg.span_cap >= 100_000);
         assert!(cfg.series_interval_s > 0.0);
+        assert!(cfg.series_cap >= 10_000);
     }
 }

@@ -1,11 +1,19 @@
 //! Fixed-interval gauge sampler: per-instance time series of queue depth,
 //! batch occupancy, KV utilization (worst and per EP column), prefix-cache
-//! hit rate and link busy fraction, on the simulated clock.
+//! hit rate, link busy fraction, engine utilization / HBM-bandwidth
+//! fractions and fault visibility (instances up, requeue backlog), on the
+//! simulated clock.
 //!
 //! The engine samples at wave boundaries, so the sampler works on a grid:
 //! [`SeriesSampler::ready`] is true once the clock passed the next grid
 //! point, and [`SeriesSampler::record`] advances the grid past the sampled
 //! time — one row per interval regardless of tick duration jitter.
+//!
+//! The sampler is bounded: rows beyond the cap are dropped and counted
+//! (`dropped_points` in both exports plus the
+//! `flatattention_series_points_dropped_total` counter), mirroring the
+//! trace recorder's loud-drop contract — a long horizon with a tight
+//! interval can no longer grow the recorder unboundedly and silently.
 
 /// One gauge sample.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,20 +35,48 @@ pub struct SeriesRow {
     pub prefix_hit_rate: f64,
     /// Shared KV-link busy fraction (fleet lane only; 0 elsewhere).
     pub link_busy_frac: f64,
+    /// Engine busy fraction of the elapsed sampling interval (0 on the
+    /// fleet lane and when attribution is not recording).
+    pub util_frac: f64,
+    /// Average HBM-bandwidth fraction over the elapsed interval (0 on the
+    /// fleet lane and when attribution is not recording).
+    pub hbm_bw_frac: f64,
+    /// Instances currently up (fleet lane only; 0 on engine lanes).
+    pub instances_up: usize,
+    /// Requests sitting in the fault-requeue backlog (fleet lane only).
+    pub requeue_depth: usize,
 }
 
-/// Grid-based sampler for one instance.
+/// Grid-based sampler for one instance, bounded by a row cap.
 #[derive(Debug, Clone)]
 pub struct SeriesSampler {
     pid: u32,
     interval_s: f64,
     next_s: f64,
+    cap: usize,
+    dropped: u64,
     rows: Vec<SeriesRow>,
 }
 
+/// Default row cap (matches [`crate::obs::ObsConfig::default`]).
+const DEFAULT_SERIES_CAP: usize = 65_536;
+
 impl SeriesSampler {
     pub fn new(pid: u32, interval_s: f64) -> Self {
-        SeriesSampler { pid, interval_s: interval_s.max(1e-6), next_s: 0.0, rows: Vec::new() }
+        SeriesSampler {
+            pid,
+            interval_s: interval_s.max(1e-6),
+            next_s: 0.0,
+            cap: DEFAULT_SERIES_CAP,
+            dropped: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override the row cap (a cap of 0 drops everything — loudly).
+    pub fn with_cap(mut self, cap: usize) -> Self {
+        self.cap = cap;
+        self
     }
 
     pub fn pid(&self) -> u32 {
@@ -51,15 +87,25 @@ impl SeriesSampler {
         self.interval_s
     }
 
+    /// Rows dropped because the cap was reached.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
     /// True when the clock reached the next grid point — time to sample.
     pub fn ready(&self, t_s: f64) -> bool {
         t_s >= self.next_s
     }
 
-    /// Record a sample and advance the grid past it.
+    /// Record a sample and advance the grid past it. Rows beyond the cap
+    /// are counted in [`SeriesSampler::dropped`], never silently lost.
     pub fn record(&mut self, row: SeriesRow) {
         while self.next_s <= row.t_s {
             self.next_s += self.interval_s;
+        }
+        if self.rows.len() >= self.cap {
+            self.dropped += 1;
+            return;
         }
         self.rows.push(row);
     }
@@ -77,14 +123,22 @@ fn merged<'a>(samplers: &'a [&'a SeriesSampler]) -> Vec<&'a SeriesRow> {
     rows
 }
 
-/// CSV export: one row per sample; `kv_col_frac` is semicolon-joined so the
-/// per-EP-column breakdown survives the flat format.
+fn total_dropped(samplers: &[&SeriesSampler]) -> u64 {
+    samplers.iter().map(|s| s.dropped()).sum()
+}
+
+/// CSV export: one row per sample; `kv_col_frac` is semicolon-joined last
+/// so the per-EP-column breakdown survives the flat format. A trailing
+/// `# dropped_points N` comment line appears when any sampler hit its cap.
 pub fn export_series_csv(samplers: &[&SeriesSampler]) -> String {
-    let mut out = String::from("t_s,instance,queue_depth,active_users,kv_frac,prefix_hit_rate,link_busy_frac,kv_col_frac\n");
+    let mut out = String::from(
+        "t_s,instance,queue_depth,active_users,kv_frac,prefix_hit_rate,link_busy_frac,\
+         util_frac,hbm_bw_frac,instances_up,requeue_depth,kv_col_frac\n",
+    );
     for r in merged(samplers) {
         let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
         out.push_str(&format!(
-            "{:.6},{},{},{},{:.6},{:.6},{:.6},{}\n",
+            "{:.6},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{}\n",
             r.t_s,
             r.pid,
             r.queue_depth,
@@ -92,15 +146,23 @@ pub fn export_series_csv(samplers: &[&SeriesSampler]) -> String {
             r.kv_frac,
             r.prefix_hit_rate,
             r.link_busy_frac,
+            r.util_frac,
+            r.hbm_bw_frac,
+            r.instances_up,
+            r.requeue_depth,
             cols.join(";")
         ));
+    }
+    let dropped = total_dropped(samplers);
+    if dropped > 0 {
+        out.push_str(&format!("# dropped_points {dropped}\n"));
     }
     out
 }
 
 /// JSON export with full per-column arrays (for plotting pipelines).
 pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
-    let mut out = String::from("{\"rows\":[");
+    let mut out = format!("{{\"dropped_points\":{},\"rows\":[", total_dropped(samplers));
     for (i, r) in merged(samplers).iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -108,7 +170,8 @@ pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
         let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
         out.push_str(&format!(
             "{{\"t_s\":{:.6},\"instance\":{},\"queue_depth\":{},\"active_users\":{},\"kv_frac\":{:.6},\
-             \"prefix_hit_rate\":{:.6},\"link_busy_frac\":{:.6},\"kv_col_frac\":[{}]}}",
+             \"prefix_hit_rate\":{:.6},\"link_busy_frac\":{:.6},\"util_frac\":{:.6},\"hbm_bw_frac\":{:.6},\
+             \"instances_up\":{},\"requeue_depth\":{},\"kv_col_frac\":[{}]}}",
             r.t_s,
             r.pid,
             r.queue_depth,
@@ -116,6 +179,10 @@ pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
             r.kv_frac,
             r.prefix_hit_rate,
             r.link_busy_frac,
+            r.util_frac,
+            r.hbm_bw_frac,
+            r.instances_up,
+            r.requeue_depth,
             cols.join(",")
         ));
     }
@@ -137,6 +204,10 @@ mod tests {
             kv_col_frac: vec![0.5, 0.25],
             prefix_hit_rate: 0.0,
             link_busy_frac: 0.0,
+            util_frac: 0.75,
+            hbm_bw_frac: 0.5,
+            instances_up: 0,
+            requeue_depth: 0,
         }
     }
 
@@ -172,11 +243,31 @@ mod tests {
         assert!(lines[3].starts_with("0.200000,0,5,10,"), "{csv}");
         assert!(lines[1].ends_with("0.500000;0.250000"), "{csv}");
         let json = export_series_json(&[&a, &b]);
-        assert!(json.starts_with("{\"rows\":[") && json.ends_with("]}"));
+        assert!(json.starts_with("{\"dropped_points\":0,\"rows\":[") && json.ends_with("]}"), "{json}");
         assert!(json.contains("\"kv_col_frac\":[0.500000,0.250000]"), "{json}");
+        assert!(json.contains("\"util_frac\":0.750000"), "{json}");
+        assert!(json.contains("\"instances_up\":0"), "{json}");
         assert_eq!(json.matches("\"t_s\"").count(), 3);
         // Determinism.
         assert_eq!(csv, export_series_csv(&[&a, &b]));
         assert_eq!(json, export_series_json(&[&a, &b]));
+    }
+
+    #[test]
+    fn cap_drops_loudly_and_exports_account_for_it() {
+        let mut s = SeriesSampler::new(0, 0.1).with_cap(2);
+        s.record(row(0.0, 0, 1));
+        s.record(row(0.1, 0, 2));
+        s.record(row(0.2, 0, 3));
+        s.record(row(0.3, 0, 4));
+        assert_eq!(s.rows().len(), 2);
+        assert_eq!(s.dropped(), 2);
+        // The grid keeps advancing past dropped samples — no catch-up burst.
+        assert!(!s.ready(0.35));
+        let csv = export_series_csv(&[&s]);
+        assert!(csv.ends_with("# dropped_points 2\n"), "{csv}");
+        assert!(csv.starts_with("t_s,instance,"), "header must stay first for downstream greps: {csv}");
+        let json = export_series_json(&[&s]);
+        assert!(json.starts_with("{\"dropped_points\":2,"), "{json}");
     }
 }

@@ -24,6 +24,7 @@ use crate::dataflow::{simulate_kernel, AttentionDataflow};
 use crate::metrics::KernelMetrics;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, KernelCache, ParallelismPlan};
+use crate::obs::attrib::{AttribClass, StageAttrib};
 use crate::serve::sim::{kv_bucket, StageTimeCache};
 use crate::workload::attention::AttentionShape;
 use crate::workload::deepseek::{prefill_layer_kernels, DeepSeekConfig, KernelClass, MoePlacement};
@@ -172,6 +173,61 @@ impl<'a> PrefillEngine<'a> {
         per_stage_moe * moe_layer_s + per_stage_dense * dense_layer_s + boundary
     }
 
+    /// Attribution re-walk of [`PrefillEngine::evaluate_chunk`]: the
+    /// identical kernel walk and per-stage scaling, billed per kernel class
+    /// with the simulated FLOPs/HBM-bytes/utilizations attached. Unsettled —
+    /// the caller pins it to the memoized chunk time via
+    /// [`StageAttrib::settle`]. Kernel-memoized, so after the first
+    /// evaluation of a (chunk, context) bucket this is pure arithmetic.
+    pub fn evaluate_chunk_attrib(&self, chunk: u32, context: u32) -> StageAttrib {
+        let chip_fp = self.sys.chip.fingerprint();
+        let rows = chunk.max(1) as u64;
+
+        let group_tokens = rows * self.plan.ep as u64;
+        let total_pairs = group_tokens * self.ds.experts_per_token as u64;
+        let active_total = total_pairs.min(self.ds.n_experts as u64).max(1);
+        let rows_per_expert = total_pairs.div_ceil(active_total);
+        let active_per_chip = active_total
+            .div_ceil(self.plan.ep as u64)
+            .min((self.ds.n_experts / self.plan.ep).max(1) as u64);
+        let moe = MoePlacement { experts_on_chip: active_per_chip as u32, rows_per_expert };
+
+        let moe_layers = (self.ds.layers - self.ds.dense_layers) as f64;
+        let per_stage_moe = moe_layers / self.plan.pp as f64;
+        let per_stage_dense = self.ds.dense_layers as f64 / self.plan.pp as f64;
+
+        let mut a = StageAttrib::default();
+        for k in &prefill_layer_kernels(self.ds, chunk, context, self.dtype, moe) {
+            let m = self.kernel(&chip_fp, &k.class);
+            let mult = if k.name.starts_with("moe.") { per_stage_moe } else { per_stage_moe + per_stage_dense };
+            let class = match &k.class {
+                KernelClass::Attention(_) => AttribClass::Attention,
+                KernelClass::Gemm { .. } => AttribClass::Gemm,
+                KernelClass::Vector { .. } => AttribClass::Vector,
+            };
+            a.add_kernel(class, mult, &m);
+        }
+        let d = self.ds.d_model as u64;
+        let di = self.ds.dense_inter as u64;
+        let up = self.kernel(&chip_fp, &KernelClass::Gemm { m: rows, k: d, n: 2 * di, batch: 1 });
+        a.add_kernel(AttribClass::Gemm, per_stage_dense, &up);
+        let down = self.kernel(&chip_fp, &KernelClass::Gemm { m: rows, k: di, n: d, batch: 1 });
+        a.add_kernel(AttribClass::Gemm, per_stage_dense, &down);
+        let dispatch_bytes = rows as f64
+            * self.ds.experts_per_token as f64
+            * self.ds.d_model as f64
+            * self.dtype.bytes() as f64;
+        a.add_seconds(AttribClass::Comm, per_stage_moe * 2.0 * self.sys.d2d.all_to_all_seconds(self.plan.ep, dispatch_bytes));
+        if self.plan.pp > 1 {
+            let boundary = self
+                .sys
+                .d2d
+                .neighbor_transfer_seconds(rows as f64 * d as f64 * self.dtype.bytes() as f64);
+            a.add_seconds(AttribClass::Comm, boundary);
+        }
+        a
+    }
+
     /// Memoized single-kernel simulation. The key layout matches the decode
     /// evaluator's exactly, so GEMM/vector kernels with coinciding shapes
     /// share entries across the two engines; attention kernels can never
@@ -251,6 +307,20 @@ mod tests {
                 "chunk {chunk} ctx {ctx}: billed {billed} vs direct {direct}"
             );
         }
+    }
+
+    #[test]
+    fn attrib_rewalk_conserves_chunk_seconds() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let cfg = ServeConfig::default();
+        let e = engine(&sys, &ds, &cfg);
+        let (cb, xb) = e.bucketed(800, 5000.0);
+        let direct = e.evaluate_chunk(cb, xb);
+        let a = e.evaluate_chunk_attrib(cb, xb);
+        let rel = (a.billed_s() - direct).abs() / direct;
+        assert!(rel < 1e-9, "re-walk drifted from evaluate_chunk: {} vs {direct}", a.billed_s());
+        assert!(a.by_class.iter().filter(|b| b.seconds > 0.0).count() >= 3, "{a:?}");
     }
 
     #[test]

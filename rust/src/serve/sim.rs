@@ -34,7 +34,8 @@ use crate::arch::config::{Dtype, SimFidelity};
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::{AttentionChoice, DecodeEvaluator, KernelCache, ParallelismPlan};
-use crate::obs::{EngineObs, ObsConfig, SeriesRow};
+use crate::obs::attrib::assemble_waterfall;
+use crate::obs::{AttribExport, AttribPhase, EngineObs, ObsConfig, SeriesRow};
 use crate::serve::kv::KvCacheModel;
 use crate::serve::prefill::PrefillEngine;
 use crate::serve::request::{generate_trace, thin_trace, Request, TraceConfig, TrafficPattern};
@@ -251,21 +252,6 @@ impl<'a> StageTimes<'a> {
             (self.sys, self.ds, self.cfg.plan, self.cfg.choice, &mut self.ev);
         self.shared
             .get_or_insert_with(key, || ev.evaluate(sys, ds, plan, b, kv, choice).stage_seconds)
-    }
-
-    /// Tick duration for an iteration decoding `decode_users` per chip at
-    /// contexts up to `kv_tokens`, with a prefill chunk of `prefill_tokens`
-    /// riding along at `prefill_context` total context — billed by the
-    /// prefill dataflow simulation, not a marginal-row approximation.
-    fn stage_seconds(
-        &mut self,
-        decode_users: u64,
-        kv_tokens: f64,
-        prefill_tokens: u64,
-        prefill_context: f64,
-    ) -> f64 {
-        let decode = self.decode_stage_seconds(decode_users.max(1), kv_tokens);
-        decode + self.prefill.chunk_stage_seconds(prefill_tokens, prefill_context)
     }
 }
 
@@ -530,6 +516,19 @@ impl<'a> ServeEngine<'a> {
                         args.push(("prefix_hit_tokens", hit_tokens.to_string()));
                     }
                     obs.trace.begin(tid, name, "lifecycle", t0, args);
+                    // Waterfall capture keeps the FIRST admission: later
+                    // re-admissions (preemption churn) land in the prefill
+                    // segment, not the queue wait.
+                    let slot = obs.attrib.slot(rec);
+                    if slot.admit_s.is_none() {
+                        slot.admit_s = Some(t0);
+                        slot.hit_tokens = hit_tokens as u64;
+                        slot.prefix_saved_s = if hit_tokens > 0 {
+                            self.stage.prefill.chunk_stage_seconds(hit_tokens as u64, hit_tokens as f64)
+                        } else {
+                            0.0
+                        };
+                    }
                 }
                 SchedEvent::Rejected { rec } => {
                     obs.counters.inc("rejected");
@@ -542,6 +541,42 @@ impl<'a> ServeEngine<'a> {
                     obs.trace.begin(tid, "queued", "lifecycle", t0, Vec::new());
                 }
             }
+        }
+    }
+
+    /// Bill this tick's stage seconds to the attribution recorder: one
+    /// kernel-level re-walk of the memoized stage per (phase, bucket),
+    /// settled against the billed stage time so the per-class seconds
+    /// conserve engine busy time exactly. Obs-gated — the unobserved path
+    /// never calls this.
+    fn bill_attrib(
+        &mut self,
+        decode_users: u64,
+        kv_tokens: f64,
+        prefill_tokens: u64,
+        prefill_ctx: f64,
+        decode_s: f64,
+        prefill_s: f64,
+    ) {
+        let Some(obs) = self.obs.as_deref_mut() else { return };
+        let stage = &mut self.stage;
+        let b = batch_bucket(decode_users.max(1));
+        let kv = kv_bucket(kv_tokens, stage.ds.max_context);
+        let (sys, ds, plan, choice) = (stage.sys, stage.ds, stage.cfg.plan, stage.cfg.choice);
+        let ev = &mut stage.ev;
+        obs.attrib.bill_memoized(AttribPhase::Decode, format!("d|b{b}|kv{kv}"), || {
+            let mut a = ev.evaluate_attrib(sys, ds, plan, b, kv, choice);
+            a.settle(decode_s);
+            a
+        });
+        if prefill_tokens > 0 {
+            let (cb, xb) = stage.prefill.bucketed(prefill_tokens, prefill_ctx);
+            let prefill = &stage.prefill;
+            obs.attrib.bill_memoized(AttribPhase::Prefill, format!("p|c{cb}|x{xb}"), || {
+                let mut a = prefill.evaluate_chunk_attrib(cb, xb);
+                a.settle(prefill_s);
+                a
+            });
         }
     }
 
@@ -584,6 +619,7 @@ impl<'a> ServeEngine<'a> {
                     let tid = p.rec as u64 + 1;
                     let id = self.records[p.rec].id.to_string();
                     obs.counters.inc("arrivals");
+                    obs.attrib.slot(p.rec).arrival_s = Some(p.arrival_s);
                     obs.trace.instant(tid, "arrive", "lifecycle", p.arrival_s, vec![("req", id.clone())]);
                     obs.trace.begin(tid, "queued", "lifecycle", p.arrival_s, vec![("req", id)]);
                 }
@@ -613,7 +649,15 @@ impl<'a> ServeEngine<'a> {
         let (decode_users, prefill_tokens) = self.sched.peak_cell_load();
         let prefill_ctx = self.sched.peak_prefill_context() as f64;
         let kv_len = self.sched.max_context_tokens().max(1.0);
-        self.clock += self.stage.stage_seconds(decode_users, kv_len, prefill_tokens, prefill_ctx);
+        // Two-phase tick billing: the memoized decode stage time plus the
+        // co-scheduled prefill chunk at its dataflow-simulated cost. Kept as
+        // two terms so the attribution layer can bill each phase separately.
+        let decode_s = self.stage.decode_stage_seconds(decode_users.max(1), kv_len);
+        let prefill_s = self.stage.prefill.chunk_stage_seconds(prefill_tokens, prefill_ctx);
+        self.clock += decode_s + prefill_s;
+        if self.obs.is_some() {
+            self.bill_attrib(decode_users, kv_len, prefill_tokens, prefill_ctx, decode_s, prefill_s);
+        }
         let t1 = self.clock;
         let ev = self.sched.execute_wave(w);
         self.total_tokens += ev.tokens_produced;
@@ -626,6 +670,7 @@ impl<'a> ServeEngine<'a> {
                     obs.counters.inc("first_tokens");
                     obs.trace.instant(tid, "first_token", "lifecycle", t1, Vec::new());
                 }
+                obs.attrib.slot(rec).first_s.get_or_insert(t1);
                 // Prefill finished (possibly a re-prefill after preemption):
                 // the lifecycle transitions into its decode span.
                 if obs.trace.open_name(tid) == Some("prefill") {
@@ -636,7 +681,21 @@ impl<'a> ServeEngine<'a> {
         }
         for &rec in &ev.completions {
             self.records[rec].completion_s = Some(self.clock);
-            if let Some(obs) = self.obs.as_deref_mut() {
+            if self.obs.is_some() {
+                // Solo-decode baseline at the final context: what this
+                // request's decode would have cost batched alone (shares the
+                // stage-time memo; obs-gated).
+                let r = self.records[rec];
+                let solo = if r.output_tokens > 1 {
+                    let ctx = r.prompt_tokens as f64 + r.output_tokens as f64;
+                    (r.output_tokens - 1) as f64 * self.stage.decode_stage_seconds(1, ctx)
+                } else {
+                    0.0
+                };
+                let obs = self.obs.as_deref_mut().expect("checked above");
+                let slot = obs.attrib.slot(rec);
+                slot.completion_s = Some(t1);
+                slot.solo_decode_s = solo;
                 obs.counters.inc("completed");
                 obs.trace.end(rec as u64 + 1, t1, &[("outcome", "completed")]);
             }
@@ -660,6 +719,7 @@ impl<'a> ServeEngine<'a> {
             if obs.series.ready(t1) {
                 let (hit, miss) = (self.sched.prefix_hit_tokens, self.sched.prefix_miss_tokens);
                 let total = hit + miss;
+                let (util_frac, hbm_bw_frac) = obs.attrib.sample_gauges(t1);
                 obs.series.record(SeriesRow {
                     t_s: t1,
                     pid: obs.trace.pid(),
@@ -669,6 +729,10 @@ impl<'a> ServeEngine<'a> {
                     kv_col_frac: self.sched.columns.iter().map(|c| c.occupancy_frac()).collect(),
                     prefix_hit_rate: if total == 0 { 0.0 } else { hit as f64 / total as f64 },
                     link_busy_frac: 0.0,
+                    util_frac,
+                    hbm_bw_frac,
+                    instances_up: 0,
+                    requeue_depth: 0,
                 });
             }
         }
@@ -880,6 +944,22 @@ pub fn simulate_observed(
     let sink = engine.take_obs().expect("sink was attached above");
     let (outcome, records) = engine.finish(pattern_label, offered_rps);
     (outcome, records, sink)
+}
+
+/// Assemble the run-level attribution export for a standalone serve run:
+/// the single engine's recorder plus one waterfall per request that got a
+/// first token (entry and completer slots both live on the one engine; no
+/// KV link, no requeues).
+pub fn assemble_serve_attrib(records: &[RequestRecord], obs: &EngineObs) -> AttribExport {
+    let mut x = AttribExport { offered: records.len(), ..AttribExport::default() };
+    x.push_engine(0, &obs.attrib);
+    for (i, r) in records.iter().enumerate() {
+        if let Some(f) = r.first_token_s {
+            let slot = obs.attrib.slots.get(i);
+            x.waterfalls.push(assemble_waterfall(r.id, r.arrival_s, f, r.completion_s, 0.0, 0, slot, slot));
+        }
+    }
+    x
 }
 
 /// Sweep offered load for one traffic pattern. A single master trace at the

@@ -2,15 +2,26 @@
 //! the handoff-follows-prefill causality anchor on disaggregated fleets,
 //! span/counter conservation against the end-of-run aggregates, the exact
 //! link busy-fraction integral reconstructed from handoff spans, fixed-seed
-//! byte-identical exports (the acceptance criterion), and the guarantee
-//! that attaching a sink never changes a simulation result.
+//! byte-identical exports (the acceptance criterion), the guarantee that
+//! attaching a sink never changes a simulation result, and the performance
+//! -attribution layer's conservation anchors: latency-waterfall segments
+//! sum to the measured TTFT/decode span, per-kernel attributed time sums to
+//! engine busy time, attrib exports replay byte-identically at any shard
+//! count, and the report's dataflow anchor stays pinned to the Fig. 9
+//! operating point.
 
-use flatattention::cluster::{simulate_cluster, simulate_cluster_observed, ClusterConfig};
+use flatattention::arch::config::{ChipConfig, Dtype, SimFidelity};
+use flatattention::cluster::{
+    simulate_cluster, simulate_cluster_observed, simulate_cluster_profiled, ClusterConfig, FaultPlan,
+};
+use flatattention::dataflow::{simulate_attention, AttentionDataflow, FlatParams, FlatTiling};
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
-use flatattention::obs::{ObsBundle, ObsConfig, Span, TraceRecorder};
+use flatattention::obs::report::{dataflow_anchor, render_attrib_report};
+use flatattention::obs::{AttribExport, ObsBundle, ObsConfig, Span, TraceRecorder, Waterfall};
 use flatattention::serve::request::{generate_trace, PrefixProfile, TraceConfig, TrafficPattern};
-use flatattention::serve::sim::{simulate, simulate_observed, ServeConfig, StageTimeCache};
+use flatattention::serve::sim::{assemble_serve_attrib, simulate, simulate_observed, ServeConfig, StageTimeCache};
+use flatattention::workload::attention::AttentionShape;
 use flatattention::workload::deepseek::DeepSeekConfig;
 
 const EPS: f64 = 1e-9;
@@ -385,6 +396,207 @@ fn attaching_a_sink_never_changes_the_simulation() {
     assert!(bundle.is_some());
     assert_eq!(plain, observed, "the sink changed the cluster outcome");
     assert_eq!(plain_recs, observed_recs);
+}
+
+/// The waterfall conservation anchor: the additive identities hold to 1e-9
+/// on every delivered request, serve and cluster alike. Signs of the two
+/// residual segments (`requeue_stall_s`, `interference_s`) are NOT pinned —
+/// a request requeued after its first token can legitimately carry a
+/// negative stall against its second-life slot.
+fn assert_waterfalls_conserve(wfs: &[Waterfall]) {
+    assert!(!wfs.is_empty(), "need waterfalls to make the test meaningful");
+    for w in wfs {
+        let ttft = w.queue_wait_s + w.prefill_s + w.link_wait_s + w.requeue_stall_s;
+        assert!(
+            (w.ttft_s - ttft).abs() < EPS,
+            "ttft segments do not sum for req {}: {ttft} vs {}",
+            w.id,
+            w.ttft_s
+        );
+        let span = w.decode_solo_s + w.interference_s;
+        assert!((w.decode_span_s - span).abs() < EPS, "decode segments do not sum for req {}", w.id);
+        assert!(w.ttft_s >= -EPS, "first token before arrival for req {}", w.id);
+        if !w.completed {
+            assert!(w.decode_span_s.abs() < EPS, "an unfinished request has no decode span");
+        }
+    }
+}
+
+#[test]
+fn serve_attribution_conserves_waterfalls_and_kernel_time() {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+    let t = trace(500.0, 3.0, 21);
+    let cfg = ServeConfig::default();
+    let (o, records, obs) = simulate_observed(
+        &sys,
+        &ds,
+        &t,
+        &cfg,
+        3.0,
+        "poisson",
+        500.0,
+        &kernels,
+        &stages,
+        ObsConfig::default(),
+    );
+    assert!(o.completed > 0, "need completions to make the test meaningful");
+    let x = assemble_serve_attrib(&records, &obs);
+    // Per-kernel attributed time sums to engine busy time: every settled
+    // stage bills its full measured seconds (residual → the other class).
+    let busy = x.busy_s();
+    assert!(busy > 0.0, "a loaded run must accumulate busy time");
+    assert!(
+        (x.kernels.total_s() - busy).abs() <= EPS * busy.max(1.0),
+        "kernel time {} must sum to engine busy time {busy}",
+        x.kernels.total_s()
+    );
+    // One waterfall per delivered request; identities to 1e-9.
+    let delivered = records.iter().filter(|r| r.first_token_s.is_some()).count();
+    assert_eq!(x.waterfalls.len(), delivered);
+    assert_eq!(x.offered, records.len());
+    assert_waterfalls_conserve(&x.waterfalls);
+    // A single-engine serve run never sees the fleet-only segments.
+    for w in &x.waterfalls {
+        assert!(w.link_wait_s.abs() < EPS && w.requeues == 0);
+    }
+}
+
+#[test]
+fn cluster_attribution_conserves_and_replays_byte_identically_at_any_shard_count() {
+    // The fleet-level acceptance anchors in one run: a faulted
+    // disaggregated fleet whose waterfalls conserve, whose per-engine
+    // kernel time sums to per-engine busy time, and whose attribution
+    // export replays byte-identically at every shard count (the DES
+    // self-profile is the only wall-clock piece, and it never leaks in).
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let (horizon, rate) = (3.0, 400.0);
+    let t = generate_trace(
+        &TraceConfig::new(31, TrafficPattern::Poisson, rate, horizon).with_prefixes(PrefixProfile::agentic()),
+    );
+    let mut base = ClusterConfig::disaggregated(1, 2, &ds);
+    base.transfer = flatattention::cluster::KvTransferModel::d2d_class(&ds, base.serve.dtype);
+    // Kill decode instance 1 (gid 2) mid-run; restart shortly after.
+    let plan = FaultPlan::none().kill(2, horizon * 0.5).with_restart(0.25);
+    let run = |shards: u32| {
+        let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+        let cfg = ClusterConfig { shards, ..base };
+        let (o, records, bundle, profile) = simulate_cluster_profiled(
+            &sys,
+            &ds,
+            &t,
+            &cfg,
+            &plan,
+            horizon,
+            rate,
+            &kernels,
+            &stages,
+            Some(ObsConfig::default()),
+        );
+        assert!(o.conserves_requests(), "conservation violated at {shards} shard(s)");
+        (o, records, bundle.expect("a sink was requested"), profile)
+    };
+    let (o, records, bundle, profile) = run(1);
+    let x = &bundle.attrib;
+    assert!(o.completed > 0 && o.requeued > 0, "the kill must strand work: {o:?}");
+    assert_waterfalls_conserve(&x.waterfalls);
+    assert!(x.waterfalls.iter().any(|w| w.requeues > 0), "a requeued request must surface in a waterfall");
+    assert!(x.waterfalls.iter().any(|w| w.link_wait_s > 0.0), "disaggregated handoffs must surface link wait");
+    assert_eq!(x.offered, t.len());
+    // Per-engine conservation, and therefore the run-level aggregate too.
+    assert!(x.busy_s() > 0.0);
+    for e in &x.engines {
+        assert!(
+            (e.kernels.total_s() - e.busy_s).abs() <= EPS * e.busy_s.max(1.0),
+            "engine {} kernel time diverged from its busy time",
+            e.pid
+        );
+    }
+    assert!((x.kernels.total_s() - x.busy_s()).abs() <= EPS * x.busy_s().max(1.0));
+    // The DES self-profile is wall-clock (report-note-only), but its shape
+    // is pinned: one lane per worker, a nonzero epoch count.
+    assert!(profile.epochs > 0 && profile.workers >= 1);
+    assert_eq!(profile.worker_busy_s.len(), profile.workers);
+    assert_eq!(profile.barrier_stall_s.len(), profile.workers);
+    let json1 = x.to_json();
+    assert!(json1.contains("\"schema\":\"flatattention-attrib-v1\""));
+    for shards in [2u32, 4] {
+        let (mut o_s, records_s, bundle_s, _) = run(shards);
+        o_s.shards = 1;
+        assert_eq!(o_s, o, "outcome diverged at {shards} shard(s)");
+        assert_eq!(records_s, records, "per-request records diverged at {shards} shard(s)");
+        assert_eq!(bundle_s.attrib.to_json(), json1, "attrib export diverged at {shards} shard(s)");
+    }
+}
+
+#[test]
+fn attrib_exports_replay_byte_identically_and_flow_into_obs_exports() {
+    // Same-seed serve runs render byte-identical attribution artifacts,
+    // and the attribution rides the ObsExports bundle like every other
+    // export format.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let run = || {
+        let (kernels, stages) = (KernelCache::new(), StageTimeCache::new());
+        let t = trace(500.0, 2.5, 77);
+        let cfg = ServeConfig::default();
+        let (_, records, obs) = simulate_observed(
+            &sys,
+            &ds,
+            &t,
+            &cfg,
+            2.5,
+            "poisson",
+            500.0,
+            &kernels,
+            &stages,
+            ObsConfig::default(),
+        );
+        let mut b = ObsBundle::new();
+        b.attrib = assemble_serve_attrib(&records, &obs);
+        b.push_engine(*obs);
+        b.exports()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.attrib_json, b.attrib_json, "serve attrib must replay byte-identically");
+    assert!(a.attrib_json.contains("\"schema\":\"flatattention-attrib-v1\""));
+    assert!(a.attrib_json.contains("\"waterfalls\":[{"), "a loaded run must export waterfalls");
+    assert!(a.attrib_json.contains("\"kernels\":[{"), "a loaded run must export kernel rows");
+    // A bundle with no attribution still renders a valid (empty) artifact.
+    let empty = ObsBundle::new().exports();
+    assert!(empty.attrib_json.contains("flatattention-attrib-v1"));
+    assert!(AttribExport::default().is_empty());
+}
+
+#[test]
+fn report_anchor_agrees_with_the_fig9_operating_point_within_1pct() {
+    // The profiler's printed dataflow anchor must be the Table-II operating
+    // point the golden Fig. 9 test pins — computed here independently from
+    // first principles, agreement within 1%.
+    let cfg = ChipConfig::table1();
+    let shape = AttentionShape::mha_prefill(4, 32, 128, 4096, Dtype::Fp16);
+    let tiling = FlatTiling { gx: 32, gy: 32, slice_r: 128, slice_c: 128 };
+    let golden =
+        simulate_attention(&cfg, &shape, AttentionDataflow::Flat(FlatParams::flat_async(tiling)), SimFidelity::Full);
+    assert!(golden.matrix_efficiency_active > 0.80, "the Fig. 9 op point regressed");
+    let anchor = dataflow_anchor();
+    let rel = (anchor.matrix_efficiency_active - golden.matrix_efficiency_active).abs()
+        / golden.matrix_efficiency_active;
+    assert!(
+        rel < 0.01,
+        "report anchor {} diverged from the Fig. 9 op point {}",
+        anchor.matrix_efficiency_active,
+        golden.matrix_efficiency_active
+    );
+    // And the rendered profile carries exactly that number.
+    let text = render_attrib_report("anchor", &AttribExport::default(), None);
+    assert!(text.contains("dataflow anchor"));
+    assert!(
+        text.contains(&flatattention::metrics::fmt_pct(golden.matrix_efficiency_active)),
+        "the report must print the anchor efficiency"
+    );
 }
 
 #[test]
