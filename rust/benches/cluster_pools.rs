@@ -1,14 +1,16 @@
 //! Bench harness for the fleet layer: the full prefill:decode pool-ratio
 //! sweep (4 configurations × load points on a 4-instance fleet), the
 //! multi-model co-serving comparison (interleaved shared pools vs the
-//! static bound), the static-vs-live routing comparison, and the
-//! shard-count scaling sweep of the conservative-lookahead engine (a fixed
-//! large colocated fleet at 1/2/4/8 shards, reporting
-//! simulated-seconds-per-wall-second). (criterion is unavailable in the
-//! offline build; this is a plain `harness = false` driver with std
-//! timing.)
+//! static bound), the static-vs-live routing comparison, the shard-count
+//! scaling sweep of the conservative-lookahead engine (a fixed large
+//! colocated fleet at 1/2/4/8 shards, reporting
+//! simulated-seconds-per-wall-second), and the KV-fabric topology sweep
+//! (degenerate vs torus vs fat-tree at 16/64 instances, tracking
+//! per-topology p99 TTFT and mean link wait in the `BENCH_*.json`
+//! trajectory). (criterion is unavailable in the offline build; this is a
+//! plain `harness = false` driver with std timing.)
 
-use flatattention::cluster::{simulate_cluster, ClusterConfig};
+use flatattention::cluster::{simulate_cluster, ClusterConfig, RoutingPolicy, TopologySpec};
 use flatattention::multichip::d2d::WaferSystem;
 use flatattention::multichip::parallelism::KernelCache;
 use flatattention::obs::report::{bench_json, bench_json_path, BenchRow};
@@ -30,6 +32,7 @@ fn main() {
         rows.push(BenchRow { label: id.into(), shards: 1, sim_s: 0.0, wall_s: wall.as_secs_f64(), speedup: 1.0 });
     }
     rows.extend(shard_sweep(fast));
+    rows.extend(topology_sweep(fast));
     if let Some(path) = bench_json_path("cluster_pools") {
         let config = format!("fast={fast}");
         std::fs::write(&path, bench_json("cluster_pools", &config, &rows)).expect("write bench json");
@@ -88,6 +91,58 @@ fn shard_sweep(fast: bool) -> Vec<BenchRow> {
             wall_s: wall,
             speedup: serial_wall / wall,
         });
+    }
+    rows
+}
+
+/// KV-fabric topology trajectory: the same disaggregated handoff traffic
+/// routed over the pooled degenerate switch, a 2D torus, and a two-level
+/// fat-tree, at 16 and 64 instances with hop-aware decode placement. The
+/// networking numbers the `BENCH_*.json` artifact starts tracking are
+/// carried in the row label (`flatattention-bench-v1` has no free-form
+/// metric fields): per-topology p99 TTFT (ms) and mean per-migration link
+/// wait (ms).
+fn topology_sweep(fast: bool) -> Vec<BenchRow> {
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let fleets: &[u32] = if fast { &[4] } else { &[16, 64] };
+    let (rate_per_instance, horizon) = if fast { (100.0, 2.0) } else { (150.0, 6.0) };
+    let kernels = KernelCache::new();
+    let stages = StageTimeCache::new();
+    let mut rows = Vec::new();
+    for &instances in fleets {
+        let rate = rate_per_instance * instances as f64;
+        let trace = generate_trace(
+            &TraceConfig::new(2026, TrafficPattern::Poisson, rate, horizon).with_prefixes(PrefixProfile::agentic()),
+        );
+        for topo in [TopologySpec::Degenerate, TopologySpec::Torus, TopologySpec::FatTree] {
+            let mut cfg = ClusterConfig::disaggregated(instances / 2, instances - instances / 2, &ds);
+            cfg.topology = topo;
+            cfg.decode_routing = RoutingPolicy::TopoAware;
+            let t0 = std::time::Instant::now();
+            let (o, _) = simulate_cluster(&sys, &ds, &trace, &cfg, horizon, rate, &kernels, &stages);
+            let wall = t0.elapsed().as_secs_f64();
+            let wait_ms = o.link_wait_s * 1e3 / o.migrated.max(1) as f64;
+            println!(
+                "[bench topology_sweep] {} instances={instances}: p99 TTFT {:.0} ms, link wait {wait_ms:.2} \
+                 ms/migration, {} hops over {} edges, wall {wall:.3} s",
+                topo.label(),
+                o.ttft_ms.p99,
+                o.fabric_hops,
+                o.edge_busy_s.len()
+            );
+            rows.push(BenchRow {
+                label: format!(
+                    "topology_sweep topo={} instances={instances} ttft_p99_ms={:.1} link_wait_ms={wait_ms:.3}",
+                    topo.label(),
+                    o.ttft_ms.p99
+                ),
+                shards: 1,
+                sim_s: horizon,
+                wall_s: wall,
+                speedup: 1.0,
+            });
+        }
     }
     rows
 }

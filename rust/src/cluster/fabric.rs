@@ -1,0 +1,582 @@
+//! Inter-instance KV fabric: explicit topology with per-edge contention.
+//!
+//! The fleet's KV handoffs used to serialize on ONE pooled [`SharedLink`]
+//! with `parallel_flows` undifferentiated channels — every migration cost
+//! the same regardless of where prefill and decode instances sit. This
+//! module replaces that pool with an explicit inter-instance topology,
+//! one level up from the on-chip NoC: the same hop discipline as
+//! `arch/noc.rs` ([`TileCoord`] coordinates, dimension-ordered moves) and
+//! the same per-link latency discipline as `arch/collective.rs`, applied
+//! to whole wafer instances instead of tiles.
+//!
+//! # Topologies
+//!
+//! - [`TopologySpec::Degenerate`] — the 1-switch fabric: every instance
+//!   hangs off one pooled link, exactly today's [`SharedLink`] with
+//!   `parallel_flows` channels. This is the field-identical anchor: a
+//!   degenerate fabric IS a `SharedLink`, bit for bit (pinned by test).
+//! - [`TopologySpec::Torus`] — a 2D torus wafer mesh over the most-square
+//!   factorization of the instance count (16 → 4×4, 64 → 8×8; a prime
+//!   count degrades to a 1×n ring). Handoffs take dimension-ordered
+//!   routes (X first, then Y), each dimension stepping in its shortest
+//!   wraparound direction (ties go positive).
+//! - [`TopologySpec::FatTree`] — a two-level fat-tree (leaf/spine Clos):
+//!   `ceil(sqrt(n))` instances per leaf switch, one spine per leaf.
+//!   Same-leaf handoffs go up/down through the leaf (2 hops); others
+//!   climb to a deterministically hashed spine (`(src + dst) % spines`,
+//!   a static ECMP stand-in) and back down (4 hops).
+//!
+//! # Contention model
+//!
+//! Every directed edge owns a 1-channel [`SharedLink`] ledger — the SAME
+//! scheduling and busy-interval code path as the pooled fabric, so
+//! `busy_fraction`'s exact time-in-window integral carries over per edge.
+//! A transfer serializes `bytes` on every edge of its route (the cut
+//! enters edge `i` one per-hop base latency after edge `i-1`), and its
+//! exposed latency is
+//!
+//! ```text
+//! exposed = hops × base_latency + max per-edge queue wait + (1 − overlap) × ser
+//! ```
+//!
+//! — hot edges (e.g. the prefill-pool boundary) genuinely congest, and a
+//! route's cost is decided by its worst edge, not a fleet-wide average.
+//!
+//! # Lookahead
+//!
+//! The sharded conservative-lookahead engine needs a lower bound on how
+//! fast the fabric can deliver anything. That bound is the minimum
+//! single-edge traversal latency over the fabric ([`Fabric::lookahead_s`]):
+//! every edge charges the full per-hop base latency, so no handoff can
+//! land sooner than `base_latency_s` after it became ready — numerically
+//! the same epoch length the pooled link derived, which is exactly why
+//! the degenerate anchor holds across barriers too.
+
+use std::collections::HashMap;
+
+use super::transfer::{KvTransferModel, SharedLink};
+use crate::arch::noc::TileCoord;
+
+/// Which inter-instance topology the fleet's KV fabric instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// One pooled switch — the historical `SharedLink` fabric.
+    Degenerate,
+    /// 2D torus wafer mesh, dimension-ordered (X then Y) routing.
+    Torus,
+    /// Two-level fat-tree (leaf/spine), up/down routing.
+    FatTree,
+}
+
+impl TopologySpec {
+    pub fn label(self) -> &'static str {
+        match self {
+            TopologySpec::Degenerate => "degenerate",
+            TopologySpec::Torus => "torus",
+            TopologySpec::FatTree => "fat-tree",
+        }
+    }
+
+    /// Parse a CLI topology name (case-insensitive).
+    pub fn parse(s: &str) -> Option<TopologySpec> {
+        match s.to_ascii_lowercase().as_str() {
+            "degenerate" | "pooled" | "shared-link" => Some(TopologySpec::Degenerate),
+            "torus" | "mesh" | "2d-torus" => Some(TopologySpec::Torus),
+            "fattree" | "fat-tree" | "tree" | "clos" => Some(TopologySpec::FatTree),
+            _ => None,
+        }
+    }
+}
+
+/// One scheduled fabric transfer: what the fleet bills and what the obs
+/// layer annotates on the handoff span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricXfer {
+    /// Exposed latency from ready to landing (base × hops + worst edge
+    /// wait + unhidden serialization).
+    pub exposed_s: f64,
+    /// Edges traversed (1 for the degenerate switch, 0 for a same-node
+    /// transfer on a routed topology).
+    pub hops: u64,
+    /// Worst per-edge queue wait along the route (the pooled link's
+    /// channel wait in the degenerate case).
+    pub wait_s: f64,
+    /// Node ids along the route, `src` to `dst`; ids `>= instances` are
+    /// fat-tree switches. Rendered into the handoff span's `path` arg.
+    pub nodes: Vec<usize>,
+}
+
+impl FabricXfer {
+    /// `src>via>dst` — the handoff span's `path` argument.
+    pub fn path_label(&self) -> String {
+        self.nodes.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(">")
+    }
+}
+
+/// The fleet's inter-instance KV fabric: topology + per-edge ledgers.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    spec: TopologySpec,
+    /// Wafer instances (fabric endpoints); switches come after.
+    n: usize,
+    /// Degenerate only: the pooled multi-channel link.
+    pooled: Option<SharedLink>,
+    /// Routed topologies: one 1-channel ledger per directed edge.
+    edges: Vec<SharedLink>,
+    /// Directed edge endpoints, indexed like `edges`.
+    edge_ends: Vec<(usize, usize)>,
+    /// (u, v) → edge index.
+    edge_index: HashMap<(usize, usize), usize>,
+    /// Torus geometry (cols × rows == n).
+    cols: usize,
+    rows: usize,
+    /// Fat-tree geometry.
+    radix: usize,
+    leaves: usize,
+    spines: usize,
+    /// Routed transfers scheduled (degenerate delegates to the pool).
+    transfers: u64,
+    /// Accumulated worst-edge waits of routed transfers.
+    wait_s: f64,
+}
+
+impl Fabric {
+    /// Build the fabric for `instances` endpoints. The degenerate switch
+    /// takes its channel count from `model.parallel_flows` — field-
+    /// identical to the pooled `SharedLink` the fleet used to hold.
+    pub fn new(spec: TopologySpec, instances: usize, model: &KvTransferModel) -> Fabric {
+        assert!(instances >= 1, "a fabric needs at least one endpoint");
+        let mut f = Fabric {
+            spec,
+            n: instances,
+            pooled: None,
+            edges: Vec::new(),
+            edge_ends: Vec::new(),
+            edge_index: HashMap::new(),
+            cols: 1,
+            rows: 1,
+            radix: 1,
+            leaves: 1,
+            spines: 0,
+            transfers: 0,
+            wait_s: 0.0,
+        };
+        match spec {
+            TopologySpec::Degenerate => f.pooled = Some(SharedLink::new(model.parallel_flows)),
+            TopologySpec::Torus => f.build_torus(),
+            TopologySpec::FatTree => f.build_fat_tree(),
+        }
+        f
+    }
+
+    /// Most-square factorization of `n`: the widest `cols <= sqrt(n)`
+    /// dividing it evenly (primes degrade to a 1×n ring).
+    fn build_torus(&mut self) {
+        let n = self.n;
+        let mut cols = (n as f64).sqrt().floor() as usize;
+        while cols > 1 && n % cols != 0 {
+            cols -= 1;
+        }
+        self.cols = cols.max(1);
+        self.rows = n / self.cols;
+        for u in 0..n {
+            let c = self.coord(u);
+            if self.cols > 1 {
+                let v = self.node_at((c.x as usize + 1) % self.cols, c.y as usize);
+                self.add_edge_pair(u, v);
+            }
+            if self.rows > 1 {
+                let v = self.node_at(c.x as usize, (c.y as usize + 1) % self.rows);
+                self.add_edge_pair(u, v);
+            }
+        }
+    }
+
+    /// Two-level leaf/spine Clos: `ceil(sqrt(n))` ports per leaf, one
+    /// spine per leaf, every leaf wired to every spine.
+    fn build_fat_tree(&mut self) {
+        let n = self.n;
+        self.radix = (n as f64).sqrt().ceil() as usize;
+        self.radix = self.radix.max(1);
+        self.leaves = n.div_ceil(self.radix);
+        self.spines = if self.leaves > 1 { self.leaves } else { 0 };
+        for u in 0..n {
+            let leaf = self.leaf_id(u);
+            self.add_edge_pair(u, leaf);
+        }
+        for l in 0..self.leaves {
+            for s in 0..self.spines {
+                self.add_edge_pair(self.n + l, self.spine_id(s));
+            }
+        }
+    }
+
+    fn add_edge_pair(&mut self, u: usize, v: usize) {
+        if u == v {
+            return;
+        }
+        for (a, b) in [(u, v), (v, u)] {
+            if let std::collections::hash_map::Entry::Vacant(e) = self.edge_index.entry((a, b)) {
+                e.insert(self.edge_ends.len());
+                self.edge_ends.push((a, b));
+                self.edges.push(SharedLink::new(1));
+            }
+        }
+    }
+
+    /// Torus coordinate of instance `i` (the `arch/noc.rs` tile
+    /// abstraction, one level up: wafer instances as tiles of the fleet).
+    fn coord(&self, i: usize) -> TileCoord {
+        TileCoord { x: (i % self.cols) as u32, y: (i / self.cols) as u32 }
+    }
+
+    fn node_at(&self, x: usize, y: usize) -> usize {
+        y * self.cols + x
+    }
+
+    /// Fat-tree: node id of instance `u`'s leaf switch.
+    fn leaf_id(&self, u: usize) -> usize {
+        self.n + u / self.radix
+    }
+
+    fn spine_id(&self, s: usize) -> usize {
+        self.n + self.leaves + s
+    }
+
+    pub fn spec(&self) -> TopologySpec {
+        self.spec
+    }
+
+    /// Directed edges in the fabric (0 for the degenerate switch, which
+    /// exposes its pool as ONE logical edge in the telemetry accessors).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The degenerate pooled link, for the field-identity anchor.
+    pub fn pooled(&self) -> Option<&SharedLink> {
+        self.pooled.as_ref()
+    }
+
+    /// Shortest wraparound step distance along one torus dimension.
+    fn ring_dist(from: usize, to: usize, len: usize) -> u64 {
+        let fwd = (to + len - from) % len;
+        fwd.min(len - fwd) as u64
+    }
+
+    /// Hop count of the route `src → dst` (read-only; the topo-aware
+    /// router's distance signal). The degenerate switch is always one hop.
+    pub fn hops(&self, src: usize, dst: usize) -> u64 {
+        match self.spec {
+            TopologySpec::Degenerate => 1,
+            _ if src == dst => 0,
+            TopologySpec::Torus => {
+                let (a, b) = (self.coord(src), self.coord(dst));
+                Self::ring_dist(a.x as usize, b.x as usize, self.cols)
+                    + Self::ring_dist(a.y as usize, b.y as usize, self.rows)
+            }
+            TopologySpec::FatTree => {
+                if self.leaf_id(src) == self.leaf_id(dst) {
+                    2
+                } else {
+                    4
+                }
+            }
+        }
+    }
+
+    /// Node ids along the route `src → dst` (inclusive). Degenerate routes
+    /// are the logical `[src, dst]` through the one switch.
+    pub fn route_nodes(&self, src: usize, dst: usize) -> Vec<usize> {
+        match self.spec {
+            TopologySpec::Degenerate => vec![src, dst],
+            _ if src == dst => vec![src],
+            TopologySpec::Torus => {
+                let mut nodes = vec![src];
+                let dst_c = self.coord(dst);
+                let mut x = src % self.cols;
+                let mut y = src / self.cols;
+                // X first, shortest wraparound direction (ties positive).
+                while x != dst_c.x as usize {
+                    let fwd = (dst_c.x as usize + self.cols - x) % self.cols;
+                    x = if fwd <= self.cols - fwd { (x + 1) % self.cols } else { (x + self.cols - 1) % self.cols };
+                    nodes.push(self.node_at(x, y));
+                }
+                while y != dst_c.y as usize {
+                    let fwd = (dst_c.y as usize + self.rows - y) % self.rows;
+                    y = if fwd <= self.rows - fwd { (y + 1) % self.rows } else { (y + self.rows - 1) % self.rows };
+                    nodes.push(self.node_at(x, y));
+                }
+                nodes
+            }
+            TopologySpec::FatTree => {
+                let (ls, ld) = (self.leaf_id(src), self.leaf_id(dst));
+                if ls == ld {
+                    vec![src, ls, dst]
+                } else {
+                    let spine = self.spine_id((src + dst) % self.spines.max(1));
+                    vec![src, ls, spine, ld, dst]
+                }
+            }
+        }
+    }
+
+    /// Schedule `bytes` from instance `src` to instance `dst`, ready at
+    /// `ready_s`: serialize on every edge of the route (each edge's own
+    /// 1-channel ledger queues it behind earlier traffic) and return the
+    /// exposed latency, hop count, worst-edge wait and route. The
+    /// degenerate switch delegates verbatim to the pooled
+    /// [`SharedLink::schedule_bytes`] — same channels, same ledger, same
+    /// return value as the pre-fabric fleet.
+    pub fn schedule_bytes(
+        &mut self,
+        src: usize,
+        dst: usize,
+        ready_s: f64,
+        bytes: u64,
+        model: &KvTransferModel,
+    ) -> FabricXfer {
+        if let Some(pooled) = self.pooled.as_mut() {
+            let wait_before = pooled.wait_s;
+            let exposed_s = pooled.schedule_bytes(ready_s, bytes, model);
+            return FabricXfer {
+                exposed_s,
+                hops: 1,
+                wait_s: pooled.wait_s - wait_before,
+                nodes: vec![src, dst],
+            };
+        }
+        let nodes = self.route_nodes(src, dst);
+        let hops = (nodes.len() - 1) as u64;
+        let ser = bytes as f64 / model.link_bandwidth_bytes_per_s.max(1.0);
+        let unhidden = (1.0 - model.overlap_fraction.clamp(0.0, 1.0)) * ser;
+        if hops == 0 {
+            // Same-node transfer (no edges): base latency + unhidden copy.
+            self.transfers += 1;
+            return FabricXfer { exposed_s: model.base_latency_s + unhidden, hops, wait_s: 0.0, nodes };
+        }
+        // Per-hop scheduling: the cut reaches edge `i` one base latency
+        // after edge `i-1`; each edge's 1-channel ledger queues the full
+        // serialization behind earlier traffic (schedule_bytes is the ONE
+        // ledger writer — per-edge `busy_fraction` shares the pooled
+        // link's exact time-in-window integral). The zero-base hop model
+        // makes the per-edge return value `wait + unhidden`, so the worst
+        // edge wait falls out by subtraction.
+        let hop_model = KvTransferModel { base_latency_s: 0.0, ..*model };
+        let mut max_wait = 0.0f64;
+        for (i, pair) in nodes.windows(2).enumerate() {
+            let e = self.edge_index[&(pair[0], pair[1])];
+            let hop_ready = ready_s + i as f64 * model.base_latency_s;
+            let wait = self.edges[e].schedule_bytes(hop_ready, bytes, &hop_model) - unhidden;
+            max_wait = max_wait.max(wait);
+        }
+        self.transfers += 1;
+        self.wait_s += max_wait;
+        FabricXfer {
+            exposed_s: hops as f64 * model.base_latency_s + max_wait + unhidden,
+            hops,
+            wait_s: max_wait,
+            nodes,
+        }
+    }
+
+    /// The sharded engine's epoch length: minimum single-edge traversal
+    /// latency over the fabric. Every edge charges the full per-hop base
+    /// latency, so no handoff lands sooner than `base_latency_s` after
+    /// becoming ready — for every topology, the pooled link's old bound.
+    pub fn lookahead_s(&self, model: &KvTransferModel) -> f64 {
+        model.lookahead_s()
+    }
+
+    /// Transfers scheduled over the fabric.
+    pub fn transfers(&self) -> u64 {
+        self.pooled.as_ref().map_or(self.transfers, |p| p.transfers)
+    }
+
+    /// Total queue wait billed to transfers: each routed transfer's worst
+    /// edge wait (its exposed queueing), or the pooled channel waits.
+    pub fn wait_s(&self) -> f64 {
+        self.pooled.as_ref().map_or(self.wait_s, |p| p.wait_s)
+    }
+
+    /// Fabric-wide busy share over `[0, horizon_s]`: the pooled link's
+    /// `busy_fraction`, or the mean of the per-edge fractions.
+    pub fn busy_fraction(&self, horizon_s: f64) -> f64 {
+        if let Some(p) = self.pooled.as_ref() {
+            return p.busy_fraction(horizon_s);
+        }
+        if self.edges.is_empty() {
+            return 0.0;
+        }
+        self.edges.iter().map(|e| e.busy_fraction(horizon_s)).sum::<f64>() / self.edges.len() as f64
+    }
+
+    /// Per-edge busy share over `[0, horizon_s]` (the series gauge). The
+    /// degenerate switch reports its pool as one logical edge.
+    pub fn edge_busy_fractions(&self, horizon_s: f64) -> Vec<f64> {
+        match self.pooled.as_ref() {
+            Some(p) => vec![p.busy_fraction(horizon_s)],
+            None => self.edges.iter().map(|e| e.busy_fraction(horizon_s)).collect(),
+        }
+    }
+
+    /// Per-edge serialization seconds (the conservation ledger: every
+    /// transfer deposits `bytes / bandwidth` on each edge of its route).
+    pub fn edge_busy_s(&self) -> Vec<f64> {
+        match self.pooled.as_ref() {
+            Some(p) => vec![p.busy_s],
+            None => self.edges.iter().map(|e| e.busy_s).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::Dtype;
+    use crate::workload::deepseek::DeepSeekConfig;
+
+    fn model() -> KvTransferModel {
+        KvTransferModel::inter_node(&DeepSeekConfig::v3_671b(), Dtype::Fp8)
+    }
+
+    #[test]
+    fn topology_labels_roundtrip() {
+        for spec in [TopologySpec::Degenerate, TopologySpec::Torus, TopologySpec::FatTree] {
+            assert_eq!(TopologySpec::parse(spec.label()), Some(spec));
+        }
+        assert_eq!(TopologySpec::parse("TORUS"), Some(TopologySpec::Torus));
+        assert_eq!(TopologySpec::parse("clos"), Some(TopologySpec::FatTree));
+        assert_eq!(TopologySpec::parse("hypercube"), None);
+    }
+
+    /// THE degenerate anchor: a degenerate fabric is a `SharedLink` with
+    /// the model's channel count — same returns, field-identical ledger.
+    #[test]
+    fn degenerate_is_field_identical_to_shared_link() {
+        let m = model();
+        let mut fabric = Fabric::new(TopologySpec::Degenerate, 4, &m);
+        let mut reference = SharedLink::new(m.parallel_flows);
+        for (i, &(ready, tokens)) in
+            [(0.0, 4096u64), (0.001, 8192), (0.001, 1024), (0.0015, 16384), (0.2, 2048)].iter().enumerate()
+        {
+            let bytes = m.bytes_for(tokens);
+            let xfer = fabric.schedule_bytes(i % 2, (i + 1) % 4, ready, bytes, &m);
+            let want = reference.schedule_bytes(ready, bytes, &m);
+            assert_eq!(xfer.exposed_s, want, "transfer {i} diverged");
+            assert_eq!(xfer.hops, 1);
+        }
+        assert_eq!(fabric.pooled(), Some(&reference), "pooled ledger must be field-identical");
+        assert_eq!(fabric.transfers(), reference.transfers);
+        assert_eq!(fabric.wait_s(), reference.wait_s);
+        assert_eq!(fabric.busy_fraction(1.0), reference.busy_fraction(1.0));
+        assert_eq!(fabric.edge_busy_s(), vec![reference.busy_s]);
+    }
+
+    #[test]
+    fn torus_uses_most_square_grid_and_wraparound_hops() {
+        let m = model();
+        let f = Fabric::new(TopologySpec::Torus, 16, &m);
+        assert_eq!((f.cols, f.rows), (4, 4));
+        // 4×4 torus: 2 dims × 2 directions per node.
+        assert_eq!(f.edge_count(), 64);
+        assert_eq!(f.hops(0, 5), 2); // (0,0) → (1,1)
+        assert_eq!(f.hops(0, 3), 1); // wraparound beats 3 forward steps
+        assert_eq!(f.hops(0, 12), 1); // Y wraparound
+        assert_eq!(f.hops(0, 10), 4); // (0,0) → (2,2): the diameter
+        assert_eq!(f.hops(7, 7), 0);
+        // Dimension order: X moves come before Y moves.
+        assert_eq!(f.route_nodes(0, 5), vec![0, 1, 5]);
+        assert_eq!(f.route_nodes(0, 3), vec![0, 3]);
+        // A prime count degrades to a ring.
+        let ring = Fabric::new(TopologySpec::Torus, 7, &m);
+        assert_eq!((ring.cols, ring.rows), (1, 7));
+        assert_eq!(ring.hops(0, 6), 1);
+        assert_eq!(ring.hops(0, 3), 3);
+    }
+
+    #[test]
+    fn fat_tree_routes_up_and_down() {
+        let m = model();
+        let f = Fabric::new(TopologySpec::FatTree, 16, &m);
+        assert_eq!((f.radix, f.leaves, f.spines), (4, 4, 4));
+        assert_eq!(f.hops(0, 3), 2); // same leaf
+        assert_eq!(f.hops(0, 15), 4); // via a spine
+        let route = f.route_nodes(0, 15);
+        assert_eq!(route.len(), 5);
+        assert_eq!(route[1], 16); // leaf 0
+        assert!(route[2] >= 20, "second hop must be a spine");
+        assert_eq!(route[3], 19); // leaf 3
+        // Single-leaf fleets need no spine layer at all.
+        let tiny = Fabric::new(TopologySpec::FatTree, 2, &m);
+        assert_eq!(tiny.spines, 0);
+        assert_eq!(tiny.hops(0, 1), 2);
+    }
+
+    #[test]
+    fn routed_transfer_pays_hops_and_worst_edge_wait() {
+        let mut m = model();
+        m.overlap_fraction = 0.0;
+        let mut f = Fabric::new(TopologySpec::Torus, 16, &m);
+        let bytes = 16_000_000_000u64; // 1 s of serialization at 16 GB/s
+        let ser = bytes as f64 / m.link_bandwidth_bytes_per_s;
+        let first = f.schedule_bytes(0, 2, 0.0, bytes, &m);
+        assert_eq!(first.hops, 2);
+        assert!((first.exposed_s - (2.0 * m.base_latency_s + ser)).abs() < 1e-9, "{first:?}");
+        assert_eq!(first.wait_s, 0.0);
+        // Same route, same ready time: queues a full serialization behind
+        // the first transfer on the shared first edge.
+        let second = f.schedule_bytes(0, 2, 0.0, bytes, &m);
+        assert!((second.wait_s - ser).abs() < 1e-6, "{second:?}");
+        assert!(second.exposed_s > first.exposed_s);
+        // A disjoint route sees no wait at all.
+        let disjoint = f.schedule_bytes(10, 9, 0.0, bytes, &m);
+        assert_eq!(disjoint.wait_s, 0.0);
+    }
+
+    /// Conservation: every transfer deposits `hops × ser` seconds of edge
+    /// occupancy — billed bytes × hops equals the summed per-edge ledger.
+    #[test]
+    fn edge_occupancy_conserves_bytes_times_hops() {
+        let m = model();
+        for spec in [TopologySpec::Torus, TopologySpec::FatTree] {
+            let mut f = Fabric::new(spec, 12, &m);
+            let mut hop_bytes = 0u64;
+            for i in 0..40usize {
+                let (src, dst) = (i % 12, (i * 7 + 3) % 12);
+                let bytes = m.bytes_for(512 + 64 * i as u64);
+                let xfer = f.schedule_bytes(src, dst, i as f64 * 1e-4, bytes, &m);
+                assert_eq!(xfer.hops, f.hops(src, dst), "hops must match the route");
+                hop_bytes += bytes * xfer.hops;
+            }
+            let ledger: f64 = f.edge_busy_s().iter().sum();
+            let want = hop_bytes as f64 / m.link_bandwidth_bytes_per_s;
+            assert!((ledger - want).abs() <= 1e-9 * want.max(1.0), "{spec:?}: {ledger} vs {want}");
+        }
+    }
+
+    #[test]
+    fn lookahead_is_the_single_edge_traversal_bound() {
+        let m = model();
+        for spec in [TopologySpec::Degenerate, TopologySpec::Torus, TopologySpec::FatTree] {
+            let f = Fabric::new(spec, 16, &m);
+            assert_eq!(f.lookahead_s(&m), m.base_latency_s);
+        }
+    }
+
+    #[test]
+    fn per_edge_busy_fractions_use_the_exact_integral() {
+        let mut m = model();
+        m.overlap_fraction = 0.0;
+        let mut f = Fabric::new(TopologySpec::Torus, 16, &m);
+        let bytes = 8_000_000_000u64; // 0.5 s at 16 GB/s
+        f.schedule_bytes(0, 1, 0.0, bytes, &m);
+        let fracs = f.edge_busy_fractions(1.0);
+        assert_eq!(fracs.len(), f.edge_count());
+        let busy: Vec<f64> = fracs.iter().copied().filter(|&b| b > 0.0).collect();
+        assert_eq!(busy.len(), 1, "exactly the routed edge is busy");
+        assert!((busy[0] - 0.5).abs() < 1e-9);
+        // The fabric-wide share is the per-edge mean.
+        assert!((f.busy_fraction(1.0) - 0.5 / f.edge_count() as f64).abs() < 1e-12);
+    }
+}

@@ -8,7 +8,7 @@
 //! the shared `StageTimeCache`/`KernelCache`, so all latencies stay
 //! grounded in the FlatAttention dataflow simulations. The cluster layer
 //! adds exactly the parts one instance cannot see (routing, disaggregated
-//! pools, KV handoff over a contended [`SharedLink`]), and advances the
+//! pools, KV handoff over a contended [`Fabric`]), and advances the
 //! whole fleet with a classic conservative parallel-DES scheme:
 //!
 //! # Epochs and the lookahead window
@@ -75,7 +75,7 @@
 //! their queued / in-flight / un-arrived work back. Extracted work
 //! re-enters the ENTRY router as fresh arrivals no earlier than the
 //! barrier (re-prefill from scratch; the resident latent KV died with the
-//! HBM, and a re-migration ships it over the [`SharedLink`] again) —
+//! HBM, and a re-migration ships it over the [`Fabric`] again) —
 //! exactly like a handoff, a requeue can never inject into the *running*
 //! epoch, so the conservative-lookahead bound survives kills. An optional
 //! restart unmasks the instance after a cold-start delay; a killed
@@ -100,8 +100,9 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::cluster::fabric::{Fabric, TopologySpec};
 use crate::cluster::router::{LiveLoad, Router, RoutingPolicy};
-use crate::cluster::transfer::{KvTransferModel, SharedLink};
+use crate::cluster::transfer::KvTransferModel;
 use crate::metrics::Percentiles;
 use crate::multichip::d2d::WaferSystem;
 use crate::multichip::parallelism::KernelCache;
@@ -157,6 +158,11 @@ pub struct ClusterConfig {
     /// Handoff routing into the decode pool (disaggregated only).
     pub decode_routing: RoutingPolicy,
     pub transfer: KvTransferModel,
+    /// Inter-instance fabric the KV handoffs (and restart weight reloads /
+    /// requeue re-ships) are routed over. [`TopologySpec::Degenerate`] is
+    /// the classic pooled [`SharedLink`](crate::cluster::transfer::SharedLink)
+    /// — field-identical to the pre-fabric fleet.
+    pub topology: TopologySpec,
     /// Fluid drain rate of the router's outstanding-work proxy.
     pub drain_rate: f64,
     /// Shards the fleet's engines are partitioned into (`gid % shards`).
@@ -178,6 +184,7 @@ impl ClusterConfig {
             routing: RoutingPolicy::PrefixAffinity,
             decode_routing: RoutingPolicy::LeastOutstanding,
             transfer: KvTransferModel::inter_node(ds, serve.dtype),
+            topology: TopologySpec::Degenerate,
             drain_rate: Router::DEFAULT_DRAIN_RATE,
             shards: 1,
         }
@@ -320,6 +327,11 @@ pub struct ClusterRecord {
     /// Exposed handoff delay in seconds, link-queue wait included
     /// (0 when not migrated); accumulates across re-migrations.
     pub transfer_s: f64,
+    /// Σ bytes × fabric hops over this request's migrations — the total
+    /// per-edge occupancy it billed. On the degenerate 1-switch topology
+    /// this equals `transfer_bytes`; the conservation test divides by link
+    /// bandwidth and matches the fleet's per-edge busy ledgers.
+    pub transfer_hop_bytes: u64,
     /// Times this request was extracted from a killed instance and
     /// re-routed as a fresh arrival (0 in any fault-free run).
     pub requeues: u32,
@@ -420,6 +432,12 @@ pub struct ClusterOutcome {
     /// Summed link-queue wait across migrations — the congestion cost the
     /// old overlap-for-free model never billed.
     pub link_wait_s: f64,
+    /// Fabric hops traversed by all migrations (equals `migrated` on the
+    /// degenerate topology, where every handoff is one switch traversal).
+    pub fabric_hops: u64,
+    /// Per-edge busy seconds of the fabric ledgers, in edge-construction
+    /// order (one entry — the pooled link — on the degenerate topology).
+    pub edge_busy_s: Vec<f64>,
     /// Fault events applied within the horizon (kills + drains; restarts
     /// are not counted).
     pub faults: usize,
@@ -455,12 +473,14 @@ impl ClusterOutcome {
     }
 }
 
-/// Router/link/fault telemetry carried into [`ClusterOutcome`].
-#[derive(Debug, Clone, Copy, Default)]
+/// Router/fabric/fault telemetry carried into [`ClusterOutcome`].
+#[derive(Debug, Clone, Default)]
 struct FleetTelemetry {
     router_spills: u64,
     link_busy_frac: f64,
     link_wait_s: f64,
+    fabric_hops: u64,
+    edge_busy_s: Vec<f64>,
     faults: usize,
     requeued: usize,
     lost: usize,
@@ -674,7 +694,9 @@ struct EpochDriver<'a> {
     dec_pos: Vec<Vec<usize>>,
     router: Router,
     drouter: Router,
-    link: SharedLink,
+    fabric: Fabric,
+    /// Fabric hops traversed by every billed transfer so far.
+    fabric_hops: u64,
     fleet_obs: Option<EngineObs>,
     handoffs: BinaryHeap<Reverse<HandoffEv>>,
     next_arrival: usize,
@@ -809,7 +831,8 @@ impl EpochDriver<'_> {
                         kv_frac: 0.0,
                         kv_col_frac: Vec::new(),
                         prefix_hit_rate: 0.0,
-                        link_busy_frac: self.link.busy_fraction(self.horizon_s),
+                        link_busy_frac: self.fabric.busy_fraction(self.horizon_s),
+                        edge_busy_frac: self.fabric.edge_busy_fractions(self.horizon_s),
                         util_frac: 0.0,
                         hbm_bw_frac: 0.0,
                         instances_up: (self.n_entry + self.dec_loads.len()).saturating_sub(self.down),
@@ -897,6 +920,11 @@ impl EpochDriver<'_> {
         }
     }
 
+    /// Engines in the fleet (entry pool + decode pool).
+    fn n_engines(&self) -> usize {
+        self.n_entry + self.dec_loads.len()
+    }
+
     /// Mask (or unmask) instance `gid` on whichever router owns it.
     fn set_up_gid(&mut self, gid: usize, up: bool) {
         if gid < self.n_entry {
@@ -935,8 +963,23 @@ impl EpochDriver<'_> {
             let rejoin = if kill {
                 // Cold start: the replacement reloads this instance's
                 // weights over the same contended fabric the KV handoffs
-                // use — concurrent migrations queue behind it.
-                barrier_s + delay + self.link.schedule_bytes(barrier_s, self.restart_weight_bytes, &self.cfg.transfer)
+                // use — concurrent migrations queue behind the reload's
+                // per-edge occupancy. The weight source is deterministic:
+                // instance 0 serves as the fleet's checkpoint host (its
+                // own reload streams from instance 1 when one exists).
+                let src = if ev.instance == 0 && self.n_engines() > 1 { 1 } else { 0 };
+                let xfer = self.fabric.schedule_bytes(
+                    src,
+                    ev.instance,
+                    barrier_s,
+                    self.restart_weight_bytes,
+                    &self.cfg.transfer,
+                );
+                self.fabric_hops += xfer.hops;
+                if let Some(f) = self.fleet_obs.as_mut() {
+                    f.counters.add("fabric_hops", xfer.hops);
+                }
+                barrier_s + delay + xfer.exposed_s
             } else {
                 barrier_s + delay
             };
@@ -1080,39 +1123,59 @@ impl EpochDriver<'_> {
         self.next_arrival += 1;
     }
 
-    /// A handoff became ready: serialize it on the shared link (queueing
-    /// behind concurrent migrations), route the decode destination against
-    /// the epoch-start decode-pool snapshot, and deliver the pre-filled
-    /// request at the landing time. The migrated context is the prompt KV
-    /// (token #1's cache entry is produced decode-side).
+    /// A handoff became ready: route the decode destination against the
+    /// epoch-start decode-pool snapshot (hop-distance signal from the
+    /// fabric under topo-aware placement), serialize the latent KV over
+    /// the route's edges (queueing behind concurrent migrations on every
+    /// hop), and deliver the pre-filled request at the landing time. The
+    /// migrated context is the prompt KV (token #1's cache entry is
+    /// produced decode-side).
     fn process_handoff(&mut self, injections: &mut [Vec<(usize, Request)>]) {
         let Reverse(h) = self.handoffs.pop().expect("peeked handoff vanished");
         let orig = self.trace[h.pos];
         let ctx = orig.prompt_tokens as u64;
-        let wait_before = self.link.wait_s;
-        let exposed = self.link.schedule(h.ready_s, ctx, &self.cfg.transfer);
+        let src = self.records[h.pos].prefill_instance as usize;
         let loads = self.cfg.decode_routing.uses_live_state().then_some(if h.ready_s < self.prev_end {
             self.prev_dec_loads.as_slice()
         } else {
             self.dec_loads.as_slice()
         });
+        // Hop distances from THIS handoff's source to every decode
+        // instance — computed only when the policy reads them, so every
+        // other policy's decision sequence is untouched by the fabric.
+        let hop_costs: Option<Vec<u64>> = (self.cfg.decode_routing == RoutingPolicy::TopoAware).then(|| {
+            (0..self.dec_loads.len()).map(|i| self.fabric.hops(src, self.n_entry + i)).collect()
+        });
         let spills_before = self.drouter.spill_events();
-        let di = self.drouter.route_live(&orig, h.ready_s, orig.output_tokens as f64, loads);
+        let di = self.drouter.route_with_hops(
+            &orig,
+            h.ready_s,
+            orig.output_tokens as f64,
+            loads,
+            hop_costs.as_deref(),
+        );
         let bytes = self.cfg.transfer.bytes_for(ctx);
+        let xfer = self.fabric.schedule_bytes(src, self.n_entry + di, h.ready_s, bytes, &self.cfg.transfer);
+        let exposed = xfer.exposed_s;
+        self.fabric_hops += xfer.hops;
         self.records[h.pos].decode_instance = di as u32;
         // Accumulate, don't overwrite: a requeued request that re-migrates
-        // ships its latent KV over the link AGAIN, and the record reports
-        // the total it cost.
+        // ships its latent KV over the fabric AGAIN, and the record
+        // reports the total it cost.
         self.records[h.pos].transfer_bytes += bytes;
         self.records[h.pos].transfer_s += exposed;
+        self.records[h.pos].transfer_hop_bytes += bytes * xfer.hops;
         if let Some(f) = self.fleet_obs.as_mut() {
             f.counters.inc("handoffs");
+            f.counters.add("fabric_hops", xfer.hops);
             let spilled = self.drouter.spill_events() > spills_before;
             let mut args = vec![
                 ("req", orig.id.to_string()),
                 ("decode_instance", di.to_string()),
                 ("bytes", bytes.to_string()),
-                ("link_wait_s", format!("{:.6}", self.link.wait_s - wait_before)),
+                ("link_wait_s", format!("{:.6}", xfer.wait_s)),
+                ("hops", xfer.hops.to_string()),
+                ("path", xfer.path_label()),
             ];
             if spilled {
                 f.counters.inc("router_spills");
@@ -1131,7 +1194,8 @@ impl EpochDriver<'_> {
                     kv_frac: 0.0,
                     kv_col_frac: Vec::new(),
                     prefix_hit_rate: 0.0,
-                    link_busy_frac: self.link.busy_fraction(self.horizon_s),
+                    link_busy_frac: self.fabric.busy_fraction(self.horizon_s),
+                    edge_busy_frac: self.fabric.edge_busy_fractions(self.horizon_s),
                     util_frac: 0.0,
                     hbm_bw_frac: 0.0,
                     instances_up: (self.n_entry + self.dec_loads.len()).saturating_sub(self.down),
@@ -1289,6 +1353,7 @@ pub fn simulate_cluster_profiled(
             decode_instance: u32::MAX,
             transfer_bytes: 0,
             transfer_s: 0.0,
+            transfer_hop_bytes: 0,
             requeues: 0,
         })
         .collect();
@@ -1318,8 +1383,13 @@ pub fn simulate_cluster_profiled(
     // the process-wide worker budget (wall-clock only).
     let shards = cfg.shards.max(1) as usize;
     let workers = shards.min(crate::util::worker_threads()).min(n_engines).max(1);
+    let fabric = Fabric::new(cfg.topology, n_engines, &cfg.transfer);
+    // The conservative lookahead is the minimum single-edge traversal
+    // latency over the fabric: every edge charges the full per-hop base
+    // latency, so no cross-instance event lands sooner — numerically the
+    // link base latency for every topology (pooled included).
     let lookahead = {
-        let l = cfg.transfer.lookahead_s();
+        let l = fabric.lookahead_s(&cfg.transfer);
         if l > 0.0 {
             l
         } else {
@@ -1349,7 +1419,8 @@ pub fn simulate_cluster_profiled(
         dec_pos,
         router: Router::new(cfg.routing, keying, n_entry, cfg.drain_rate),
         drouter: Router::new(cfg.decode_routing, keying, n_decode.max(1), cfg.drain_rate),
-        link: SharedLink::new(cfg.transfer.parallel_flows),
+        fabric,
+        fabric_hops: 0,
         fleet_obs,
         handoffs: BinaryHeap::new(),
         next_arrival: 0,
@@ -1469,7 +1540,8 @@ pub fn simulate_cluster_profiled(
         dec_pos,
         router,
         drouter,
-        link,
+        fabric,
+        fabric_hops,
         mut fleet_obs,
         migrated,
         requeued,
@@ -1589,8 +1661,10 @@ pub fn simulate_cluster_profiled(
     }
     let telemetry = FleetTelemetry {
         router_spills: router.spill_events() + drouter.spill_events(),
-        link_busy_frac: link.busy_fraction(horizon_s),
-        link_wait_s: link.wait_s,
+        link_busy_frac: fabric.busy_fraction(horizon_s),
+        link_wait_s: fabric.wait_s(),
+        fabric_hops,
+        edge_busy_s: fabric.edge_busy_s(),
         faults: faults_applied,
         requeued,
         lost,
@@ -1771,6 +1845,7 @@ pub fn simulate_shared_pool(
                 decode_instance: u32::MAX,
                 transfer_bytes: 0,
                 transfer_s: 0.0,
+                transfer_hop_bytes: 0,
                 requeues: 0,
             })
             .collect();
@@ -1791,6 +1866,7 @@ pub fn simulate_shared_pool(
             routing,
             decode_routing: routing,
             transfer: KvTransferModel::inter_node(spec.ds, spec.serve.dtype),
+            topology: TopologySpec::Degenerate,
             drain_rate,
             shards: 1,
         };
@@ -1914,6 +1990,8 @@ fn aggregate(
         router_spills: telemetry.router_spills,
         link_busy_frac: telemetry.link_busy_frac,
         link_wait_s: telemetry.link_wait_s,
+        fabric_hops: telemetry.fabric_hops,
+        edge_busy_s: telemetry.edge_busy_s,
         faults: telemetry.faults,
         requeued: telemetry.requeued,
         lost: telemetry.lost,
@@ -2273,6 +2351,7 @@ mod tests {
             RoutingPolicy::LeastOutstanding,
             RoutingPolicy::LeastQueueDepth,
             RoutingPolicy::PrefixAffinity,
+            RoutingPolicy::TopoAware,
         ] {
             let ccfg = ClusterConfig { routing: policy, ..ClusterConfig::colocated(3, &ds) };
             let (o, _) = simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 120.0, &kernels, &stages);
@@ -2283,6 +2362,51 @@ mod tests {
             assert_eq!(total, t.len());
             // No instance may be starved by a balancing policy.
             assert!(routed.iter().all(|&r| r > total / 10), "{policy:?}: skewed {routed:?}");
+        }
+    }
+
+    #[test]
+    fn fabric_topologies_bill_hops_and_conserve() {
+        let sys = WaferSystem::paper();
+        let ds = DeepSeekConfig::v3_671b();
+        let t = trace(100.0, 3.0, 47);
+        let kernels = KernelCache::new();
+        let stages = StageTimeCache::new();
+        let run = |topology: TopologySpec| {
+            let ccfg = ClusterConfig { topology, ..ClusterConfig::disaggregated(2, 2, &ds) };
+            simulate_cluster(&sys, &ds, &t, &ccfg, 3.0, 100.0, &kernels, &stages)
+        };
+        let (deg, deg_recs) = run(TopologySpec::Degenerate);
+        assert!(deg.conserves_requests() && deg.migrated > 0);
+        // Degenerate: every migration is one switch traversal, so
+        // hop-bytes == bytes and fleet hops == migrations.
+        assert_eq!(deg.fabric_hops, deg.migrated as u64);
+        assert_eq!(deg.edge_busy_s.len(), 1);
+        for r in &deg_recs {
+            assert_eq!(r.transfer_hop_bytes, r.transfer_bytes);
+        }
+        for topology in [TopologySpec::Torus, TopologySpec::FatTree] {
+            let (o, recs) = run(topology);
+            assert!(o.conserves_requests(), "{topology:?}: {o:?}");
+            assert!(o.migrated > 0 && o.completed > 0, "{topology:?}");
+            // Routed topologies: prefill gids {0,1} never coincide with
+            // decode gids {2,3}, so every migration crosses ≥ 1 edge and
+            // hop-bytes are a whole multiple of bytes.
+            assert!(o.fabric_hops >= o.migrated as u64, "{topology:?}");
+            assert!(o.edge_busy_s.len() > 1, "{topology:?}");
+            for r in recs.iter().filter(|r| r.transfer_bytes > 0) {
+                assert!(r.transfer_hop_bytes >= r.transfer_bytes, "{topology:?}: {r:?}");
+                assert_eq!(r.transfer_hop_bytes % r.transfer_bytes, 0, "{topology:?}: {r:?}");
+            }
+            // Conservation: Σ per-request hop-bytes / bandwidth equals the
+            // fabric's summed per-edge serialization ledger (fault-free).
+            let hop_bytes: u64 = recs.iter().map(|r| r.transfer_hop_bytes).sum();
+            let expect = hop_bytes as f64 / ClusterConfig::colocated(1, &ds).transfer.link_bandwidth_bytes_per_s;
+            let ledger: f64 = o.edge_busy_s.iter().sum();
+            assert!(
+                (ledger - expect).abs() <= 1e-9 * expect.max(1.0),
+                "{topology:?}: ledger {ledger} vs hop-bytes {expect}"
+            );
         }
     }
 

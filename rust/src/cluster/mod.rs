@@ -35,15 +35,26 @@
 //!   static policies falls out of the epoch loop as a special case.
 //! - [`router`] — which instance a request (or a KV handoff) lands on:
 //!   round-robin, fluid least-outstanding-work, prefix-affinity keyed on
-//!   the per-instance `PrefixStore` fingerprints, or *live*
-//!   least-queue-depth reading each engine's snapshot at the decision time
-//!   (and feeding the prefix-affinity spill guard — decode-side feedback).
-//! - [`transfer`] — what a prefill→decode migration costs: the MLA
-//!   *latent*-KV layout bytes over an inter-instance link, partially
-//!   overlappable with the prefill tail (layer streaming), *contended*:
-//!   [`SharedLink`] serializes concurrent migrations on a finite-flow
-//!   fabric with busy-until accounting, so congestion queues instead of
-//!   overlapping for free.
+//!   the per-instance `PrefixStore` fingerprints, *live* least-queue-depth
+//!   reading each engine's snapshot at the decision time (and feeding the
+//!   prefix-affinity spill guard — decode-side feedback), or *topo-aware*:
+//!   live depth plus a hop penalty from the fabric, so prefill→decode
+//!   placement prefers close, lightly-loaded decode instances.
+//! - [`transfer`] + [`fabric`] — what a prefill→decode migration costs:
+//!   the MLA *latent*-KV layout bytes ([`transfer`]) routed over an
+//!   explicit inter-instance topology ([`fabric`]): a 2D-torus wafer mesh
+//!   (dimension-ordered X-then-Y routing, shortest wraparound), a
+//!   two-level fat-tree (up/down through a hashed spine), or the
+//!   degenerate 1-switch pool — today's [`SharedLink`], field-identical.
+//!   Every directed edge owns a 1-channel busy-until ledger, so a
+//!   handoff's exposed latency is `hops × base latency + max per-edge
+//!   queue wait + unhidden serialization` and hot edges (the prefill-pool
+//!   boundary) genuinely congest. The sharded engine's lookahead is the
+//!   minimum single-edge traversal latency over the fabric — numerically
+//!   the link base latency for every topology, so the epoch ladder (and
+//!   shard bit-identity) is unchanged. `flatattention report cluster`
+//!   surfaces per-edge hotspots via the fleet lane's `edge_busy_frac`
+//!   series column and the `fabric_hops` counter.
 //! - **shared multi-model pools** ([`fleet::simulate_shared_pool`]): both
 //!   co-resident models' engines interleave on one chip clock per
 //!   instance, so cross-model tick interference is simulated rather than
@@ -60,17 +71,21 @@
 //! Kills abort an instance and requeue its stranded work through the entry
 //! router as fresh arrivals (lost KV re-billed end to end); drains mask
 //! the instance and let residents finish; restarts rejoin after a delay,
-//! with a killed instance's weight reload billed over the shared link.
+//! with a killed instance's weight reload hop-routed over the fabric from
+//! a surviving peer (bytes land in the per-edge ledgers like any handoff).
 //!
-//! Entry points: `flatattention cluster` (CLI, `--kill`/`--drain`
-//! fault flags), experiment ids `cluster_pools`, `cluster_models`,
-//! `cluster_dynamic` and `cluster_failures`, `examples/cluster.rs`,
+//! Entry points: `flatattention cluster` (CLI, `--kill`/`--drain` fault
+//! flags, `--topology`/`--routing topo-aware` fabric flags), experiment
+//! ids `cluster_pools`, `cluster_models`, `cluster_dynamic`,
+//! `cluster_failures` and `cluster_topology`, `examples/cluster.rs`,
 //! `benches/cluster_pools.rs`.
 
+pub mod fabric;
 pub mod fleet;
 pub mod router;
 pub mod transfer;
 
+pub use fabric::{Fabric, FabricXfer, TopologySpec};
 pub use fleet::{
     co_resident_serve, simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed,
     simulate_cluster_profiled, simulate_shared_pool, tpot_crossover, ClusterConfig, ClusterOutcome,

@@ -57,6 +57,14 @@ pub enum RoutingPolicy {
     /// without re-homing the fingerprint — against live queue depths when
     /// available (decode-side feedback), else against the fluid proxy.
     PrefixAffinity,
+    /// Topology-aware live routing: rank instances by live depth *plus* a
+    /// fabric hop penalty ([`Router::HOP_PENALTY`] queue slots per hop
+    /// from the transfer source), so prefill→decode placement prefers
+    /// close, lightly-loaded instances — fewer edges crossed means less
+    /// fabric occupancy injected AND a shorter exposed handoff. Without a
+    /// hop signal ([`Router::route_live`], arrival-side use) it is exactly
+    /// live least-queue-depth; without live state, the fluid proxy.
+    TopoAware,
 }
 
 impl RoutingPolicy {
@@ -66,6 +74,7 @@ impl RoutingPolicy {
             RoutingPolicy::LeastOutstanding => "least-outstanding",
             RoutingPolicy::LeastQueueDepth => "least-queue-depth",
             RoutingPolicy::PrefixAffinity => "prefix-affinity",
+            RoutingPolicy::TopoAware => "topo-aware",
         }
     }
 
@@ -78,6 +87,7 @@ impl RoutingPolicy {
                 Some(RoutingPolicy::LeastQueueDepth)
             }
             "prefixaffinity" | "prefix-affinity" | "prefix" => Some(RoutingPolicy::PrefixAffinity),
+            "topoaware" | "topo-aware" | "topo" => Some(RoutingPolicy::TopoAware),
             _ => None,
         }
     }
@@ -88,7 +98,10 @@ impl RoutingPolicy {
     /// otherwise scan all columns of all instances per arrival for a
     /// value the router discards.
     pub fn uses_live_state(self) -> bool {
-        matches!(self, RoutingPolicy::LeastQueueDepth | RoutingPolicy::PrefixAffinity)
+        matches!(
+            self,
+            RoutingPolicy::LeastQueueDepth | RoutingPolicy::PrefixAffinity | RoutingPolicy::TopoAware
+        )
     }
 }
 
@@ -152,6 +165,13 @@ impl Router {
     /// hold at least this many more requests than twice the lightest before
     /// a family spills (keeps tiny imbalances from shredding affinity).
     pub const SPILL_DEPTH_SLACK: usize = 16;
+
+    /// Queue slots one fabric hop is worth to [`RoutingPolicy::TopoAware`]:
+    /// an instance one hop closer wins unless it is this many requests
+    /// deeper. One slot per hop biases placement toward the near side of
+    /// the fabric without overriding real congestion signals — the queue
+    /// term still dominates once imbalance exceeds the fleet diameter.
+    pub const HOP_PENALTY: f64 = 1.0;
 
     pub fn new(policy: RoutingPolicy, keying: PrefixKeying, n: usize, drain_rate: f64) -> Self {
         assert!(n >= 1, "a pool needs at least one instance");
@@ -276,6 +296,32 @@ impl Router {
         }
     }
 
+    /// Pick the up instance minimizing live depth + hop penalty (rotating
+    /// near-tie-break, mirroring [`Router::least_depth`] — which this IS
+    /// whenever no hop signal is supplied). Instances the live slice does
+    /// not cover are skipped; uncovered hop entries cost nothing.
+    fn topo_aware(&mut self, live: &[LiveLoad], hops: Option<&[u64]>) -> usize {
+        let Some(hops) = hops else { return self.least_depth(live) };
+        let n = self.outstanding.len();
+        let start = self.rr_next;
+        let mut best: Option<(f64, usize)> = None; // (cost, instance)
+        for k in 0..n {
+            let i = (start + k) % n;
+            let Some(d) = self.live_depth(live, i) else { continue };
+            let cost = d as f64 + Self::HOP_PENALTY * hops.get(i).copied().unwrap_or(0) as f64;
+            if best.map_or(true, |(bc, _)| cost + 1e-9 < bc) {
+                best = Some((cost, i));
+            }
+        }
+        match best {
+            Some((_, i)) => {
+                self.rr_next = (i + 1) % n;
+                i
+            }
+            None => self.least_outstanding(),
+        }
+    }
+
     /// True when routing to the family home would pile onto a visibly
     /// overloaded instance. With live state: the home holds more than twice
     /// the lightest up instance's requests plus a slack. Without: the fluid
@@ -317,6 +363,23 @@ impl Router {
         work_tokens: f64,
         live: Option<&[LiveLoad]>,
     ) -> usize {
+        self.route_with_hops(r, t, work_tokens, live, None)
+    }
+
+    /// [`Router::route_live`] with a fabric distance signal: `hops[i]` is
+    /// the hop count from the transfer's source instance to pool member
+    /// `i`, as [`crate::cluster::Fabric::hops`] reports it. Only
+    /// [`RoutingPolicy::TopoAware`] reads it; every other policy behaves
+    /// exactly as [`Router::route_live`] — which delegates here with no
+    /// signal, so the two entry points cannot drift.
+    pub fn route_with_hops(
+        &mut self,
+        r: &Request,
+        t: f64,
+        work_tokens: f64,
+        live: Option<&[LiveLoad]>,
+        hops: Option<&[u64]>,
+    ) -> usize {
         // Fluid drain since the previous decision.
         let dt = (t - self.last_t).max(0.0);
         self.last_t = self.last_t.max(t);
@@ -342,6 +405,10 @@ impl Router {
             RoutingPolicy::LeastOutstanding => self.least_outstanding(),
             RoutingPolicy::LeastQueueDepth => match live {
                 Some(l) => self.least_depth(l),
+                None => self.least_outstanding(),
+            },
+            RoutingPolicy::TopoAware => match live {
+                Some(l) => self.topo_aware(l, hops),
                 None => self.least_outstanding(),
             },
             RoutingPolicy::PrefixAffinity => {
@@ -603,16 +670,67 @@ mod tests {
             RoutingPolicy::LeastOutstanding,
             RoutingPolicy::LeastQueueDepth,
             RoutingPolicy::PrefixAffinity,
+            RoutingPolicy::TopoAware,
         ] {
             assert_eq!(RoutingPolicy::parse(p.label()), Some(p));
         }
         assert_eq!(RoutingPolicy::parse("RR"), Some(RoutingPolicy::RoundRobin));
         assert_eq!(RoutingPolicy::parse("lqd"), Some(RoutingPolicy::LeastQueueDepth));
+        assert_eq!(RoutingPolicy::parse("topo"), Some(RoutingPolicy::TopoAware));
         assert_eq!(RoutingPolicy::parse("nope"), None);
         // Only the live/feedback policies ask for engine snapshots.
         assert!(RoutingPolicy::LeastQueueDepth.uses_live_state());
         assert!(RoutingPolicy::PrefixAffinity.uses_live_state());
+        assert!(RoutingPolicy::TopoAware.uses_live_state());
         assert!(!RoutingPolicy::RoundRobin.uses_live_state());
         assert!(!RoutingPolicy::LeastOutstanding.uses_live_state());
+    }
+
+    #[test]
+    fn topo_aware_trades_hops_against_queue_depth() {
+        let mut r = Router::new(RoutingPolicy::TopoAware, PrefixKeying::TokenHash, 3, 1e9);
+        // Equal depths: the near instance wins outright.
+        let near = r.route_with_hops(&plain(0, 0.0), 0.0, 1.0, Some(&[load(2, 0); 3]), Some(&[4, 1, 4]));
+        assert_eq!(near, 1, "equal queues must break toward the fewest hops");
+        // A hop advantage is worth HOP_PENALTY queue slots — a far instance
+        // that is sufficiently emptier still wins.
+        let far = r.route_with_hops(
+            &plain(1, 0.0),
+            0.0,
+            1.0,
+            Some(&[load(0, 0), load(8, 0), load(8, 0)]),
+            Some(&[4, 1, 1]),
+        );
+        assert_eq!(far, 0, "deep queues must override distance");
+        // Without a hop signal the policy IS live least-queue-depth …
+        let no_hops = r.route_with_hops(
+            &plain(2, 0.0),
+            0.0,
+            1.0,
+            Some(&[load(9, 0), load(0, 0), load(9, 0)]),
+            None,
+        );
+        assert_eq!(no_hops, 1);
+        // … and without live state it degrades to the fluid proxy.
+        let pick = r.route(&plain(3, 0.0), 0.0, 1.0);
+        assert!(pick < 3);
+    }
+
+    #[test]
+    fn topo_aware_skips_masked_instances_and_rotates_ties() {
+        let mut r = Router::new(RoutingPolicy::TopoAware, PrefixKeying::TokenHash, 3, 1e9);
+        r.set_up(0, false);
+        // Instance 0 is closest AND emptiest but down: unroutable.
+        let pick = r.route_with_hops(&plain(0, 0.0), 0.0, 1.0, Some(&[load(0, 0); 3]), Some(&[0, 2, 2]));
+        assert_ne!(pick, 0);
+        r.set_up(0, true);
+        // Exact cost ties rotate across the tied instances.
+        let picks: Vec<usize> = (1..7)
+            .map(|i| r.route_with_hops(&plain(i, 0.0), 0.0, 0.0, Some(&[load(1, 1); 3]), Some(&[2, 2, 2])))
+            .collect();
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "cost ties must rotate: {picks:?}");
     }
 }

@@ -20,9 +20,15 @@
 //! [`SharedLink`] serializes transfers on it with busy-until accounting —
 //! a migration that finds every channel occupied queues behind the earliest
 //! one to free up, and the wait adds to its exposed handoff delay. The
-//! interleaved fleet schedules every handoff through one `SharedLink`, so
-//! link congestion shows up in TTFT exactly when migration traffic exceeds
-//! fabric capacity.
+//! fleet routes every handoff over [`crate::cluster::fabric::Fabric`]: the
+//! degenerate topology is exactly one pooled `SharedLink` (field-identical
+//! to the historical shared-fabric path), while routed topologies (torus,
+//! fat-tree) instantiate one 1-channel `SharedLink` per directed edge — so
+//! the busy-until ledger in [`SharedLink::schedule_bytes`] (the single
+//! writer; [`SharedLink::schedule`] routes through it) and the exact
+//! time-in-window integral in [`SharedLink::busy_fraction`] are reused
+//! verbatim per edge, and link congestion shows up in TTFT exactly when
+//! migration traffic exceeds the capacity of the edges it crosses.
 
 use crate::arch::config::Dtype;
 use crate::workload::deepseek::DeepSeekConfig;

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{FaultPlan, FleetMode, RoutingPolicy};
+use crate::cluster::{FaultPlan, FleetMode, RoutingPolicy, TopologySpec};
 use crate::serve::scheduler::QueuePolicy;
 
 /// Parsed `flatattention serve` options.
@@ -199,10 +199,15 @@ pub struct ClusterArgs {
     pub models: bool,
     /// Run the static-vs-live routing experiment instead of the pool sweep.
     pub dynamic: bool,
-    /// Arrival-routing policy for the custom fleet (`--routing`).
+    /// Arrival-routing policy for the custom fleet (`--routing`). The
+    /// `topo-aware` policy additionally steers decode placement by fabric
+    /// hop distance.
     pub routing: RoutingPolicy,
     /// KV-handoff link class for the custom fleet (`--link`).
     pub link: LinkClass,
+    /// Inter-instance fabric topology of the custom fleet (`--topology`,
+    /// default the degenerate pooled switch).
+    pub topology: TopologySpec,
     /// Prefill-pool size of a custom disaggregated fleet (`--prefill`).
     pub prefill: Option<u32>,
     /// Decode-pool size of a custom disaggregated fleet (`--decode`).
@@ -263,6 +268,7 @@ impl Default for ClusterArgs {
             dynamic: false,
             routing: RoutingPolicy::PrefixAffinity,
             link: LinkClass::InterNode,
+            topology: TopologySpec::Degenerate,
             prefill: None,
             decode: None,
             instances: None,
@@ -354,7 +360,16 @@ impl ClusterArgs {
                     let v = value(args, i, "--routing")?;
                     out.routing = match RoutingPolicy::parse(v) {
                         Some(p) => p,
-                        None => bail!("unknown routing policy '{v}' (expected round-robin|least-outstanding|least-queue-depth|prefix-affinity)"),
+                        None => bail!("unknown routing policy '{v}' (expected round-robin|least-outstanding|least-queue-depth|prefix-affinity|topo-aware)"),
+                    };
+                    out.custom = true;
+                    i += 1;
+                }
+                "--topology" => {
+                    let v = value(args, i, "--topology")?;
+                    out.topology = match TopologySpec::parse(v) {
+                        Some(t) => t,
+                        None => bail!("unknown fabric topology '{v}' (expected degenerate|torus|fat-tree)"),
                     };
                     out.custom = true;
                     i += 1;
@@ -492,7 +507,7 @@ impl ClusterArgs {
         }
         if (out.models || out.dynamic) && out.is_custom() {
             let which = if out.models { "--models" } else { "--dynamic" };
-            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--prefill/--decode/--instances/--rate/--horizon/--seed/--shards/--kill/--drain/--fault-restart/--random-kills");
+            bail!("{which} runs a fixed experiment; it cannot be combined with --routing/--link/--topology/--prefill/--decode/--instances/--rate/--horizon/--seed/--shards/--kill/--drain/--fault-restart/--random-kills");
         }
         if out.fault_restart_s.is_some() && out.kills.is_empty() && out.drains.is_empty() {
             bail!("--fault-restart needs at least one --kill or --drain to apply to");
@@ -716,11 +731,33 @@ mod tests {
         assert!(ClusterArgs::parse(&argv(&["--link", "carrier-pigeon"])).is_err());
         // Canned experiments reject custom link/routing flags …
         assert!(ClusterArgs::parse(&argv(&["--models", "--link", "d2d"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--models", "--topology", "torus"])).is_err());
         assert!(ClusterArgs::parse(&argv(&["--dynamic", "--routing", "lqd"])).is_err());
         assert!(ClusterArgs::parse(&argv(&["--models", "--dynamic"])).is_err());
         // … but --dynamic alone (with --fast) is a valid canned run.
         let d = ClusterArgs::parse(&argv(&["--dynamic", "--fast"])).unwrap();
         assert!(d.dynamic && d.fast && !d.is_custom());
+    }
+
+    #[test]
+    fn cluster_parses_topology_and_topo_aware_routing() {
+        let a = ClusterArgs::parse(&argv(&["--topology", "torus", "--routing", "topo-aware"])).unwrap();
+        assert_eq!(a.topology, TopologySpec::Torus);
+        assert_eq!(a.routing, RoutingPolicy::TopoAware);
+        assert!(a.is_custom(), "--topology must request a custom run");
+        for (alias, want) in [
+            ("degenerate", TopologySpec::Degenerate),
+            ("pooled", TopologySpec::Degenerate),
+            ("mesh", TopologySpec::Torus),
+            ("fat-tree", TopologySpec::FatTree),
+            ("fattree", TopologySpec::FatTree),
+        ] {
+            let p = ClusterArgs::parse(&argv(&["--topology", alias])).unwrap();
+            assert_eq!(p.topology, want, "{alias}");
+        }
+        assert_eq!(ClusterArgs::parse(&argv(&[])).unwrap().topology, TopologySpec::Degenerate);
+        assert!(ClusterArgs::parse(&argv(&["--topology", "hypercube"])).is_err());
+        assert!(ClusterArgs::parse(&argv(&["--topology"])).is_err(), "missing value");
     }
 
     #[test]

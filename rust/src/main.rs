@@ -11,7 +11,8 @@
 //!                     [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]
 //!                     [--trace-out F] [--series-out F] [--metrics-out F] [--threads N]
 //! flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]
-//!                       [--routing P] [--link inter-node|d2d]
+//!                       [--routing P] [--topology degenerate|torus|fat-tree]
+//!                       [--link inter-node|d2d]
 //!                       [--prefill N --decode N | --instances N]
 //!                       [--rate R] [--horizon S] [--seed N] [--shards N]
 //!                       [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]
@@ -29,10 +30,13 @@
 //!
 //! `cluster` drives the fleet layer above `serve` (experiment ids
 //! `cluster_pools` / `cluster_models` / `cluster_dynamic` /
-//! `cluster_failures`): multiple wafer instances interleaved on one event
-//! clock behind a cluster router (static or live least-queue-depth
-//! policies), colocated or disaggregated into prefill/decode pools with the
-//! MLA latent-KV handoff serialized over a contended inter-instance link.
+//! `cluster_failures` / `cluster_topology`): multiple wafer instances
+//! interleaved on one event clock behind a cluster router (static or live
+//! least-queue-depth policies), colocated or disaggregated into
+//! prefill/decode pools with the MLA latent-KV handoff routed hop-by-hop
+//! over an explicit inter-instance fabric (`--topology
+//! degenerate|torus|fat-tree`, per-edge busy-until contention ledgers;
+//! `--routing topo-aware` folds the hop count into decode placement).
 //! `--kill I@T` / `--drain I@T` schedule instance faults (global engine id
 //! `I`, seconds `T`, repeatable): a kill aborts at the next epoch barrier
 //! and requeues stranded work through the entry router, a drain masks the
@@ -123,7 +127,8 @@ fn run() -> Result<()> {
             println!("                      [--policy fcfs|sjf|priority] [--rate R] [--horizon S] [--seed N]");
             println!("                      [--trace-out F] [--series-out F] [--metrics-out F] [--attrib-out F] [--threads N]");
             println!("  flatattention cluster [--fast] [--models] [--dynamic] [--cache-dir DIR]");
-            println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity]");
+            println!("                        [--routing round-robin|least-outstanding|least-queue-depth|prefix-affinity|topo-aware]");
+            println!("                        [--topology degenerate|torus|fat-tree]");
             println!("                        [--link inter-node|d2d] [--prefill N --decode N | --instances N]");
             println!("                        [--rate R] [--horizon S] [--seed N] [--shards N]");
             println!("                        [--kill I@T]... [--drain I@T]... [--fault-restart S] [--random-kills N]");
@@ -274,6 +279,7 @@ fn run() -> Result<()> {
                 let (rep, exports) = experiments::cluster_custom_observed(
                     cargs.mode(),
                     cargs.routing,
+                    cargs.topology,
                     cargs.link == LinkClass::D2dClass,
                     rate,
                     horizon,
@@ -340,6 +346,7 @@ fn run() -> Result<()> {
                     let (text, json) = experiments::cluster_report(
                         cargs.mode(),
                         cargs.routing,
+                        cargs.topology,
                         cargs.link == LinkClass::D2dClass,
                         rate,
                         horizon,

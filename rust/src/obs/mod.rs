@@ -33,7 +33,9 @@
 //! Fleet lane: `route` instants (cat `router`; `instance`, `spill` when the
 //! affinity guard steered away, `requeued=1` when the routed request came
 //! off a killed instance) and `handoff` spans (cat `link`; transfer
-//! serialization + queue wait, `bytes`, `link_wait_s`, `decode_instance`).
+//! serialization + queue wait, `bytes`, `link_wait_s`, `decode_instance`,
+//! plus the fabric route: `hops` and `path` — the `src>via>dst` node
+//! chain the KV traversed).
 //! Fault injection adds a `fault` track on the fleet pid: one `fault`
 //! instant per applied event (`instance`, `kind` ∈ {`kill`, `drain`}) at
 //! its epoch barrier, and a `restart` instant (`instance`) when a faulted
@@ -49,12 +51,15 @@
 //! sampled at the first wave boundary past each grid point: `queue_depth`,
 //! `active_users` (batch occupancy), `kv_frac` (worst column),
 //! `kv_col_frac` (per EP column), `prefix_hit_rate`, `link_busy_frac`
-//! (fleet pid only), plus the attribution gauges `util_frac` (engine busy
-//! fraction of the elapsed interval), `hbm_bw_frac` (average
-//! HBM-bandwidth fraction over it) and the fault-visibility pair
-//! `instances_up` / `requeue_depth` (fleet pid only, sampled at every
-//! epoch barrier; zero on engine lanes). CSV (one row per sample,
-//! `kv_col_frac` semicolon-joined last) or JSON (full per-column arrays).
+//! (fleet pid only; the fabric-wide mean) and `edge_busy_frac` (fleet pid
+//! only; one fraction per fabric edge in construction order — per-edge
+//! hotspots like the prefill-pool boundary show up here), plus the
+//! attribution gauges `util_frac` (engine busy fraction of the elapsed
+//! interval), `hbm_bw_frac` (average HBM-bandwidth fraction over it) and
+//! the fault-visibility pair `instances_up` / `requeue_depth` (fleet pid
+//! only, sampled at every epoch barrier; zero on engine lanes). CSV (one
+//! row per sample, `edge_busy_frac` then `kv_col_frac` semicolon-joined
+//! last) or JSON (full per-edge / per-column arrays).
 //! The sampler is bounded by [`ObsConfig::series_cap`]; rows beyond it are
 //! dropped loudly (`dropped_points` in both exports and a
 //! `flatattention_series_points_dropped_total` counter).
@@ -90,8 +95,10 @@
 //! Monotonic event counts rendered in Prometheus text exposition format as
 //! `flatattention_<name>_total`: `arrivals`, `admitted`, `rejected`,
 //! `preempted`, `first_tokens`, `completed`, `waves`, `routed`,
-//! `router_spills`, `handoffs`, `migrated`, plus the shared simulation
-//! caches' `stage_cache_hits`/`misses` and `kernel_cache_hits`/`misses`.
+//! `router_spills`, `handoffs`, `migrated`, `fabric_hops` (edges
+//! traversed by KV handoffs and cold-start weight reloads), plus the
+//! shared simulation caches' `stage_cache_hits`/`misses` and
+//! `kernel_cache_hits`/`misses`.
 //! Fault injection adds `faults` (events applied), `instance_restarts`,
 //! `requests_requeued` (extracted from a killed instance and re-routed),
 //! `requests_lost` (extraction fell past the horizon) and `kv_lost_bytes`
@@ -247,6 +254,7 @@ mod tests {
                 kv_col_frac: vec![0.5, 0.25],
                 prefix_hit_rate: 0.0,
                 link_busy_frac: 0.0,
+                edge_busy_frac: Vec::new(),
                 util_frac: 0.75,
                 hbm_bw_frac: 0.25,
                 instances_up: 0,

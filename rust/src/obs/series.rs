@@ -33,8 +33,14 @@ pub struct SeriesRow {
     pub kv_col_frac: Vec<f64>,
     /// Cumulative prefix-cache hit rate (0 without shared prefixes).
     pub prefix_hit_rate: f64,
-    /// Shared KV-link busy fraction (fleet lane only; 0 elsewhere).
+    /// Fabric-wide KV busy fraction (fleet lane only; 0 elsewhere) — the
+    /// pooled link's share on the degenerate topology, the mean per-edge
+    /// share otherwise.
     pub link_busy_frac: f64,
+    /// Per-edge busy fractions of the KV fabric in edge-construction order
+    /// (fleet lane only; empty elsewhere and on fabric-less runs). The
+    /// degenerate 1-switch topology reports its pool as one logical edge.
+    pub edge_busy_frac: Vec<f64>,
     /// Engine busy fraction of the elapsed sampling interval (0 on the
     /// fleet lane and when attribution is not recording).
     pub util_frac: f64,
@@ -127,18 +133,20 @@ fn total_dropped(samplers: &[&SeriesSampler]) -> u64 {
     samplers.iter().map(|s| s.dropped()).sum()
 }
 
-/// CSV export: one row per sample; `kv_col_frac` is semicolon-joined last
-/// so the per-EP-column breakdown survives the flat format. A trailing
+/// CSV export: one row per sample; the vector gauges are semicolon-joined
+/// (`edge_busy_frac` — per fabric edge, and `kv_col_frac` last — per EP
+/// column) so the breakdowns survive the flat format. A trailing
 /// `# dropped_points N` comment line appears when any sampler hit its cap.
 pub fn export_series_csv(samplers: &[&SeriesSampler]) -> String {
     let mut out = String::from(
         "t_s,instance,queue_depth,active_users,kv_frac,prefix_hit_rate,link_busy_frac,\
-         util_frac,hbm_bw_frac,instances_up,requeue_depth,kv_col_frac\n",
+         util_frac,hbm_bw_frac,instances_up,requeue_depth,edge_busy_frac,kv_col_frac\n",
     );
     for r in merged(samplers) {
+        let edges: Vec<String> = r.edge_busy_frac.iter().map(|f| format!("{f:.6}")).collect();
         let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
         out.push_str(&format!(
-            "{:.6},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{}\n",
+            "{:.6},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{}\n",
             r.t_s,
             r.pid,
             r.queue_depth,
@@ -150,6 +158,7 @@ pub fn export_series_csv(samplers: &[&SeriesSampler]) -> String {
             r.hbm_bw_frac,
             r.instances_up,
             r.requeue_depth,
+            edges.join(";"),
             cols.join(";")
         ));
     }
@@ -167,11 +176,12 @@ pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
         if i > 0 {
             out.push(',');
         }
+        let edges: Vec<String> = r.edge_busy_frac.iter().map(|f| format!("{f:.6}")).collect();
         let cols: Vec<String> = r.kv_col_frac.iter().map(|f| format!("{f:.6}")).collect();
         out.push_str(&format!(
             "{{\"t_s\":{:.6},\"instance\":{},\"queue_depth\":{},\"active_users\":{},\"kv_frac\":{:.6},\
              \"prefix_hit_rate\":{:.6},\"link_busy_frac\":{:.6},\"util_frac\":{:.6},\"hbm_bw_frac\":{:.6},\
-             \"instances_up\":{},\"requeue_depth\":{},\"kv_col_frac\":[{}]}}",
+             \"instances_up\":{},\"requeue_depth\":{},\"edge_busy_frac\":[{}],\"kv_col_frac\":[{}]}}",
             r.t_s,
             r.pid,
             r.queue_depth,
@@ -183,6 +193,7 @@ pub fn export_series_json(samplers: &[&SeriesSampler]) -> String {
             r.hbm_bw_frac,
             r.instances_up,
             r.requeue_depth,
+            edges.join(","),
             cols.join(",")
         ));
     }
@@ -204,6 +215,7 @@ mod tests {
             kv_col_frac: vec![0.5, 0.25],
             prefix_hit_rate: 0.0,
             link_busy_frac: 0.0,
+            edge_busy_frac: Vec::new(),
             util_frac: 0.75,
             hbm_bw_frac: 0.5,
             instances_up: 0,
@@ -251,6 +263,23 @@ mod tests {
         // Determinism.
         assert_eq!(csv, export_series_csv(&[&a, &b]));
         assert_eq!(json, export_series_json(&[&a, &b]));
+    }
+
+    #[test]
+    fn edge_busy_column_round_trips_both_exports() {
+        let mut s = SeriesSampler::new(2, 0.1);
+        s.record(SeriesRow { edge_busy_frac: vec![0.125, 0.0, 1.0], ..row(0.0, 2, 1) });
+        let csv = export_series_csv(&[&s]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].contains(",requeue_depth,edge_busy_frac,kv_col_frac"), "{csv}");
+        assert!(lines[1].contains(",0.125000;0.000000;1.000000,"), "{csv}");
+        let json = export_series_json(&[&s]);
+        assert!(json.contains("\"edge_busy_frac\":[0.125000,0.000000,1.000000]"), "{json}");
+        // An engine-lane row without fabric data exports an empty column.
+        let mut e = SeriesSampler::new(0, 0.1);
+        e.record(row(0.0, 0, 1));
+        assert!(export_series_csv(&[&e]).lines().nth(1).unwrap().contains(",0,0,,"));
+        assert!(export_series_json(&[&e]).contains("\"edge_busy_frac\":[]"));
     }
 
     #[test]

@@ -729,6 +729,7 @@ impl<'a> ServeEngine<'a> {
                     kv_col_frac: self.sched.columns.iter().map(|c| c.occupancy_frac()).collect(),
                     prefix_hit_rate: if total == 0 { 0.0 } else { hit as f64 / total as f64 },
                     link_busy_frac: 0.0,
+                    edge_busy_frac: Vec::new(),
                     util_frac,
                     hbm_bw_frac,
                     instances_up: 0,

@@ -10,10 +10,17 @@
 //! and the fault-injection anchors: conservation under mid-run kills, the
 //! requeued-work-completes-on-a-survivor guarantee, and shard bit-identity
 //! with an active fault plan (outcome, records AND obs exports).
+//!
+//! Fabric anchors (the topology-aware KV fabric): the degenerate 1-switch
+//! topology projects the historical pooled `SharedLink` fleet exactly,
+//! hop-bytes/edge-ledger conservation holds under faults (restart weight
+//! reloads and requeue re-ships bill into the SAME per-edge ledgers), and
+//! shard bit-identity survives a contended torus with hop-aware decode
+//! placement and an active kill + restart plan.
 
 use flatattention::cluster::{
-    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, ClusterConfig, FaultPlan,
-    FleetMode, RoutingPolicy,
+    simulate_cluster, simulate_cluster_faulted_observed, simulate_cluster_observed, ClusterConfig, Fabric,
+    FaultPlan, FleetMode, RoutingPolicy, TopologySpec,
 };
 use flatattention::coordinator::experiments;
 use flatattention::multichip::d2d::WaferSystem;
@@ -447,4 +454,152 @@ fn fleet_scales_served_load() {
         one.fleet_tokens_per_s
     );
     assert!(two.completed >= one.completed);
+}
+
+#[test]
+fn degenerate_topology_preserves_the_pooled_link_fleet() {
+    // The degenerate 1-switch topology IS the historical pooled
+    // `SharedLink`: it must stay the `ClusterConfig` default, bill exactly
+    // one hop per migration into a single ledger entry, and that entry
+    // must integrate to exactly Σ transfer bytes / bandwidth — the pooled
+    // link's serialization total. (The switch-level field identity against
+    // a raw `SharedLink` replay is pinned in `cluster::fabric`'s unit
+    // tests; this is the fleet-level projection of the same anchor.)
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let t = generate_trace(
+        &TraceConfig::new(53, TrafficPattern::Poisson, 300.0, 3.0).with_prefixes(PrefixProfile::agentic()),
+    );
+    let base = ClusterConfig::disaggregated(2, 2, &ds);
+    assert_eq!(base.topology, TopologySpec::Degenerate, "the pooled switch must stay the default");
+    let (o, recs) =
+        simulate_cluster(&sys, &ds, &t, &base, 3.0, 300.0, &KernelCache::new(), &StageTimeCache::new());
+    assert!(o.conserves_requests() && o.migrated > 0, "{o:?}");
+    assert_eq!(o.fabric_hops, o.migrated as u64, "pooled switch: one traversal per migration");
+    assert_eq!(o.edge_busy_s.len(), 1, "pooled switch: one ledger, not per-edge entries");
+    for r in &recs {
+        assert_eq!(r.transfer_hop_bytes, r.transfer_bytes, "{r:?}");
+    }
+    let bytes: u64 = recs.iter().map(|r| r.transfer_bytes).sum();
+    let expect = bytes as f64 / base.transfer.link_bandwidth_bytes_per_s;
+    assert!(
+        (o.edge_busy_s[0] - expect).abs() <= 1e-9 * expect.max(1.0),
+        "pooled ledger {} s vs Σ bytes / bandwidth {expect} s",
+        o.edge_busy_s[0]
+    );
+}
+
+#[test]
+fn fabric_conservation_holds_under_faults_and_reloads() {
+    // Satellite anchor: restart cold-start weight reloads and requeue KV
+    // re-ships route over the SAME per-edge fabric ledgers as the regular
+    // handoffs — no phantom pooled link. On a contended torus with a
+    // decode kill + restart, the summed per-edge busy ledger must equal
+    // (Σ per-request hop-bytes + reload bytes × reload hops) / bandwidth
+    // exactly.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let mut ccfg = ClusterConfig::disaggregated(2, 2, &ds);
+    ccfg.topology = TopologySpec::Torus;
+    ccfg.decode_routing = RoutingPolicy::TopoAware;
+    let t = generate_trace(
+        &TraceConfig::new(29, TrafficPattern::Poisson, 200.0, 4.0).with_prefixes(PrefixProfile::agentic()),
+    );
+    // Gid 3 = decode instance 1; the kill's replacement cold-starts 0.3 s
+    // later, reloading the full EP×PP weight footprint over the fabric.
+    let plan = FaultPlan::none().kill(3, 1.5).with_restart(0.3);
+    let (o, recs, _) = simulate_cluster_faulted_observed(
+        &sys,
+        &ds,
+        &t,
+        &ccfg,
+        &plan,
+        4.0,
+        200.0,
+        &KernelCache::new(),
+        &StageTimeCache::new(),
+        None,
+    );
+    assert!(o.conserves_requests(), "{o:?}");
+    assert!(o.migrated > 0 && o.requeued > 0, "{o:?}");
+    assert!(o.link_wait_s > 0.0, "the torus boundary must queue handoffs: {o:?}");
+    assert!(o.edge_busy_s.len() > 1, "a torus must expose per-edge ledgers, not one pooled entry");
+    // A requeued victim that finished re-shipped its KV — both trips
+    // accumulate in its record (and therefore in the ledger equality).
+    assert!(
+        recs.iter().any(|r| r.requeues > 0 && r.completion_s.is_some() && r.transfer_s > 0.0),
+        "no requeued request re-migrated inside the horizon"
+    );
+    let bw = ccfg.transfer.link_bandwidth_bytes_per_s;
+    let hop_bytes: u64 = recs.iter().map(|r| r.transfer_hop_bytes).sum();
+    let ledger: f64 = o.edge_busy_s.iter().sum();
+    assert!(
+        ledger > hop_bytes as f64 / bw,
+        "the weight reload must leave per-edge occupancy beyond the handoffs: {ledger}"
+    );
+    // Reload route: instance 0 is the fleet's checkpoint host; gid 3 sits
+    // two dimension-ordered hops away on the 2×2 torus.
+    let kvm = flatattention::serve::kv::KvCacheModel::new(&sys, &ds, ccfg.serve.plan, ccfg.serve.dtype);
+    let reload_bytes = kvm.weight_bytes_per_chip * ccfg.serve.plan.ep as u64 * ccfg.serve.plan.pp as u64;
+    let reload_hops = Fabric::new(TopologySpec::Torus, 4, &ccfg.transfer).hops(0, 3);
+    assert_eq!(reload_hops, 2);
+    let expect = (hop_bytes as f64 + (reload_bytes * reload_hops) as f64) / bw;
+    assert!(
+        (ledger - expect).abs() <= 1e-9 * expect.max(1.0),
+        "per-edge ledger {ledger} s vs billed handoffs + reload {expect} s"
+    );
+}
+
+#[test]
+fn fabric_sharded_engine_is_bit_identical_on_contended_torus_with_faults() {
+    // Acceptance anchor: shard-{1,2,4} outcomes, records and all four obs
+    // exports stay byte-identical with the routed fabric active — per-edge
+    // queueing on a starved torus, hop-aware decode placement, a mid-run
+    // decode kill + restart (weight reload over the fabric) and requeue
+    // re-ships all in play at once.
+    let sys = WaferSystem::paper();
+    let ds = DeepSeekConfig::v3_671b();
+    let t = generate_trace(
+        &TraceConfig::new(31, TrafficPattern::Poisson, 400.0, 3.0).with_prefixes(PrefixProfile::agentic()),
+    );
+    let mut base = ClusterConfig::disaggregated(2, 2, &ds);
+    base.topology = TopologySpec::Torus;
+    base.decode_routing = RoutingPolicy::TopoAware;
+    base.transfer.parallel_flows = 1;
+    base.transfer.link_bandwidth_bytes_per_s = 4.0e9;
+    let plan = FaultPlan::none().kill(3, 1.5).with_restart(0.3);
+    let run = |shards: u32| {
+        let cfg = ClusterConfig { shards, ..base };
+        let (o, recs, bundle) = simulate_cluster_faulted_observed(
+            &sys,
+            &ds,
+            &t,
+            &cfg,
+            &plan,
+            3.0,
+            400.0,
+            &KernelCache::new(),
+            &StageTimeCache::new(),
+            Some(ObsConfig::default()),
+        );
+        (o, recs, bundle.expect("obs requested").exports())
+    };
+    let (mut serial, serial_recs, serial_exp) = run(1);
+    assert!(serial.conserves_requests(), "{serial:?}");
+    assert!(serial.migrated > 0 && serial.link_wait_s > 0.0, "the torus must contend: {serial:?}");
+    assert!(serial.requeued > 0, "the decode kill must strand work");
+    assert!(serial_exp.metrics_text.contains("flatattention_fabric_hops_total"));
+    assert!(serial_exp.series_csv.contains("edge_busy_frac"));
+    serial.shards = 1;
+    for shards in [2u32, 4] {
+        let (mut o, recs, exp) = run(shards);
+        assert_eq!(o.shards, shards);
+        o.shards = 1;
+        assert_eq!(o, serial, "{shards} shards diverged on the contended torus under faults");
+        assert_eq!(recs, serial_recs, "{shards} shards: record divergence");
+        assert_eq!(exp.trace_json, serial_exp.trace_json, "{shards} shards: trace export diverged");
+        assert_eq!(exp.series_csv, serial_exp.series_csv, "{shards} shards: series export diverged");
+        assert_eq!(exp.series_json, serial_exp.series_json, "{shards} shards: series JSON diverged");
+        assert_eq!(exp.metrics_text, serial_exp.metrics_text, "{shards} shards: metrics export diverged");
+    }
 }
